@@ -1,0 +1,73 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **engine**: native rust ct-algebra vs AOT-XLA offload (segsum/pivot
+//!    kernels via PJRT) — same results bit-identical, different cost;
+//! 2. **parallel coordinator**: worker pool 1 vs N over the suite (on the
+//!    single-core paper testbed N≈1 is expected to win);
+//! 3. **chain-depth cap** (paper §8): full lattice vs max_chain_len = 1, 2.
+
+use mrss::coordinator::{run_suite, PoolConfig, SuiteJob};
+use mrss::datagen;
+use mrss::mobius::MobiusJoin;
+use mrss::runtime::{XlaEngine, XlaRuntime};
+use mrss::util::format_duration;
+use mrss::util::table::TextTable;
+use std::time::Instant;
+
+fn main() {
+    let scale: f64 =
+        std::env::var("MRSS_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.5);
+
+    // --- 1. engine ablation ---
+    println!("=== ablation 1: native vs XLA engine (financial @ scale {scale}) ===");
+    let db = datagen::generate("financial", scale, 7).unwrap();
+    let t0 = Instant::now();
+    let native = MobiusJoin::new(&db).run();
+    let native_t = t0.elapsed();
+    println!("  native: {} ({} stats)", format_duration(native_t), native.num_statistics());
+    match XlaRuntime::load_default() {
+        Ok(rt) => {
+            let engine = XlaEngine::new(&rt);
+            let t0 = Instant::now();
+            let xla = MobiusJoin::with_engine(&db, &engine).run();
+            let xla_t = t0.elapsed();
+            assert_eq!(native.joint_ct(), xla.joint_ct(), "engines must agree bit-for-bit");
+            println!(
+                "  xla   : {} (bit-identical joint; {:.2}x native)",
+                format_duration(xla_t),
+                xla_t.as_secs_f64() / native_t.as_secs_f64()
+            );
+        }
+        Err(e) => println!("  xla   : skipped ({e})"),
+    }
+
+    // --- 2. coordinator worker-pool ablation ---
+    println!("\n=== ablation 2: worker pool over the suite (scale {}) ===", scale * 0.2);
+    for workers in [1usize, 2, 4] {
+        let jobs: Vec<SuiteJob> = datagen::BENCHMARKS
+            .iter()
+            .map(|b| SuiteJob::new(b.name, scale * 0.2, 7))
+            .collect();
+        let t0 = Instant::now();
+        let reports = run_suite(jobs, PoolConfig { workers, queue_depth: 2 });
+        let ok = reports.iter().filter(|r| r.is_ok()).count();
+        println!("  workers={workers}: {} ({} jobs ok)", format_duration(t0.elapsed()), ok);
+    }
+
+    // --- 3. chain-depth cap (paper §8) ---
+    println!("\n=== ablation 3: lattice depth cap (hepatitis @ scale {scale}) ===");
+    let db = datagen::generate("hepatitis", scale, 7).unwrap();
+    let mut t = TextTable::new(vec!["max_chain_len", "time", "#tables", "#ct_ops"]);
+    for cap in [1usize, 2, 3] {
+        let t0 = Instant::now();
+        let res = MobiusJoin::new(&db).max_chain_len(cap).run();
+        t.row(vec![
+            cap.to_string(),
+            format_duration(t0.elapsed()),
+            res.tables.len().to_string(),
+            res.metrics.total_ct_ops().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\n(capping the chain length trades statistics coverage for time — §8)");
+}

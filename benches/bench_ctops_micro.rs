@@ -1,0 +1,65 @@
+//! Micro-benchmarks of the ct-algebra operators (the unit costs behind the
+//! §4.1.3 cost model): projection, add/subtract sort-merge, cross product,
+//! plus the XLA-offloaded project/subtract for comparison.
+
+use mrss::ct::CtTable;
+use mrss::mobius::{CtEngine, NativeEngine};
+use mrss::runtime::{XlaEngine, XlaRuntime};
+use mrss::util::timer::bench_median;
+use mrss::util::Pcg64;
+
+fn random_ct(rng: &mut Pcg64, n: usize, width: usize, arity: u16) -> CtTable {
+    let vars: Vec<usize> = (0..width).collect();
+    let mut rows = Vec::with_capacity(n * width);
+    let mut counts = Vec::with_capacity(n);
+    for _ in 0..n {
+        for _ in 0..width {
+            rows.push(rng.below(arity as u64) as u16);
+        }
+        counts.push(rng.below(50) + 1);
+    }
+    CtTable::from_raw(vars, rows, counts)
+}
+
+fn main() {
+    let mut rng = Pcg64::seeded(42);
+    let iters = 9;
+    println!("=== ct-algebra operator micro-benchmarks (median of {iters}) ===\n");
+    for &n in &[10_000usize, 100_000, 400_000] {
+        let a = random_ct(&mut rng, n, 8, 4);
+        let b = random_ct(&mut rng, n, 8, 4);
+        let rows = a.len();
+        println!("-- ct with {rows} rows (requested {n}), width 8 --");
+
+        let d = bench_median(iters, || a.project(&[0, 1, 2]));
+        println!("  project/3cols      {:>10}", mrss::util::format_duration(d));
+        let d = bench_median(iters, || a.add(&b));
+        println!("  add (sort-merge)   {:>10}", mrss::util::format_duration(d));
+        let sum = a.add(&b);
+        let d = bench_median(iters, || sum.subtract(&b).unwrap());
+        println!("  subtract           {:>10}", mrss::util::format_duration(d));
+        let small = random_ct(&mut rng, 64, 2, 3);
+        let small2 = {
+            let mut s = small.clone();
+            s.vars = vec![100, 101];
+            s
+        };
+        let d = bench_median(iters, || small.cross(&small2));
+        println!("  cross (64x64)      {:>10}", mrss::util::format_duration(d));
+        let d = bench_median(iters, || a.select(&[(0, 1)]));
+        println!("  select             {:>10}", mrss::util::format_duration(d));
+        let d = bench_median(iters, || a.extend_const(&[(50, 1), (51, 0)]));
+        println!("  extend_const       {:>10}", mrss::util::format_duration(d));
+
+        if let Ok(rt) = XlaRuntime::load_default() {
+            let e = XlaEngine::new(&rt);
+            let ne = NativeEngine;
+            assert_eq!(e.project(&a, &[0, 1, 2]), ne.project(&a, &[0, 1, 2]));
+            let d = bench_median(iters, || e.project(&a, &[0, 1, 2]));
+            println!("  project via XLA    {:>10}", mrss::util::format_duration(d));
+            let d = bench_median(iters, || e.subtract(&sum, &b).unwrap());
+            println!("  subtract via XLA   {:>10}", mrss::util::format_duration(d));
+        }
+        println!();
+    }
+}

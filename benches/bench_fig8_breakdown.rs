@@ -1,0 +1,66 @@
+//! Figure 8: breakdown of Möbius Join running time — Pivot (Algorithm 1)
+//! vs main loop (Algorithm 2), and per-ct-algebra-operator attribution
+//! (the paper observes subtraction/union dominate cross product).
+
+use mrss::coordinator::{run_job, SuiteJob};
+use mrss::mobius::metrics::{CtOp, ALL_OPS};
+use mrss::util::table::TextTable;
+
+
+
+fn scale_for(name: &str) -> f64 {
+    if let Ok(s) = std::env::var("MRSS_BENCH_SCALE") {
+        return s.parse().expect("MRSS_BENCH_SCALE");
+    }
+    match name {
+        "imdb" => 0.2,
+        _ => 1.0,
+    }
+}
+
+fn main() {
+    println!("=== Figure 8: MJ running-time breakdown ===\n");
+    let mut t = TextTable::new(vec![
+        "Dataset", "total(s)", "positive%", "pivot%", "mainloop%", "sub+union%", "cross%", "#ct_ops",
+    ]);
+    for b in mrss::datagen::BENCHMARKS {
+        let r = match run_job(&SuiteJob::new(b.name, scale_for(b.name), 7)) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{}: {e:#}", b.name);
+                continue;
+            }
+        };
+        let m = &r.metrics;
+        let tot = m.total.as_secs_f64().max(1e-9);
+        let pct = |d: std::time::Duration| format!("{:.1}", 100.0 * d.as_secs_f64() / tot);
+        let sub_union = m.op_time(CtOp::Subtract) + m.op_time(CtOp::Union)
+            + m.op_time(CtOp::Project) + m.op_time(CtOp::Extend);
+        t.row(vec![
+            b.name.to_string(),
+            format!("{tot:.2}"),
+            pct(m.positive),
+            pct(m.pivot),
+            pct(m.main_loop),
+            pct(sub_union),
+            pct(m.op_time(CtOp::Cross)),
+            m.total_ct_ops().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\nper-operator detail (largest dataset in the run):");
+    if let Ok(r) = run_job(&SuiteJob::new("financial", scale_for("financial"), 7)) {
+        for op in ALL_OPS {
+            println!(
+                "  {:<10} x{:<5} {}",
+                op.name(),
+                r.metrics.op_count(op),
+                mrss::util::format_duration(r.metrics.op_time(op))
+            );
+        }
+    }
+    println!("\nshape check (paper): Pivot-side ops (subtract/union/project/extend)");
+    println!("dominate cross product; most MJ time is spent outside the positive joins");
+    println!("on the dense-statistics schemas.");
+}

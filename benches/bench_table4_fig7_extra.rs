@@ -1,0 +1,65 @@
+//! Table 4 + Figure 7: statistics and time for link analysis ON vs OFF.
+//!
+//! Table 4 columns: #stats link on, link off, #extra statistics, extra
+//! time. Figure 7: extra time vs #extra statistics is near-linear — we
+//! print the series and the least-squares fit R^2 (the paper's visual
+//! claim, quantified).
+
+use mrss::coordinator::{run_job, SuiteJob};
+use mrss::util::format_duration;
+use mrss::util::table::{commas, TextTable};
+
+fn scale_for(name: &str) -> f64 {
+    if let Ok(s) = std::env::var("MRSS_BENCH_SCALE") {
+        return s.parse().expect("MRSS_BENCH_SCALE");
+    }
+    match name {
+        "imdb" => 0.2,
+        _ => 1.0,
+    }
+}
+
+fn main() {
+    println!("=== Table 4: link analysis on vs off ===\n");
+    let mut t = TextTable::new(vec![
+        "Dataset", "Link On", "Link Off", "#extra stats", "extra time",
+    ]);
+    let mut series: Vec<(String, f64, f64)> = Vec::new();
+    for b in mrss::datagen::BENCHMARKS {
+        let r = match run_job(&SuiteJob::new(b.name, scale_for(b.name), 7)) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{}: {e:#}", b.name);
+                continue;
+            }
+        };
+        t.row(vec![
+            b.name.to_string(),
+            commas(r.statistics as u128),
+            commas(r.link_off_statistics as u128),
+            commas(r.extra_statistics as u128),
+            format_duration(r.extra_time),
+        ]);
+        series.push((b.name.to_string(), r.extra_statistics as f64, r.extra_time.as_secs_f64()));
+    }
+    print!("{}", t.render());
+
+    println!("\n=== Figure 7: extra time (s) vs #extra statistics ===");
+    for (name, x, y) in &series {
+        println!("  {name:<12} x={x:>12.0}  y={y:>9.3}s");
+    }
+    let n = series.len() as f64;
+    let (sx, sy): (f64, f64) =
+        series.iter().fold((0.0, 0.0), |(a, b), (_, x, y)| (a + x, b + y));
+    let (mx, my) = (sx / n, sy / n);
+    let (mut sxx, mut sxy, mut syy) = (0.0, 0.0, 0.0);
+    for (_, x, y) in &series {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    let r2 = if sxx > 0.0 && syy > 0.0 { sxy * sxy / (sxx * syy) } else { 1.0 };
+    let slope_us = if sxx > 0.0 { sxy / sxx * 1e6 } else { 0.0 };
+    println!("\nlinear fit: {slope_us:.3} us per extra statistic, R^2 = {r2:.3}");
+    println!("(paper: near-linear relationship confirming the O(r log r) analysis)");
+}

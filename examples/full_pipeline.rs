@@ -1,0 +1,154 @@
+//! End-to-end driver: the full system on a real (synthetic) workload.
+//!
+//! Exercises every layer in one run, proving they compose:
+//!
+//! 1. generate the seven benchmark databases (scaled);
+//! 2. run the Möbius Join through the **coordinator** worker pool;
+//! 3. route bulk ct-algebra through the **AOT XLA artifacts** (PJRT) when
+//!    they are available, checking bit-identity against the native engine;
+//! 4. cross-check MJ vs the cross-product baseline where CP is feasible;
+//! 5. run the downstream apps (CFS + rules + BN) on one dataset;
+//! 6. report the paper's headline metrics (#statistics, extra time,
+//!    compression ratio, near-linear extra-time fit of Figure 7).
+//!
+//! Run: `cargo run --release --example full_pipeline [scale]`
+//! (default scale 0.1; EXPERIMENTS.md records a full run.)
+
+use mrss::apps::{apriori, bayesnet, cfs};
+use mrss::baseline::CpBudget;
+use mrss::coordinator::{run_suite, PoolConfig, SuiteJob};
+use mrss::datagen;
+use mrss::mobius::{CtEngine, MobiusJoin};
+use mrss::runtime::{XlaEngine, XlaRuntime};
+use mrss::util::format_duration;
+use mrss::util::table::{commas, TextTable};
+use std::time::Duration;
+
+fn main() {
+    let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.1);
+    let seed = 7;
+    println!("=== full pipeline @ scale {scale} ===\n");
+
+    // Stage 1+2: the benchmark suite through the coordinator.
+    let jobs: Vec<SuiteJob> = datagen::BENCHMARKS
+        .iter()
+        .map(|b| {
+            let mut j = SuiteJob::new(b.name, scale, seed);
+            // CP cross-check on the small schemas only (the paper's CP
+            // "N.T." datasets stay infeasible even scaled down).
+            if matches!(b.name, "mutagenesis" | "mondial" | "uwcse" | "movielens") {
+                j = j.with_cp(CpBudget {
+                    max_time: Duration::from_secs(60),
+                    max_tuples: 100_000_000,
+                });
+            }
+            j
+        })
+        .collect();
+    let reports = run_suite(jobs, PoolConfig { workers: 1, queue_depth: 2 });
+
+    let mut t = TextTable::new(vec![
+        "Dataset", "#Tuples", "MJ-time", "#Stats", "#Extra", "ExtraTime", "CP", "Compress",
+    ]);
+    let mut pairs: Vec<(f64, f64)> = Vec::new(); // (extra stats, extra secs)
+    for rep in &reports {
+        let r = rep.as_ref().expect("job failed");
+        pairs.push((r.extra_statistics as f64, r.extra_time.as_secs_f64()));
+        let (cp_cell, ratio) = match (&r.cp, r.compression_ratio()) {
+            (Some(cp), Some(ratio)) if !cp.non_termination => {
+                (format_duration(cp.elapsed), format!("{ratio:.1}"))
+            }
+            (Some(cp), _) if cp.non_termination => ("N.T.".into(), "-".into()),
+            _ => ("-".into(), "-".into()),
+        };
+        t.row(vec![
+            r.dataset.clone(),
+            commas(r.tuples as u128),
+            format_duration(r.mj_time),
+            commas(r.statistics as u128),
+            commas(r.extra_statistics as u128),
+            format_duration(r.extra_time),
+            cp_cell,
+            ratio,
+        ]);
+    }
+    print!("{}", t.render());
+
+    // Headline metric: extra time is near-linear in #extra statistics
+    // (paper Figure 7). Report the linear-fit R^2.
+    let r2 = linear_fit_r2(&pairs);
+    println!("\nFigure-7 check: extra-time vs #extra-statistics linear fit R^2 = {r2:.3}");
+
+    // Stage 3: XLA engine (if artifacts present) vs native on one dataset.
+    let db = datagen::generate("financial", scale, seed).expect("gen");
+    let native = MobiusJoin::new(&db).run();
+    match XlaRuntime::load_default() {
+        Ok(rt) => {
+            let engine = XlaEngine::new(&rt);
+            println!(
+                "\nXLA engine loaded ({} artifacts); engine = {}",
+                rt.num_artifacts(),
+                engine.name()
+            );
+            let xla = MobiusJoin::with_engine(&db, &engine).run();
+            assert_eq!(
+                native.joint_ct(),
+                xla.joint_ct(),
+                "XLA and native joints must be bit-identical"
+            );
+            println!(
+                "financial joint via XLA == native ({} statistics) | native {} vs xla {}",
+                commas(xla.num_statistics() as u128),
+                format_duration(native.metrics.total),
+                format_duration(xla.metrics.total),
+            );
+        }
+        Err(e) => println!("\n(XLA artifacts unavailable, native only: {e})"),
+    }
+
+    // Stage 4: downstream statistical apps on financial.
+    let schema = &db.schema;
+    let joint = native.joint_ct();
+    let target = schema.var_by_name(datagen::info("financial").unwrap().target).unwrap();
+    let all: Vec<usize> = (0..schema.random_vars.len()).collect();
+    let sel = cfs::cfs_select(joint, target, &all, None);
+    println!(
+        "\nCFS(balance(T)) selected {} features, merit {:.3}",
+        sel.selected.len(),
+        sel.merit
+    );
+    let rules = apriori::apriori(schema, joint, Default::default(), None);
+    println!(
+        "Apriori: {} rules, {} use relationship variables",
+        rules.len(),
+        rules.iter().filter(|r| r.uses_rel_var(schema)).count()
+    );
+    let bn = bayesnet::learn_structure(schema, &native, true, Default::default());
+    let m = bayesnet::score_structure(schema, &bn.bn, joint, None);
+    println!(
+        "BN (link on): loglik {:.2}, {} params, {} R2R + {} A2R edges, learned in {}",
+        m.loglik,
+        m.params,
+        m.r2r,
+        m.a2r,
+        format_duration(bn.elapsed)
+    );
+    println!("\npipeline complete");
+}
+
+/// R^2 of the least-squares line through (x, y) pairs.
+fn linear_fit_r2(pairs: &[(f64, f64)]) -> f64 {
+    let n = pairs.len() as f64;
+    let (sx, sy): (f64, f64) = pairs.iter().fold((0.0, 0.0), |(a, b), &(x, y)| (a + x, b + y));
+    let (mx, my) = (sx / n, sy / n);
+    let (mut sxx, mut sxy, mut syy) = (0.0, 0.0, 0.0);
+    for &(x, y) in pairs {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        return 1.0;
+    }
+    (sxy * sxy) / (sxx * syy)
+}

@@ -1,0 +1,104 @@
+"""AOT export: lower the L2 graphs to HLO *text* artifacts for the rust
+PJRT runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Each graph is compiled at a ladder of static bucket shapes; the rust
+runtime pads batches up to the nearest bucket and keeps one compiled PJRT
+executable per artifact. `artifacts/manifest.txt` lists every artifact with
+its shape parameters.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Bucket ladders (see DESIGN.md section 4). Sizes are multiples of the
+# kernel block sizes (segsum 1024; pivot/xlogx 2048).
+SEGSUM_BUCKETS = [(8192, 1024), (65536, 8192), (524288, 65536)]
+PIVOT_BUCKETS = [8192, 65536, 524288]
+SU_BUCKETS = [(256, 8), (4096, 8)]
+BNSCORE_BUCKETS = [(256, 256, 8), (64, 4096, 8)]
+LIFT_BUCKETS = [4096]
+
+
+def to_hlo_text(fn, *args) -> str:
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_all():
+    """Yield (name, hlo_text, manifest_line) for every artifact."""
+    for n, k in SEGSUM_BUCKETS:
+        name = f"segsum_n{n}_k{k}"
+        fn = lambda ids, counts, _k=k: model.segsum_model(ids, counts, _k)
+        text = to_hlo_text(fn, spec((n,), jnp.int32), spec((n,), jnp.float64))
+        yield name, text, f"segsum n={n} k={k} {name}.hlo.txt"
+    for n in PIVOT_BUCKETS:
+        name = f"pivot_n{n}"
+        text = to_hlo_text(
+            model.pivot_model,
+            spec((n,), jnp.float64),
+            spec((n,), jnp.float64),
+            spec((1,), jnp.float64),
+        )
+        yield name, text, f"pivot n={n} {name}.hlo.txt"
+    for b, v in SU_BUCKETS:
+        name = f"su_b{b}_v{v}"
+        text = to_hlo_text(model.su_model, spec((b, v, v), jnp.float64))
+        yield name, text, f"su b={b} v={v} {name}.hlo.txt"
+    for b, p, c in BNSCORE_BUCKETS:
+        name = f"bnscore_b{b}_p{p}_c{c}"
+        text = to_hlo_text(model.bnscore_model, spec((b, p, c), jnp.float64))
+        yield name, text, f"bnscore b={b} p={p} c={c} {name}.hlo.txt"
+    for b in LIFT_BUCKETS:
+        name = f"lift_b{b}"
+        v = spec((b,), jnp.float64)
+        text = to_hlo_text(model.lift_model, v, v, v, v)
+        yield name, text, f"lift b={b} {name}.hlo.txt"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat alias: out-dir inferred from file path")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for name, text, line in build_all():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(line)
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {out_dir}/manifest.txt ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

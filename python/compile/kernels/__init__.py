@@ -1,0 +1,6 @@
+"""L1 Pallas kernels for the Mobius Join / statistics pipeline.
+
+Modules: `segsum` (GROUP-BY aggregation), `pivot` (Equation-1 fused
+arithmetic), `xlogx` (entropy/log-likelihood terms), `ref` (pure-jnp
+oracles used by pytest).
+"""

@@ -1,0 +1,96 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every kernel in this package must match its reference here exactly (f64
+integer counts are exact up to 2**53, so ``assert_allclose(..., rtol=0)`` is
+the contract for count arithmetic; entropy terms use tight float tolerances).
+"""
+
+import jax.numpy as jnp
+
+
+def segsum_ref(ids, counts, num_segments):
+    """Segment sum: out[k] = sum of counts[i] where ids[i] == k.
+
+    Out-of-range ids (>= num_segments) are dropped -- the runtime uses
+    id == num_segments as the padding convention.
+    """
+    return jnp.zeros((num_segments,), counts.dtype).at[ids].add(
+        jnp.where(ids < num_segments, counts, 0), mode="drop"
+    )
+
+
+def pivot_ref(star, t, scale):
+    """Fused pivot arithmetic: f = max(star * scale - t, 0).
+
+    Implements the count side of Equation (1): ct_F = ct_* x |X| - ct_T on
+    row-aligned vectors (alignment is the caller's job). The clamp only
+    guards padding lanes; on real rows star*scale >= t by Proposition 1.
+    """
+    return jnp.maximum(star * scale - t, 0.0)
+
+
+def xlogx_ref(x):
+    """Elementwise x*log(x) with the 0 log 0 = 0 convention (entropy)."""
+    return jnp.where(x > 0, x * jnp.log(jnp.where(x > 0, x, 1.0)), 0.0)
+
+
+def entropy_ref(counts):
+    """Shannon entropy (nats) of an unnormalized count vector.
+
+    H = log(N) - sum(x log x)/N over the last axis; zero-total slices -> 0.
+    """
+    n = jnp.sum(counts, axis=-1)
+    sx = jnp.sum(xlogx_ref(counts), axis=-1)
+    safe_n = jnp.where(n > 0, n, 1.0)
+    return jnp.where(n > 0, jnp.log(safe_n) - sx / safe_n, 0.0)
+
+
+def su_ref(joint):
+    """Symmetric uncertainty of batched joint count matrices [B, V1, V2].
+
+    SU(X,Y) = 2 * (H(X) + H(Y) - H(X,Y)) / (H(X) + H(Y)); 0 when both
+    marginal entropies vanish (constant variables).
+    """
+    hx = entropy_ref(jnp.sum(joint, axis=2))
+    hy = entropy_ref(jnp.sum(joint, axis=1))
+    hxy = entropy_ref(joint.reshape(joint.shape[0], -1))
+    denom = hx + hy
+    safe = jnp.where(denom > 0, denom, 1.0)
+    mi = jnp.maximum(hx + hy - hxy, 0.0)
+    return jnp.where(denom > 0, 2.0 * mi / safe, 0.0)
+
+
+def bn_family_ref(counts):
+    """Relational pseudo log-likelihood of batched BN families [B, P, C].
+
+    counts[b, p, c] = sufficient statistic for (parent-config p, child
+    value c). Per Schulte (2011) the score normalizes by the total count so
+    scores are comparable across nodes:
+
+        L = sum_pc n_pc * (log n_pc - log n_p) / N
+    """
+    n_pc = xlogx_ref(counts).sum(axis=(1, 2))
+    n_p = xlogx_ref(counts.sum(axis=2)).sum(axis=1)
+    total = counts.sum(axis=(1, 2))
+    safe = jnp.where(total > 0, total, 1.0)
+    return jnp.where(total > 0, (n_pc - n_p) / safe, 0.0)
+
+
+def lift_ref(body, head, joint, total):
+    """Association-rule metrics over batched count vectors.
+
+    Returns (support, confidence, lift): support = joint/total,
+    confidence = joint/body, lift = confidence / (head/total).
+    Zero denominators yield 0.
+    """
+    safe_total = jnp.where(total > 0, total, 1.0)
+    safe_body = jnp.where(body > 0, body, 1.0)
+    safe_head = jnp.where(head > 0, head, 1.0)
+    support = jnp.where(total > 0, joint / safe_total, 0.0)
+    confidence = jnp.where(body > 0, joint / safe_body, 0.0)
+    lift = jnp.where(
+        (body > 0) & (head > 0) & (total > 0),
+        (joint * safe_total) / (safe_body * safe_head),
+        0.0,
+    )
+    return support, confidence, lift

@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: segment sum (the GROUP-BY aggregation hot-spot).
+
+ct-algebra projection (paper section 4.1.1) is `SELECT SUM(count) GROUP BY
+V1..Vk`; once the coordinator has mapped each row's group key to a dense
+segment id, the remaining bulk arithmetic is a segment sum, which is what
+this kernel computes:
+
+    out[k] = sum_i counts[i] * [ids[i] == k]
+
+Hardware adaptation (DESIGN.md section 3): the paper ran on MySQL/CPU, so
+there is no GPU kernel to port. On a real TPU the natural formulation is a
+block one-hot matmul feeding the MXU (`counts_block @ onehot(ids_block)`,
+bf16/f32); on the CPU PJRT plugin used here that materializes huge
+intermediates, so the compiled body uses an in-VMEM scatter-add per block
+instead. Both bodies share the same BlockSpec schedule: ids/counts stream
+through VMEM in `BLOCK_N` tiles while the `K`-sized accumulator stays
+resident (K*8 bytes <= 1 MiB for every bucket in the ladder).
+
+Padding convention: callers pad `ids` with `num_segments` (out of range) so
+padding lanes drop out of the scatter.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 1024
+
+
+def _segsum_kernel_scatter(ids_ref, counts_ref, o_ref):
+    """CPU-friendly body: block scatter-add into the resident accumulator."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ids = ids_ref[...]
+    counts = counts_ref[...]
+    o_ref[...] += jnp.zeros_like(o_ref).at[ids].add(counts, mode="drop")
+
+
+def _segsum_kernel_mxu(ids_ref, counts_ref, o_ref):
+    """TPU body: one-hot matmul onto the MXU. Compile-only on this image
+    (real-TPU lowering emits a Mosaic custom call the CPU plugin cannot
+    run); validated through the interpret path in tests."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ids = ids_ref[...]
+    counts = counts_ref[...]
+    k = o_ref.shape[0]
+    onehot = (ids[:, None] == jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], k), 1)).astype(
+        counts.dtype
+    )
+    o_ref[...] += jnp.dot(counts, onehot, preferred_element_type=counts.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "body"))
+def segsum(ids, counts, num_segments, body="scatter"):
+    """Segment-sum of `counts` by `ids` into `num_segments` bins.
+
+    `ids.shape[0]` must be a multiple of BLOCK_N (callers pad; padding ids
+    = num_segments).
+    """
+    n = ids.shape[0]
+    assert n % BLOCK_N == 0, f"n={n} must be a multiple of {BLOCK_N}"
+    kernel = _segsum_kernel_scatter if body == "scatter" else _segsum_kernel_mxu
+    return pl.pallas_call(
+        kernel,
+        grid=(n // BLOCK_N,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((num_segments,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_segments,), counts.dtype),
+        interpret=True,
+    )(ids, counts)

@@ -1,0 +1,33 @@
+"""L1 Pallas kernel: elementwise x*log(x) (0 log 0 = 0).
+
+The entropy/log-likelihood scores of the statistical applications (CFS
+symmetric uncertainty, BN pseudo log-likelihood) reduce sums of x*log(x)
+terms over contingency-table counts; this kernel is the shared elementwise
+hot-spot they call through the L2 graphs in `compile.model`.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 2048
+
+
+def _xlogx_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jnp.where(x > 0, x * jnp.log(jnp.where(x > 0, x, 1.0)), 0.0)
+
+
+@jax.jit
+def xlogx(x):
+    """Elementwise x*log(x); `x.shape[0]` must be a multiple of BLOCK_N."""
+    n = x.shape[0]
+    assert n % BLOCK_N == 0, f"n={n} must be a multiple of {BLOCK_N}"
+    return pl.pallas_call(
+        _xlogx_kernel,
+        grid=(n // BLOCK_N,),
+        in_specs=[pl.BlockSpec((BLOCK_N,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x)

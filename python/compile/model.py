@@ -1,0 +1,99 @@
+"""L2: JAX compute graphs for the statistics pipeline, calling the L1
+Pallas kernels.
+
+These are the graphs AOT-lowered by `compile.aot` into `artifacts/*.hlo.txt`
+and executed from the rust coordinator via PJRT (python never runs on the
+request path):
+
+* ``segsum_model``   — ct-algebra projection aggregation (GROUP BY sum);
+* ``pivot_model``    — Equation-1 fused count arithmetic;
+* ``su_model``       — batched symmetric uncertainty for CFS feature
+  selection (Table 5);
+* ``bnscore_model``  — batched relational pseudo log-likelihood of BN
+  families (Tables 7-8);
+* ``lift_model``     — batched association-rule support/confidence/lift
+  (Table 6).
+
+All count inputs are f64: integer counts are exact up to 2**53, so the
+XLA engine is bit-compatible with the native rust engine.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels.pivot import pivot  # noqa: E402
+from .kernels.segsum import segsum  # noqa: E402
+from .kernels.xlogx import xlogx  # noqa: E402
+
+# Entropy-term helper: flatten-to-kernel then reshape back. Pads the flat
+# vector to the kernel block size.
+
+
+def _xlogx_nd(x):
+    flat = x.reshape(-1)
+    from .kernels.xlogx import BLOCK_N
+
+    n = flat.shape[0]
+    pad = (-n) % BLOCK_N
+    flat = jnp.pad(flat, (0, pad))
+    return xlogx(flat)[:n].reshape(x.shape)
+
+
+def _entropy(counts):
+    """H (nats) over the last axis of unnormalized counts; 0-total -> 0."""
+    n = jnp.sum(counts, axis=-1)
+    sx = jnp.sum(_xlogx_nd(counts), axis=-1)
+    safe_n = jnp.where(n > 0, n, 1.0)
+    return jnp.where(n > 0, jnp.log(safe_n) - sx / safe_n, 0.0)
+
+
+def segsum_model(ids, counts, num_segments):
+    """Projection aggregation: out[k] = sum counts[ids == k]."""
+    return (segsum(ids, counts, num_segments),)
+
+
+def pivot_model(star, t, scale):
+    """ct_F counts = max(star * scale - t, 0) on aligned rows."""
+    return (pivot(star, t, scale),)
+
+
+def su_model(joint):
+    """Symmetric uncertainty of batched joints [B, V, V] -> [B]."""
+    hx = _entropy(jnp.sum(joint, axis=2))
+    hy = _entropy(jnp.sum(joint, axis=1))
+    hxy = _entropy(joint.reshape(joint.shape[0], -1))
+    denom = hx + hy
+    safe = jnp.where(denom > 0, denom, 1.0)
+    mi = jnp.maximum(hx + hy - hxy, 0.0)
+    return (jnp.where(denom > 0, 2.0 * mi / safe, 0.0),)
+
+
+def bnscore_model(counts):
+    """Relational pseudo log-likelihood of batched families [B, P, C] -> [B].
+
+    L[b] = sum_pc n_pc (log n_pc - log n_p) / N_b   (Schulte 2011 frequency
+    normalization; empty families score 0).
+    """
+    n_pc = _xlogx_nd(counts).sum(axis=(1, 2))
+    n_p = _xlogx_nd(counts.sum(axis=2)).sum(axis=1)
+    total = counts.sum(axis=(1, 2))
+    safe = jnp.where(total > 0, total, 1.0)
+    return (jnp.where(total > 0, (n_pc - n_p) / safe, 0.0),)
+
+
+def lift_model(body, head, joint, total):
+    """Association-rule metrics -> (support, confidence, lift), each [B]."""
+    safe_total = jnp.where(total > 0, total, 1.0)
+    safe_body = jnp.where(body > 0, body, 1.0)
+    safe_head = jnp.where(head > 0, head, 1.0)
+    support = jnp.where(total > 0, joint / safe_total, 0.0)
+    confidence = jnp.where(body > 0, joint / safe_body, 0.0)
+    lift = jnp.where(
+        (body > 0) & (head > 0) & (total > 0),
+        (joint * safe_total) / (safe_body * safe_head),
+        0.0,
+    )
+    return (support, confidence, lift)

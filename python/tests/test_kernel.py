@@ -1,0 +1,116 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle in ref.py.
+
+Hypothesis sweeps shapes/values; count arithmetic must match exactly
+(integer-valued f64), entropy terms to tight float tolerance.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.pivot import BLOCK_N as PIVOT_BLOCK
+from compile.kernels.pivot import pivot
+from compile.kernels.segsum import BLOCK_N as SEGSUM_BLOCK
+from compile.kernels.segsum import segsum
+from compile.kernels.xlogx import BLOCK_N as XLOGX_BLOCK
+from compile.kernels.xlogx import xlogx
+
+
+def _pad_to(x, block, fill):
+    pad = (-len(x)) % block
+    return np.concatenate([x, np.full(pad, fill, dtype=x.dtype)])
+
+
+# ---------- segsum ----------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=3000),
+    k=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_segsum_matches_ref(n, k, seed):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, k + 2, size=n).astype(np.int32)  # some out-of-range
+    counts = rng.integers(0, 1000, size=n).astype(np.float64)
+    ids_p = _pad_to(ids, SEGSUM_BLOCK, k)  # pad ids out of range
+    counts_p = _pad_to(counts, SEGSUM_BLOCK, 0.0)
+    got = np.array(segsum(jnp.array(ids_p), jnp.array(counts_p), k))
+    want = np.array(ref.segsum_ref(jnp.array(ids), jnp.array(counts), k))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_segsum_mxu_body_matches_scatter_body():
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, 32, size=SEGSUM_BLOCK * 2).astype(np.int32)
+    counts = rng.integers(0, 100, size=SEGSUM_BLOCK * 2).astype(np.float64)
+    a = np.array(segsum(jnp.array(ids), jnp.array(counts), 32, body="scatter"))
+    b = np.array(segsum(jnp.array(ids), jnp.array(counts), 32, body="mxu"))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_segsum_empty_segments():
+    ids = jnp.full((SEGSUM_BLOCK,), 10, dtype=jnp.int32)  # all out of range
+    counts = jnp.ones((SEGSUM_BLOCK,), dtype=jnp.float64)
+    out = np.array(segsum(ids, counts, 10))
+    np.testing.assert_array_equal(out, np.zeros(10))
+
+
+def test_segsum_rejects_unaligned():
+    with pytest.raises(AssertionError):
+        segsum(jnp.zeros(3, jnp.int32), jnp.zeros(3), 4)
+
+
+# ---------- pivot ----------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    scale=st.integers(min_value=1, max_value=50),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pivot_matches_ref(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    star = rng.integers(0, 10000, size=n).astype(np.float64)
+    t = np.minimum(star * scale, rng.integers(0, 10000, size=n)).astype(np.float64)
+    sp = _pad_to(star, PIVOT_BLOCK, 0.0)
+    tp = _pad_to(t, PIVOT_BLOCK, 0.0)
+    got = np.array(pivot(jnp.array(sp), jnp.array(tp), jnp.array([float(scale)])))[:n]
+    want = np.array(ref.pivot_ref(jnp.array(star), jnp.array(t), float(scale)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pivot_equation1_university():
+    # Paper Figure 5: |P|x|S| = 9 pairs, 4 RA tuples -> 5 false pairs.
+    star = jnp.array([9.0] + [0.0] * (PIVOT_BLOCK - 1))
+    t = jnp.array([4.0] + [0.0] * (PIVOT_BLOCK - 1))
+    out = np.array(pivot(star, t, jnp.array([1.0])))
+    assert out[0] == 5.0
+
+
+# ---------- xlogx ----------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_xlogx_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 100000, size=n).astype(np.float64)
+    xp = _pad_to(x, XLOGX_BLOCK, 0.0)
+    got = np.array(xlogx(jnp.array(xp)))[:n]
+    want = np.array(ref.xlogx_ref(jnp.array(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-15)
+
+
+def test_xlogx_zero_convention():
+    x = jnp.zeros((XLOGX_BLOCK,), dtype=jnp.float64)
+    out = np.array(xlogx(x))
+    np.testing.assert_array_equal(out, np.zeros(XLOGX_BLOCK))

@@ -1,0 +1,88 @@
+"""L2 correctness: model graphs vs oracles + known closed-form values."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=16),
+    v1=st.integers(min_value=1, max_value=8),
+    v2=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_su_matches_ref(b, v1, v2, seed):
+    rng = np.random.default_rng(seed)
+    j = rng.integers(0, 50, size=(b, v1, v2)).astype(np.float64)
+    got = np.array(model.su_model(jnp.array(j))[0])
+    want = np.array(ref.su_ref(jnp.array(j)))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_su_known_values():
+    dep = np.zeros((1, 2, 2))
+    dep[0, 0, 0] = dep[0, 1, 1] = 5.0
+    assert abs(float(model.su_model(jnp.array(dep))[0][0]) - 1.0) < 1e-12
+    ind = np.full((1, 2, 2), 4.0)
+    assert abs(float(model.su_model(jnp.array(ind))[0][0])) < 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=8),
+    p=st.integers(min_value=1, max_value=16),
+    c=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_bnscore_matches_ref(b, p, c, seed):
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 40, size=(b, p, c)).astype(np.float64)
+    got = np.array(model.bnscore_model(jnp.array(counts))[0])
+    want = np.array(ref.bn_family_ref(jnp.array(counts)))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_bnscore_deterministic_family_is_zero():
+    # Child fully determined by parent: log-likelihood loss is 0.
+    m = np.zeros((1, 2, 2))
+    m[0, 0, 0] = 7.0
+    m[0, 1, 1] = 3.0
+    assert abs(float(model.bnscore_model(jnp.array(m))[0][0])) < 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_lift_matches_ref(b, seed):
+    rng = np.random.default_rng(seed)
+    total = 1000.0
+    body = rng.integers(0, 500, size=b).astype(np.float64)
+    head = rng.integers(0, 500, size=b).astype(np.float64)
+    joint = np.minimum(body, head) * rng.uniform(0, 1, size=b)
+    args = [jnp.array(x) for x in (body, head, joint, np.full(b, total))]
+    got = model.lift_model(*args)
+    want = ref.lift_ref(*args)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.array(g), np.array(w), rtol=1e-12)
+
+
+def test_segsum_model_projection_semantics():
+    # Projection of a tiny ct: rows (a=0):3, (a=1):4, (a=0):5 -> [8, 4].
+    from compile.kernels.segsum import BLOCK_N
+
+    ids = np.full(BLOCK_N, 2, dtype=np.int32)
+    counts = np.zeros(BLOCK_N)
+    ids[:3] = [0, 1, 0]
+    counts[:3] = [3.0, 4.0, 5.0]
+    out = np.array(model.segsum_model(jnp.array(ids), jnp.array(counts), 2)[0])
+    np.testing.assert_array_equal(out, [8.0, 4.0])

@@ -1,0 +1,333 @@
+//! Apriori association-rule mining over a contingency table — the paper's
+//! §6.2 experiment (Table 6, interestingness metric = lift).
+//!
+//! The ct-table *is* the (weighted) transaction database: an item is a
+//! `(variable = value)` pair and the support of an itemset is the projected
+//! count. Level-wise mining therefore reduces to ct-algebra projections:
+//! the frequent itemsets over a variable set `S` are exactly the rows of
+//! `π_S(ct)` with count ≥ minsup·N, and Apriori's subset pruning runs on
+//! variable sets before any projection is taken.
+
+use crate::ct::CtTable;
+use crate::runtime::XlaRuntime;
+use crate::schema::{Schema, VarId};
+use crate::util::fxhash::FxHashMap;
+
+/// One association rule `body → head`.
+#[derive(Debug, Clone)]
+pub struct Rule {
+    pub body: Vec<(VarId, u16)>,
+    pub head: (VarId, u16),
+    pub support: f64,
+    pub confidence: f64,
+    pub lift: f64,
+}
+
+impl Rule {
+    /// Does the rule mention a relationship indicator variable (the
+    /// quantity Table 6 counts)?
+    pub fn uses_rel_var(&self, schema: &Schema) -> bool {
+        let is_rel = |v: VarId| {
+            matches!(schema.random_vars[v], crate::schema::RandomVar::RelInd { .. })
+        };
+        is_rel(self.head.0) || self.body.iter().any(|&(v, _)| is_rel(v))
+    }
+
+    /// Render like `statement_freq(A)=monthly → HasLoan(A,L)=T`.
+    pub fn render(&self, schema: &Schema) -> String {
+        let item = |&(v, c): &(VarId, u16)| {
+            format!("{}={}", schema.var_name(v), schema.value_name(v, c))
+        };
+        let body: Vec<String> = self.body.iter().map(item).collect();
+        format!("{} -> {}", body.join(" & "), item(&self.head))
+    }
+}
+
+/// Mining configuration (defaults mirror Weka Apriori with lift ranking).
+#[derive(Debug, Clone, Copy)]
+pub struct AprioriConfig {
+    pub min_support: f64,
+    pub min_lift: f64,
+    pub max_itemset: usize,
+    pub num_rules: usize,
+    /// Cap on the number of ct variables considered (widest-first mining is
+    /// exponential in variables; the paper's tables have ≤ ~30).
+    pub max_vars: usize,
+}
+
+impl Default for AprioriConfig {
+    fn default() -> Self {
+        AprioriConfig {
+            min_support: 0.05,
+            min_lift: 1.1,
+            max_itemset: 3,
+            num_rules: 20,
+            max_vars: 16,
+        }
+    }
+}
+
+/// Mine the top rules by lift from a contingency table.
+pub fn apriori(
+    schema: &Schema,
+    ct: &CtTable,
+    cfg: AprioriConfig,
+    rt: Option<&XlaRuntime>,
+) -> Vec<Rule> {
+    if ct.is_empty() {
+        return Vec::new();
+    }
+    // Variable preselection: indicators first (they are what Table 6 is
+    // about), then the rest in schema order.
+    let mut vars: Vec<VarId> = ct
+        .vars
+        .iter()
+        .copied()
+        .filter(|&v| matches!(schema.random_vars[v], crate::schema::RandomVar::RelInd { .. }))
+        .collect();
+    for &v in &ct.vars {
+        if !vars.contains(&v) {
+            vars.push(v);
+        }
+    }
+    vars.truncate(cfg.max_vars);
+    vars.sort_unstable();
+    let base = if vars.len() == ct.width() { ct.clone() } else { ct.project(&vars) };
+    let total = base.total() as f64;
+    let min_count = (cfg.min_support * total).max(1.0);
+
+    // Level 1: frequent single items per variable.
+    let mut item_support: FxHashMap<(VarId, u16), f64> = FxHashMap::default();
+    let mut freq_vars: Vec<VarId> = Vec::new();
+    for &v in &vars {
+        let p = base.project(&[v]);
+        let mut any = false;
+        for (row, c) in p.iter() {
+            if (c as f64) >= min_count {
+                item_support.insert((v, row[0]), c as f64);
+                any = true;
+            }
+        }
+        if any {
+            freq_vars.push(v);
+        }
+    }
+
+    // Levels 2..max: frequent itemsets grouped by variable set; a var set
+    // is a candidate only if every (k-1)-subset produced a frequent set.
+    let mut freq_sets: Vec<(Vec<(VarId, u16)>, f64)> = Vec::new();
+    let mut prev_varsets: Vec<Vec<VarId>> = freq_vars.iter().map(|&v| vec![v]).collect();
+    for _level in 2..=cfg.max_itemset {
+        let mut next_varsets: Vec<Vec<VarId>> = Vec::new();
+        let candidates = extend_varsets(&prev_varsets, &freq_vars);
+        for vs in candidates {
+            let p = base.project(&vs);
+            let mut any = false;
+            for (row, c) in p.iter() {
+                if (c as f64) < min_count {
+                    continue;
+                }
+                // Apriori pruning at the item level: all single items must
+                // be frequent.
+                let items: Vec<(VarId, u16)> =
+                    vs.iter().copied().zip(row.iter().copied()).collect();
+                if !items.iter().all(|it| item_support.contains_key(it)) {
+                    continue;
+                }
+                freq_sets.push((items, c as f64));
+                any = true;
+            }
+            if any {
+                next_varsets.push(vs);
+            }
+        }
+        if next_varsets.is_empty() {
+            break;
+        }
+        prev_varsets = next_varsets;
+    }
+
+    // Rule generation: every item of a frequent set as head.
+    // Collect (body_support, head_support, joint) then compute metrics
+    // (batched through XLA when available).
+    let mut protos: Vec<(Vec<(VarId, u16)>, (VarId, u16), f64, f64, f64)> = Vec::new();
+    for (items, sup) in &freq_sets {
+        for (hi, &head) in items.iter().enumerate() {
+            let body: Vec<(VarId, u16)> = items
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i != hi)
+                .map(|(_, &it)| it)
+                .collect();
+            let body_sup = support_of(&base, &body, &mut Default::default());
+            let head_sup = item_support.get(&head).copied().unwrap_or_else(|| {
+                support_of(&base, std::slice::from_ref(&head), &mut Default::default())
+            });
+            protos.push((body, head, body_sup, head_sup, *sup));
+        }
+    }
+    let bodies: Vec<f64> = protos.iter().map(|p| p.2).collect();
+    let heads: Vec<f64> = protos.iter().map(|p| p.3).collect();
+    let joints: Vec<f64> = protos.iter().map(|p| p.4).collect();
+    let metrics: Vec<(f64, f64, f64)> = match rt {
+        Some(rt) => rt
+            .lift_batch(&bodies, &heads, &joints, total)
+            .unwrap_or_else(|_| native_metrics(&bodies, &heads, &joints, total)),
+        None => native_metrics(&bodies, &heads, &joints, total),
+    };
+    let mut rules: Vec<Rule> = protos
+        .into_iter()
+        .zip(metrics)
+        .filter(|((body, ..), _)| !body.is_empty())
+        .map(|((body, head, ..), (support, confidence, lift))| Rule {
+            body,
+            head,
+            support,
+            confidence,
+            lift,
+        })
+        .filter(|r| r.lift >= cfg.min_lift)
+        .collect();
+    rules.sort_by(|a, b| b.lift.total_cmp(&a.lift).then(b.support.total_cmp(&a.support)));
+    rules.truncate(cfg.num_rules);
+    rules
+}
+
+fn native_metrics(body: &[f64], head: &[f64], joint: &[f64], total: f64) -> Vec<(f64, f64, f64)> {
+    body.iter()
+        .zip(head)
+        .zip(joint)
+        .map(|((&b, &h), &j)| {
+            let support = if total > 0.0 { j / total } else { 0.0 };
+            let confidence = if b > 0.0 { j / b } else { 0.0 };
+            let lift =
+                if b > 0.0 && h > 0.0 && total > 0.0 { j * total / (b * h) } else { 0.0 };
+            (support, confidence, lift)
+        })
+        .collect()
+}
+
+/// Support (count) of an itemset via selection.
+fn support_of(
+    base: &CtTable,
+    items: &[(VarId, u16)],
+    cache: &mut FxHashMap<Vec<(VarId, u16)>, f64>,
+) -> f64 {
+    if items.is_empty() {
+        return base.total() as f64;
+    }
+    let key = items.to_vec();
+    if let Some(&v) = cache.get(&key) {
+        return v;
+    }
+    let v = base.select(items).total() as f64;
+    cache.insert(key, v);
+    v
+}
+
+/// Candidate variable sets of size k+1 from the size-k survivors.
+fn extend_varsets(prev: &[Vec<VarId>], freq_vars: &[VarId]) -> Vec<Vec<VarId>> {
+    let mut out: Vec<Vec<VarId>> = Vec::new();
+    let prev_set: std::collections::HashSet<&Vec<VarId>> = prev.iter().collect();
+    for vs in prev {
+        for &v in freq_vars {
+            if *vs.last().unwrap() >= v {
+                continue; // keep sorted, avoid duplicates
+            }
+            let mut cand = vs.clone();
+            cand.push(v);
+            // All k-subsets must be survivors.
+            let ok = (0..cand.len()).all(|skip| {
+                let sub: Vec<VarId> = cand
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, _)| i != skip)
+                    .map(|(_, &x)| x)
+                    .collect();
+                sub.len() < 2 || prev_set.contains(&sub)
+            });
+            if ok && !out.contains(&cand) {
+                out.push(cand);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schema::university_schema;
+
+    /// ct over intelligence(S) [var a] and RA indicator [var ind] with a
+    /// strong implication a=2 -> ind=T.
+    fn implication_ct(a: VarId, ind: VarId) -> CtTable {
+        CtTable::from_raw(
+            vec![a, ind],
+            vec![
+                0, 0, //
+                0, 1, //
+                1, 0, //
+                1, 1, //
+                2, 1, //
+            ],
+            vec![40, 10, 25, 25, 50],
+        )
+    }
+
+    #[test]
+    fn finds_high_lift_rule() {
+        let s = university_schema();
+        let a = s.var_by_name("intelligence(S)").unwrap();
+        let ind = s.var_by_name("RA(P,S)").unwrap();
+        let ct = implication_ct(a, ind);
+        let rules = apriori(&s, &ct, AprioriConfig::default(), None);
+        assert!(!rules.is_empty());
+        // The strongest rule should be intelligence=2 -> RA=T (lift
+        // = 1.0/ (85/150) ≈ 1.76).
+        let top = &rules[0];
+        assert!(top.lift > 1.5, "top rule: {} lift {}", top.render(&s), top.lift);
+        assert!(top.uses_rel_var(&s));
+    }
+
+    #[test]
+    fn respects_min_support() {
+        let s = university_schema();
+        let a = s.var_by_name("intelligence(S)").unwrap();
+        let ind = s.var_by_name("RA(P,S)").unwrap();
+        let ct = implication_ct(a, ind);
+        let cfg = AprioriConfig { min_support: 0.9, ..Default::default() };
+        assert!(apriori(&s, &ct, cfg, None).is_empty());
+    }
+
+    #[test]
+    fn empty_ct_no_rules() {
+        let s = university_schema();
+        let ct = CtTable::empty(vec![0, 1]);
+        assert!(apriori(&s, &ct, AprioriConfig::default(), None).is_empty());
+    }
+
+    #[test]
+    fn rule_rendering() {
+        let s = university_schema();
+        let a = s.var_by_name("intelligence(S)").unwrap();
+        let ind = s.var_by_name("RA(P,S)").unwrap();
+        let r = Rule {
+            body: vec![(a, 2)],
+            head: (ind, 1),
+            support: 0.3,
+            confidence: 1.0,
+            lift: 1.7,
+        };
+        assert_eq!(r.render(&s), "intelligence(S)=3 -> RA(P,S)=T");
+    }
+
+    #[test]
+    fn lift_consistency_native() {
+        let m = native_metrics(&[50.0], &[60.0], &[30.0], 100.0);
+        let (sup, conf, lift) = m[0];
+        assert!((sup - 0.3).abs() < 1e-12);
+        assert!((conf - 0.6).abs() < 1e-12);
+        assert!((lift - 1.0).abs() < 1e-12);
+    }
+}

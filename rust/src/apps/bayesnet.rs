@@ -1,0 +1,467 @@
+//! Bayesian-network structure learning over the contingency table — the
+//! paper's §6.3 experiment (Tables 7 and 8), in the style of the
+//! learn-and-join (LAJ) method of Schulte & Khosravi (2012).
+//!
+//! LAJ walks the relationship-chain lattice bottom-up: at each lattice
+//! point it hill-climbs over that point's contingency table, *inheriting*
+//! (freezing) all edges learned at smaller points and proposing only edges
+//! that touch a variable new to this point. The score is the relational
+//! pseudo log-likelihood (frequency-normalized, Schulte 2011) with a
+//! BIC-style penalty; all family statistics come from ct projections.
+//!
+//! With link analysis OFF the input table is conditioned on all
+//! relationships being true, so relationship indicators are constant and
+//! can never be learned as children — R2R/A2R edges (Table 8) only appear
+//! with link analysis ON.
+
+use super::info::{family_loglik_batch, family_loglik_native};
+use crate::ct::CtTable;
+use crate::mobius::MjResult;
+use crate::runtime::XlaRuntime;
+use crate::schema::{Schema, VarId, VarKind};
+use crate::util::fxhash::FxHashMap;
+use std::time::{Duration, Instant};
+
+/// A learned Bayesian network structure over ct variables.
+#[derive(Debug, Clone, Default)]
+pub struct BayesNet {
+    /// Nodes (ct variables), sorted.
+    pub nodes: Vec<VarId>,
+    /// `parents[i]` = parent VarIds of `nodes[i]`.
+    pub parents: Vec<Vec<VarId>>,
+}
+
+impl BayesNet {
+    fn node_index(&self, v: VarId) -> usize {
+        self.nodes.binary_search(&v).expect("not a node")
+    }
+
+    /// Would adding `parent -> child` create a directed cycle?
+    fn creates_cycle(&self, parent: VarId, child: VarId) -> bool {
+        // DFS from `parent` upward: if we can reach `child` via parent
+        // links... direction check: cycle iff child is an ancestor of
+        // parent, i.e. path parent ~> ... following parents reaches child?
+        // Edges point parent -> child; a cycle appears iff there is a
+        // directed path child ~> parent already.
+        let mut stack = vec![child];
+        let mut seen = std::collections::HashSet::new();
+        while let Some(v) = stack.pop() {
+            if v == parent {
+                return true;
+            }
+            if !seen.insert(v) {
+                continue;
+            }
+            // children of v: nodes having v as parent
+            for (i, ps) in self.parents.iter().enumerate() {
+                if ps.contains(&v) {
+                    stack.push(self.nodes[i]);
+                }
+            }
+        }
+        false
+    }
+
+    /// Count edges by kind: (R2R, A2R) — relationship-to-relationship and
+    /// attribute-to-relationship edges (Table 8).
+    pub fn edge_kinds(&self, schema: &Schema) -> (usize, usize) {
+        let mut r2r = 0;
+        let mut a2r = 0;
+        for (i, ps) in self.parents.iter().enumerate() {
+            let child = self.nodes[i];
+            if schema.random_vars[child].kind() != VarKind::RelInd {
+                continue;
+            }
+            for &p in ps {
+                if schema.random_vars[p].kind() == VarKind::RelInd {
+                    r2r += 1;
+                } else {
+                    a2r += 1;
+                }
+            }
+        }
+        (r2r, a2r)
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.parents.iter().map(|p| p.len()).sum()
+    }
+
+    /// Number of free parameters: Σ nodes (arity−1)·Π parent arities.
+    pub fn num_params(&self, schema: &Schema) -> u64 {
+        self.nodes
+            .iter()
+            .zip(&self.parents)
+            .map(|(&n, ps)| {
+                let child = schema.var_arity(n) as u64 - 1;
+                let parent_cfg: u64 =
+                    ps.iter().map(|&p| schema.var_arity(p) as u64).product();
+                child * parent_cfg
+            })
+            .sum()
+    }
+
+    /// Render edges as `parent -> child` lines.
+    pub fn render(&self, schema: &Schema) -> String {
+        let mut s = String::new();
+        for (i, ps) in self.parents.iter().enumerate() {
+            for &p in ps {
+                s.push_str(&format!(
+                    "{} -> {}\n",
+                    schema.var_name(p),
+                    schema.var_name(self.nodes[i])
+                ));
+            }
+        }
+        s
+    }
+}
+
+/// Learning configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BnConfig {
+    /// Maximum parents per node (keeps family tables within the bnscore
+    /// bucket ladder).
+    pub max_parents: usize,
+    /// BIC penalty weight (0.5·ln N per parameter when 1.0).
+    pub penalty: f64,
+}
+
+impl Default for BnConfig {
+    fn default() -> Self {
+        BnConfig { max_parents: 3, penalty: 1.0 }
+    }
+}
+
+/// Output of structure learning.
+#[derive(Debug)]
+pub struct LearnOutcome {
+    pub bn: BayesNet,
+    pub elapsed: Duration,
+    pub score_evals: usize,
+}
+
+/// Family sufficient statistics from a ct: dense (parent configs × child
+/// values) count matrix. Value codes map to dense indices in
+/// first-observed order.
+fn family_counts(ct: &CtTable, child: VarId, parents: &[VarId]) -> (Vec<f64>, usize, usize) {
+    let mut vars = parents.to_vec();
+    vars.push(child);
+    let proj = ct.project(&vars);
+    let ccol = proj.col_of(child).unwrap();
+    let pcols: Vec<usize> = parents.iter().map(|&p| proj.col_of(p).unwrap()).collect();
+    let mut pidx: FxHashMap<Vec<u16>, usize> = FxHashMap::default();
+    let mut cidx: FxHashMap<u16, usize> = FxHashMap::default();
+    let mut cells: Vec<(usize, usize, f64)> = Vec::with_capacity(proj.len());
+    let mut pbuf = vec![0u16; pcols.len()];
+    for (row, c) in proj.iter() {
+        for (slot, &pc) in pcols.iter().enumerate() {
+            pbuf[slot] = row[pc];
+        }
+        let np = pidx.len();
+        let pi = *pidx.entry(pbuf.clone()).or_insert(np);
+        let nc = cidx.len();
+        let ci = *cidx.entry(row[ccol]).or_insert(nc);
+        cells.push((pi, ci, c as f64));
+    }
+    let (p, c) = (pidx.len().max(1), cidx.len().max(1));
+    let mut data = vec![0.0; p * c];
+    for (pi, ci, v) in cells {
+        data[pi * c + ci] += v;
+    }
+    (data, p, c)
+}
+
+/// Score (pseudo log-likelihood − BIC penalty) of one family.
+fn family_score(
+    ct: &CtTable,
+    schema: &Schema,
+    child: VarId,
+    parents: &[VarId],
+    cfg: &BnConfig,
+    cache: &mut FxHashMap<(VarId, Vec<VarId>), f64>,
+    evals: &mut usize,
+) -> f64 {
+    let key = (child, parents.to_vec());
+    if let Some(&s) = cache.get(&key) {
+        return s;
+    }
+    let (data, p, c) = family_counts(ct, child, parents);
+    let ll = family_loglik_native(&data, p, c);
+    *evals += 1;
+    let n = ct.total() as f64;
+    let params = (schema.var_arity(child) as f64 - 1.0)
+        * parents.iter().map(|&q| schema.var_arity(q) as f64).product::<f64>();
+    // Frequency-normalized likelihood ⇒ the BIC term is scaled by 1/N too.
+    let score = ll - cfg.penalty * 0.5 * n.max(2.0).ln() * params / n.max(1.0);
+    cache.insert(key, score);
+    score
+}
+
+/// Hill-climb over `active` variables of `ct`, starting from `bn`
+/// (inherited edges frozen), only proposing edges touching `new_vars`.
+#[allow(clippy::too_many_arguments)]
+fn hill_climb(
+    ct: &CtTable,
+    schema: &Schema,
+    bn: &mut BayesNet,
+    active: &[VarId],
+    new_vars: &[VarId],
+    frozen: &std::collections::HashSet<(VarId, VarId)>,
+    cfg: &BnConfig,
+    cache: &mut FxHashMap<(VarId, Vec<VarId>), f64>,
+    evals: &mut usize,
+) {
+    if ct.is_empty() {
+        return;
+    }
+    loop {
+        let mut best: Option<(f64, usize, Vec<VarId>)> = None; // (delta, node idx, new parents)
+        for &child in active {
+            // Only children that are new, or gaining a new-var parent.
+            let ci = bn.node_index(child);
+            let cur_parents = bn.parents[ci].clone();
+            // A family whose parents span another lattice branch cannot be
+            // rescored on this point's table — leave it to the branch that
+            // owns it (LAJ inheritance).
+            if cur_parents.iter().any(|&p| ct.col_of(p).is_none()) {
+                continue;
+            }
+            let cur =
+                family_score(ct, schema, child, &cur_parents, cfg, cache, evals);
+            // Try adding a parent.
+            for &cand in active {
+                if cand == child
+                    || cur_parents.contains(&cand)
+                    || cur_parents.len() >= cfg.max_parents
+                {
+                    continue;
+                }
+                if !new_vars.contains(&child) && !new_vars.contains(&cand) {
+                    continue; // LAJ: at least one endpoint must be new here
+                }
+                // Never point an edge *into* a constant variable; a
+                // constant child is never improved, the score handles it.
+                if bn.creates_cycle(cand, child) {
+                    continue;
+                }
+                let mut np = cur_parents.clone();
+                np.push(cand);
+                np.sort_unstable();
+                let s = family_score(ct, schema, child, &np, cfg, cache, evals);
+                let delta = s - cur;
+                if delta > 1e-9 && best.as_ref().is_none_or(|b| delta > b.0) {
+                    best = Some((delta, ci, np));
+                }
+            }
+            // Try removing a non-frozen parent.
+            for &p in &cur_parents {
+                if frozen.contains(&(p, child)) {
+                    continue;
+                }
+                let np: Vec<VarId> =
+                    cur_parents.iter().copied().filter(|&q| q != p).collect();
+                let s = family_score(ct, schema, child, &np, cfg, cache, evals);
+                let delta = s - cur;
+                if delta > 1e-9 && best.as_ref().is_none_or(|b| delta > b.0) {
+                    best = Some((delta, ci, np));
+                }
+            }
+        }
+        match best {
+            Some((_, ci, np)) => bn.parents[ci] = np,
+            None => break,
+        }
+    }
+}
+
+/// Learn a BN with the learn-and-join lattice walk. `link_on` selects
+/// whether relationship indicators (and n/a-bearing 2Atts rows) are
+/// visible: OFF conditions every table on all its relationships being true.
+pub fn learn_structure(
+    schema: &Schema,
+    mj: &MjResult,
+    link_on: bool,
+    cfg: BnConfig,
+) -> LearnOutcome {
+    let t0 = Instant::now();
+    let mut evals = 0usize;
+    let mut cache_store: FxHashMap<Vec<VarId>, FxHashMap<(VarId, Vec<VarId>), f64>> =
+        FxHashMap::default();
+
+    // Node set: all variables of the joint table; with link off the
+    // indicators are still nodes but constant (never children/parents).
+    let joint = mj.joint_ct();
+    let nodes: Vec<VarId> = joint.vars.clone();
+    let mut bn = BayesNet { nodes: nodes.clone(), parents: vec![Vec::new(); nodes.len()] };
+    let mut frozen: std::collections::HashSet<(VarId, VarId)> = Default::default();
+    let mut seen_vars: std::collections::HashSet<VarId> = Default::default();
+
+    // Phase 1: entity tables (attribute dependencies within one
+    // population's FO variable).
+    let mut points: Vec<(Vec<VarId>, CtTable)> = Vec::new();
+    for (fo, ct) in &mj.entity_cts {
+        let vars = schema.one_atts_of_fo(*fo);
+        points.push((vars, ct.clone()));
+    }
+    points.sort_by(|a, b| a.0.cmp(&b.0));
+    // Phase 2: relationship chains, level order.
+    let mut chains: Vec<&Vec<usize>> = mj.tables.keys().collect();
+    chains.sort_by(|a, b| a.len().cmp(&b.len()).then(a.cmp(b)));
+    for chain in chains {
+        let table = &mj.tables[chain];
+        let table = if link_on {
+            table.clone()
+        } else {
+            // Link analysis off: condition on all chain relationships true.
+            let conds: Vec<(VarId, u16)> =
+                chain.iter().map(|&r| (schema.rel_ind_var(r), 1)).collect();
+            table.select(&conds)
+        };
+        points.push((table.vars.clone(), table));
+    }
+
+    for (vars, ct) in points {
+        let new_vars: Vec<VarId> =
+            vars.iter().copied().filter(|v| !seen_vars.contains(v)).collect();
+        let cache = cache_store.entry(vars.clone()).or_default();
+        hill_climb(&ct, schema, &mut bn, &vars, &new_vars, &frozen, &cfg, cache, &mut evals);
+        for v in &vars {
+            seen_vars.insert(*v);
+        }
+        // Freeze everything learned so far.
+        for (i, ps) in bn.parents.iter().enumerate() {
+            for &p in ps {
+                frozen.insert((p, bn.nodes[i]));
+            }
+        }
+    }
+
+    LearnOutcome { bn, elapsed: t0.elapsed(), score_evals: evals }
+}
+
+/// Model metrics of a structure evaluated against a (link-on) joint table:
+/// total pseudo log-likelihood, #parameters, R2R/A2R edge counts (Table 8).
+#[derive(Debug, Clone)]
+pub struct BnMetrics {
+    pub loglik: f64,
+    pub params: u64,
+    pub r2r: usize,
+    pub a2r: usize,
+}
+
+/// Score a learned structure with maximum-likelihood parameters on `joint`
+/// (both link-on and link-off structures are scored on the same table so
+/// numbers are comparable, paper §6.3).
+pub fn score_structure(
+    schema: &Schema,
+    bn: &BayesNet,
+    joint: &CtTable,
+    rt: Option<&XlaRuntime>,
+) -> BnMetrics {
+    let families: Vec<(Vec<f64>, usize, usize)> = bn
+        .nodes
+        .iter()
+        .zip(&bn.parents)
+        .map(|(&n, ps)| family_counts(joint, n, ps))
+        .collect();
+    let lls = family_loglik_batch(&families, rt);
+    let (r2r, a2r) = bn.edge_kinds(schema);
+    BnMetrics { loglik: lls.iter().sum(), params: bn.num_params(schema), r2r, a2r }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::university_db;
+    use crate::mobius::MobiusJoin;
+
+    #[test]
+    fn learns_acyclic_structure_on_university() {
+        let db = university_db();
+        let mj = MobiusJoin::new(&db).run();
+        let out = learn_structure(&db.schema, &mj, true, BnConfig::default());
+        // Acyclicity: a topological order must exist (Kahn's algorithm).
+        let n = out.bn.nodes.len();
+        let mut indeg: Vec<usize> = out.bn.parents.iter().map(|p| p.len()).collect();
+        let mut removed = 0;
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        while let Some(i) = queue.pop() {
+            removed += 1;
+            let v = out.bn.nodes[i];
+            for (j, ps) in out.bn.parents.iter().enumerate() {
+                if ps.contains(&v) {
+                    indeg[j] -= 1;
+                    if indeg[j] == 0 {
+                        queue.push(j);
+                    }
+                }
+            }
+        }
+        assert_eq!(removed, n, "graph has a directed cycle");
+        assert!(out.score_evals > 0);
+    }
+
+    #[test]
+    fn link_off_learns_no_rel_children() {
+        let db = university_db();
+        let mj = MobiusJoin::new(&db).run();
+        let out = learn_structure(&db.schema, &mj, false, BnConfig::default());
+        let (r2r, a2r) = out.bn.edge_kinds(&db.schema);
+        assert_eq!(r2r + a2r, 0, "link-off must not learn edges into indicators");
+    }
+
+    #[test]
+    fn params_counting() {
+        let s = crate::schema::university_schema();
+        let intel = s.var_by_name("intelligence(S)").unwrap(); // arity 3
+        let rank = s.var_by_name("ranking(S)").unwrap(); // arity 2
+        let bn = BayesNet { nodes: vec![intel.min(rank), intel.max(rank)], parents: vec![vec![], vec![]] };
+        assert_eq!(bn.num_params(&s), (3 - 1) + (2 - 1));
+        let mut bn2 = bn.clone();
+        // rank -> intelligence
+        let ii = bn2.node_index(intel);
+        bn2.parents[ii] = vec![rank];
+        assert_eq!(bn2.num_params(&s), 2 * 2 + 1);
+    }
+
+    #[test]
+    fn cycle_detection() {
+        let bn = BayesNet { nodes: vec![0, 1, 2], parents: vec![vec![], vec![0], vec![1]] };
+        // 0 -> 1 -> 2 exists; adding 2 -> 0 closes a cycle.
+        assert!(bn.creates_cycle(2, 0));
+        assert!(!bn.creates_cycle(0, 2));
+    }
+
+    #[test]
+    fn family_counts_shape() {
+        let ct = CtTable::from_raw(
+            vec![0, 1],
+            vec![0, 0, 0, 1, 1, 0, 1, 1],
+            vec![3, 1, 2, 4],
+        );
+        let (data, p, c) = family_counts(&ct, 1, &[0]);
+        assert_eq!((p, c), (2, 2));
+        assert_eq!(data.iter().sum::<f64>(), 10.0);
+    }
+
+    #[test]
+    fn score_structure_reports_edge_kinds() {
+        let db = university_db();
+        let mj = MobiusJoin::new(&db).run();
+        let s = &db.schema;
+        let joint = mj.joint_ct();
+        // Hand-build: intelligence(S) -> RA(P,S) is an A2R edge.
+        let intel = s.var_by_name("intelligence(S)").unwrap();
+        let ra = s.var_by_name("RA(P,S)").unwrap();
+        let mut bn =
+            BayesNet { nodes: joint.vars.clone(), parents: vec![Vec::new(); joint.vars.len()] };
+        let ri = bn.node_index(ra);
+        bn.parents[ri] = vec![intel];
+        let m = score_structure(s, &bn, joint, None);
+        assert_eq!(m.a2r, 1);
+        assert_eq!(m.r2r, 0);
+        assert!(m.loglik <= 0.0);
+        assert!(m.params > 0);
+    }
+}

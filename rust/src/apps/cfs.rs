@@ -1,0 +1,224 @@
+//! Correlation-based Feature Selection (CFS, Hall 1999) over a contingency
+//! table — the paper's §6.1 experiment (Table 5).
+//!
+//! CFS scores a feature subset S for target C by the merit
+//!
+//! ```text
+//! merit(S) = k·r̄_cf / sqrt(k + k(k−1)·r̄_ff)
+//! ```
+//!
+//! where `r̄_cf` is the mean feature-target symmetric uncertainty and
+//! `r̄_ff` the mean feature-feature SU, and searches subsets best-first
+//! with a non-improvement stopping patience of 5 (Weka defaults).
+//! All correlations come from ct-table projections — no access to raw data.
+
+use super::info::{joint_counts, su_batch, JointCounts};
+use crate::ct::CtTable;
+use crate::runtime::XlaRuntime;
+use crate::schema::VarId;
+
+/// Result of a CFS run.
+#[derive(Debug, Clone)]
+pub struct CfsResult {
+    /// Selected feature subset, sorted by VarId.
+    pub selected: Vec<VarId>,
+    /// Merit of the selected subset.
+    pub merit: f64,
+}
+
+/// Pairwise-SU provider with lazy caching.
+struct SuCache<'a> {
+    ct: &'a CtTable,
+    rt: Option<&'a XlaRuntime>,
+    cache: crate::util::fxhash::FxHashMap<(VarId, VarId), f64>,
+}
+
+impl<'a> SuCache<'a> {
+    fn new(ct: &'a CtTable, rt: Option<&'a XlaRuntime>) -> Self {
+        SuCache { ct, rt, cache: Default::default() }
+    }
+
+    /// Batch-prime SU values for a list of pairs (one XLA dispatch).
+    fn prime(&mut self, pairs: &[(VarId, VarId)]) {
+        let missing: Vec<(VarId, VarId)> = pairs
+            .iter()
+            .map(|&(a, b)| (a.min(b), a.max(b)))
+            .filter(|k| !self.cache.contains_key(k))
+            .collect();
+        if missing.is_empty() {
+            return;
+        }
+        let joints: Vec<JointCounts> =
+            missing.iter().map(|&(a, b)| joint_counts(self.ct, a, b)).collect();
+        let sus = su_batch(&joints, self.rt);
+        for (k, su) in missing.into_iter().zip(sus) {
+            self.cache.insert(k, su);
+        }
+    }
+
+    fn su(&mut self, a: VarId, b: VarId) -> f64 {
+        let k = (a.min(b), a.max(b));
+        if let Some(&v) = self.cache.get(&k) {
+            return v;
+        }
+        self.prime(&[k]);
+        self.cache[&k]
+    }
+}
+
+/// CFS merit of a subset.
+fn merit(subset: &[VarId], target: VarId, su: &mut SuCache) -> f64 {
+    let k = subset.len() as f64;
+    if subset.is_empty() {
+        return 0.0;
+    }
+    let rcf: f64 = subset.iter().map(|&f| su.su(f, target)).sum::<f64>() / k;
+    let mut rff = 0.0;
+    let mut pairs = 0.0;
+    for (i, &a) in subset.iter().enumerate() {
+        for &b in &subset[i + 1..] {
+            rff += su.su(a, b);
+            pairs += 1.0;
+        }
+    }
+    let rff = if pairs > 0.0 { rff / pairs } else { 0.0 };
+    let denom = (k + k * (k - 1.0) * rff).sqrt();
+    if denom <= 0.0 {
+        0.0
+    } else {
+        k * rcf / denom
+    }
+}
+
+/// Run CFS: select a feature subset for `target` from `features`, using
+/// only the contingency table. Returns an empty selection for an empty ct
+/// (the paper's Mondial link-off case: "Empty CT").
+pub fn cfs_select(
+    ct: &CtTable,
+    target: VarId,
+    features: &[VarId],
+    rt: Option<&XlaRuntime>,
+) -> CfsResult {
+    if ct.is_empty() {
+        return CfsResult { selected: Vec::new(), merit: 0.0 };
+    }
+    let feats: Vec<VarId> = features
+        .iter()
+        .copied()
+        .filter(|&f| f != target && ct.col_of(f).is_some())
+        .collect();
+    let mut su = SuCache::new(ct, rt);
+    // Prime all feature-target correlations in one batch.
+    let ft: Vec<(VarId, VarId)> = feats.iter().map(|&f| (f, target)).collect();
+    su.prime(&ft);
+
+    // Best-first search with patience 5 (Weka CFS defaults).
+    let mut best: (Vec<VarId>, f64) = (Vec::new(), 0.0);
+    let mut frontier: Vec<(Vec<VarId>, f64)> = vec![(Vec::new(), 0.0)];
+    let mut visited: std::collections::HashSet<Vec<VarId>> = Default::default();
+    let mut stale = 0usize;
+    while let Some(pos) = frontier
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1 .1.total_cmp(&b.1 .1))
+        .map(|(i, _)| i)
+    {
+        let (subset, _) = frontier.swap_remove(pos);
+        let mut improved = false;
+        for &f in &feats {
+            if subset.contains(&f) {
+                continue;
+            }
+            let mut next = subset.clone();
+            next.push(f);
+            next.sort_unstable();
+            if !visited.insert(next.clone()) {
+                continue;
+            }
+            let m = merit(&next, target, &mut su);
+            if m > best.1 + 1e-12 {
+                best = (next.clone(), m);
+                improved = true;
+            }
+            frontier.push((next, m));
+        }
+        stale = if improved { 0 } else { stale + 1 };
+        if stale >= 5 || frontier.is_empty() {
+            break;
+        }
+    }
+    CfsResult { selected: best.0, merit: best.1 }
+}
+
+/// 1 − Jaccard coefficient between two feature sets (paper §6.1
+/// "Distinctness"); 0.0 when both sets are empty.
+pub fn distinctness(a: &[VarId], b: &[VarId]) -> f64 {
+    let sa: std::collections::HashSet<_> = a.iter().collect();
+    let sb: std::collections::HashSet<_> = b.iter().collect();
+    let union = sa.union(&sb).count();
+    if union == 0 {
+        return 0.0;
+    }
+    let inter = sa.intersection(&sb).count();
+    1.0 - inter as f64 / union as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    /// ct where var 1 predicts target 0 perfectly and var 2 is noise.
+    fn predictive_ct(seed: u64) -> CtTable {
+        let mut rng = Pcg64::seeded(seed);
+        let mut rows = Vec::new();
+        let mut counts = Vec::new();
+        for _ in 0..200 {
+            let t = rng.below(2) as u16;
+            let good = t; // copies target
+            let noise = rng.below(3) as u16;
+            rows.extend_from_slice(&[t, good, noise]);
+            counts.push(1);
+        }
+        CtTable::from_raw(vec![0, 1, 2], rows, counts)
+    }
+
+    #[test]
+    fn selects_predictive_feature() {
+        let ct = predictive_ct(5);
+        let res = cfs_select(&ct, 0, &[1, 2], None);
+        assert!(res.selected.contains(&1), "selected: {:?}", res.selected);
+        assert!(res.merit > 0.5);
+    }
+
+    #[test]
+    fn empty_ct_selects_nothing() {
+        let ct = CtTable::empty(vec![0, 1, 2]);
+        let res = cfs_select(&ct, 0, &[1, 2], None);
+        assert!(res.selected.is_empty());
+    }
+
+    #[test]
+    fn distinctness_extremes() {
+        assert_eq!(distinctness(&[1, 2], &[1, 2]), 0.0);
+        assert_eq!(distinctness(&[1], &[2]), 1.0);
+        assert_eq!(distinctness(&[], &[]), 0.0);
+        assert!((distinctness(&[1, 2], &[2, 3]) - (1.0 - 1.0 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_feature_never_selected() {
+        // Var 3 constant: SU = 0 always.
+        let mut rows = Vec::new();
+        let mut counts = Vec::new();
+        let mut rng = Pcg64::seeded(9);
+        for _ in 0..100 {
+            let t = rng.below(2) as u16;
+            rows.extend_from_slice(&[t, t, 7u16]);
+            counts.push(1);
+        }
+        let ct = CtTable::from_raw(vec![0, 1, 3], rows, counts);
+        let res = cfs_select(&ct, 0, &[1, 3], None);
+        assert!(!res.selected.contains(&3));
+    }
+}

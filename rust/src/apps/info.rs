@@ -1,0 +1,179 @@
+//! Information-theoretic primitives over contingency tables.
+//!
+//! Native implementations mirror the L1/L2 kernels exactly (same formulas
+//! as `python/compile/kernels/ref.py`); when an [`XlaRuntime`] is supplied
+//! the batched entry points route through the AOT-compiled artifacts
+//! instead.
+
+use crate::ct::CtTable;
+use crate::runtime::XlaRuntime;
+use crate::schema::VarId;
+use crate::util::fxhash::FxHashMap;
+
+/// x·ln(x) with 0·ln 0 = 0.
+#[inline]
+pub fn xlogx(x: f64) -> f64 {
+    if x > 0.0 {
+        x * x.ln()
+    } else {
+        0.0
+    }
+}
+
+/// Shannon entropy (nats) of an unnormalized count slice.
+pub fn entropy(counts: &[f64]) -> f64 {
+    let n: f64 = counts.iter().sum();
+    if n <= 0.0 {
+        return 0.0;
+    }
+    n.ln() - counts.iter().map(|&x| xlogx(x)).sum::<f64>() / n
+}
+
+/// A dense joint count matrix for a pair of ct variables.
+#[derive(Debug, Clone)]
+pub struct JointCounts {
+    pub data: Vec<f64>, // row-major v1 x v2
+    pub v1: usize,
+    pub v2: usize,
+}
+
+/// Densify the joint distribution of `(x, y)` from a contingency table.
+/// Value codes (including the `NA` code) are mapped to dense indices in
+/// first-observed order — SU/entropy are permutation-invariant.
+pub fn joint_counts(ct: &CtTable, x: VarId, y: VarId) -> JointCounts {
+    let cx = ct.col_of(x).expect("joint_counts: x not in ct");
+    let cy = ct.col_of(y).expect("joint_counts: y not in ct");
+    let mut ix: FxHashMap<u16, usize> = FxHashMap::default();
+    let mut iy: FxHashMap<u16, usize> = FxHashMap::default();
+    let mut cells: Vec<(usize, usize, f64)> = Vec::with_capacity(ct.len());
+    for (row, c) in ct.iter() {
+        let nx = ix.len();
+        let xi = *ix.entry(row[cx]).or_insert(nx);
+        let ny = iy.len();
+        let yi = *iy.entry(row[cy]).or_insert(ny);
+        cells.push((xi, yi, c as f64));
+    }
+    let (v1, v2) = (ix.len().max(1), iy.len().max(1));
+    let mut data = vec![0.0; v1 * v2];
+    for (xi, yi, c) in cells {
+        data[xi * v2 + yi] += c;
+    }
+    JointCounts { data, v1, v2 }
+}
+
+/// Symmetric uncertainty from a dense joint: `2·(Hx + Hy − Hxy)/(Hx + Hy)`.
+pub fn su_native(j: &JointCounts) -> f64 {
+    let mut mx = vec![0.0; j.v1];
+    let mut my = vec![0.0; j.v2];
+    for r in 0..j.v1 {
+        for c in 0..j.v2 {
+            mx[r] += j.data[r * j.v2 + c];
+            my[c] += j.data[r * j.v2 + c];
+        }
+    }
+    let hx = entropy(&mx);
+    let hy = entropy(&my);
+    let hxy = entropy(&j.data);
+    let denom = hx + hy;
+    if denom <= 0.0 {
+        return 0.0;
+    }
+    (2.0 * (hx + hy - hxy).max(0.0)) / denom
+}
+
+/// Batched symmetric uncertainty: XLA when available (and fitting the
+/// bucket ladder), else native. Both paths agree to ~1e-12.
+pub fn su_batch(joints: &[JointCounts], rt: Option<&XlaRuntime>) -> Vec<f64> {
+    if let Some(rt) = rt {
+        let args: Vec<(Vec<f64>, usize, usize)> =
+            joints.iter().map(|j| (j.data.clone(), j.v1, j.v2)).collect();
+        if let Ok(out) = rt.su_batch(&args) {
+            return out;
+        }
+    }
+    joints.iter().map(su_native).collect()
+}
+
+/// Relational pseudo log-likelihood of one BN family (frequency-normalized,
+/// Schulte 2011): `Σ_pc n_pc (ln n_pc − ln n_p) / N`.
+pub fn family_loglik_native(counts: &[f64], p: usize, c: usize) -> f64 {
+    debug_assert_eq!(counts.len(), p * c);
+    let total: f64 = counts.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let n_pc: f64 = counts.iter().map(|&x| xlogx(x)).sum();
+    let n_p: f64 = (0..p)
+        .map(|r| xlogx(counts[r * c..(r + 1) * c].iter().sum()))
+        .sum();
+    (n_pc - n_p) / total
+}
+
+/// Batched family log-likelihood with optional XLA offload.
+pub fn family_loglik_batch(
+    families: &[(Vec<f64>, usize, usize)],
+    rt: Option<&XlaRuntime>,
+) -> Vec<f64> {
+    if let Some(rt) = rt {
+        if let Ok(out) = rt.bnscore_batch(families) {
+            return out;
+        }
+    }
+    families.iter().map(|(m, p, c)| family_loglik_native(m, *p, *c)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_of_uniform_and_point() {
+        assert!((entropy(&[5.0, 5.0]) - std::f64::consts::LN_2).abs() < 1e-12);
+        assert_eq!(entropy(&[7.0, 0.0]), 0.0);
+        assert_eq!(entropy(&[]), 0.0);
+    }
+
+    #[test]
+    fn su_extremes() {
+        // Perfect dependence -> 1; independence -> 0.
+        let dep = JointCounts { data: vec![5.0, 0.0, 0.0, 5.0], v1: 2, v2: 2 };
+        assert!((su_native(&dep) - 1.0).abs() < 1e-12);
+        let ind = JointCounts { data: vec![4.0, 4.0, 4.0, 4.0], v1: 2, v2: 2 };
+        assert!(su_native(&ind).abs() < 1e-12);
+    }
+
+    #[test]
+    fn joint_counts_from_ct() {
+        let ct = CtTable::from_raw(
+            vec![1, 2],
+            vec![0, 0, 0, 1, 1, 0],
+            vec![3, 4, 5],
+        );
+        let j = joint_counts(&ct, 1, 2);
+        assert_eq!(j.v1, 2);
+        assert_eq!(j.v2, 2);
+        let total: f64 = j.data.iter().sum();
+        assert_eq!(total, 12.0);
+    }
+
+    #[test]
+    fn family_loglik_hand_checked() {
+        // counts [[3,1],[0,4]]: L = (3ln3 + 1ln1 + 4ln4 - 4ln4 - 4ln4)/8
+        let expect = (3.0 * 3f64.ln() + 4.0 * 4f64.ln() - 2.0 * (4.0 * 4f64.ln())) / 8.0;
+        let got = family_loglik_native(&[3.0, 1.0, 0.0, 4.0], 2, 2);
+        assert!((got - expect).abs() < 1e-12);
+        // Deterministic child given parent: maximal (zero) loss.
+        assert_eq!(family_loglik_native(&[4.0, 0.0, 0.0, 4.0], 2, 2), 0.0);
+    }
+
+    #[test]
+    fn batch_matches_native_without_runtime() {
+        let joints = vec![
+            JointCounts { data: vec![1.0, 2.0, 3.0, 4.0], v1: 2, v2: 2 },
+            JointCounts { data: vec![9.0, 0.0, 0.0, 9.0], v1: 2, v2: 2 },
+        ];
+        let out = su_batch(&joints, None);
+        assert_eq!(out.len(), 2);
+        assert!((out[1] - 1.0).abs() < 1e-12);
+    }
+}

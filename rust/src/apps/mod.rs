@@ -1,0 +1,14 @@
+//! Statistical applications consuming the sufficient statistics (paper §6):
+//!
+//! * [`cfs`] — correlation-based feature selection (Table 5);
+//! * [`apriori`] — association-rule mining with lift (Table 6);
+//! * [`bayesnet`] — learn-and-join Bayesian-network structure learning
+//!   (Tables 7-8);
+//! * [`info`] — shared information-theoretic helpers (entropy, symmetric
+//!   uncertainty, family log-likelihood) with native implementations and
+//!   optional XLA offload through [`crate::runtime::XlaRuntime`].
+
+pub mod info;
+pub mod cfs;
+pub mod apriori;
+pub mod bayesnet;

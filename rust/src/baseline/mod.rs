@@ -1,0 +1,209 @@
+//! The cross-product (CP) baseline of paper §5.2: materialize the Cartesian
+//! product of the entity populations (one factor per FO variable), classify
+//! every tuple against the relationship tables, and GROUP BY everything.
+//!
+//! This is the approach the Möbius Join makes obsolete — it is implemented
+//! both as the correctness oracle (its output must equal the MJ joint table
+//! exactly) and as the Table 3 comparison baseline, including the paper's
+//! "N.T." (non-termination) behaviour via a time/size budget.
+
+use crate::ct::CtTable;
+use crate::db::Database;
+use crate::schema::{RandomVar, VarId, NA};
+use crate::util::fxhash::FxHashMap;
+use std::time::{Duration, Instant};
+
+/// Resource budget for the CP enumeration.
+#[derive(Debug, Clone, Copy)]
+pub struct CpBudget {
+    /// Give up after this much wall time (the paper's runs crashed after
+    /// hours; we cut off deterministically).
+    pub max_time: Duration,
+    /// Give up immediately if the cross product has more tuples than this.
+    pub max_tuples: u128,
+}
+
+impl Default for CpBudget {
+    fn default() -> Self {
+        CpBudget { max_time: Duration::from_secs(120), max_tuples: 200_000_000 }
+    }
+}
+
+/// Outcome of a CP run.
+#[derive(Debug)]
+pub enum CpOutcome {
+    Done { ct: CtTable, cp_tuples: u128, elapsed: Duration },
+    /// The paper's "N.T.": budget exhausted.
+    NonTermination { cp_tuples: u128, elapsed: Duration },
+}
+
+impl CpOutcome {
+    pub fn ct(&self) -> Option<&CtTable> {
+        match self {
+            CpOutcome::Done { ct, .. } => Some(ct),
+            CpOutcome::NonTermination { .. } => None,
+        }
+    }
+
+    /// Cross-product size (number of tuples the CP approach materializes),
+    /// reported even on non-termination (Table 3 "CP-#tuples").
+    pub fn cp_tuples(&self) -> u128 {
+        match self {
+            CpOutcome::Done { cp_tuples, .. } | CpOutcome::NonTermination { cp_tuples, .. } => {
+                *cp_tuples
+            }
+        }
+    }
+}
+
+/// Size of the full entity cross product: ∏ over FO variables of the
+/// population size.
+pub fn cross_product_size(db: &Database) -> u128 {
+    db.schema
+        .fo_vars
+        .iter()
+        .map(|f| db.entity_counts[f.pop] as u128)
+        .product()
+}
+
+/// Materialize the cross product and compute the joint contingency table by
+/// brute force.
+pub fn cross_product_ct(db: &Database, budget: CpBudget) -> CpOutcome {
+    let t0 = Instant::now();
+    let cp_tuples = cross_product_size(db);
+    if cp_tuples > budget.max_tuples {
+        return CpOutcome::NonTermination { cp_tuples, elapsed: t0.elapsed() };
+    }
+    let schema = &db.schema;
+    let nfo = schema.fo_vars.len();
+    let vars: Vec<VarId> = (0..schema.random_vars.len()).collect();
+
+    // Column plan.
+    enum Src {
+        Ent { fo: usize, pop: usize, attr_idx: usize },
+        Ind { rel: usize },
+        RAttr { rel: usize, attr_idx: usize },
+    }
+    let sources: Vec<Src> = vars
+        .iter()
+        .map(|&v| match schema.random_vars[v] {
+            RandomVar::EntityAttr { fo, attr } => {
+                let pop = schema.fo_vars[fo].pop;
+                Src::Ent { fo, pop, attr_idx: db.attr_pos_in_pop(pop, attr) }
+            }
+            RandomVar::RelInd { rel } => Src::Ind { rel },
+            RandomVar::RelAttr { rel, attr } => {
+                Src::RAttr { rel, attr_idx: db.attr_pos_in_rel(rel, attr) }
+            }
+        })
+        .collect();
+
+    let mut groups: FxHashMap<Vec<u16>, u64> = FxHashMap::default();
+    let mut binding = vec![0u32; nfo];
+    let mut key = vec![0u16; vars.len()];
+    let mut checked: u64 = 0;
+
+    // Odometer enumeration over all entity combinations.
+    let sizes: Vec<u32> = schema.fo_vars.iter().map(|f| db.entity_counts[f.pop]).collect();
+    if sizes.iter().any(|&n| n == 0) {
+        return CpOutcome::Done { ct: CtTable::empty(vars), cp_tuples, elapsed: t0.elapsed() };
+    }
+    'outer: loop {
+        // Emit current combination.
+        for (slot, src) in sources.iter().enumerate() {
+            key[slot] = match *src {
+                Src::Ent { fo, pop, attr_idx } => db.entity_attr(pop, attr_idx, binding[fo]),
+                Src::Ind { rel } => {
+                    let r = &schema.relationships[rel];
+                    let a = binding[schema_fo_slot(schema, r.fo_vars[0])];
+                    let b = binding[schema_fo_slot(schema, r.fo_vars[1])];
+                    db.rels[rel].tuple_of_pair(a, b).map(|_| 1).unwrap_or(0)
+                }
+                Src::RAttr { rel, attr_idx } => {
+                    let r = &schema.relationships[rel];
+                    let a = binding[schema_fo_slot(schema, r.fo_vars[0])];
+                    let b = binding[schema_fo_slot(schema, r.fo_vars[1])];
+                    match db.rels[rel].tuple_of_pair(a, b) {
+                        Some(t) => db.rels[rel].attrs[attr_idx][t as usize],
+                        None => NA,
+                    }
+                }
+            };
+        }
+        if let Some(c) = groups.get_mut(key.as_slice()) {
+            *c += 1;
+        } else {
+            groups.insert(key.clone(), 1);
+        }
+        checked += 1;
+        if checked % 65536 == 0 && t0.elapsed() > budget.max_time {
+            return CpOutcome::NonTermination { cp_tuples, elapsed: t0.elapsed() };
+        }
+        // Advance odometer.
+        let mut slot = 0;
+        loop {
+            binding[slot] += 1;
+            if binding[slot] < sizes[slot] {
+                break;
+            }
+            binding[slot] = 0;
+            slot += 1;
+            if slot == nfo {
+                break 'outer;
+            }
+        }
+    }
+
+    let mut rows = Vec::with_capacity(groups.len() * vars.len());
+    let mut counts = Vec::with_capacity(groups.len());
+    for (k, c) in groups {
+        rows.extend_from_slice(&k);
+        counts.push(c);
+    }
+    CpOutcome::Done {
+        ct: CtTable::from_raw(vars, rows, counts),
+        cp_tuples,
+        elapsed: t0.elapsed(),
+    }
+}
+
+/// FO variables are globally indexed; binding slots use the same index.
+#[inline]
+fn schema_fo_slot(_schema: &crate::schema::Schema, fo: usize) -> usize {
+    fo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::university_db;
+
+    #[test]
+    fn cp_total_is_population_product() {
+        let db = university_db();
+        let out = cross_product_ct(&db, CpBudget::default());
+        let ct = out.ct().expect("small db terminates");
+        assert_eq!(ct.total(), 27); // 3 students x 3 courses x 3 profs
+        assert_eq!(out.cp_tuples(), 27);
+        ct.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cp_respects_tuple_budget() {
+        let db = university_db();
+        let out =
+            cross_product_ct(&db, CpBudget { max_time: Duration::from_secs(5), max_tuples: 10 });
+        assert!(matches!(out, CpOutcome::NonTermination { cp_tuples: 27, .. }));
+    }
+
+    #[test]
+    fn cp_all_true_rows_match_join_count() {
+        let db = university_db();
+        let out = cross_product_ct(&db, CpBudget::default());
+        let ct = out.ct().unwrap();
+        let s = &db.schema;
+        let sel = ct.select(&[(s.rel_ind_var(0), 1), (s.rel_ind_var(1), 1)]);
+        // (s,c,p) with s registered in c and p RA s: jack 2*1 + kim 1*2 + paul 1*1
+        assert_eq!(sel.total(), 5);
+    }
+}

@@ -1,0 +1,206 @@
+//! Run configuration: hand-rolled CLI/key-value parsing (no `clap`/`serde`
+//! offline). Shared by the `mrss` binary and the bench harnesses.
+//!
+//! Precedence: defaults < config file (`--config path`, `KEY = VALUE`
+//! lines, `#` comments) < command-line flags.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Which ct-algebra engine executes the bulk operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Native,
+    Xla,
+}
+
+/// Parsed configuration for a run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Subcommand (`datasets`, `ct`, `cp`, `suite`, `mine`, `bn`).
+    pub command: String,
+    pub dataset: String,
+    pub scale: f64,
+    pub seed: u64,
+    pub engine: EngineKind,
+    pub workers: usize,
+    pub cp_budget_secs: u64,
+    pub cp_max_tuples: u128,
+    pub max_chain_len: Option<usize>,
+    /// Print the first N rows of the joint table (0 = skip).
+    pub excerpt: usize,
+    /// Extra free-form options (forward-compatible).
+    pub extra: HashMap<String, String>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            command: "datasets".into(),
+            dataset: "university".into(),
+            scale: 0.1,
+            seed: 7,
+            engine: EngineKind::Native,
+            workers: 1,
+            cp_budget_secs: 120,
+            cp_max_tuples: 200_000_000,
+            max_chain_len: None,
+            excerpt: 0,
+            extra: HashMap::new(),
+        }
+    }
+}
+
+impl Config {
+    /// Parse from CLI args (`args` excludes the program name). The first
+    /// non-flag token is the subcommand.
+    pub fn from_args(args: &[String]) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut it = args.iter().peekable();
+        let mut saw_command = false;
+        while let Some(a) = it.next() {
+            if let Some(flag) = a.strip_prefix("--") {
+                let take = |it: &mut std::iter::Peekable<std::slice::Iter<String>>| -> Result<String> {
+                    it.next().cloned().with_context(|| format!("--{flag} needs a value"))
+                };
+                match flag {
+                    "dataset" => cfg.dataset = take(&mut it)?,
+                    "scale" => cfg.scale = take(&mut it)?.parse().context("--scale")?,
+                    "seed" => cfg.seed = take(&mut it)?.parse().context("--seed")?,
+                    "engine" => {
+                        cfg.engine = match take(&mut it)?.as_str() {
+                            "native" => EngineKind::Native,
+                            "xla" => EngineKind::Xla,
+                            other => bail!("unknown engine `{other}` (native|xla)"),
+                        }
+                    }
+                    "workers" => cfg.workers = take(&mut it)?.parse().context("--workers")?,
+                    "cp-budget-secs" => {
+                        cfg.cp_budget_secs = take(&mut it)?.parse().context("--cp-budget-secs")?
+                    }
+                    "cp-max-tuples" => {
+                        cfg.cp_max_tuples = take(&mut it)?.parse().context("--cp-max-tuples")?
+                    }
+                    "max-chain-len" => {
+                        cfg.max_chain_len =
+                            Some(take(&mut it)?.parse().context("--max-chain-len")?)
+                    }
+                    "excerpt" => cfg.excerpt = take(&mut it)?.parse().context("--excerpt")?,
+                    "config" => {
+                        let path = take(&mut it)?;
+                        cfg.apply_file(&path)?;
+                    }
+                    other => {
+                        let v = take(&mut it)?;
+                        cfg.extra.insert(other.to_string(), v);
+                    }
+                }
+            } else if !saw_command {
+                cfg.command = a.clone();
+                saw_command = true;
+            } else {
+                bail!("unexpected positional argument `{a}`");
+            }
+        }
+        if cfg.scale <= 0.0 {
+            bail!("scale must be positive");
+        }
+        if cfg.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        Ok(cfg)
+    }
+
+    /// Apply `KEY = VALUE` lines from a config file (lower precedence than
+    /// flags that come after `--config` on the command line).
+    pub fn apply_file(&mut self, path: &str) -> Result<()> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("{path}:{}: expected KEY = VALUE", ln + 1))?;
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "dataset" => self.dataset = v.to_string(),
+                "scale" => self.scale = v.parse().context("scale")?,
+                "seed" => self.seed = v.parse().context("seed")?,
+                "workers" => self.workers = v.parse().context("workers")?,
+                "engine" => {
+                    self.engine = match v {
+                        "native" => EngineKind::Native,
+                        "xla" => EngineKind::Xla,
+                        other => bail!("unknown engine `{other}`"),
+                    }
+                }
+                "cp_budget_secs" => self.cp_budget_secs = v.parse().context("cp_budget_secs")?,
+                "max_chain_len" => self.max_chain_len = Some(v.parse().context("max_chain_len")?),
+                other => {
+                    self.extra.insert(other.to_string(), v.to_string());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn cp_budget(&self) -> crate::baseline::CpBudget {
+        crate::baseline::CpBudget {
+            max_time: Duration::from_secs(self.cp_budget_secs),
+            max_tuples: self.cp_max_tuples,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let c = Config::from_args(&args("ct --dataset imdb --scale 0.25 --engine xla")).unwrap();
+        assert_eq!(c.command, "ct");
+        assert_eq!(c.dataset, "imdb");
+        assert_eq!(c.scale, 0.25);
+        assert_eq!(c.engine, EngineKind::Xla);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(Config::from_args(&args("ct --scale -1")).is_err());
+        assert!(Config::from_args(&args("ct --engine gpu")).is_err());
+        assert!(Config::from_args(&args("ct --scale")).is_err());
+        assert!(Config::from_args(&args("ct stray")).is_err());
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir().join("mrss_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.conf");
+        std::fs::write(&path, "dataset = hepatitis\nscale = 0.5 # half\nworkers=2\n").unwrap();
+        let c = Config::from_args(&args(&format!(
+            "suite --config {} --seed 9",
+            path.display()
+        )))
+        .unwrap();
+        assert_eq!(c.dataset, "hepatitis");
+        assert_eq!(c.scale, 0.5);
+        assert_eq!(c.workers, 2);
+        assert_eq!(c.seed, 9);
+    }
+
+    #[test]
+    fn extra_flags_preserved() {
+        let c = Config::from_args(&args("mine --min-support 0.1")).unwrap();
+        assert_eq!(c.extra["min-support"], "0.1");
+    }
+}

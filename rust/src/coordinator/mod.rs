@@ -1,0 +1,200 @@
+//! L3 pipeline coordinator: orchestrates benchmark jobs (generate → Möbius
+//! Join → baseline → statistical apps) across a bounded worker pool with
+//! backpressure, and aggregates per-job reports.
+//!
+//! This is the streaming-orchestrator layer of the three-layer
+//! architecture: the rust binary owns the event loop and process topology;
+//! compute kernels are the AOT XLA artifacts behind
+//! [`crate::runtime::XlaRuntime`]. (On the single-core paper testbed the
+//! pool degenerates gracefully to serial execution — the ablation bench
+//! measures both.)
+
+mod report;
+
+pub use report::{CpReport, SuiteReport};
+
+use crate::baseline::{cross_product_ct, CpBudget};
+use crate::datagen;
+use crate::mobius::MobiusJoin;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One benchmark job.
+#[derive(Debug, Clone)]
+pub struct SuiteJob {
+    pub dataset: String,
+    pub scale: f64,
+    pub seed: u64,
+    /// Also run the cross-product baseline (Table 3)?
+    pub run_cp: bool,
+    pub cp_budget: CpBudget,
+    /// Cap the chain length (paper §8 option; None = full lattice).
+    pub max_chain_len: Option<usize>,
+}
+
+impl SuiteJob {
+    pub fn new(dataset: &str, scale: f64, seed: u64) -> Self {
+        SuiteJob {
+            dataset: dataset.to_string(),
+            scale,
+            seed,
+            run_cp: false,
+            cp_budget: CpBudget::default(),
+            max_chain_len: None,
+        }
+    }
+
+    pub fn with_cp(mut self, budget: CpBudget) -> Self {
+        self.run_cp = true;
+        self.cp_budget = budget;
+        self
+    }
+}
+
+/// Worker-pool configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    /// Number of worker threads (1 = serial).
+    pub workers: usize,
+    /// Bounded queue depth between the feeder and the workers
+    /// (backpressure: the feeder blocks when workers fall behind).
+    pub queue_depth: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            queue_depth: 2,
+        }
+    }
+}
+
+/// Execute one job (generation + MJ [+ CP]) and build its report.
+pub fn run_job(job: &SuiteJob) -> anyhow::Result<SuiteReport> {
+    let t0 = Instant::now();
+    let db = datagen::generate(&job.dataset, job.scale, job.seed)?;
+    let gen_time = t0.elapsed();
+
+    let mut mj = MobiusJoin::new(&db);
+    if let Some(l) = job.max_chain_len {
+        mj = mj.max_chain_len(l);
+    }
+    let res = mj.run();
+
+    let cp = if job.run_cp {
+        let out = cross_product_ct(&db, job.cp_budget);
+        Some(CpReport::from_outcome(&out))
+    } else {
+        None
+    };
+
+    // Consistency cross-check when both paths completed (paper §5.2 did the
+    // same validation).
+    if let (Some(cp_rep), Some(joint)) = (&cp, res.joint.as_ref()) {
+        if let Some(ct) = cp_rep.verified_rows {
+            debug_assert_eq!(ct, joint.len() as u64, "MJ/CP mismatch");
+        }
+    }
+
+    Ok(SuiteReport::build(job, &db, &res, cp, gen_time))
+}
+
+/// Run a batch of jobs over a bounded worker pool; reports come back in
+/// job order.
+pub fn run_suite(jobs: Vec<SuiteJob>, pool: PoolConfig) -> Vec<anyhow::Result<SuiteReport>> {
+    let n = jobs.len();
+    if pool.workers <= 1 || n <= 1 {
+        return jobs.iter().map(run_job).collect();
+    }
+    let (job_tx, job_rx) = mpsc::sync_channel::<(usize, SuiteJob)>(pool.queue_depth);
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let (rep_tx, rep_rx) = mpsc::channel::<(usize, anyhow::Result<SuiteReport>)>();
+
+    let mut handles = Vec::new();
+    for _ in 0..pool.workers.min(n) {
+        let rx = Arc::clone(&job_rx);
+        let tx = rep_tx.clone();
+        handles.push(std::thread::spawn(move || {
+            loop {
+                let next = { rx.lock().unwrap().recv() };
+                match next {
+                    Ok((idx, job)) => {
+                        let rep = run_job(&job);
+                        if tx.send((idx, rep)).is_err() {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+        }));
+    }
+    drop(rep_tx);
+
+    // Feeder (blocks on the bounded channel: backpressure).
+    for (i, job) in jobs.into_iter().enumerate() {
+        job_tx.send((i, job)).expect("workers died");
+    }
+    drop(job_tx);
+
+    let mut slots: Vec<Option<anyhow::Result<SuiteReport>>> = (0..n).map(|_| None).collect();
+    for (idx, rep) in rep_rx {
+        slots[idx] = Some(rep);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    slots.into_iter().map(|s| s.expect("missing report")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_job_produces_report() {
+        let job = SuiteJob::new("mutagenesis", 0.02, 7);
+        let rep = run_job(&job).unwrap();
+        assert_eq!(rep.dataset, "mutagenesis");
+        assert!(rep.tuples > 0);
+        assert!(rep.statistics > 0);
+        assert!(rep.statistics >= rep.link_off_statistics);
+    }
+
+    #[test]
+    fn run_job_with_cp_verifies() {
+        let job = SuiteJob::new("uwcse", 0.1, 7).with_cp(CpBudget::default());
+        let rep = run_job(&job).unwrap();
+        let cp = rep.cp.as_ref().unwrap();
+        assert!(!cp.non_termination);
+        assert_eq!(cp.verified_rows, Some(rep.statistics));
+    }
+
+    #[test]
+    fn suite_serial_and_parallel_agree() {
+        let jobs = vec![
+            SuiteJob::new("mutagenesis", 0.02, 7),
+            SuiteJob::new("uwcse", 0.2, 7),
+            SuiteJob::new("mondial", 0.1, 7),
+        ];
+        let serial = run_suite(jobs.clone(), PoolConfig { workers: 1, queue_depth: 1 });
+        let parallel = run_suite(jobs, PoolConfig { workers: 3, queue_depth: 2 });
+        for (a, b) in serial.iter().zip(&parallel) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.dataset, b.dataset);
+            assert_eq!(a.statistics, b.statistics);
+            assert_eq!(a.extra_statistics, b.extra_statistics);
+        }
+    }
+
+    #[test]
+    fn bad_dataset_reports_error() {
+        let out = run_suite(
+            vec![SuiteJob::new("nope", 1.0, 1)],
+            PoolConfig { workers: 1, queue_depth: 1 },
+        );
+        assert!(out[0].is_err());
+    }
+}

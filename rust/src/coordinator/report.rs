@@ -1,0 +1,144 @@
+//! Per-job reports aggregated by the coordinator — the rows of the paper's
+//! Tables 2-4 come straight from these.
+
+use crate::baseline::CpOutcome;
+use crate::coordinator::SuiteJob;
+use crate::db::Database;
+use crate::mobius::{MjMetrics, MjResult};
+use std::time::Duration;
+
+/// Cross-product baseline outcome (Table 3 columns).
+#[derive(Debug, Clone)]
+pub struct CpReport {
+    pub cp_tuples: u128,
+    pub elapsed: Duration,
+    /// The paper's "N.T." — budget exhausted before completion.
+    pub non_termination: bool,
+    /// Row count of the CP table when it completed (for MJ cross-checks).
+    pub verified_rows: Option<u64>,
+}
+
+impl CpReport {
+    pub fn from_outcome(out: &CpOutcome) -> CpReport {
+        match out {
+            CpOutcome::Done { ct, cp_tuples, elapsed } => CpReport {
+                cp_tuples: *cp_tuples,
+                elapsed: *elapsed,
+                non_termination: false,
+                verified_rows: Some(ct.len() as u64),
+            },
+            CpOutcome::NonTermination { cp_tuples, elapsed } => CpReport {
+                cp_tuples: *cp_tuples,
+                elapsed: *elapsed,
+                non_termination: true,
+                verified_rows: None,
+            },
+        }
+    }
+}
+
+/// Full report for one benchmark job.
+#[derive(Debug, Clone)]
+pub struct SuiteReport {
+    pub dataset: String,
+    pub scale: f64,
+    // Table 2 columns.
+    pub rel_tables: usize,
+    pub total_tables: usize,
+    pub self_rels: usize,
+    pub tuples: u64,
+    pub attributes: usize,
+    // Table 3 / 4 columns.
+    pub gen_time: Duration,
+    pub mj_time: Duration,
+    pub statistics: u64,
+    pub link_off_statistics: u64,
+    pub extra_statistics: u64,
+    pub extra_time: Duration,
+    pub metrics: MjMetrics,
+    pub cp: Option<CpReport>,
+}
+
+impl SuiteReport {
+    pub fn build(
+        job: &SuiteJob,
+        db: &Database,
+        res: &MjResult,
+        cp: Option<CpReport>,
+        gen_time: Duration,
+    ) -> SuiteReport {
+        let (stats, off, extra) = if res.joint.is_some() {
+            (
+                res.num_statistics() as u64,
+                res.link_off().len() as u64,
+                res.num_extra_statistics() as u64,
+            )
+        } else {
+            (0, 0, 0)
+        };
+        SuiteReport {
+            dataset: job.dataset.clone(),
+            scale: job.scale,
+            rel_tables: db.schema.num_rel_vars(),
+            total_tables: db.schema.num_tables(),
+            self_rels: db.schema.num_self_rels(),
+            tuples: db.total_tuples(),
+            attributes: db.schema.num_attributes(),
+            gen_time,
+            mj_time: res.metrics.total,
+            statistics: stats,
+            link_off_statistics: off,
+            extra_statistics: extra,
+            extra_time: res.metrics.extra_time(),
+            metrics: res.metrics.clone(),
+            cp,
+        }
+    }
+
+    /// Table 3 "Compress Ratio" = CP-#tuples / #Statistics.
+    pub fn compression_ratio(&self) -> Option<f64> {
+        let cp = self.cp.as_ref()?;
+        if self.statistics == 0 {
+            return None;
+        }
+        Some(cp.cp_tuples as f64 / self.statistics as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::{cross_product_ct, CpBudget};
+    use crate::datagen;
+    use crate::mobius::MobiusJoin;
+
+    #[test]
+    fn compression_ratio_matches_definition() {
+        let db = datagen::generate("uwcse", 0.1, 7).unwrap();
+        let res = MobiusJoin::new(&db).run();
+        let cp = cross_product_ct(&db, CpBudget::default());
+        let job = crate::coordinator::SuiteJob::new("uwcse", 0.1, 7);
+        let rep = SuiteReport::build(
+            &job,
+            &db,
+            &res,
+            Some(CpReport::from_outcome(&cp)),
+            Duration::ZERO,
+        );
+        let ratio = rep.compression_ratio().unwrap();
+        let expect = cp.cp_tuples() as f64 / rep.statistics as f64;
+        assert!((ratio - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nt_report_has_no_verified_rows() {
+        let db = datagen::generate("mondial", 0.3, 7).unwrap();
+        let cp = cross_product_ct(
+            &db,
+            CpBudget { max_time: Duration::from_secs(60), max_tuples: 10 },
+        );
+        let rep = CpReport::from_outcome(&cp);
+        assert!(rep.non_termination);
+        assert_eq!(rep.verified_rows, None);
+    }
+}

@@ -1,0 +1,700 @@
+//! The ct-algebra operators (paper §4.1): σ selection, π projection,
+//! χ conditioning, × cross product, + addition, − subtraction, plus the
+//! `extend`/`union` helpers Algorithm 1 needs.
+//!
+//! All operators preserve the [`CtTable`] invariants (sorted unique rows,
+//! positive counts). Binary merge operators are single-pass scans over the
+//! sorted inputs, matching the sort-merge cost model of §4.1.3.
+
+use super::CtTable;
+use crate::schema::VarId;
+
+/// Error from [`CtTable::subtract`]: the paper defines `ct1 − ct2` only when
+/// ct2's rows are a subset of ct1's with pointwise smaller-or-equal counts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubtractError {
+    /// A row of `ct2` is missing from `ct1`.
+    MissingRow(Vec<u16>),
+    /// A shared row has a larger count in `ct2` than in `ct1`.
+    CountUnderflow { row: Vec<u16>, have: u64, sub: u64 },
+    /// The two tables have different column sets.
+    VarMismatch,
+}
+
+impl std::fmt::Display for SubtractError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubtractError::MissingRow(r) => write!(f, "subtract: row {r:?} missing from minuend"),
+            SubtractError::CountUnderflow { row, have, sub } => {
+                write!(f, "subtract: row {row:?} has {have} < {sub}")
+            }
+            SubtractError::VarMismatch => write!(f, "subtract: variable sets differ"),
+        }
+    }
+}
+
+impl std::error::Error for SubtractError {}
+
+impl CtTable {
+    /// σ_φ: keep rows matching all `(var, value)` conditions. Columns are
+    /// unchanged. Conditions on absent variables panic (caller bug).
+    pub fn select(&self, cond: &[(VarId, u16)]) -> CtTable {
+        let cols: Vec<(usize, u16)> = cond
+            .iter()
+            .map(|&(v, val)| (self.col_of(v).expect("select: unknown var"), val))
+            .collect();
+        let w = self.width();
+        let mut rows = Vec::new();
+        let mut counts = Vec::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let r = &self.rows[i * w..(i + 1) * w];
+            if cols.iter().all(|&(ci, val)| r[ci] == val) {
+                rows.extend_from_slice(r);
+                counts.push(c);
+            }
+        }
+        // Selection preserves sortedness and uniqueness.
+        CtTable { vars: self.vars.clone(), rows, counts }
+    }
+
+    /// π_keep: project onto a subset of columns, summing counts of rows that
+    /// collapse together (SQL GROUP BY, §4.1.1).
+    pub fn project(&self, keep: &[VarId]) -> CtTable {
+        let mut keep_sorted: Vec<VarId> = keep.to_vec();
+        keep_sorted.sort_unstable();
+        keep_sorted.dedup();
+        let cols: Vec<usize> = keep_sorted
+            .iter()
+            .map(|&v| self.col_of(v).expect("project: unknown var"))
+            .collect();
+        if cols.len() == self.width() {
+            return self.clone();
+        }
+        let w = self.width();
+        let nw = cols.len();
+        if nw == 0 {
+            let total: u128 = self.total();
+            return if total == 0 {
+                CtTable::empty(Vec::new())
+            } else {
+                CtTable::scalar(u64::try_from(total).expect("count overflow"))
+            };
+        }
+        let mut rows = Vec::with_capacity(self.len() * nw);
+        for i in 0..self.len() {
+            let r = &self.rows[i * w..(i + 1) * w];
+            rows.extend(cols.iter().map(|&c| r[c]));
+        }
+        // `cols` is increasing, so projected rows keep relative order only
+        // per-prefix; re-sort + fold via from_raw.
+        CtTable::from_raw(keep_sorted, rows, self.counts.clone())
+    }
+
+    /// χ_φ: conditioning = select then drop the conditioned columns
+    /// (§4.1.1: `χ_φ ct = π_rest (σ_φ ct)`).
+    pub fn condition(&self, cond: &[(VarId, u16)]) -> CtTable {
+        let sel = self.select(cond);
+        let drop: Vec<VarId> = cond.iter().map(|&(v, _)| v).collect();
+        let rest: Vec<VarId> = self.vars.iter().copied().filter(|v| !drop.contains(v)).collect();
+        // After fixing the dropped columns to constants, remaining rows are
+        // still unique and sorted; project() handles the general case anyway.
+        sel.project(&rest)
+    }
+
+    /// ×: cross product; counts multiply (§4.1.2). Variable sets must be
+    /// disjoint.
+    pub fn cross(&self, other: &CtTable) -> CtTable {
+        for v in &other.vars {
+            assert!(self.col_of(*v).is_none(), "cross: overlapping var {v}");
+        }
+        // Nullary fast paths (scalar multiplication).
+        if self.width() == 0 {
+            let k = if self.is_empty() { 0 } else { self.counts[0] };
+            return other.scale(k);
+        }
+        if other.width() == 0 {
+            let k = if other.is_empty() { 0 } else { other.counts[0] };
+            return self.scale(k);
+        }
+        if let Some(out) = self.cross_packed(other) {
+            return out;
+        }
+        let mut vars = Vec::with_capacity(self.width() + other.width());
+        vars.extend_from_slice(&self.vars);
+        vars.extend_from_slice(&other.vars);
+        let mut rows = Vec::with_capacity((self.len() * other.len()) * vars.len());
+        let mut counts = Vec::with_capacity(self.len() * other.len());
+        for (ra, ca) in self.iter() {
+            for (rb, cb) in other.iter() {
+                rows.extend_from_slice(ra);
+                rows.extend_from_slice(rb);
+                counts.push(ca.checked_mul(cb).expect("count overflow in cross"));
+            }
+        }
+        CtTable::from_raw(vars, rows, counts)
+    }
+
+    /// Packed cross product (§Perf): when the merged row fits 128 bits,
+    /// precompute each operand row's bit contribution at its final column
+    /// positions, so each output row is a single `pa | pb` — no u16 row
+    /// materialization, and the output is produced in sorted order by
+    /// iterating the (pre-sorted) key lists nested. Returns None when the
+    /// packed width overflows.
+    fn cross_packed(&self, other: &CtTable) -> Option<CtTable> {
+        let wa = self.width();
+        let wb = other.width();
+        let width = wa + wb;
+        // Merged column layout.
+        let mut vars: Vec<(VarId, bool, usize)> = Vec::with_capacity(width); // (var, from_a, src col)
+        for (c, &v) in self.vars.iter().enumerate() {
+            vars.push((v, true, c));
+        }
+        for (c, &v) in other.vars.iter().enumerate() {
+            vars.push((v, false, c));
+        }
+        vars.sort_unstable_by_key(|&(v, _, _)| v);
+        // Bits per merged column from observed max codes.
+        let max_of = |t: &CtTable, c: usize| {
+            (0..t.len()).map(|i| t.row(i)[c]).max().unwrap_or(0)
+        };
+        let mut bits = Vec::with_capacity(width);
+        for &(_, from_a, c) in &vars {
+            let m = if from_a { max_of(self, c) } else { max_of(other, c) };
+            bits.push(16 - (m.max(1)).leading_zeros());
+        }
+        let total_bits: u32 = bits.iter().sum();
+        if total_bits > 128 {
+            return None;
+        }
+        let mut shifts = vec![0u32; width];
+        let mut acc = 0u32;
+        for col in (0..width).rev() {
+            shifts[col] = acc;
+            acc += bits[col];
+        }
+        // Partial keys per operand row.
+        let partial = |t: &CtTable, from_a: bool| -> Vec<u128> {
+            (0..t.len())
+                .map(|i| {
+                    let row = t.row(i);
+                    let mut k = 0u128;
+                    for (col, &(_, fa, c)) in vars.iter().enumerate() {
+                        if fa == from_a {
+                            k |= (row[c] as u128) << shifts[col];
+                        }
+                    }
+                    k
+                })
+                .collect()
+        };
+        let pa = partial(self, true);
+        let pb = partial(other, false);
+        // Keys ordered by (a-part, b-part); that is NOT globally sorted when
+        // columns interleave, so sort the combined keys. Rows are unique by
+        // construction (operands are unique), so no fold needed.
+        let mut keyed: Vec<(u128, u64)> = Vec::with_capacity(pa.len() * pb.len());
+        for (ka, &ca) in pa.iter().zip(&self.counts) {
+            for (kb, &cb) in pb.iter().zip(&other.counts) {
+                keyed.push((ka | kb, ca.checked_mul(cb).expect("count overflow in cross")));
+            }
+        }
+        keyed.sort_unstable_by_key(|&(k, _)| k);
+        let mut rows = Vec::with_capacity(keyed.len() * width);
+        let mut counts = Vec::with_capacity(keyed.len());
+        for (k, c) in keyed {
+            for col in 0..width {
+                let mask = (1u128 << bits[col]) - 1;
+                rows.push(((k >> shifts[col]) & mask) as u16);
+            }
+            counts.push(c);
+        }
+        Some(CtTable { vars: vars.iter().map(|&(v, _, _)| v).collect(), rows, counts })
+    }
+
+    /// Multiply every count by `k` (k = 0 empties the table).
+    pub fn scale(&self, k: u64) -> CtTable {
+        if k == 0 {
+            return CtTable::empty(self.vars.clone());
+        }
+        let counts = self
+            .counts
+            .iter()
+            .map(|&c| c.checked_mul(k).expect("count overflow in scale"))
+            .collect();
+        CtTable { vars: self.vars.clone(), rows: self.rows.clone(), counts }
+    }
+
+    /// +: count addition over identical variable sets; rows present in only
+    /// one operand keep that operand's count (§4.1.2). Sort-merge.
+    pub fn add(&self, other: &CtTable) -> CtTable {
+        assert_eq!(self.vars, other.vars, "add: variable sets differ");
+        let w = self.width();
+        if w == 0 {
+            let t = self.total() + other.total();
+            return CtTable::scalar(u64::try_from(t).expect("count overflow"));
+        }
+        let mut rows = Vec::with_capacity(self.rows.len() + other.rows.len());
+        let mut counts = Vec::with_capacity(self.len() + other.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.len() || j < other.len() {
+            let ord = if i == self.len() {
+                std::cmp::Ordering::Greater
+            } else if j == other.len() {
+                std::cmp::Ordering::Less
+            } else {
+                self.row(i).cmp(other.row(j))
+            };
+            match ord {
+                std::cmp::Ordering::Less => {
+                    rows.extend_from_slice(self.row(i));
+                    counts.push(self.counts[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    rows.extend_from_slice(other.row(j));
+                    counts.push(other.counts[j]);
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    rows.extend_from_slice(self.row(i));
+                    counts.push(self.counts[i].checked_add(other.counts[j]).expect("overflow"));
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        CtTable { vars: self.vars.clone(), rows, counts }
+    }
+
+    /// −: count subtraction (§4.1.2). Defined only when `other`'s rows ⊆
+    /// `self`'s rows with pointwise `count_other <= count_self`; rows whose
+    /// difference is zero are omitted from the result. Sort-merge.
+    pub fn subtract(&self, other: &CtTable) -> Result<CtTable, SubtractError> {
+        if self.vars != other.vars {
+            return Err(SubtractError::VarMismatch);
+        }
+        let w = self.width();
+        if w == 0 {
+            let (a, b) = (self.total(), other.total());
+            if b > a {
+                return Err(SubtractError::CountUnderflow {
+                    row: vec![],
+                    have: a as u64,
+                    sub: b as u64,
+                });
+            }
+            let d = (a - b) as u64;
+            return Ok(if d == 0 { CtTable::empty(vec![]) } else { CtTable::scalar(d) });
+        }
+        let mut rows = Vec::with_capacity(self.rows.len());
+        let mut counts = Vec::with_capacity(self.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.len() {
+            if j < other.len() {
+                match self.row(i).cmp(other.row(j)) {
+                    std::cmp::Ordering::Less => {
+                        rows.extend_from_slice(self.row(i));
+                        counts.push(self.counts[i]);
+                        i += 1;
+                    }
+                    std::cmp::Ordering::Greater => {
+                        return Err(SubtractError::MissingRow(other.row(j).to_vec()));
+                    }
+                    std::cmp::Ordering::Equal => {
+                        let (a, b) = (self.counts[i], other.counts[j]);
+                        if b > a {
+                            return Err(SubtractError::CountUnderflow {
+                                row: self.row(i).to_vec(),
+                                have: a,
+                                sub: b,
+                            });
+                        }
+                        if a > b {
+                            rows.extend_from_slice(self.row(i));
+                            counts.push(a - b);
+                        }
+                        i += 1;
+                        j += 1;
+                    }
+                }
+            } else {
+                rows.extend_from_slice(self.row(i));
+                counts.push(self.counts[i]);
+                i += 1;
+            }
+        }
+        if j < other.len() {
+            return Err(SubtractError::MissingRow(other.row(j).to_vec()));
+        }
+        Ok(CtTable { vars: self.vars.clone(), rows, counts })
+    }
+
+    /// Extend with constant columns (Algorithm 1 lines 2-3: tag a partial
+    /// table with `R = T/F` and `2Atts = n/a`). New vars must not already be
+    /// present. Inserting constant columns preserves row order.
+    pub fn extend_const(&self, consts: &[(VarId, u16)]) -> CtTable {
+        if consts.is_empty() {
+            return self.clone();
+        }
+        let mut merged: Vec<(VarId, Option<u16>)> =
+            self.vars.iter().map(|&v| (v, None)).collect();
+        for &(v, val) in consts {
+            assert!(self.col_of(v).is_none(), "extend_const: var {v} already present");
+            merged.push((v, Some(val)));
+        }
+        merged.sort_unstable_by_key(|&(v, _)| v);
+        let vars: Vec<VarId> = merged.iter().map(|&(v, _)| v).collect();
+        debug_assert!(vars.windows(2).all(|w| w[0] < w[1]));
+        let w = self.width();
+        let nw = vars.len();
+        // Special case: extending an *empty-width* table (scalar) — each
+        // count row becomes the constant row.
+        if w == 0 {
+            if self.is_empty() {
+                return CtTable::empty(vars);
+            }
+            let rows: Vec<u16> = merged.iter().map(|&(_, c)| c.unwrap()).collect();
+            return CtTable { vars, rows, counts: self.counts.clone() };
+        }
+        // §Perf: copy contiguous source segments between constant inserts
+        // instead of a per-column match (the pivot extends multi-million-row
+        // tables twice per chain).
+        #[derive(Clone, Copy)]
+        enum Piece {
+            Src { start: usize, len: usize },
+            Const(u16),
+        }
+        let mut pieces: Vec<Piece> = Vec::new();
+        let mut src = 0usize;
+        for &(_, c) in &merged {
+            match c {
+                Some(val) => pieces.push(Piece::Const(val)),
+                None => {
+                    if let Some(Piece::Src { len, .. }) = pieces.last_mut() {
+                        *len += 1;
+                    } else {
+                        pieces.push(Piece::Src { start: src, len: 1 });
+                    }
+                    src += 1;
+                }
+            }
+        }
+        let mut rows = Vec::with_capacity(self.len() * nw);
+        for i in 0..self.len() {
+            let r = self.row(i);
+            for &p in &pieces {
+                match p {
+                    Piece::Const(val) => rows.push(val),
+                    Piece::Src { start, len } => rows.extend_from_slice(&r[start..start + len]),
+                }
+            }
+        }
+        CtTable { vars, rows, counts: self.counts.clone() }
+    }
+
+    /// ∪ of two tables over the same variables whose row sets are disjoint
+    /// (Algorithm 1 line 4: `ct_F^+ ∪ ct_T^+`, disjoint because the pivot
+    /// column differs). Single merge pass; panics on a shared row.
+    pub fn union_disjoint(&self, other: &CtTable) -> CtTable {
+        assert_eq!(self.vars, other.vars, "union: variable sets differ");
+        let w = self.width();
+        if w == 0 {
+            assert!(
+                self.is_empty() || other.is_empty(),
+                "union_disjoint: two nullary rows always collide"
+            );
+            let t = self.total() + other.total();
+            return if t == 0 {
+                CtTable::empty(vec![])
+            } else {
+                CtTable::scalar(u64::try_from(t).unwrap())
+            };
+        }
+        let mut rows = Vec::with_capacity(self.rows.len() + other.rows.len());
+        let mut counts = Vec::with_capacity(self.len() + other.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.len() || j < other.len() {
+            let take_left = if i == self.len() {
+                false
+            } else if j == other.len() {
+                true
+            } else {
+                match self.row(i).cmp(other.row(j)) {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Greater => false,
+                    std::cmp::Ordering::Equal => panic!("union_disjoint: shared row"),
+                }
+            };
+            if take_left {
+                rows.extend_from_slice(self.row(i));
+                counts.push(self.counts[i]);
+                i += 1;
+            } else {
+                rows.extend_from_slice(other.row(j));
+                counts.push(other.counts[j]);
+                j += 1;
+            }
+        }
+        CtTable { vars: self.vars.clone(), rows, counts }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_prop;
+    use crate::util::Pcg64;
+
+    /// Random small ct-table for property tests.
+    fn random_ct(rng: &mut Pcg64, vars: &[VarId], arities: &[u16]) -> CtTable {
+        let n = rng.index(12) + 1;
+        let mut rows = Vec::new();
+        let mut counts = Vec::new();
+        for _ in 0..n {
+            for &a in arities {
+                rows.push(rng.below(a as u64) as u16);
+            }
+            counts.push(rng.below(20) + 1);
+        }
+        CtTable::from_raw(vars.to_vec(), rows, counts)
+    }
+
+    #[test]
+    fn select_matches_condition() {
+        let t = CtTable::from_raw(
+            vec![1, 3],
+            vec![0, 0, 0, 1, 1, 0, 1, 1],
+            vec![10, 11, 12, 13],
+        );
+        let s = t.select(&[(3, 1)]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.count_of(&[0, 1]), 11);
+        assert_eq!(s.count_of(&[1, 1]), 13);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn project_sums_groups() {
+        let t = CtTable::from_raw(
+            vec![1, 3],
+            vec![0, 0, 0, 1, 1, 0, 1, 1],
+            vec![10, 11, 12, 13],
+        );
+        let p = t.project(&[1]);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.count_of(&[0]), 21);
+        assert_eq!(p.count_of(&[1]), 25);
+        assert_eq!(p.total(), t.total());
+    }
+
+    #[test]
+    fn project_to_nothing_gives_scalar_total() {
+        let t = CtTable::from_raw(vec![2], vec![0, 1], vec![4, 6]);
+        let p = t.project(&[]);
+        assert_eq!(p.width(), 0);
+        assert_eq!(p.total(), 10);
+    }
+
+    #[test]
+    fn condition_drops_columns() {
+        let t = CtTable::from_raw(
+            vec![1, 3],
+            vec![0, 0, 0, 1, 1, 0, 1, 1],
+            vec![10, 11, 12, 13],
+        );
+        let c = t.condition(&[(3, 0)]);
+        assert_eq!(c.vars, vec![1]);
+        assert_eq!(c.count_of(&[0]), 10);
+        assert_eq!(c.count_of(&[1]), 12);
+    }
+
+    #[test]
+    fn cross_multiplies_counts() {
+        let a = CtTable::from_raw(vec![1], vec![0, 1], vec![2, 3]);
+        let b = CtTable::from_raw(vec![4], vec![0, 1], vec![5, 7]);
+        let x = a.cross(&b);
+        assert_eq!(x.len(), 4);
+        assert_eq!(x.count_of(&[0, 0]), 10);
+        assert_eq!(x.count_of(&[1, 1]), 21);
+        assert_eq!(x.total(), a.total() * b.total());
+        // column order canonical even when crossing (higher, lower)
+        let y = b.cross(&a);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn cross_with_scalar_scales() {
+        let a = CtTable::from_raw(vec![1], vec![0, 1], vec![2, 3]);
+        let s = CtTable::scalar(4);
+        let x = a.cross(&s);
+        assert_eq!(x.count_of(&[0]), 8);
+        assert_eq!(x.count_of(&[1]), 12);
+    }
+
+    #[test]
+    fn add_merges_disjoint_and_shared() {
+        let a = CtTable::from_raw(vec![1], vec![0, 1], vec![2, 3]);
+        let b = CtTable::from_raw(vec![1], vec![1, 2], vec![10, 20]);
+        let s = a.add(&b);
+        assert_eq!(s.count_of(&[0]), 2);
+        assert_eq!(s.count_of(&[1]), 13);
+        assert_eq!(s.count_of(&[2]), 20);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn subtract_exact_and_errors() {
+        let a = CtTable::from_raw(vec![1], vec![0, 1], vec![5, 3]);
+        let b = CtTable::from_raw(vec![1], vec![0, 1], vec![2, 3]);
+        let d = a.subtract(&b).unwrap();
+        assert_eq!(d.len(), 1); // the (1) row hit zero and was dropped
+        assert_eq!(d.count_of(&[0]), 3);
+        // underflow
+        let c = CtTable::from_raw(vec![1], vec![0], vec![6]);
+        assert!(matches!(a.subtract(&c), Err(SubtractError::CountUnderflow { .. })));
+        // missing row
+        let m = CtTable::from_raw(vec![1], vec![2], vec![1]);
+        assert!(matches!(a.subtract(&m), Err(SubtractError::MissingRow(_))));
+        // var mismatch
+        let v = CtTable::from_raw(vec![2], vec![0], vec![1]);
+        assert_eq!(a.subtract(&v), Err(SubtractError::VarMismatch));
+    }
+
+    #[test]
+    fn extend_const_inserts_sorted() {
+        let t = CtTable::from_raw(vec![2], vec![0, 1], vec![4, 6]);
+        let e = t.extend_const(&[(0, 9), (5, 1)]);
+        assert_eq!(e.vars, vec![0, 2, 5]);
+        assert_eq!(e.count_of(&[9, 0, 1]), 4);
+        assert_eq!(e.count_of(&[9, 1, 1]), 6);
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn extend_const_on_scalar() {
+        let s = CtTable::scalar(3);
+        let e = s.extend_const(&[(1, 0), (2, 7)]);
+        assert_eq!(e.len(), 1);
+        assert_eq!(e.count_of(&[0, 7]), 3);
+    }
+
+    #[test]
+    fn union_disjoint_merges() {
+        let a = CtTable::from_raw(vec![1, 2], vec![0, 0, 1, 1], vec![1, 2]);
+        let b = CtTable::from_raw(vec![1, 2], vec![0, 1, 1, 0], vec![3, 4]);
+        let u = a.union_disjoint(&b);
+        assert_eq!(u.len(), 4);
+        assert_eq!(u.total(), 10);
+        u.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "shared row")]
+    fn union_rejects_overlap() {
+        let a = CtTable::from_raw(vec![1], vec![0], vec![1]);
+        let b = CtTable::from_raw(vec![1], vec![0], vec![1]);
+        a.union_disjoint(&b);
+    }
+
+    // ---------- property tests ----------
+
+    #[test]
+    fn prop_projection_preserves_total() {
+        run_prop(
+            "projection_total",
+            200,
+            0xC0FFEE,
+            |r| random_ct(r, &[1, 4, 7], &[3, 2, 4]),
+            |t| {
+                for keep in [vec![1], vec![4, 7], vec![1, 7], vec![]] {
+                    let p = t.project(&keep);
+                    if p.total() != t.total() {
+                        return Err(format!("total changed for keep={keep:?}"));
+                    }
+                    p.check_invariants()?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_add_then_subtract_roundtrip() {
+        run_prop(
+            "add_sub_roundtrip",
+            200,
+            0xBEEF,
+            |r| (random_ct(r, &[0, 2], &[3, 3]), random_ct(r, &[0, 2], &[3, 3])),
+            |(a, b)| {
+                let sum = a.add(b);
+                let back = sum.subtract(b).map_err(|e| e.to_string())?;
+                if &back != a {
+                    return Err("a + b - b != a".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_select_project_commute() {
+        // σ on a kept column commutes with π.
+        run_prop(
+            "select_project_commute",
+            200,
+            0xABCD,
+            |r| random_ct(r, &[0, 3, 5], &[2, 3, 2]),
+            |t| {
+                let a = t.select(&[(0, 1)]).project(&[0, 3]);
+                let b = t.project(&[0, 3]).select(&[(0, 1)]);
+                if a != b {
+                    return Err("σπ != πσ".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_cross_total_is_product() {
+        run_prop(
+            "cross_total",
+            100,
+            0x1234,
+            |r| (random_ct(r, &[0], &[4]), random_ct(r, &[2, 3], &[2, 2])),
+            |(a, b)| {
+                let x = a.cross(b);
+                x.check_invariants()?;
+                if x.total() != a.total() * b.total() {
+                    return Err("cross total mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_add_commutative_associative() {
+        run_prop(
+            "add_comm_assoc",
+            150,
+            0x7777,
+            |r| {
+                (
+                    random_ct(r, &[1], &[4]),
+                    random_ct(r, &[1], &[4]),
+                    random_ct(r, &[1], &[4]),
+                )
+            },
+            |(a, b, c)| {
+                if a.add(b) != b.add(a) {
+                    return Err("not commutative".into());
+                }
+                if a.add(b).add(c) != a.add(&b.add(c)) {
+                    return Err("not associative".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,59 @@
+//! Human-readable rendering of contingency tables (paper Figure 3 style).
+
+use super::CtTable;
+use crate::schema::Schema;
+use crate::util::table::TextTable;
+
+/// Render (an excerpt of) a contingency table with named variables and
+/// values, count column first, at most `limit` rows (0 = all).
+pub fn render_ct(ct: &CtTable, schema: &Schema, limit: usize) -> String {
+    let mut header = vec!["count".to_string()];
+    header.extend(ct.vars.iter().map(|&v| schema.var_name(v)));
+    let mut t = TextTable::new(header);
+    let n = if limit == 0 { ct.len() } else { ct.len().min(limit) };
+    for i in 0..n {
+        let mut cells = vec![ct.counts[i].to_string()];
+        cells.extend(
+            ct.row(i).iter().zip(&ct.vars).map(|(&code, &v)| schema.value_name(v, code)),
+        );
+        t.row(cells);
+    }
+    let mut s = t.render();
+    if n < ct.len() {
+        s.push_str(&format!("... ({} more rows)\n", ct.len() - n));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ct::CtTable;
+    use crate::schema::builder::university_schema;
+
+    #[test]
+    fn renders_named_values() {
+        let s = university_schema();
+        let intel = s.var_by_name("intelligence(S)").unwrap();
+        let rank = s.var_by_name("ranking(S)").unwrap();
+        let ct = CtTable::from_raw(
+            vec![intel, rank],
+            vec![0, 0, 2, 1],
+            vec![5, 7],
+        );
+        let out = render_ct(&ct, &s, 0);
+        assert!(out.contains("intelligence(S)"));
+        assert!(out.contains("ranking(S)"));
+        assert!(out.contains('5'));
+        assert!(out.lines().count() >= 4);
+    }
+
+    #[test]
+    fn truncates_with_note() {
+        let s = university_schema();
+        let intel = s.var_by_name("intelligence(S)").unwrap();
+        let ct = CtTable::from_raw(vec![intel], vec![0, 1, 2], vec![1, 2, 3]);
+        let out = render_ct(&ct, &s, 2);
+        assert!(out.contains("1 more rows"));
+    }
+}

@@ -1,0 +1,158 @@
+//! Hepatitis (PKDD'02) analogue: 4 entity tables (Patient, Bio, Indis,
+//! Flup), 3 relationships fanning out from Patient, ~12.9K tuples,
+//! 19 attributes — a small database with a *dense* statistical space (the
+//! paper's second-largest contingency table despite its tuple count).
+//! Target: `sex(P)`.
+//!
+//! Planted structure: biopsy fibrosis tracks patient type; lab indicator
+//! bands track patient age; follow-up duration tracks activity.
+
+use super::GenCtx;
+use crate::db::{Database, DatabaseBuilder};
+use crate::schema::{Schema, SchemaBuilder};
+use std::sync::Arc;
+
+const BASE_PATIENTS: usize = 960;
+const BASE_BIO: usize = 820;
+const BASE_INDIS: usize = 4_600;
+const BASE_FLUP: usize = 200;
+
+pub fn schema() -> Schema {
+    let mut b = SchemaBuilder::new("hepatitis");
+    let p = b.population("Patient");
+    b.attr(p, "sex", &["f", "m"]);
+    b.attr(p, "age_band", &["under40", "40to60", "over60"]);
+    b.attr(p, "type", &["B", "C"]);
+    b.attr(p, "activity", &["low", "high"]);
+    let bio = b.population("Bio");
+    b.attr(bio, "fibros", &["f0", "f1", "f2plus"]);
+    b.attr(bio, "activ", &["a0", "a1", "a2plus"]);
+    b.attr(bio, "got", &["normal", "high"]);
+    b.attr(bio, "gpt", &["normal", "high"]);
+    let indis = b.population("Indis");
+    b.attr(indis, "dbil", &["normal", "high"]);
+    b.attr(indis, "alb", &["low", "normal"]);
+    b.attr(indis, "che", &["low", "mid", "high"]);
+    b.attr(indis, "tbil", &["low", "mid", "high"]);
+    let f = b.population("Flup");
+    b.attr(f, "duration", &["short", "mid", "long"]);
+    b.attr(f, "outcome", &["stable", "progressed"]);
+    let hasbio = b.relationship("HasBio", p, bio);
+    b.rel_attr(hasbio, "when", &["early", "mid", "late"]);
+    b.rel_attr(hasbio, "seq", &["first", "repeat"]);
+    let hasindis = b.relationship("HasIndis", p, indis);
+    b.rel_attr(hasindis, "freq", &["once", "recurrent"]);
+    let hasflup = b.relationship("HasFlup", p, f);
+    b.rel_attr(hasflup, "ab_type", &["igg", "igm"]);
+    b.rel_attr(hasflup, "resolved", &["no", "yes"]);
+    b.finish()
+}
+
+pub fn generate(scale: f64, seed: u64) -> Database {
+    let schema = Arc::new(schema());
+    let mut ctx = GenCtx::new(scale, seed);
+    let mut b = DatabaseBuilder::new(schema.clone());
+
+    let n_pat = ctx.n(BASE_PATIENTS);
+    let n_bio = ctx.n(BASE_BIO);
+    let n_ind = ctx.n(BASE_INDIS);
+    let n_flup = ctx.n(BASE_FLUP);
+
+    for _ in 0..n_pat {
+        let sex = if ctx.rng.chance(0.62) { 1 } else { 0 };
+        let age = ctx.skewed(3, 0.4);
+        let ptype = ctx.dep(sex, 2, 0.3);
+        let activity = ctx.dep(age, 2, 0.35);
+        b.add_entity(0, &[sex, age, ptype, activity]);
+    }
+    for _ in 0..n_bio {
+        let fibros = ctx.skewed(3, 0.6);
+        let activ = ctx.dep(fibros, 3, 0.5);
+        let got = ctx.dep(activ, 2, 0.4);
+        let gpt = ctx.dep(got, 2, 0.6);
+        b.add_entity(1, &[fibros, activ, got, gpt]);
+    }
+    for _ in 0..n_ind {
+        let dbil = ctx.uniform(2);
+        let alb = ctx.dep(dbil, 2, 0.3);
+        let che = ctx.skewed(3, 0.5);
+        let tbil = ctx.dep(che, 3, 0.45);
+        b.add_entity(2, &[dbil, alb, che, tbil]);
+    }
+    for _ in 0..n_flup {
+        let duration = ctx.skewed(3, 0.5);
+        let outcome = ctx.dep(duration, 2, 0.4);
+        b.add_entity(3, &[duration, outcome]);
+    }
+
+    // Each exam record belongs to one patient; patients with type C get
+    // biopsies more often (existence correlation with a patient attribute).
+    for bio in 0..n_bio as u32 {
+        let mut pat = ctx.rng.below(n_pat as u64) as u32;
+        for _ in 0..4 {
+            if b.peek_entity_attr(0, 2, pat) == 1 {
+                break; // prefer type C
+            }
+            pat = ctx.rng.below(n_pat as u64) as u32;
+        }
+        let when = ctx.skewed(3, 0.4);
+        let seq = ctx.dep(when, 2, 0.3);
+        b.add_rel(0, pat, bio, &[when, seq]);
+    }
+    for ind in 0..n_ind as u32 {
+        let pat = (ctx.rng.f64().powf(1.3) * n_pat as f64) as u32 % n_pat as u32;
+        let age = b.peek_entity_attr(0, 1, pat);
+        let freq = ctx.dep(if age == 2 { 1 } else { 0 }, 2, 0.5);
+        b.add_rel(1, pat, ind, &[freq]);
+    }
+    for f in 0..n_flup as u32 {
+        let mut pat = ctx.rng.below(n_pat as u64) as u32;
+        for _ in 0..4 {
+            if b.peek_entity_attr(0, 3, pat) == 1 {
+                break; // prefer high-activity patients
+            }
+            pat = ctx.rng.below(n_pat as u64) as u32;
+        }
+        let ab = ctx.uniform(2);
+        let resolved = ctx.dep(ab, 2, 0.35);
+        b.add_rel(2, pat, f, &[ab, resolved]);
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale1_near_table2() {
+        let db = generate(1.0, 7);
+        let t = db.total_tuples() as f64;
+        assert!((t - 12_927.0).abs() / 12_927.0 < 0.15, "tuples = {t}");
+    }
+
+    #[test]
+    fn exams_fan_out_from_patient() {
+        let db = generate(0.2, 7);
+        // All three relationships share the Patient FO variable: the full
+        // rel set is one connected chain.
+        let comps = crate::lattice::components(&db.schema, &[0, 1, 2]);
+        assert_eq!(comps.len(), 1);
+    }
+
+    #[test]
+    fn biopsies_prefer_type_c() {
+        let db = generate(1.0, 7);
+        let hb = &db.rels[0];
+        let mut c = 0u64;
+        let mut bcount = 0u64;
+        for &[pat, _] in &hb.pairs {
+            if db.entity_attr(0, 2, pat) == 1 {
+                c += 1;
+            } else {
+                bcount += 1;
+            }
+        }
+        assert!(c > bcount);
+    }
+}

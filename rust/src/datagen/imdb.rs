@@ -1,0 +1,186 @@
+//! IMDB analogue: the largest and most complex benchmark — 4 entity tables
+//! (User, Movie, Actor, Director), 3 relationships all sharing the Movie
+//! variable (`Rated(U,M)`, `ActsIn(A,M)`, `Directs(D,M)`), ~1.35M tuples,
+//! 17 attributes (paper Table 2: MovieLens 1M joined with IMDB following
+//! Peralta 2007). Target: `avg_revenue(D)`.
+//!
+//! Planted structure: rating depends on user age and director quality;
+//! high-quality directors work with high-quality actors; revenue tracks
+//! director quality — the A2R dependencies the paper's IMDB BN finds.
+
+use super::GenCtx;
+use crate::db::{Database, DatabaseBuilder};
+use crate::schema::{Schema, SchemaBuilder};
+use std::sync::Arc;
+
+const BASE_USERS: usize = 6_040;
+const BASE_MOVIES: usize = 3_832;
+const BASE_ACTORS: usize = 95_000;
+const BASE_DIRECTORS: usize = 2_201;
+const BASE_RATINGS: usize = 1_000_000;
+const BASE_CASTS: usize = 243_000;
+
+pub fn schema() -> Schema {
+    let mut b = SchemaBuilder::new("imdb");
+    let u = b.population("User");
+    b.attr(u, "age", &["young", "mid", "old"]);
+    b.attr(u, "gender", &["f", "m"]);
+    b.attr(u, "occupation", &["tech", "edu", "other"]);
+    let m = b.population("Movie");
+    b.attr(m, "year", &["pre80", "80s90s", "recent"]);
+    b.attr(m, "genre", &["drama", "comedy", "action", "horror"]);
+    b.attr(m, "is_english", &["no", "yes"]);
+    b.attr(m, "runtime", &["short", "mid", "long"]);
+    let a = b.population("Actor");
+    b.attr(a, "gender", &["f", "m"]);
+    b.attr(a, "quality", &["low", "mid", "high"]);
+    b.attr(a, "age", &["young", "mid", "old"]);
+    let d = b.population("Director");
+    b.attr(d, "quality", &["low", "mid", "high"]);
+    b.attr(d, "avg_revenue", &["low", "mid", "high"]);
+    b.attr(d, "experience", &["junior", "senior"]);
+    let rated = b.relationship("Rated", u, m);
+    b.rel_attr(rated, "rating", &["low", "mid", "high"]);
+    let actsin = b.relationship("ActsIn", a, m);
+    b.rel_attr(actsin, "position", &["lead", "support", "minor"]);
+    b.rel_attr(actsin, "credited", &["no", "yes"]);
+    let directs = b.relationship("Directs", d, m);
+    b.rel_attr(directs, "first_credit", &["no", "yes"]);
+    b.finish()
+}
+
+pub fn generate(scale: f64, seed: u64) -> Database {
+    let schema = Arc::new(schema());
+    let mut ctx = GenCtx::new(scale, seed);
+    let mut b = DatabaseBuilder::new(schema.clone());
+
+    let n_users = ctx.n(BASE_USERS);
+    let n_movies = ctx.n(BASE_MOVIES);
+    let n_actors = ctx.n(BASE_ACTORS);
+    let n_dirs = ctx.n(BASE_DIRECTORS);
+
+    for _ in 0..n_users {
+        let age = ctx.skewed(3, 0.8);
+        let gender = ctx.uniform(2);
+        let occupation = ctx.dep(age, 3, 0.3);
+        b.add_entity(0, &[age, gender, occupation]);
+    }
+    for _ in 0..n_movies {
+        let year = ctx.skewed(3, 0.6);
+        let genre = ctx.skewed(4, 0.7);
+        let is_english = if ctx.rng.chance(0.8) { 1 } else { 0 };
+        let runtime = ctx.dep(genre, 3, 0.3);
+        b.add_entity(1, &[year, genre, is_english, runtime]);
+    }
+    for _ in 0..n_actors {
+        let gender = ctx.uniform(2);
+        let quality = ctx.skewed(3, 0.9);
+        let age = ctx.skewed(3, 0.5);
+        b.add_entity(2, &[gender, quality, age]);
+    }
+    for _ in 0..n_dirs {
+        let quality = ctx.skewed(3, 0.8);
+        let avg_revenue = ctx.dep(quality, 3, 0.65); // revenue tracks quality
+        let experience = ctx.dep(quality / 2, 2, 0.4);
+        b.add_entity(3, &[quality, avg_revenue, experience]);
+    }
+
+    // Directs: each movie has exactly one director; quality directors get
+    // recent, English-language movies. Remember each movie's director
+    // quality for the cast/rating correlations below.
+    let mut movie_dir_quality = vec![0u16; n_movies];
+    for m in 0..n_movies as u32 {
+        let mut d = (ctx.rng.f64().powf(1.5) * n_dirs as f64) as u32 % n_dirs as u32;
+        let year = b.peek_entity_attr(1, 0, m);
+        if year == 2 {
+            // Recent movies: retry toward high-quality directors.
+            for _ in 0..3 {
+                if b.peek_entity_attr(3, 0, d) == 2 {
+                    break;
+                }
+                d = ctx.rng.below(n_dirs as u64) as u32;
+            }
+        }
+        movie_dir_quality[m as usize] = b.peek_entity_attr(3, 0, d);
+        let first = ctx.dep(b.peek_entity_attr(3, 2, d), 2, 0.4);
+        b.add_rel(2, d, m, &[first]);
+    }
+
+    // ActsIn: casts skew toward popular movies; actor quality correlates
+    // with the director's quality through shared movies.
+    let n_casts = ctx.n(BASE_CASTS);
+    let mut added = 0;
+    let mut attempts = 0;
+    while added < n_casts && attempts < n_casts * 10 {
+        attempts += 1;
+        let a = (ctx.rng.f64().powf(1.8) * n_actors as f64) as u32 % n_actors as u32;
+        let m = (ctx.rng.f64().powf(1.5) * n_movies as f64) as u32 % n_movies as u32;
+        let dq = movie_dir_quality[m as usize];
+        let aq = b.peek_entity_attr(2, 1, a);
+        let p = if dq == aq { 0.95 } else { 0.55 };
+        if !ctx.rng.chance(p) {
+            continue;
+        }
+        let position = ctx.dep(2 - aq.min(2), 3, 0.5);
+        let credited = ctx.dep(if position == 0 { 1 } else { 0 }, 2, 0.6);
+        if b.add_rel(1, a, m, &[position, credited]) {
+            added += 1;
+        }
+    }
+
+    // Rated: 1M ratings; value depends on user age and director quality.
+    let n_ratings = ctx.n(BASE_RATINGS);
+    let mut added = 0;
+    let mut attempts = 0;
+    while added < n_ratings && attempts < n_ratings * 8 {
+        attempts += 1;
+        let u = (ctx.rng.f64().powf(1.3) * n_users as f64) as u32 % n_users as u32;
+        let m = (ctx.rng.f64().powf(1.9) * n_movies as f64) as u32 % n_movies as u32;
+        let dq = movie_dir_quality[m as usize];
+        let age = b.peek_entity_attr(0, 0, u);
+        let base = if dq == 2 { 2 } else { ctx.dep(age, 3, 0.5) };
+        let rating = ctx.dep(base, 3, 0.6);
+        if b.add_rel(0, u, m, &[rating]) {
+            added += 1;
+        }
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_scale_shape() {
+        let db = generate(0.005, 7);
+        assert_eq!(db.schema.num_rel_vars(), 3);
+        assert_eq!(db.schema.num_attributes(), 17);
+        // All three relationships share Movie: single connected component.
+        let comps = crate::lattice::components(&db.schema, &[0, 1, 2]);
+        assert_eq!(comps.len(), 1);
+    }
+
+    #[test]
+    fn every_movie_has_one_director() {
+        let db = generate(0.02, 7);
+        for m in 0..db.entity_counts[1] {
+            assert_eq!(db.rels[2].tuples_by_second(m).len(), 1);
+        }
+    }
+
+    #[test]
+    fn revenue_tracks_quality() {
+        let db = generate(0.05, 7);
+        let mut same = 0u64;
+        let mut diff = 0u64;
+        for d in 0..db.entity_counts[3] {
+            if db.entity_attr(3, 0, d) == db.entity_attr(3, 1, d) {
+                same += 1;
+            } else {
+                diff += 1;
+            }
+        }
+        assert!(same > diff);
+    }
+}

@@ -1,0 +1,160 @@
+//! Mondial analogue: tiny database (870 tuples), huge statistical space —
+//! 2 entity tables (Country, Religion), a **self-relationship**
+//! `Borders(C1,C2)` plus `HasReligion(C1,R)`, 18 attributes. Because the
+//! Country population is instantiated with two FO variables, its attributes
+//! appear twice in the joint table, which is why this 870-tuple database
+//! yields ~1.7M sufficient statistics with a compression ratio near 1
+//! (paper Table 3: CP is actually *faster* here). Target: `percentage(C1)`.
+//!
+//! Faithful quirk (paper §6.3.1): there is **no case where all relationship
+//! variables are simultaneously true** — we engineer border-countries and
+//! religion-countries to be disjoint on the shared FO variable, so the
+//! link-analysis-off contingency table is empty.
+
+use super::GenCtx;
+use crate::db::{Database, DatabaseBuilder};
+use crate::schema::{Schema, SchemaBuilder};
+use std::sync::Arc;
+
+const BASE_COUNTRIES: usize = 220;
+const BASE_RELIGIONS: usize = 30;
+const BASE_BORDERS: usize = 320;
+const BASE_HASREL: usize = 300;
+
+pub fn schema() -> Schema {
+    let mut b = SchemaBuilder::new("mondial");
+    let c = b.population("Country");
+    b.attr(c, "continent", &["africa", "asia", "europe"]);
+    b.attr(c, "government", &["republic", "monarchy", "other"]);
+    b.attr(c, "pop_band", &["small", "mid", "large"]);
+    b.attr(c, "gdp_band", &["low", "mid", "high"]);
+    b.attr(c, "inflation", &["low", "high"]);
+    b.attr(c, "percentage", &["minor", "split", "dominant"]);
+    b.attr(c, "coastal", &["no", "yes"]);
+    b.attr(c, "landlocked", &["no", "yes"]);
+    b.attr(c, "organization", &["none", "some"]);
+    b.attr(c, "climate", &["arid", "temperate"]);
+    let r = b.population("Religion");
+    b.attr(r, "kind", &["k1", "k2", "k3"]);
+    b.attr(r, "age_band", &["ancient", "medieval"]);
+    b.attr(r, "spread", &["regional", "global"]);
+    b.attr(r, "size_band", &["small", "mid", "large"]);
+    let borders = b.relationship("Borders", c, c);
+    b.rel_attr(borders, "length", &["short", "long"]);
+    b.rel_attr(borders, "water", &["no", "yes"]);
+    let hasrel = b.relationship("HasReligion", c, r);
+    b.rel_attr(hasrel, "share", &["low", "mid", "high"]);
+    b.rel_attr(hasrel, "official", &["no", "yes"]);
+    b.finish()
+}
+
+pub fn generate(scale: f64, seed: u64) -> Database {
+    let schema = Arc::new(schema());
+    let mut ctx = GenCtx::new(scale, seed);
+    let mut b = DatabaseBuilder::new(schema.clone());
+
+    let n_c = ctx.n(BASE_COUNTRIES);
+    let n_r = ctx.n(BASE_RELIGIONS);
+    for _ in 0..n_c {
+        let continent = ctx.skewed(3, 0.4);
+        let government = ctx.dep(continent, 3, 0.35);
+        let pop = ctx.skewed(3, 0.6);
+        let gdp = ctx.dep(continent, 3, 0.4);
+        let inflation = ctx.dep(gdp, 2, 0.4);
+        let percentage = ctx.dep(continent, 3, 0.45);
+        let coastal = ctx.uniform(2);
+        let landlocked = 1 - coastal; // consistent geography
+        let organization = ctx.dep(gdp, 2, 0.5);
+        let climate = ctx.dep(continent, 2, 0.5);
+        b.add_entity(
+            0,
+            &[continent, government, pop, gdp, inflation, percentage, coastal, landlocked,
+              organization, climate],
+        );
+    }
+    for _ in 0..n_r {
+        let kind = ctx.skewed(3, 0.5);
+        let age = ctx.uniform(2);
+        let spread = ctx.dep(kind, 2, 0.4);
+        let size = ctx.skewed(3, 0.7);
+        b.add_entity(1, &[kind, age, spread, size]);
+    }
+
+    // Split countries: the first `split` have borders, the rest have
+    // religions — the shared FO variable C1 never satisfies both, so the
+    // all-true join is empty (paper §6.3.1).
+    let split = (n_c * 2) / 3;
+
+    let n_borders = ctx.n(BASE_BORDERS);
+    let mut added = 0;
+    let mut attempts = 0;
+    while added < n_borders && attempts < n_borders * 20 {
+        attempts += 1;
+        let a = ctx.rng.below(split as u64) as u32;
+        let c2 = ctx.rng.below(n_c as u64) as u32;
+        if a == c2 {
+            continue;
+        }
+        // Countries on the same continent border far more often.
+        let same = b.peek_entity_attr(0, 0, a) == b.peek_entity_attr(0, 0, c2);
+        if !ctx.rng.chance(if same { 0.9 } else { 0.15 }) {
+            continue;
+        }
+        let length = ctx.dep(b.peek_entity_attr(0, 2, a), 2, 0.4);
+        let water = ctx.dep(b.peek_entity_attr(0, 6, a), 2, 0.6);
+        if b.add_rel(0, a, c2, &[length, water]) {
+            added += 1;
+        }
+    }
+
+    let n_hasrel = ctx.n(BASE_HASREL);
+    let mut added = 0;
+    let mut attempts = 0;
+    while added < n_hasrel && attempts < n_hasrel * 20 {
+        attempts += 1;
+        if split >= n_c {
+            break;
+        }
+        let c = split as u32 + ctx.rng.below((n_c - split) as u64) as u32;
+        let r = ctx.rng.below(n_r as u64) as u32;
+        let share = ctx.dep(b.peek_entity_attr(0, 5, c), 3, 0.6); // tracks percentage
+        let official = ctx.dep(b.peek_entity_attr(0, 1, c), 2, 0.4);
+        if b.add_rel(1, c, r, &[share, official]) {
+            added += 1;
+        }
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale1_exact_table2_shape() {
+        let db = generate(1.0, 7);
+        let t = db.total_tuples() as f64;
+        assert!((t - 870.0).abs() / 870.0 < 0.15, "tuples = {t}");
+        assert_eq!(db.schema.num_self_rels(), 1);
+    }
+
+    #[test]
+    fn border_and_religion_countries_disjoint() {
+        let db = generate(1.0, 7);
+        let borders_first: std::collections::HashSet<u32> =
+            db.rels[0].pairs.iter().map(|p| p[0]).collect();
+        let rel_first: std::collections::HashSet<u32> =
+            db.rels[1].pairs.iter().map(|p| p[0]).collect();
+        assert!(borders_first.is_disjoint(&rel_first));
+    }
+
+    #[test]
+    fn self_rel_uses_two_fo_vars() {
+        let s = schema();
+        let r = &s.relationships[0];
+        assert!(r.is_self());
+        assert_ne!(r.fo_vars[0], r.fo_vars[1]);
+        // HasReligion binds the same C1 that Borders binds first.
+        assert_eq!(s.relationships[1].fo_vars[0], r.fo_vars[0]);
+    }
+}

@@ -1,0 +1,130 @@
+//! Mutagenesis analogue: 2 entity tables (Molecule, Atom), 2 relationships
+//! (`Contains(M,A)`, `Methyl(M,A)`), ~14.5K tuples, 11 attributes
+//! (paper Table 2). Target: `inda(M)`.
+//!
+//! Planted structure: an atom's element distribution depends on its
+//! molecule's `inda` flag, and molecules with many methyl attachments skew
+//! `ind1` — echoing the structure-activity signal of the real dataset.
+
+use super::GenCtx;
+use crate::db::{Database, DatabaseBuilder};
+use crate::schema::{Schema, SchemaBuilder};
+use std::sync::Arc;
+
+const BASE_MOLECULES: usize = 230;
+const BASE_ATOMS: usize = 4_900;
+const BASE_METHYL: usize = 4_400;
+
+pub fn schema() -> Schema {
+    let mut b = SchemaBuilder::new("mutagenesis");
+    let m = b.population("Molecule");
+    b.attr(m, "ind1", &["no", "yes"]);
+    b.attr(m, "inda", &["no", "yes"]);
+    b.attr(m, "logp", &["low", "mid", "high"]);
+    b.attr(m, "lumo", &["low", "mid", "high"]);
+    let a = b.population("Atom");
+    b.attr(a, "element", &["c", "h", "o", "n", "other"]);
+    b.attr(a, "atype", &["t1", "t2", "t3", "t4"]);
+    b.attr(a, "charge", &["neg", "zero", "pos"]);
+    b.attr(a, "hydro", &["no", "yes"]);
+    let contains = b.relationship("Contains", m, a);
+    b.rel_attr(contains, "btype", &["single", "double", "aromatic"]);
+    b.rel_attr(contains, "strand", &["main", "side"]);
+    let methyl = b.relationship("Methyl", m, a);
+    b.rel_attr(methyl, "orient", &["ortho", "meta", "para"]);
+    b.finish()
+}
+
+pub fn generate(scale: f64, seed: u64) -> Database {
+    let schema = Arc::new(schema());
+    let mut ctx = GenCtx::new(scale, seed);
+    let mut b = DatabaseBuilder::new(schema.clone());
+
+    let n_mol = ctx.n(BASE_MOLECULES);
+    let n_atom = ctx.n(BASE_ATOMS);
+    for _ in 0..n_mol {
+        let inda = if ctx.rng.chance(0.4) { 1 } else { 0 };
+        let ind1 = ctx.dep(inda, 2, 0.5);
+        let logp = ctx.dep(inda * 2, 3, 0.4);
+        let lumo = ctx.skewed(3, 0.7);
+        b.add_entity(0, &[ind1, inda, logp, lumo]);
+    }
+    for _ in 0..n_atom {
+        // Assign each atom to a home molecule up front so its attributes can
+        // correlate with the molecule's activity.
+        let element = ctx.skewed(5, 1.0);
+        let atype = ctx.dep(element, 4, 0.5);
+        let charge = ctx.uniform(3);
+        let hydro = if element == 1 { 1 } else { ctx.dep(0, 2, 0.7) };
+        b.add_entity(1, &[element, atype, charge, hydro]);
+    }
+
+    // Contains: each atom belongs to one molecule (functional relationship),
+    // molecule chosen with skew; bond type depends on molecule's inda.
+    for atom in 0..n_atom as u32 {
+        let mol = (ctx.rng.f64().powf(1.2) * n_mol as f64) as u32 % n_mol as u32;
+        let inda = b.peek_entity_attr(0, 1, mol);
+        let btype = ctx.dep(inda * 2, 3, 0.5);
+        let strand = ctx.dep(inda, 2, 0.45);
+        b.add_rel(0, mol, atom, &[btype, strand]);
+    }
+
+    // Methyl attachments: biased toward active (inda = yes) molecules and
+    // carbon atoms.
+    let n_methyl = ctx.n(BASE_METHYL);
+    let mut added = 0;
+    let mut attempts = 0;
+    while added < n_methyl && attempts < n_methyl * 15 {
+        attempts += 1;
+        let mol = ctx.rng.below(n_mol as u64) as u32;
+        let atom = ctx.rng.below(n_atom as u64) as u32;
+        let inda = b.peek_entity_attr(0, 1, mol);
+        let element = b.peek_entity_attr(1, 0, atom);
+        let p = if inda == 1 { 0.9 } else { 0.35 } * if element == 0 { 1.0 } else { 0.55 };
+        if !ctx.rng.chance(p) {
+            continue;
+        }
+        let orient = ctx.dep(element, 3, 0.4);
+        if b.add_rel(1, mol, atom, &[orient]) {
+            added += 1;
+        }
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale1_near_table2() {
+        let db = generate(1.0, 7);
+        let t = db.total_tuples();
+        assert!((t as i64 - 14_540).unsigned_abs() < 1_500, "tuples = {t}");
+    }
+
+    #[test]
+    fn contains_is_functional_per_atom() {
+        let db = generate(0.1, 7);
+        let contains = &db.rels[0];
+        for atom in 0..db.entity_counts[1] {
+            assert_eq!(contains.tuples_by_second(atom).len(), 1);
+        }
+    }
+
+    #[test]
+    fn methyl_prefers_active_molecules() {
+        let db = generate(0.5, 7);
+        let methyl = &db.rels[1];
+        let mut active = 0u64;
+        let mut inactive = 0u64;
+        for &[m, _] in &methyl.pairs {
+            if db.entity_attr(0, 1, m) == 1 {
+                active += 1;
+            } else {
+                inactive += 1;
+            }
+        }
+        assert!(active > inactive);
+    }
+}

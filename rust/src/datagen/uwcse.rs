@@ -1,0 +1,171 @@
+//! UW-CSE analogue: the smallest benchmark (712 tuples) with **two
+//! self-relationships** over Person (`AdvisedBy(P1,P2)`,
+//! `TempAdvisedBy(P1,P2)`) plus an *isolated* Course entity table (its
+//! attributes join the statistical space only through the cross product) —
+//! 4 tables, 14 attributes. Target: `courseLevel(C)`.
+//!
+//! Entities are drawn from a small set of latent profiles so the observed
+//! attribute-combination count stays low — that is what keeps the paper's
+//! UW-CSE joint table at only ~2.8K statistics. The two advisor relations
+//! almost never hold simultaneously (paper Table 4: only 2 link-off
+//! statistics); we plant exactly two overlapping pairs.
+
+use super::GenCtx;
+use crate::db::{Database, DatabaseBuilder};
+use crate::schema::{Schema, SchemaBuilder};
+use std::sync::Arc;
+
+const BASE_PERSONS: usize = 278;
+const BASE_COURSES: usize = 132;
+const BASE_ADVISED: usize = 113;
+const BASE_TEMP: usize = 187;
+const N_PERSON_PROFILES: usize = 10;
+const N_COURSE_PROFILES: usize = 8;
+
+pub fn schema() -> Schema {
+    let mut b = SchemaBuilder::new("uwcse");
+    let p = b.population("Person");
+    b.attr(p, "position", &["faculty", "staff", "student"]);
+    b.attr(p, "inphase", &["pre_quals", "post_quals", "post_generals", "n_a"]);
+    b.attr(p, "years", &["y1", "y2to4", "y5plus"]);
+    b.attr(p, "student", &["no", "yes"]);
+    b.attr(p, "quals_done", &["no", "yes"]);
+    b.attr(p, "area", &["systems", "theory", "ai"]);
+    let c = b.population("Course");
+    b.attr(c, "courseLevel", &["level100", "level400", "level500"]);
+    b.attr(c, "area", &["systems", "theory", "ai"]);
+    b.attr(c, "size", &["small", "large"]);
+    b.attr(c, "eval", &["low", "high"]);
+    let adv = b.relationship("AdvisedBy", p, p);
+    b.rel_attr(adv, "strength", &["weak", "strong"]);
+    b.rel_attr(adv, "co_paper", &["no", "yes"]);
+    let tmp = b.relationship("TempAdvisedBy", p, p);
+    b.rel_attr(tmp, "reason", &["rotation", "interim"]);
+    b.rel_attr(tmp, "quarter", &["fall", "spring"]);
+    b.finish()
+}
+
+pub fn generate(scale: f64, seed: u64) -> Database {
+    let schema = Arc::new(schema());
+    let mut ctx = GenCtx::new(scale, seed);
+    let mut b = DatabaseBuilder::new(schema.clone());
+
+    let n_p = ctx.n(BASE_PERSONS);
+    let n_c = ctx.n(BASE_COURSES);
+
+    // Latent-profile entity generation keeps observed combos ~= #profiles.
+    for _ in 0..n_p {
+        let prof = ctx.skewed(N_PERSON_PROFILES, 0.8) as u16;
+        let student = if prof < 3 { 0u16 } else { 1 };
+        let position = if student == 0 { ctx.dep(prof, 2, 0.9) } else { 2 };
+        let inphase = if student == 0 { 3 } else { ctx.dep(prof, 3, 0.9) };
+        let years = ctx.dep(prof, 3, 0.9);
+        let quals = if inphase >= 1 && inphase < 3 { 1 } else { 0 };
+        let area = ctx.dep(prof, 3, 0.9);
+        b.add_entity(0, &[position, inphase, years, student, quals, area]);
+    }
+    for _ in 0..n_c {
+        let prof = ctx.skewed(N_COURSE_PROFILES, 0.7) as u16;
+        let level = ctx.dep(prof, 3, 0.9);
+        let area = ctx.dep(prof, 3, 0.9);
+        let size = ctx.dep(level, 2, 0.8);
+        let eval = ctx.dep(prof, 2, 0.85);
+        b.add_entity(1, &[level, area, size, eval]);
+    }
+
+    // AdvisedBy: student -> faculty, same research area preferred.
+    let faculty: Vec<u32> =
+        (0..n_p as u32).filter(|&e| b.peek_entity_attr(0, 3, e) == 0).collect();
+    let students: Vec<u32> =
+        (0..n_p as u32).filter(|&e| b.peek_entity_attr(0, 3, e) == 1).collect();
+    if faculty.is_empty() || students.is_empty() {
+        return b.finish();
+    }
+    let n_adv = ctx.n(BASE_ADVISED);
+    let mut added = 0;
+    let mut attempts = 0;
+    let mut advised_pairs: Vec<(u32, u32)> = Vec::new();
+    while added < n_adv && attempts < n_adv * 30 {
+        attempts += 1;
+        let s = students[ctx.rng.index(students.len())];
+        let f = faculty[ctx.rng.index(faculty.len())];
+        let same_area = b.peek_entity_attr(0, 5, s) == b.peek_entity_attr(0, 5, f);
+        if !ctx.rng.chance(if same_area { 0.9 } else { 0.2 }) {
+            continue;
+        }
+        let strength = ctx.dep(b.peek_entity_attr(0, 1, s), 2, 0.5);
+        let co_paper = ctx.dep(strength, 2, 0.6);
+        if b.add_rel(0, s, f, &[strength, co_paper]) {
+            advised_pairs.push((s, f));
+            added += 1;
+        }
+    }
+
+    // TempAdvisedBy: early students get temporary advisors; overlap with
+    // AdvisedBy planted at exactly two pairs (paper: 2 link-off stats).
+    let n_tmp = ctx.n(BASE_TEMP);
+    let mut added = 0;
+    let mut attempts = 0;
+    for &(s, f) in advised_pairs.iter().take(2) {
+        if b.add_rel(1, s, f, &[0, 0]) {
+            added += 1;
+        }
+    }
+    while added < n_tmp && attempts < n_tmp * 30 {
+        attempts += 1;
+        let s = students[ctx.rng.index(students.len())];
+        let f = faculty[ctx.rng.index(faculty.len())];
+        if b.has_rel(0, s, f) {
+            continue; // keep the planted overlap exact
+        }
+        let early = b.peek_entity_attr(0, 1, s) == 0;
+        if !ctx.rng.chance(if early { 0.85 } else { 0.25 }) {
+            continue;
+        }
+        let reason = ctx.dep(b.peek_entity_attr(0, 2, s), 2, 0.5);
+        let quarter = ctx.uniform(2);
+        if b.add_rel(1, s, f, &[reason, quarter]) {
+            added += 1;
+        }
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale1_near_table2() {
+        let db = generate(1.0, 7);
+        let t = db.total_tuples() as f64;
+        assert!((t - 712.0).abs() / 712.0 < 0.15, "tuples = {t}");
+        assert_eq!(db.schema.num_self_rels(), 2);
+    }
+
+    #[test]
+    fn two_rels_share_person_vars() {
+        let s = schema();
+        assert_eq!(s.relationships[0].fo_vars, s.relationships[1].fo_vars);
+        // Course participates in no relationship.
+        let covered = s.fo_vars_of_rels(&[0, 1]);
+        let course_fo = s.populations[1].fo_vars[0];
+        assert!(!covered.contains(&course_fo));
+    }
+
+    #[test]
+    fn overlap_is_exactly_two() {
+        let db = generate(1.0, 7);
+        let adv: std::collections::HashSet<(u32, u32)> =
+            db.rels[0].pairs.iter().map(|p| (p[0], p[1])).collect();
+        let overlap = db.rels[1].pairs.iter().filter(|p| adv.contains(&(p[0], p[1]))).count();
+        assert_eq!(overlap, 2);
+    }
+
+    #[test]
+    fn person_combos_stay_small() {
+        let db = generate(1.0, 7);
+        let ct = db.ct_entity(db.schema.populations[0].fo_vars[0]);
+        assert!(ct.len() <= 40, "observed {} person combos", ct.len());
+    }
+}

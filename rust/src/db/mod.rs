@@ -1,0 +1,363 @@
+//! In-memory relational database engine.
+//!
+//! This is the substrate the paper assumed from MySQL: entity and
+//! relationship tables, key indexes, and the two query services the Möbius
+//! Join needs (paper §3-4):
+//!
+//! * entity contingency tables `ct(1Atts(X))` — a single-table GROUP BY;
+//! * positive-chain contingency tables
+//!   `ct(1Atts(R), 2Atts(R) | R = T)` — a multi-way join of relationship
+//!   tables with their entity tables plus GROUP BY (the paper's dynamic SQL
+//!   `CREATE TABLE ct_T AS SELECT COUNT(*) ... GROUP BY ...`).
+//!
+//! Entities are dense ids `0..n` per population; value codes are `u16`
+//! dictionary codes. Relationship tables carry per-tuple attribute columns
+//! and hash/vector indexes on both key columns (the B+-tree stand-in).
+
+mod join;
+
+pub use join::JoinCounter;
+
+use crate::schema::{AttrId, FoVarId, PopId, RelId, Schema, VarId};
+use crate::util::fxhash::FxHashMap;
+use std::sync::Arc;
+
+/// One relationship table instance.
+#[derive(Debug, Clone)]
+pub struct RelTable {
+    /// Related entity pairs `(first, second)`; a set (no duplicates).
+    pub pairs: Vec<[u32; 2]>,
+    /// Per-tuple descriptive attribute codes, one vec per rel attribute,
+    /// in schema declaration order; each parallel to `pairs`.
+    pub attrs: Vec<Vec<u16>>,
+    /// Index: entity id (first position) -> tuple indices.
+    by_first: Vec<Vec<u32>>,
+    /// Index: entity id (second position) -> tuple indices.
+    by_second: Vec<Vec<u32>>,
+    /// Index: pair -> tuple index.
+    by_pair: FxHashMap<(u32, u32), u32>,
+}
+
+impl RelTable {
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    /// Tuple indices whose first key equals `e`.
+    pub fn tuples_by_first(&self, e: u32) -> &[u32] {
+        self.by_first.get(e as usize).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Tuple indices whose second key equals `e`.
+    pub fn tuples_by_second(&self, e: u32) -> &[u32] {
+        self.by_second.get(e as usize).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Tuple index for an exact pair, if related.
+    pub fn tuple_of_pair(&self, a: u32, b: u32) -> Option<u32> {
+        self.by_pair.get(&(a, b)).copied()
+    }
+}
+
+/// A database instance over a schema.
+#[derive(Debug, Clone)]
+pub struct Database {
+    pub schema: Arc<Schema>,
+    /// Number of entities per population.
+    pub entity_counts: Vec<u32>,
+    /// `entity_attrs[pop][k][e]` = code of the k-th attribute (declaration
+    /// order within the population) of entity `e`.
+    pub entity_attrs: Vec<Vec<Vec<u16>>>,
+    /// One table per relationship type, schema order.
+    pub rels: Vec<RelTable>,
+}
+
+/// Builder-style constructor used by the data generators and tests.
+pub struct DatabaseBuilder {
+    schema: Arc<Schema>,
+    entity_counts: Vec<u32>,
+    entity_attrs: Vec<Vec<Vec<u16>>>,
+    rel_pairs: Vec<Vec<[u32; 2]>>,
+    rel_attrs: Vec<Vec<Vec<u16>>>,
+    rel_seen: Vec<FxHashMap<(u32, u32), ()>>,
+}
+
+impl DatabaseBuilder {
+    pub fn new(schema: Arc<Schema>) -> Self {
+        let np = schema.populations.len();
+        let nr = schema.relationships.len();
+        DatabaseBuilder {
+            entity_counts: vec![0; np],
+            entity_attrs: schema
+                .populations
+                .iter()
+                .map(|p| vec![Vec::new(); p.attrs.len()])
+                .collect(),
+            rel_pairs: vec![Vec::new(); nr],
+            rel_attrs: schema
+                .relationships
+                .iter()
+                .map(|r| vec![Vec::new(); r.attrs.len()])
+                .collect(),
+            rel_seen: (0..nr).map(|_| FxHashMap::default()).collect(),
+            schema,
+        }
+    }
+
+    /// Add one entity with attribute codes in population declaration order.
+    /// Returns the new entity id.
+    pub fn add_entity(&mut self, pop: PopId, attr_codes: &[u16]) -> u32 {
+        let p = &self.schema.populations[pop];
+        assert_eq!(attr_codes.len(), p.attrs.len(), "attr code count mismatch");
+        for (k, (&code, &attr)) in attr_codes.iter().zip(&p.attrs).enumerate() {
+            assert!(
+                (code as usize) < self.schema.attributes[attr].arity(),
+                "code {code} out of range for attribute {}",
+                self.schema.attributes[attr].name
+            );
+            self.entity_attrs[pop][k].push(code);
+        }
+        let id = self.entity_counts[pop];
+        self.entity_counts[pop] += 1;
+        id
+    }
+
+    /// Add one relationship tuple with its 2Att codes (declaration order).
+    /// Duplicate pairs are ignored (a relationship is a set); returns
+    /// whether the tuple was new.
+    pub fn add_rel(&mut self, rel: RelId, a: u32, b: u32, attr_codes: &[u16]) -> bool {
+        let r = &self.schema.relationships[rel];
+        assert_eq!(attr_codes.len(), r.attrs.len(), "rel attr code count mismatch");
+        assert!(a < self.entity_counts[r.pops[0]], "first key {a} out of range");
+        assert!(b < self.entity_counts[r.pops[1]], "second key {b} out of range");
+        if self.rel_seen[rel].insert((a, b), ()).is_some() {
+            return false;
+        }
+        self.rel_pairs[rel].push([a, b]);
+        for (k, (&code, &attr)) in attr_codes.iter().zip(&r.attrs).enumerate() {
+            assert!((code as usize) < self.schema.attributes[attr].arity());
+            self.rel_attrs[rel][k].push(code);
+        }
+        true
+    }
+
+    /// Check whether a pair is already related.
+    pub fn has_rel(&self, rel: RelId, a: u32, b: u32) -> bool {
+        self.rel_seen[rel].contains_key(&(a, b))
+    }
+
+    pub fn entity_count(&self, pop: PopId) -> u32 {
+        self.entity_counts[pop]
+    }
+
+    /// Read back an inserted entity's attribute code (generators correlate
+    /// relationship existence with entity attributes).
+    pub fn peek_entity_attr(&self, pop: PopId, attr_idx: usize, e: u32) -> u16 {
+        self.entity_attrs[pop][attr_idx][e as usize]
+    }
+
+    /// Freeze: build indexes.
+    pub fn finish(self) -> Database {
+        let mut rels = Vec::with_capacity(self.rel_pairs.len());
+        for (rel_id, pairs) in self.rel_pairs.into_iter().enumerate() {
+            let r = &self.schema.relationships[rel_id];
+            let n1 = self.entity_counts[r.pops[0]] as usize;
+            let n2 = self.entity_counts[r.pops[1]] as usize;
+            let mut by_first = vec![Vec::new(); n1];
+            let mut by_second = vec![Vec::new(); n2];
+            let mut by_pair = FxHashMap::default();
+            for (t, &[a, b]) in pairs.iter().enumerate() {
+                by_first[a as usize].push(t as u32);
+                by_second[b as usize].push(t as u32);
+                by_pair.insert((a, b), t as u32);
+            }
+            rels.push(RelTable {
+                pairs,
+                attrs: self.rel_attrs[rel_id].clone(),
+                by_first,
+                by_second,
+                by_pair,
+            });
+        }
+        Database {
+            schema: self.schema,
+            entity_counts: self.entity_counts,
+            entity_attrs: self.entity_attrs,
+            rels,
+        }
+    }
+}
+
+impl Database {
+    /// Attribute code of entity `e` for a (pop-local) attribute index.
+    #[inline]
+    pub fn entity_attr(&self, pop: PopId, attr_idx: usize, e: u32) -> u16 {
+        self.entity_attrs[pop][attr_idx][e as usize]
+    }
+
+    /// Position of `attr` within its population's declaration order.
+    pub fn attr_pos_in_pop(&self, pop: PopId, attr: AttrId) -> usize {
+        self.schema.populations[pop]
+            .attrs
+            .iter()
+            .position(|&a| a == attr)
+            .expect("attribute not on this population")
+    }
+
+    /// Position of `attr` within its relationship's declaration order.
+    pub fn attr_pos_in_rel(&self, rel: RelId, attr: AttrId) -> usize {
+        self.schema.relationships[rel]
+            .attrs
+            .iter()
+            .position(|&a| a == attr)
+            .expect("attribute not on this relationship")
+    }
+
+    /// Total number of tuples over all tables (paper Table 2 "#Tuples").
+    pub fn total_tuples(&self) -> u64 {
+        let e: u64 = self.entity_counts.iter().map(|&n| n as u64).sum();
+        let r: u64 = self.rels.iter().map(|t| t.len() as u64).sum();
+        e + r
+    }
+
+    /// The population an FO variable ranges over.
+    pub fn pop_of_fo(&self, fo: FoVarId) -> PopId {
+        self.schema.fo_vars[fo].pop
+    }
+
+    /// Entity contingency table `ct(1Atts(X))` for one FO variable: a
+    /// GROUP BY over the population's attribute columns. Columns are that
+    /// variable's EntityAttr random variables.
+    pub fn ct_entity(&self, fo: FoVarId) -> crate::ct::CtTable {
+        let pop = self.pop_of_fo(fo);
+        let vars: Vec<VarId> = self.schema.one_atts_of_fo(fo);
+        // Attribute order within `vars` follows VarId order, which follows
+        // population declaration order (builder emits them in order).
+        let attr_idx: Vec<usize> = vars
+            .iter()
+            .map(|&v| match self.schema.random_vars[v] {
+                crate::schema::RandomVar::EntityAttr { attr, .. } => {
+                    self.attr_pos_in_pop(pop, attr)
+                }
+                _ => unreachable!(),
+            })
+            .collect();
+        let n = self.entity_counts[pop];
+        let mut groups: FxHashMap<Vec<u16>, u64> = FxHashMap::default();
+        let mut key = vec![0u16; vars.len()];
+        for e in 0..n {
+            for (slot, &k) in attr_idx.iter().enumerate() {
+                key[slot] = self.entity_attr(pop, k, e);
+            }
+            *groups.entry(key.clone()).or_insert(0) += 1;
+        }
+        let mut rows = Vec::with_capacity(groups.len() * vars.len());
+        let mut counts = Vec::with_capacity(groups.len());
+        for (k, c) in groups {
+            rows.extend_from_slice(&k);
+            counts.push(c);
+        }
+        crate::ct::CtTable::from_raw(vars, rows, counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schema::builder::university_schema;
+
+    /// The paper's Figure 2 database instance.
+    pub fn university_db() -> Database {
+        let schema = Arc::new(university_schema());
+        let mut b = DatabaseBuilder::new(schema.clone());
+        // Students: jack(3,1), kim(2,1), paul(1,2)  [intelligence, ranking]
+        let jack = b.add_entity(0, &[2, 0]);
+        let kim = b.add_entity(0, &[1, 0]);
+        let paul = b.add_entity(0, &[0, 1]);
+        // Courses: 101(3,2)... wait: (rating, difficulty): 101(3,2->codes 2,1),
+        // 102(2,1->1,0), 103(2,1->1,0)
+        let c101 = b.add_entity(1, &[2, 1]);
+        let c102 = b.add_entity(1, &[1, 0]);
+        let _c103 = b.add_entity(1, &[1, 0]);
+        // Professors: jim(2,1), oliver(3,1), david(2,2) [popularity, teachingability]
+        let jim = b.add_entity(2, &[1, 0]);
+        let oliver = b.add_entity(2, &[2, 0]);
+        let david = b.add_entity(2, &[1, 1]);
+        // Registration(S,C): (jack,101,grade1,sat1) (jack,102,2,2) (kim,102,3,1) (paul,101,2,1)
+        b.add_rel(0, jack, c101, &[0, 0]);
+        b.add_rel(0, jack, c102, &[1, 1]);
+        b.add_rel(0, kim, c102, &[2, 0]);
+        b.add_rel(0, paul, c101, &[1, 0]);
+        // RA(P,S): (jack,oliver,High,3)->(oliver,jack) etc; attrs declared
+        // (capability, salary): jack-oliver cap 3 sal High; kim-oliver 1 Low;
+        // paul-jim 2 Med; kim-david 2 High
+        b.add_rel(1, oliver, jack, &[2, 2]);
+        b.add_rel(1, oliver, kim, &[0, 0]);
+        b.add_rel(1, jim, paul, &[1, 1]);
+        b.add_rel(1, david, kim, &[1, 2]);
+        b.finish()
+    }
+
+    #[test]
+    fn university_instance_shape() {
+        let db = university_db();
+        assert_eq!(db.total_tuples(), 9 + 8);
+        assert_eq!(db.rels[0].len(), 4);
+        assert_eq!(db.rels[1].len(), 4);
+    }
+
+    #[test]
+    fn duplicate_rel_ignored() {
+        let db_schema = Arc::new(university_schema());
+        let mut b = DatabaseBuilder::new(db_schema);
+        let s = b.add_entity(0, &[0, 0]);
+        let c = b.add_entity(1, &[0, 0]);
+        assert!(b.add_rel(0, s, c, &[0, 0]));
+        assert!(!b.add_rel(0, s, c, &[1, 1]));
+        assert!(b.has_rel(0, s, c));
+        let db = b.finish();
+        assert_eq!(db.rels[0].len(), 1);
+    }
+
+    #[test]
+    fn indexes_consistent() {
+        let db = university_db();
+        let ra = &db.rels[1];
+        // oliver (prof id 1) advises jack and kim
+        assert_eq!(ra.tuples_by_first(1).len(), 2);
+        // kim (student id 1) has two RAs
+        assert_eq!(ra.tuples_by_second(1).len(), 2);
+        assert!(ra.tuple_of_pair(1, 0).is_some());
+        assert!(ra.tuple_of_pair(0, 0).is_none());
+    }
+
+    #[test]
+    fn ct_entity_group_by() {
+        let db = university_db();
+        // Students: (3,1),(2,1),(1,2) -> 3 distinct combos, count 1 each
+        let ct = db.ct_entity(0);
+        assert_eq!(ct.len(), 3);
+        assert_eq!(ct.total(), 3);
+        // Courses: 102 and 103 share (2,1)
+        let ct_c = db.ct_entity(1);
+        assert_eq!(ct_c.len(), 2);
+        assert_eq!(ct_c.total(), 3);
+        assert_eq!(ct_c.count_of(&[1, 0]), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rel_key_bounds_checked() {
+        let schema = Arc::new(university_schema());
+        let mut b = DatabaseBuilder::new(schema);
+        let s = b.add_entity(0, &[0, 0]);
+        b.add_rel(0, s, 99, &[0, 0]);
+    }
+}
+
+#[cfg(test)]
+pub use tests::university_db;

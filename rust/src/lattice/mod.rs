@@ -1,0 +1,210 @@
+//! The relationship-chain lattice (paper §3, Figure 4).
+//!
+//! A relationship set is a *chain* if it can be ordered so that each
+//! relationship variable shares a first-order variable with the union of its
+//! predecessors — i.e. the set is connected in the graph whose nodes are
+//! relationship variables and whose edges are shared FO variables. The
+//! Möbius Join computes one contingency table per chain, level by level
+//! (level = chain length).
+
+use crate::schema::{RelId, Schema};
+use crate::util::fxhash::FxHashMap;
+
+/// The lattice of relationship chains for a schema.
+#[derive(Debug)]
+pub struct Lattice {
+    /// All chains, sorted by (length, lexicographic), each a sorted rel set.
+    pub chains: Vec<Vec<RelId>>,
+    index: FxHashMap<Vec<RelId>, usize>,
+    max_level: usize,
+}
+
+impl Lattice {
+    /// Enumerate every chain (connected relationship subset) of the schema,
+    /// optionally capped at `max_len` (the paper §8 "prespecified relatively
+    /// small chain length" option; `None` = all levels).
+    pub fn build(schema: &Schema, max_len: Option<usize>) -> Lattice {
+        let m = schema.num_rel_vars();
+        let cap = max_len.unwrap_or(m).min(m);
+        let mut chains: Vec<Vec<RelId>> = Vec::new();
+        let mut seen: FxHashMap<Vec<RelId>, ()> = FxHashMap::default();
+        // Level 1: singletons.
+        let mut frontier: Vec<Vec<RelId>> = (0..m).map(|r| vec![r]).collect();
+        for c in &frontier {
+            seen.insert(c.clone(), ());
+        }
+        chains.extend(frontier.iter().cloned());
+        // Grow: a chain of length l+1 = chain of length l + one rel sharing
+        // an FO variable with it.
+        for _level in 2..=cap {
+            let mut next = Vec::new();
+            for chain in &frontier {
+                let fos = schema.fo_vars_of_rels(chain);
+                for r in 0..m {
+                    if chain.contains(&r) {
+                        continue;
+                    }
+                    if !schema.relationships[r].fo_vars.iter().any(|f| fos.contains(f)) {
+                        continue;
+                    }
+                    let mut c = chain.clone();
+                    c.push(r);
+                    c.sort_unstable();
+                    if seen.insert(c.clone(), ()).is_none() {
+                        next.push(c);
+                    }
+                }
+            }
+            chains.extend(next.iter().cloned());
+            frontier = next;
+            if frontier.is_empty() {
+                break;
+            }
+        }
+        chains.sort_by(|a, b| a.len().cmp(&b.len()).then(a.cmp(b)));
+        let index = chains.iter().enumerate().map(|(i, c)| (c.clone(), i)).collect();
+        let max_level = chains.iter().map(|c| c.len()).max().unwrap_or(0);
+        Lattice { chains, index, max_level }
+    }
+
+    /// Index of a chain, if it is one.
+    pub fn chain_index(&self, rels: &[RelId]) -> Option<usize> {
+        let mut k = rels.to_vec();
+        k.sort_unstable();
+        self.index.get(&k).copied()
+    }
+
+    pub fn is_chain(&self, rels: &[RelId]) -> bool {
+        self.chain_index(rels).is_some()
+    }
+
+    /// All chains of a given length.
+    pub fn level(&self, len: usize) -> impl Iterator<Item = &Vec<RelId>> {
+        self.chains.iter().filter(move |c| c.len() == len)
+    }
+
+    /// Deepest level present.
+    pub fn max_level(&self) -> usize {
+        self.max_level
+    }
+
+    pub fn len(&self) -> usize {
+        self.chains.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chains.is_empty()
+    }
+}
+
+/// Split a relationship set into connected components (each a chain).
+/// Disconnected sets factorize: their joint contingency table is the cross
+/// product of the component tables.
+pub fn components(schema: &Schema, rels: &[RelId]) -> Vec<Vec<RelId>> {
+    let mut remaining: Vec<RelId> = rels.to_vec();
+    remaining.sort_unstable();
+    let mut out = Vec::new();
+    while let Some(seed) = remaining.first().copied() {
+        let mut comp = vec![seed];
+        remaining.retain(|&r| r != seed);
+        loop {
+            let fos = schema.fo_vars_of_rels(&comp);
+            let more: Vec<RelId> = remaining
+                .iter()
+                .copied()
+                .filter(|&r| schema.relationships[r].fo_vars.iter().any(|f| fos.contains(f)))
+                .collect();
+            if more.is_empty() {
+                break;
+            }
+            for r in &more {
+                comp.push(*r);
+            }
+            remaining.retain(|r| !more.contains(r));
+        }
+        comp.sort_unstable();
+        out.push(comp);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schema::builder::university_schema;
+    use crate::schema::SchemaBuilder;
+
+    #[test]
+    fn university_lattice() {
+        let s = university_schema();
+        let l = Lattice::build(&s, None);
+        // Reg(S,C) and RA(P,S) share S: 2 singletons + 1 pair.
+        assert_eq!(l.len(), 3);
+        assert_eq!(l.max_level(), 2);
+        assert!(l.is_chain(&[0]));
+        assert!(l.is_chain(&[1, 0])); // order-insensitive
+    }
+
+    /// Three relationships where only some pairs connect:
+    /// R0 = Reg(S,C), R1 = RA(P,S), R2 = Teaches(P,C) — the paper's Figure 4.
+    fn figure4_schema() -> crate::schema::Schema {
+        let mut b = SchemaBuilder::new("fig4");
+        let s = b.population("Student");
+        b.attr(s, "intelligence", &["1", "2"]);
+        let c = b.population("Course");
+        b.attr(c, "rating", &["1", "2"]);
+        let p = b.population("Professor");
+        b.attr(p, "popularity", &["1", "2"]);
+        b.relationship("Registration", s, c);
+        b.relationship("RA", p, s);
+        b.relationship("Teaches", p, c);
+        b.finish()
+    }
+
+    #[test]
+    fn figure4_lattice_has_seven_chains() {
+        // All three relationships pairwise share an FO var, so every subset
+        // is a chain: 3 + 3 + 1 = 7 (Figure 4 shows these plus 3 entity
+        // tables = 10 ct-tables).
+        let s = figure4_schema();
+        let l = Lattice::build(&s, None);
+        assert_eq!(l.len(), 7);
+        assert_eq!(l.level(2).count(), 3);
+        assert_eq!(l.level(3).count(), 1);
+    }
+
+    #[test]
+    fn max_len_caps_levels() {
+        let s = figure4_schema();
+        let l = Lattice::build(&s, Some(2));
+        assert_eq!(l.max_level(), 2);
+        assert_eq!(l.len(), 6);
+    }
+
+    #[test]
+    fn disconnected_sets_are_not_chains() {
+        // Two self-relationships over different populations never connect
+        // (the UW-CSE shape).
+        let mut b = SchemaBuilder::new("uw");
+        let p = b.population("Person");
+        b.attr(p, "position", &["fac", "stu"]);
+        let c = b.population("Course");
+        b.attr(c, "level", &["ug", "gr"]);
+        b.relationship("AdvisedBy", p, p);
+        b.relationship("Prereq", c, c);
+        let s = b.finish();
+        let l = Lattice::build(&s, None);
+        assert_eq!(l.len(), 2); // singletons only
+        assert!(!l.is_chain(&[0, 1]));
+        let comps = components(&s, &[0, 1]);
+        assert_eq!(comps, vec![vec![0], vec![1]]);
+    }
+
+    #[test]
+    fn components_of_connected_set_is_single() {
+        let s = figure4_schema();
+        let comps = components(&s, &[0, 1, 2]);
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0], vec![0, 1, 2]);
+    }
+}

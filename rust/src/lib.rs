@@ -1,0 +1,37 @@
+//! # mrss — Multi-Relational Sufficient Statistics
+//!
+//! A reproduction of *"Computing Multi-Relational Sufficient Statistics for
+//! Large Databases"* (Qian, Schulte & Sun, CIKM 2014): the **Möbius Join**
+//! virtual-join algorithm that computes contingency tables over a relational
+//! database covering any combination of **positive and negative
+//! relationships**, without materializing entity cross products.
+//!
+//! ## Layout
+//!
+//! * [`schema`] — relational schemas + the random-variable (functor) view;
+//! * [`db`] — in-memory relational engine (tables, indexes, join counting);
+//! * [`ct`] — contingency tables and the ct-algebra (σ, π, χ, ×, +, −);
+//! * [`lattice`] — the relationship-chain lattice;
+//! * [`mobius`] — the Möbius Join dynamic program (Algorithms 1 and 2);
+//! * [`baseline`] — cross-product enumeration baseline (the paper's CP);
+//! * [`datagen`] — synthetic generators mirroring the seven benchmarks;
+//! * [`apps`] — feature selection, association rules, Bayesian networks;
+//! * [`runtime`] — AOT-compiled XLA kernels via PJRT, with native fallback;
+//! * [`coordinator`] — pipeline orchestration, metrics, configs;
+//! * [`util`] — RNG, timing, text tables, property-testing harness.
+
+pub mod util;
+pub mod schema;
+pub mod ct;
+pub mod db;
+pub mod lattice;
+pub mod mobius;
+pub mod baseline;
+pub mod datagen;
+pub mod runtime;
+pub mod apps;
+pub mod coordinator;
+pub mod config;
+
+/// Crate version string (used by the CLI banner).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

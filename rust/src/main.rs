@@ -1,0 +1,276 @@
+//! `mrss` — CLI for the Multi-Relational Sufficient Statistics system.
+//!
+//! ```text
+//! mrss datasets                               # Table 2: benchmark shapes
+//! mrss ct    --dataset imdb --scale 0.25      # Möbius Join + breakdown
+//! mrss cp    --dataset movielens --scale 0.1  # cross-product baseline
+//! mrss suite --scale 0.1 --workers 2          # all seven benchmarks
+//! mrss mine  --dataset financial --scale 0.2  # CFS + association rules
+//! mrss bn    --dataset financial --scale 0.2  # BN learning on vs off
+//! ```
+//!
+//! Add `--engine xla` to route bulk ct-algebra through the AOT-compiled
+//! PJRT artifacts (`make artifacts` first).
+
+use anyhow::{bail, Result};
+use mrss::apps::{apriori, bayesnet, cfs};
+use mrss::baseline::cross_product_ct;
+use mrss::config::{Config, EngineKind};
+use mrss::coordinator::{run_suite, PoolConfig, SuiteJob};
+use mrss::ct::render_ct;
+use mrss::datagen;
+use mrss::mobius::MobiusJoin;
+use mrss::runtime::{XlaEngine, XlaRuntime};
+use mrss::util::format_duration;
+use mrss::util::table::{commas, TextTable};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args[0] == "--help" || args[0] == "help" {
+        print_help();
+        return;
+    }
+    let cfg = match Config::from_args(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(cfg) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "mrss {} — Möbius Join sufficient statistics (CIKM 2014 reproduction)\n\n\
+         commands:\n\
+         \x20 datasets                        print the benchmark catalogue (Table 2)\n\
+         \x20 ct     --dataset D --scale S    compute all contingency tables (Möbius Join)\n\
+         \x20 cp     --dataset D --scale S    cross-product baseline (Table 3)\n\
+         \x20 suite  --scale S --workers N    run every benchmark\n\
+         \x20 mine   --dataset D --scale S    feature selection + association rules\n\
+         \x20 bn     --dataset D --scale S    Bayesian-network learning, link on vs off\n\n\
+         common flags: --seed N --engine native|xla --excerpt N --max-chain-len L\n\
+         \x20             --cp-budget-secs N --config FILE",
+        mrss::VERSION
+    );
+}
+
+/// Load the XLA runtime when requested (owned by the caller so engines can
+/// borrow it).
+fn maybe_runtime(cfg: &Config) -> Result<Option<XlaRuntime>> {
+    match cfg.engine {
+        EngineKind::Native => Ok(None),
+        EngineKind::Xla => Ok(Some(XlaRuntime::load_default()?)),
+    }
+}
+
+fn run(cfg: Config) -> Result<()> {
+    match cfg.command.as_str() {
+        "datasets" => cmd_datasets(),
+        "ct" => cmd_ct(&cfg),
+        "cp" => cmd_cp(&cfg),
+        "suite" => cmd_suite(&cfg),
+        "mine" => cmd_mine(&cfg),
+        "bn" => cmd_bn(&cfg),
+        other => bail!("unknown command `{other}` (try --help)"),
+    }
+}
+
+fn cmd_datasets() -> Result<()> {
+    let mut t = TextTable::new(vec![
+        "Dataset",
+        "#Rel/Total",
+        "#Self",
+        "#Tuples(paper)",
+        "#Attrs",
+        "Target",
+    ]);
+    for b in datagen::BENCHMARKS {
+        let s = datagen::schema_of(b.name)?;
+        t.row(vec![
+            b.name.to_string(),
+            format!("{} / {}", s.num_rel_vars(), s.num_tables()),
+            s.num_self_rels().to_string(),
+            commas(b.paper_tuples as u128),
+            s.num_attributes().to_string(),
+            b.target.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_ct(cfg: &Config) -> Result<()> {
+    let db = datagen::generate(&cfg.dataset, cfg.scale, cfg.seed)?;
+    println!(
+        "{} @ scale {}: {} tuples",
+        cfg.dataset,
+        cfg.scale,
+        commas(db.total_tuples() as u128)
+    );
+    let rt = maybe_runtime(cfg)?;
+    let res = match &rt {
+        Some(rt) => {
+            let engine = XlaEngine::new(rt);
+            let mut mj = MobiusJoin::with_engine(&db, &engine);
+            if let Some(l) = cfg.max_chain_len {
+                mj = mj.max_chain_len(l);
+            }
+            mj.run()
+        }
+        None => {
+            let mut mj = MobiusJoin::new(&db);
+            if let Some(l) = cfg.max_chain_len {
+                mj = mj.max_chain_len(l);
+            }
+            mj.run()
+        }
+    };
+    println!(
+        "{} chains in the lattice; engine = {}",
+        res.lattice.len(),
+        if rt.is_some() { "xla" } else { "native" }
+    );
+    if res.joint.is_some() {
+        println!(
+            "#statistics = {} (link-off {}, extra {})",
+            commas(res.num_statistics() as u128),
+            commas(res.link_off().len() as u128),
+            commas(res.num_extra_statistics() as u128)
+        );
+    }
+    println!("{}", res.metrics.breakdown());
+    if cfg.excerpt > 0 {
+        if let Some(joint) = &res.joint {
+            println!("{}", render_ct(joint, &db.schema, cfg.excerpt));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_cp(cfg: &Config) -> Result<()> {
+    let db = datagen::generate(&cfg.dataset, cfg.scale, cfg.seed)?;
+    let out = cross_product_ct(&db, cfg.cp_budget());
+    match out {
+        mrss::baseline::CpOutcome::Done { ref ct, cp_tuples, elapsed } => {
+            println!(
+                "CP done in {}: {} cross-product tuples -> {} statistics (ratio {:.2})",
+                format_duration(elapsed),
+                commas(cp_tuples),
+                commas(ct.len() as u128),
+                cp_tuples as f64 / ct.len() as f64
+            );
+        }
+        mrss::baseline::CpOutcome::NonTermination { cp_tuples, elapsed } => {
+            println!(
+                "CP N.T. after {} ({} cross-product tuples)",
+                format_duration(elapsed),
+                commas(cp_tuples)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_suite(cfg: &Config) -> Result<()> {
+    let jobs: Vec<SuiteJob> = datagen::BENCHMARKS
+        .iter()
+        .map(|b| SuiteJob::new(b.name, cfg.scale, cfg.seed))
+        .collect();
+    let reports = run_suite(jobs, PoolConfig { workers: cfg.workers, queue_depth: 2 });
+    let mut t = TextTable::new(vec![
+        "Dataset", "#Tuples", "MJ-time", "#Stats", "LinkOff", "#Extra", "ExtraTime",
+    ]);
+    for rep in reports {
+        match rep {
+            Ok(r) => {
+                t.row(vec![
+                    r.dataset.clone(),
+                    commas(r.tuples as u128),
+                    format_duration(r.mj_time),
+                    commas(r.statistics as u128),
+                    commas(r.link_off_statistics as u128),
+                    commas(r.extra_statistics as u128),
+                    format_duration(r.extra_time),
+                ]);
+            }
+            Err(e) => eprintln!("job failed: {e:#}"),
+        }
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_mine(cfg: &Config) -> Result<()> {
+    let db = datagen::generate(&cfg.dataset, cfg.scale, cfg.seed)?;
+    let schema = &db.schema;
+    let res = MobiusJoin::new(&db).run();
+    let rt = maybe_runtime(cfg)?;
+    let rt = rt.as_ref();
+
+    let target_name = datagen::info(&cfg.dataset).map(|b| b.target).unwrap_or("");
+    let target = schema
+        .var_by_name(target_name)
+        .ok_or_else(|| anyhow::anyhow!("target {target_name} not found"))?;
+
+    // Feature selection, link off vs on (Table 5).
+    let joint = res.joint_ct();
+    let off_ct = res.link_off();
+    let attrs: Vec<usize> = (0..schema.random_vars.len())
+        .filter(|&v| !matches!(schema.random_vars[v], mrss::schema::RandomVar::RelInd { .. }))
+        .collect();
+    let all_vars: Vec<usize> = (0..schema.random_vars.len()).collect();
+    let off = cfs::cfs_select(&off_ct, target, &attrs, rt);
+    let on = cfs::cfs_select(joint, target, &all_vars, rt);
+    println!("CFS target {target_name}:");
+    let names =
+        |vs: &[usize]| vs.iter().map(|&v| schema.var_name(v)).collect::<Vec<_>>().join(", ");
+    println!("  link off: [{}]", names(&off.selected));
+    println!("  link on : [{}]", names(&on.selected));
+    println!("  distinctness = {:.2}", cfs::distinctness(&off.selected, &on.selected));
+
+    // Association rules (Table 6).
+    let min_support: f64 =
+        cfg.extra.get("min-support").and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    let rules = apriori::apriori(
+        schema,
+        joint,
+        apriori::AprioriConfig { min_support, ..Default::default() },
+        rt,
+    );
+    let with_rel = rules.iter().filter(|r| r.uses_rel_var(schema)).count();
+    println!("\nTop {} rules by lift ({} use relationship variables):", rules.len(), with_rel);
+    for r in rules.iter().take(10) {
+        println!("  lift {:.2}  {}", r.lift, r.render(schema));
+    }
+    Ok(())
+}
+
+fn cmd_bn(cfg: &Config) -> Result<()> {
+    let db = datagen::generate(&cfg.dataset, cfg.scale, cfg.seed)?;
+    let schema = &db.schema;
+    let res = MobiusJoin::new(&db).run();
+    let rt = maybe_runtime(cfg)?;
+    let rt = rt.as_ref();
+    let joint = res.joint_ct();
+
+    let mut t = TextTable::new(vec!["Mode", "learn-time", "log-lik", "#params", "R2R", "A2R"]);
+    for link_on in [false, true] {
+        let out = bayesnet::learn_structure(schema, &res, link_on, Default::default());
+        let m = bayesnet::score_structure(schema, &out.bn, joint, rt);
+        t.row(vec![
+            if link_on { "Link Analysis On" } else { "Link Analysis Off" }.to_string(),
+            format_duration(out.elapsed),
+            format!("{:.2}", m.loglik),
+            m.params.to_string(),
+            m.r2r.to_string(),
+            m.a2r.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

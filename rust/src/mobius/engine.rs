@@ -1,0 +1,61 @@
+//! Pluggable execution engine for the bulk ct-algebra operations.
+//!
+//! The Möbius Join routes its heavy operators through a [`CtEngine`] so the
+//! same dynamic program can run on the pure-rust implementations or on the
+//! AOT-compiled XLA kernels (`crate::runtime::XlaEngine`), and so the two
+//! can be benchmarked against each other (`benches/bench_ablation.rs`).
+
+use crate::ct::{CtTable, SubtractError};
+use crate::schema::VarId;
+
+/// The operations the Möbius Join delegates. Default methods call the
+/// native `CtTable` implementations; engines override whichever ops they
+/// accelerate and must be bit-identical to the native semantics.
+pub trait CtEngine {
+    /// π projection with count summation (GROUP BY).
+    fn project(&self, ct: &CtTable, keep: &[VarId]) -> CtTable {
+        ct.project(keep)
+    }
+
+    /// Count subtraction (minuend ⊇ subtrahend).
+    fn subtract(&self, a: &CtTable, b: &CtTable) -> Result<CtTable, SubtractError> {
+        a.subtract(b)
+    }
+
+    /// Cross product with count multiplication.
+    fn cross(&self, a: &CtTable, b: &CtTable) -> CtTable {
+        a.cross(b)
+    }
+
+    /// χ conditioning.
+    fn condition(&self, ct: &CtTable, cond: &[(VarId, u16)]) -> CtTable {
+        ct.condition(cond)
+    }
+
+    /// Engine name for metrics/reporting.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust reference engine.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeEngine;
+
+impl CtEngine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_engine_delegates() {
+        let e = NativeEngine;
+        let a = CtTable::from_raw(vec![0, 1], vec![0, 0, 1, 1], vec![3, 4]);
+        assert_eq!(e.project(&a, &[0]), a.project(&[0]));
+        assert_eq!(e.cross(&a.project(&[0]), &CtTable::scalar(2)), a.project(&[0]).scale(2));
+        assert_eq!(e.name(), "native");
+    }
+}

@@ -1,0 +1,169 @@
+//! Instrumentation for the Möbius Join: wall-time attribution per phase and
+//! per ct-algebra operator, plus operation counts.
+//!
+//! This is what regenerates the paper's Figure 8 (Pivot vs main loop;
+//! subtraction/union vs cross product) and the complexity-analysis checks
+//! of §4.3 (`#ct_ops` vs the `O(r log r)` bound).
+
+use std::time::Duration;
+
+/// Which ct-algebra operator a timing sample belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CtOp {
+    Project,
+    Subtract,
+    Cross,
+    Condition,
+    Extend,
+    Union,
+}
+
+pub const ALL_OPS: [CtOp; 6] =
+    [CtOp::Project, CtOp::Subtract, CtOp::Cross, CtOp::Condition, CtOp::Extend, CtOp::Union];
+
+impl CtOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            CtOp::Project => "project",
+            CtOp::Subtract => "subtract",
+            CtOp::Cross => "cross",
+            CtOp::Condition => "condition",
+            CtOp::Extend => "extend",
+            CtOp::Union => "union",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            CtOp::Project => 0,
+            CtOp::Subtract => 1,
+            CtOp::Cross => 2,
+            CtOp::Condition => 3,
+            CtOp::Extend => 4,
+            CtOp::Union => 5,
+        }
+    }
+}
+
+/// Möbius Join run metrics.
+#[derive(Debug, Default, Clone)]
+pub struct MjMetrics {
+    /// End-to-end wall time of the run.
+    pub total: Duration,
+    /// Time computing positive-only statistics (entity cts + all-true join
+    /// tables): the paper's "Link Analysis Off" cost.
+    pub positive: Duration,
+    /// Time inside the Pivot function (Algorithm 1).
+    pub pivot: Duration,
+    /// Time building `ct_*` tables in the main loop (Algorithm 2 lines
+    /// 13-19): conditioning shorter-chain tables + cross products.
+    pub main_loop: Duration,
+    counts: [u64; 6],
+    times: [Duration; 6],
+}
+
+impl MjMetrics {
+    /// Record one ct-algebra operation.
+    pub fn record(&mut self, op: CtOp, d: Duration) {
+        self.counts[op.idx()] += 1;
+        self.times[op.idx()] += d;
+    }
+
+    pub fn op_count(&self, op: CtOp) -> u64 {
+        self.counts[op.idx()]
+    }
+
+    pub fn op_time(&self, op: CtOp) -> Duration {
+        self.times[op.idx()]
+    }
+
+    /// Total number of ct-algebra operations (the quantity bounded by
+    /// `O(r log r)` in Proposition 2).
+    pub fn total_ct_ops(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// The paper's "Extra Time": total minus positive-only time.
+    pub fn extra_time(&self) -> Duration {
+        self.total.saturating_sub(self.positive)
+    }
+
+    /// Merge another metrics record into this one (coordinator aggregation).
+    pub fn merge(&mut self, other: &MjMetrics) {
+        self.total += other.total;
+        self.positive += other.positive;
+        self.pivot += other.pivot;
+        self.main_loop += other.main_loop;
+        for i in 0..6 {
+            self.counts[i] += other.counts[i];
+            self.times[i] += other.times[i];
+        }
+    }
+
+    /// Render the Figure-8-style breakdown.
+    pub fn breakdown(&self) -> String {
+        use crate::util::format_duration as fd;
+        let mut s = format!(
+            "total {}  positive {}  pivot {}  main-loop {}  extra {}\n",
+            fd(self.total),
+            fd(self.positive),
+            fd(self.pivot),
+            fd(self.main_loop),
+            fd(self.extra_time()),
+        );
+        for op in ALL_OPS {
+            s.push_str(&format!(
+                "  {:<10} x{:<6} {}\n",
+                op.name(),
+                self.op_count(op),
+                fd(self.op_time(op))
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let mut m = MjMetrics::default();
+        m.record(CtOp::Subtract, Duration::from_millis(5));
+        m.record(CtOp::Subtract, Duration::from_millis(7));
+        m.record(CtOp::Cross, Duration::from_millis(1));
+        assert_eq!(m.op_count(CtOp::Subtract), 2);
+        assert_eq!(m.op_time(CtOp::Subtract), Duration::from_millis(12));
+        assert_eq!(m.total_ct_ops(), 3);
+    }
+
+    #[test]
+    fn extra_time_saturates() {
+        let mut m = MjMetrics::default();
+        m.positive = Duration::from_secs(5);
+        m.total = Duration::from_secs(3); // degenerate, should not panic
+        assert_eq!(m.extra_time(), Duration::ZERO);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = MjMetrics::default();
+        a.record(CtOp::Union, Duration::from_millis(1));
+        let mut b = MjMetrics::default();
+        b.record(CtOp::Union, Duration::from_millis(2));
+        b.total = Duration::from_secs(1);
+        a.merge(&b);
+        assert_eq!(a.op_count(CtOp::Union), 2);
+        assert_eq!(a.total, Duration::from_secs(1));
+    }
+
+    #[test]
+    fn breakdown_mentions_all_ops() {
+        let m = MjMetrics::default();
+        let s = m.breakdown();
+        for op in ALL_OPS {
+            assert!(s.contains(op.name()));
+        }
+    }
+}

@@ -1,0 +1,338 @@
+//! The Möbius Join dynamic program (paper §4.2, Algorithms 1 and 2).
+//!
+//! Starting from positive-relationship statistics (computed by table joins,
+//! `crate::db::JoinCounter`), the algorithm extends them to *negative*
+//! relationships without ever materializing entity cross products, by
+//! applying the ct-algebra identity of Proposition 1:
+//!
+//! ```text
+//! ct(Vars ∪ 1Atts(R) | R = F)
+//!   = ct(Vars | R = *) × ct(X1) × … × ct(Xl)  −  ct(Vars ∪ 1Atts(R) | R = T)
+//! ```
+//!
+//! level-by-level over the relationship-chain lattice.
+
+pub mod engine;
+pub mod metrics;
+pub mod postcount;
+
+pub use engine::{CtEngine, NativeEngine};
+pub use postcount::PostCounter;
+pub use metrics::{CtOp, MjMetrics};
+
+use crate::ct::CtTable;
+use crate::db::{Database, JoinCounter};
+use crate::lattice::{components, Lattice};
+use crate::schema::{FoVarId, RelId, VarId, NA};
+use crate::util::fxhash::FxHashMap;
+use crate::util::Stopwatch;
+use std::time::Instant;
+
+/// Output of a Möbius Join run: one contingency table per relationship
+/// chain, the per-FO-variable entity tables, the joint table for the whole
+/// database, and run metrics.
+#[derive(Debug)]
+pub struct MjResult {
+    pub lattice: Lattice,
+    /// `ct(1Atts(X))` per FO variable.
+    pub entity_cts: FxHashMap<FoVarId, CtTable>,
+    /// Full contingency table per chain (keyed by sorted rel set).
+    pub tables: FxHashMap<Vec<RelId>, CtTable>,
+    /// Joint table over all variables in the database. `None` when the run
+    /// was capped below the full chain length (§8 option).
+    pub joint: Option<CtTable>,
+    pub metrics: MjMetrics,
+    /// Sorted VarIds of all relationship indicator variables.
+    indicator_ids: Vec<VarId>,
+}
+
+impl MjResult {
+    /// The joint contingency table (panics if the run was depth-capped).
+    pub fn joint_ct(&self) -> &CtTable {
+        self.joint.as_ref().expect("joint ct unavailable: run was depth-capped")
+    }
+
+    /// "Link Analysis On" statistic count: rows of the joint table.
+    pub fn num_statistics(&self) -> usize {
+        self.joint_ct().len()
+    }
+
+    /// The "Link Analysis Off" table: the joint table restricted to all
+    /// relationships true (indicator columns retained, all = T).
+    pub fn link_off(&self) -> CtTable {
+        let conds: Vec<(VarId, u16)> = self
+            .indicator_ids
+            .iter()
+            .copied()
+            .filter(|v| self.joint_ct().col_of(*v).is_some())
+            .map(|v| (v, 1u16))
+            .collect();
+        self.joint_ct().select(&conds)
+    }
+
+    /// Number of sufficient statistics that involve at least one negative
+    /// relationship (the paper's "#extra statistics", Table 4, and the `r`
+    /// of Proposition 2).
+    pub fn num_extra_statistics(&self) -> usize {
+        self.num_statistics() - self.link_off().len()
+    }
+}
+
+/// Configuration + entry point for the Möbius Join.
+pub struct MobiusJoin<'a> {
+    db: &'a Database,
+    engine: &'a dyn CtEngine,
+    max_chain_len: Option<usize>,
+}
+
+impl<'a> MobiusJoin<'a> {
+    /// Möbius Join with the native (pure-rust) engine.
+    pub fn new(db: &'a Database) -> Self {
+        MobiusJoin { db, engine: &NativeEngine, max_chain_len: None }
+    }
+
+    /// Möbius Join with a custom execution engine.
+    pub fn with_engine(db: &'a Database, engine: &'a dyn CtEngine) -> Self {
+        MobiusJoin { db, engine, max_chain_len: None }
+    }
+
+    /// Cap the chain length (paper §8: compute the lattice only up to a
+    /// prespecified level).
+    pub fn max_chain_len(mut self, len: usize) -> Self {
+        self.max_chain_len = Some(len);
+        self
+    }
+
+    /// Run Algorithm 2.
+    pub fn run(&self) -> MjResult {
+        let t0 = Instant::now();
+        let schema = &self.db.schema;
+        let lattice = Lattice::build(schema, self.max_chain_len);
+        let jc = JoinCounter::new(self.db);
+        let mut metrics = MjMetrics::default();
+        let mut positive_sw = Stopwatch::new();
+
+        // --- Initialization: entity ct-tables (Algorithm 2 lines 1-3).
+        let mut entity_cts: FxHashMap<FoVarId, CtTable> = FxHashMap::default();
+        positive_sw.start();
+        for fo in 0..schema.fo_vars.len() {
+            entity_cts.insert(fo, self.db.ct_entity(fo));
+        }
+        positive_sw.stop();
+
+        let mut tables: FxHashMap<Vec<RelId>, CtTable> = FxHashMap::default();
+
+        // --- Level 1 (lines 4-8): per relationship variable.
+        for r in 0..schema.num_rel_vars() {
+            let rel = &schema.relationships[r];
+            // ct_* := ct(X) × ct(Y) — both FO variables of the relationship.
+            let mut main_sw = Stopwatch::new();
+            main_sw.start();
+            let tx = Instant::now();
+            let ct_star = self
+                .engine
+                .cross(&entity_cts[&rel.fo_vars[0]], &entity_cts[&rel.fo_vars[1]]);
+            metrics.record(CtOp::Cross, tx.elapsed());
+            main_sw.stop();
+            metrics.main_loop += main_sw.total();
+
+            // ct_T := ct(1Atts(R), 2Atts(R) | R = T) via join (line 6).
+            positive_sw.start();
+            let ct_t = jc.positive_ct(&[r]);
+            positive_sw.stop();
+
+            let full = self.pivot(&ct_t, &ct_star, r, &mut metrics);
+            tables.insert(vec![r], full);
+        }
+
+        // --- Levels 2..m (lines 9-23).
+        for level in 2..=lattice.max_level() {
+            let chains: Vec<Vec<RelId>> = lattice.level(level).cloned().collect();
+            for chain in chains {
+                // line 11: all-true table via join.
+                positive_sw.start();
+                let mut current = jc.positive_ct(&chain);
+                positive_sw.stop();
+                // lines 12-21: pivot each relationship in turn.
+                for i in 0..chain.len() {
+                    let ct_star =
+                        self.ct_star_for(&chain, i, &tables, &entity_cts, &mut metrics);
+                    current = self.pivot(&current, &ct_star, chain[i], &mut metrics);
+                }
+                tables.insert(chain, current);
+            }
+        }
+
+        // --- Joint table for the entire database (line 24), factorizing
+        // over connected components and populations outside all
+        // relationships.
+        let joint = if self.max_chain_len.is_none() || lattice.max_level() == schema.num_rel_vars()
+        {
+            Some(self.build_joint(&tables, &entity_cts, &mut metrics))
+        } else {
+            None
+        };
+
+        metrics.positive = positive_sw.total();
+        metrics.total = t0.elapsed();
+        let mut indicator_ids: Vec<VarId> =
+            (0..schema.num_rel_vars()).map(|r| schema.rel_ind_var(r)).collect();
+        indicator_ids.sort_unstable();
+        MjResult { lattice, entity_cts, tables, joint, metrics, indicator_ids }
+    }
+
+    /// Algorithm 1: the Pivot function. `ct_t` is the conditional table with
+    /// the pivot true (and its 2Atts as columns); `ct_star` is the table
+    /// with the pivot unspecified (no pivot columns). Returns the complete
+    /// table with the pivot indicator and its 2Atts as columns.
+    fn pivot(
+        &self,
+        ct_t: &CtTable,
+        ct_star: &CtTable,
+        pivot_rel: RelId,
+        metrics: &mut MjMetrics,
+    ) -> CtTable {
+        let schema = &self.db.schema;
+        let sw = Instant::now();
+
+        // line 1: ct_F := ct_* − π_Vars ct_T  (Equation 1).
+        let t = Instant::now();
+        let proj_t = self.engine.project(ct_t, &ct_star.vars);
+        metrics.record(CtOp::Project, t.elapsed());
+        let t = Instant::now();
+        let ct_f = self
+            .engine
+            .subtract(ct_star, &proj_t)
+            .unwrap_or_else(|e| panic!("pivot invariant violated for rel {pivot_rel}: {e}"));
+        metrics.record(CtOp::Subtract, t.elapsed());
+
+        // lines 2-3: extend with the pivot indicator and n/a 2Atts.
+        let ind = schema.rel_ind_var(pivot_rel);
+        let two_atts = schema.two_atts_of_rel(pivot_rel);
+        let t = Instant::now();
+        let mut consts_f: Vec<(VarId, u16)> = vec![(ind, 0)];
+        consts_f.extend(two_atts.iter().map(|&v| (v, NA)));
+        let ct_f_plus = ct_f.extend_const(&consts_f);
+        let ct_t_plus = ct_t.extend_const(&[(ind, 1)]);
+        metrics.record(CtOp::Extend, t.elapsed());
+
+        // line 4: union of the two disjoint branches.
+        let t = Instant::now();
+        let out = ct_f_plus.union_disjoint(&ct_t_plus);
+        metrics.record(CtOp::Union, t.elapsed());
+
+        metrics.pivot += sw.elapsed();
+        out
+    }
+
+    /// Build `ct_*` for pivot position `i` of `chain` (Algorithm 2 lines
+    /// 13-19): take the table of `chain − {chain[i]}` (factorized over its
+    /// connected components), condition the later relationships to true,
+    /// and cross in entity tables for FO variables only the pivot touches.
+    fn ct_star_for(
+        &self,
+        chain: &[RelId],
+        i: usize,
+        tables: &FxHashMap<Vec<RelId>, CtTable>,
+        entity_cts: &FxHashMap<FoVarId, CtTable>,
+        metrics: &mut MjMetrics,
+    ) -> CtTable {
+        let schema = &self.db.schema;
+        let sw = Instant::now();
+        let pivot_rel = chain[i];
+        let rest: Vec<RelId> = chain.iter().copied().filter(|&r| r != pivot_rel).collect();
+        debug_assert!(!rest.is_empty());
+        // Later relationships (pivot order is ascending rel id) must be
+        // conditioned to true.
+        let later: Vec<RelId> = chain[i + 1..].to_vec();
+
+        let mut acc: Option<CtTable> = None;
+        for comp in components(schema, &rest) {
+            let table = tables.get(&comp).expect("shorter chain table missing");
+            let conds: Vec<(VarId, u16)> = comp
+                .iter()
+                .copied()
+                .filter(|r| later.contains(r))
+                .map(|r| (schema.rel_ind_var(r), 1))
+                .collect();
+            let part = if conds.is_empty() {
+                table.clone()
+            } else {
+                let t = Instant::now();
+                let c = self.engine.condition(table, &conds);
+                metrics.record(CtOp::Condition, t.elapsed());
+                c
+            };
+            acc = Some(match acc {
+                None => part,
+                Some(a) => {
+                    let t = Instant::now();
+                    let x = self.engine.cross(&a, &part);
+                    metrics.record(CtOp::Cross, t.elapsed());
+                    x
+                }
+            });
+        }
+        let mut acc = acc.expect("rest is non-empty");
+
+        // Cross in ct(X) for FO variables of the pivot not covered by rest
+        // (the `× ct(X1) × … × ct(Xl)` term of Equation 1).
+        let rest_fos = schema.fo_vars_of_rels(&rest);
+        for &fo in &schema.relationships[pivot_rel].fo_vars {
+            if !rest_fos.contains(&fo) {
+                let t = Instant::now();
+                acc = self.engine.cross(&acc, &entity_cts[&fo]);
+                metrics.record(CtOp::Cross, t.elapsed());
+            }
+        }
+        metrics.main_loop += sw.elapsed();
+        acc
+    }
+
+    /// Joint table over the whole database: cross product of the maximal
+    /// connected components' tables, plus entity tables of FO variables
+    /// outside every relationship.
+    fn build_joint(
+        &self,
+        tables: &FxHashMap<Vec<RelId>, CtTable>,
+        entity_cts: &FxHashMap<FoVarId, CtTable>,
+        metrics: &mut MjMetrics,
+    ) -> CtTable {
+        let schema = &self.db.schema;
+        let all: Vec<RelId> = (0..schema.num_rel_vars()).collect();
+        let mut acc: Option<CtTable> = None;
+        let cross_acc = |acc: Option<CtTable>, part: CtTable, m: &mut MjMetrics| match acc {
+            None => Some(part),
+            Some(a) => {
+                let t = Instant::now();
+                let x = self.engine.cross(&a, &part);
+                m.record(CtOp::Cross, t.elapsed());
+                Some(x)
+            }
+        };
+        for comp in components(schema, &all) {
+            let part = tables.get(&comp).expect("component table missing").clone();
+            acc = cross_acc(acc, part, metrics);
+        }
+        // Populations/FO variables untouched by any relationship.
+        let covered = schema.fo_vars_of_rels(&all);
+        for fo in 0..schema.fo_vars.len() {
+            if !covered.contains(&fo) {
+                acc = cross_acc(acc, entity_cts[&fo].clone(), metrics);
+            }
+        }
+        acc.unwrap_or_else(|| CtTable::scalar(1))
+    }
+}
+
+// The indicator-id stash needs to be a real field; declared here to keep the
+// struct definition above focused.
+#[doc(hidden)]
+impl MjResult {
+    pub fn indicator_vars(&self) -> &[VarId] {
+        &self.indicator_ids
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,204 @@
+//! Postcounting (paper §8): rather than precompute one joint contingency
+//! table for *all* variables, compute many small contingency tables for
+//! variable subsets **on demand during learning**, with caching.
+//!
+//! `PostCounter` answers `ct(V)` requests for arbitrary variable subsets by
+//! running the Möbius Join machinery only over the relationships a request
+//! actually touches: it projects the (cached) chain tables of the minimal
+//! relationship set covering `V`, crossing in entity tables for FO
+//! variables outside every requested relationship. This is the
+//! "alternative" the conclusion proposes for schemas where the full joint
+//! table grows too large.
+
+use super::{MjResult, MobiusJoin};
+use crate::ct::CtTable;
+use crate::db::Database;
+use crate::lattice::components;
+use crate::schema::{RandomVar, VarId};
+use crate::util::fxhash::FxHashMap;
+use std::cell::RefCell;
+
+/// On-demand sufficient-statistics service over a database.
+pub struct PostCounter<'a> {
+    db: &'a Database,
+    /// Full lattice tables (reused across requests; the §8 trade-off is
+    /// depth-capping this precomputation).
+    mj: MjResult,
+    cache: RefCell<FxHashMap<Vec<VarId>, CtTable>>,
+    hits: RefCell<usize>,
+    misses: RefCell<usize>,
+}
+
+impl<'a> PostCounter<'a> {
+    /// Build the service. `max_chain_len` caps the precomputed lattice
+    /// depth (None = all levels); requests touching longer chains fail.
+    pub fn new(db: &'a Database, max_chain_len: Option<usize>) -> Self {
+        let mut mj = MobiusJoin::new(db);
+        if let Some(l) = max_chain_len {
+            mj = mj.max_chain_len(l);
+        }
+        PostCounter {
+            db,
+            mj: mj.run(),
+            cache: RefCell::new(FxHashMap::default()),
+            hits: RefCell::new(0),
+            misses: RefCell::new(0),
+        }
+    }
+
+    /// The contingency table for an arbitrary variable subset.
+    /// Returns None if a required chain exceeds the precomputed depth.
+    pub fn ct(&self, vars: &[VarId]) -> Option<CtTable> {
+        let mut key: Vec<VarId> = vars.to_vec();
+        key.sort_unstable();
+        key.dedup();
+        if let Some(hit) = self.cache.borrow().get(&key) {
+            *self.hits.borrow_mut() += 1;
+            return Some(hit.clone());
+        }
+        *self.misses.borrow_mut() += 1;
+        let schema = &self.db.schema;
+
+        // Relationships touched by the request: each requested var's own
+        // relationship, plus — for entity attributes — every relationship
+        // whose FO variables include the attribute's FO var (its value
+        // distribution is relationship-dependent in the joint space).
+        let mut rels: Vec<usize> = key
+            .iter()
+            .filter_map(|&v| schema.random_vars[v].rel())
+            .collect();
+        let fo_of_entity_vars: Vec<usize> = key
+            .iter()
+            .filter_map(|&v| match schema.random_vars[v] {
+                RandomVar::EntityAttr { fo, .. } => Some(fo),
+                _ => None,
+            })
+            .collect();
+        for r in 0..schema.num_rel_vars() {
+            if schema.relationships[r].fo_vars.iter().any(|f| fo_of_entity_vars.contains(f)) {
+                rels.push(r);
+            }
+        }
+        rels.sort_unstable();
+        rels.dedup();
+
+        // Assemble from chain-component tables (cross product), then cross
+        // in untouched FO variables' entity tables, then project.
+        let mut acc: Option<CtTable> = None;
+        let mut covered_fos: Vec<usize> = Vec::new();
+        if !rels.is_empty() {
+            for comp in components(schema, &rels) {
+                let table = self.mj.tables.get(&comp)?; // depth-capped miss
+                acc = Some(match acc {
+                    None => table.clone(),
+                    Some(a) => a.cross(table),
+                });
+            }
+            covered_fos = schema.fo_vars_of_rels(&rels);
+        }
+        for fo in fo_of_entity_vars {
+            if !covered_fos.contains(&fo) {
+                covered_fos.push(fo);
+                let e = self.mj.entity_cts[&fo].clone();
+                acc = Some(match acc {
+                    None => e,
+                    Some(a) => a.cross(&e),
+                });
+            }
+        }
+        let big = acc?;
+        let out = big.project(&key);
+        self.cache.borrow_mut().insert(key, out.clone());
+        Some(out)
+    }
+
+    /// (cache hits, misses) — for the §8 trade-off analysis.
+    pub fn cache_stats(&self) -> (usize, usize) {
+        (*self.hits.borrow(), *self.misses.borrow())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::university_db;
+
+    #[test]
+    fn on_demand_matches_joint_projection() {
+        let db = university_db();
+        let pc = PostCounter::new(&db, None);
+        let joint = MobiusJoin::new(&db).run();
+        let joint = joint.joint_ct();
+        let s = &db.schema;
+        let queries: Vec<Vec<VarId>> = vec![
+            vec![s.var_by_name("intelligence(S)").unwrap()],
+            vec![
+                s.var_by_name("intelligence(S)").unwrap(),
+                s.var_by_name("RA(P,S)").unwrap(),
+            ],
+            vec![
+                s.var_by_name("grade(S,C)").unwrap(),
+                s.var_by_name("capability(P,S)").unwrap(),
+            ],
+            vec![
+                s.var_by_name("popularity(P)").unwrap(),
+                s.var_by_name("Registration(S,C)").unwrap(),
+                s.var_by_name("ranking(S)").unwrap(),
+            ],
+        ];
+        for q in queries {
+            let got = pc.ct(&q).unwrap();
+            let want = joint.project(&q);
+            assert_eq!(got, want, "query {q:?}");
+        }
+    }
+
+    #[test]
+    fn entity_only_query_under_depth_cap() {
+        let db = university_db();
+        let pc = PostCounter::new(&db, Some(1));
+        let s = &db.schema;
+        // S participates in BOTH relationships, so even a single-attribute
+        // query on S needs the length-2 chain: depth-capped -> None.
+        let intel = s.var_by_name("intelligence(S)").unwrap();
+        assert!(pc.ct(&[intel]).is_none());
+        // C participates only in Registration: answerable at depth 1.
+        let diff = s.var_by_name("difficulty(C)").unwrap();
+        let got = pc.ct(&[diff]).unwrap();
+        // Counts live in the covered FO-variable space (S x C here), so the
+        // total is |S| x |C| and the distribution matches the uncapped joint
+        // projection up to the |P| factor of the uncovered population.
+        assert_eq!(got.total(), 9);
+        let full = MobiusJoin::new(&db).run();
+        let joint_proj = full.joint_ct().project(&[diff]);
+        for (row, c) in got.iter() {
+            assert_eq!(3 * c, joint_proj.count_of(row), "row {row:?}");
+        }
+    }
+
+    #[test]
+    fn depth_cap_miss_returns_none() {
+        let db = university_db();
+        let pc = PostCounter::new(&db, Some(1));
+        let s = &db.schema;
+        // Query touching both relationships needs the length-2 chain.
+        let q = vec![
+            s.var_by_name("Registration(S,C)").unwrap(),
+            s.var_by_name("RA(P,S)").unwrap(),
+        ];
+        assert!(pc.ct(&q).is_none());
+    }
+
+    #[test]
+    fn cache_hits_on_repeat() {
+        let db = university_db();
+        let pc = PostCounter::new(&db, None);
+        let s = &db.schema;
+        let q = vec![s.var_by_name("intelligence(S)").unwrap()];
+        pc.ct(&q).unwrap();
+        pc.ct(&q).unwrap();
+        let (hits, misses) = pc.cache_stats();
+        assert_eq!(hits, 1);
+        assert_eq!(misses, 1);
+    }
+}

@@ -1,0 +1,305 @@
+//! Möbius Join correctness: hand-checked fixtures plus the central property
+//! test — the MJ joint table must equal the brute-force cross-product table
+//! exactly, on every schema shape (chains, triangles, self-relationships,
+//! disconnected components, empty relationships).
+
+use super::*;
+use crate::baseline::{cross_product_ct, CpBudget};
+use crate::db::{university_db, Database, DatabaseBuilder};
+use crate::schema::SchemaBuilder;
+use crate::util::proptest::run_prop;
+use crate::util::Pcg64;
+use std::sync::Arc;
+
+#[test]
+fn university_joint_total_is_population_product() {
+    let db = university_db();
+    let res = MobiusJoin::new(&db).run();
+    assert_eq!(res.joint_ct().total(), 27);
+    res.joint_ct().check_invariants().unwrap();
+}
+
+#[test]
+fn university_joint_matches_cross_product() {
+    let db = university_db();
+    let res = MobiusJoin::new(&db).run();
+    let cp = cross_product_ct(&db, CpBudget::default());
+    assert_eq!(res.joint_ct(), cp.ct().unwrap());
+}
+
+#[test]
+fn university_link_off_matches_positive_join() {
+    let db = university_db();
+    let res = MobiusJoin::new(&db).run();
+    let off = res.link_off();
+    assert_eq!(off.total(), 5); // join size of Reg x RA on S
+    assert_eq!(res.num_statistics(), off.len() + res.num_extra_statistics());
+}
+
+#[test]
+fn single_rel_table_conserves_counts() {
+    let db = university_db();
+    let res = MobiusJoin::new(&db).run();
+    // ct for {RA}: total = |P| x |S| = 9; {Reg}: |S| x |C| = 9.
+    assert_eq!(res.tables[&vec![1usize]].total(), 9);
+    assert_eq!(res.tables[&vec![0usize]].total(), 9);
+}
+
+#[test]
+fn paper_figure5_ra_false_counts() {
+    // Figure 5: ct_F for RA(P,S) = F has total 9 - 4 = 5.
+    let db = university_db();
+    let res = MobiusJoin::new(&db).run();
+    let s = &db.schema;
+    let ra = s.rel_ind_var(1);
+    let f_part = res.tables[&vec![1usize]].select(&[(ra, 0)]);
+    assert_eq!(f_part.total(), 5);
+    // All F rows must have n/a 2Atts.
+    let cap = s.var_by_name("capability(P,S)").unwrap();
+    let col = f_part.col_of(cap).unwrap();
+    for (row, _) in f_part.iter() {
+        assert_eq!(row[col], crate::schema::NA);
+    }
+}
+
+#[test]
+fn depth_capped_run_has_no_joint() {
+    let db = university_db();
+    let res = MobiusJoin::new(&db).max_chain_len(1).run();
+    assert!(res.joint.is_none());
+    assert_eq!(res.tables.len(), 2); // two singleton chains only
+}
+
+#[test]
+fn metrics_populated() {
+    let db = university_db();
+    let res = MobiusJoin::new(&db).run();
+    let m = &res.metrics;
+    assert!(m.total_ct_ops() > 0);
+    assert!(m.op_count(CtOp::Subtract) >= 2); // one per pivot at least
+    assert!(m.total >= m.positive);
+    // 2 pivots at level 1 + 2 pivots at level 2 = 4 unions.
+    assert_eq!(m.op_count(CtOp::Union), 4);
+}
+
+#[test]
+fn proposition2_op_bound_holds() {
+    // #ct_ops = O(r log2 r) with r = #negative statistics; check the
+    // concrete inequality with a generous constant on the fixture.
+    let db = university_db();
+    let res = MobiusJoin::new(&db).run();
+    let r = res.num_extra_statistics() as f64;
+    let ops = res.metrics.total_ct_ops() as f64;
+    assert!(r > 0.0);
+    assert!(ops <= 6.0 * r * r.log2().max(1.0) + 60.0, "ops={ops} r={r}");
+}
+
+// ---------- randomized schema shapes vs brute force ----------
+
+/// Build a random database over a given schema: random entity counts,
+/// random attribute codes, Bernoulli relationship tuples.
+fn random_db(schema: Arc<crate::schema::Schema>, rng: &mut Pcg64, density: f64) -> Database {
+    let mut b = DatabaseBuilder::new(schema.clone());
+    for (pid, p) in schema.populations.iter().enumerate() {
+        let n = rng.index(4) + 2; // 2..=5 entities
+        for _ in 0..n {
+            let codes: Vec<u16> = p
+                .attrs
+                .iter()
+                .map(|&a| rng.below(schema.attributes[a].arity() as u64) as u16)
+                .collect();
+            b.add_entity(pid, &codes);
+        }
+    }
+    for (rid, r) in schema.relationships.iter().enumerate() {
+        let n1 = b.entity_count(r.pops[0]);
+        let n2 = b.entity_count(r.pops[1]);
+        for a in 0..n1 {
+            for bb in 0..n2 {
+                if rng.chance(density) {
+                    let codes: Vec<u16> = r
+                        .attrs
+                        .iter()
+                        .map(|&at| rng.below(schema.attributes[at].arity() as u64) as u16)
+                        .collect();
+                    b.add_rel(rid, a, bb, &codes);
+                }
+            }
+        }
+    }
+    b.finish()
+}
+
+fn uni_schema() -> Arc<crate::schema::Schema> {
+    Arc::new(crate::schema::university_schema())
+}
+
+fn triangle_schema() -> Arc<crate::schema::Schema> {
+    // Figure 4: three pairwise-connected relationships.
+    let mut b = SchemaBuilder::new("triangle");
+    let s = b.population("Student");
+    b.attr(s, "iq", &["1", "2"]);
+    let c = b.population("Course");
+    b.attr(c, "rating", &["1", "2"]);
+    let p = b.population("Prof");
+    b.attr(p, "pop", &["1", "2"]);
+    let reg = b.relationship("Reg", s, c);
+    b.rel_attr(reg, "grade", &["1", "2"]);
+    b.relationship("RA", p, s);
+    let t = b.relationship("Teaches", p, c);
+    b.rel_attr(t, "eval", &["1", "2"]);
+    Arc::new(b.finish())
+}
+
+fn selfrel_schema() -> Arc<crate::schema::Schema> {
+    // Mondial shape: Borders(C,C) self-rel + HasReligion(C,R).
+    let mut b = SchemaBuilder::new("selfrel");
+    let c = b.population("Country");
+    b.attr(c, "size", &["s", "m", "l"]);
+    let r = b.population("Religion");
+    b.attr(r, "age", &["old", "new"]);
+    b.relationship("Borders", c, c);
+    let hr = b.relationship("HasRel", c, r);
+    b.rel_attr(hr, "pct", &["lo", "hi"]);
+    Arc::new(b.finish())
+}
+
+fn disconnected_schema() -> Arc<crate::schema::Schema> {
+    // UW-CSE shape: two self-relationships over disjoint populations.
+    let mut b = SchemaBuilder::new("uw");
+    let p = b.population("Person");
+    b.attr(p, "position", &["fac", "stu"]);
+    let c = b.population("Course");
+    b.attr(c, "level", &["ug", "gr"]);
+    b.relationship("AdvisedBy", p, p);
+    b.relationship("Prereq", c, c);
+    Arc::new(b.finish())
+}
+
+fn check_mj_equals_cp(db: &Database) -> Result<(), String> {
+    let res = MobiusJoin::new(db).run();
+    let cp = cross_product_ct(db, CpBudget::default());
+    let cp_ct = cp.ct().ok_or("cp did not terminate")?;
+    let joint = res.joint_ct();
+    joint.check_invariants()?;
+    if joint != cp_ct {
+        return Err(format!(
+            "MJ joint ({} rows, total {}) != CP ({} rows, total {})",
+            joint.len(),
+            joint.total(),
+            cp_ct.len(),
+            cp_ct.total()
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_mj_equals_cp_university() {
+    run_prop(
+        "mj_eq_cp_university",
+        25,
+        0xA11CE,
+        |rng| {
+            let d = rng.f64() * 0.6;
+            random_db(uni_schema(), rng, d)
+        },
+        |db| check_mj_equals_cp(db),
+    );
+}
+
+#[test]
+fn prop_mj_equals_cp_triangle() {
+    run_prop(
+        "mj_eq_cp_triangle",
+        20,
+        0xB0B,
+        |rng| {
+            let d = rng.f64() * 0.5;
+            random_db(triangle_schema(), rng, d)
+        },
+        |db| check_mj_equals_cp(db),
+    );
+}
+
+#[test]
+fn prop_mj_equals_cp_selfrel() {
+    run_prop(
+        "mj_eq_cp_selfrel",
+        20,
+        0xCAFE,
+        |rng| {
+            let d = rng.f64() * 0.5;
+            random_db(selfrel_schema(), rng, d)
+        },
+        |db| check_mj_equals_cp(db),
+    );
+}
+
+#[test]
+fn prop_mj_equals_cp_disconnected() {
+    run_prop(
+        "mj_eq_cp_disconnected",
+        20,
+        0xD15C,
+        |rng| {
+            let d = rng.f64() * 0.5;
+            random_db(disconnected_schema(), rng, d)
+        },
+        |db| check_mj_equals_cp(db),
+    );
+}
+
+#[test]
+fn empty_relationship_still_correct() {
+    // One relationship has zero tuples: every row must have its indicator F.
+    let mut rng = Pcg64::seeded(99);
+    let schema = triangle_schema();
+    let mut db = random_db(schema.clone(), &mut rng, 0.4);
+    // Rebuild with rel 2 emptied.
+    let mut b = DatabaseBuilder::new(schema.clone());
+    for (pid, _) in schema.populations.iter().enumerate() {
+        for e in 0..db.entity_counts[pid] {
+            let codes: Vec<u16> = (0..schema.populations[pid].attrs.len())
+                .map(|k| db.entity_attr(pid, k, e))
+                .collect();
+            b.add_entity(pid, &codes);
+        }
+    }
+    for rid in 0..2 {
+        let pairs = db.rels[rid].pairs.clone();
+        for (t, &[x, y]) in pairs.iter().enumerate() {
+            let codes: Vec<u16> =
+                db.rels[rid].attrs.iter().map(|col| col[t]).collect();
+            b.add_rel(rid, x, y, &codes);
+        }
+    }
+    db = b.finish();
+    assert!(db.rels[2].is_empty());
+    check_mj_equals_cp(&db).unwrap();
+    let res = MobiusJoin::new(&db).run();
+    let ind2 = db.schema.rel_ind_var(2);
+    let joint = res.joint_ct();
+    let col = joint.col_of(ind2).unwrap();
+    for (row, _) in joint.iter() {
+        assert_eq!(row[col], 0, "empty relationship must be F everywhere");
+    }
+}
+
+#[test]
+fn pivot_conserves_totals_per_level() {
+    // For every chain table: total == product of population sizes of its
+    // FO variables (each instantiation counted exactly once).
+    let mut rng = Pcg64::seeded(123);
+    let db = random_db(triangle_schema(), &mut rng, 0.3);
+    let res = MobiusJoin::new(&db).run();
+    for (chain, table) in &res.tables {
+        let expect: u128 = db
+            .schema
+            .fo_vars_of_rels(chain)
+            .iter()
+            .map(|&f| db.entity_counts[db.schema.fo_vars[f].pop] as u128)
+            .product();
+        assert_eq!(table.total(), expect, "chain {chain:?}");
+    }
+}

@@ -1,0 +1,177 @@
+//! [`CtEngine`] implementation backed by the XLA runtime: the bulk
+//! arithmetic of projection (segment sum) and subtraction (fused pivot)
+//! runs in the AOT-compiled kernels, while row bookkeeping (grouping,
+//! alignment) stays in rust. Falls back to the native implementation when
+//! an input exceeds the artifact bucket ladder.
+//!
+//! Results are bit-identical to [`NativeEngine`] (integer counts in f64 are
+//! exact); `rust/tests/xla_vs_native.rs` asserts this end-to-end.
+
+use super::XlaRuntime;
+use crate::ct::{CtTable, SubtractError};
+use crate::mobius::CtEngine;
+use crate::schema::VarId;
+use crate::util::fxhash::FxHashMap;
+
+/// Execution engine that offloads bulk count arithmetic to XLA.
+pub struct XlaEngine<'rt> {
+    rt: &'rt XlaRuntime,
+}
+
+impl<'rt> XlaEngine<'rt> {
+    pub fn new(rt: &'rt XlaRuntime) -> Self {
+        XlaEngine { rt }
+    }
+}
+
+impl CtEngine for XlaEngine<'_> {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    /// π projection: rust computes the dense group index per row, XLA sums
+    /// counts per group (`segsum` kernel).
+    fn project(&self, ct: &CtTable, keep: &[VarId]) -> CtTable {
+        let mut keep_sorted: Vec<VarId> = keep.to_vec();
+        keep_sorted.sort_unstable();
+        keep_sorted.dedup();
+        let cols: Vec<usize> = keep_sorted
+            .iter()
+            .map(|&v| ct.col_of(v).expect("project: unknown var"))
+            .collect();
+        if cols.len() == ct.width() || ct.is_empty() {
+            return ct.project(keep);
+        }
+        // Group assignment (row bookkeeping stays on the coordinator).
+        let mut gid_of: FxHashMap<Vec<u16>, u32> = FxHashMap::default();
+        let mut keys: Vec<u16> = Vec::new();
+        let mut ids: Vec<u32> = Vec::with_capacity(ct.len());
+        let nw = cols.len();
+        let mut buf = vec![0u16; nw];
+        for i in 0..ct.len() {
+            let r = ct.row(i);
+            for (slot, &c) in cols.iter().enumerate() {
+                buf[slot] = r[c];
+            }
+            let id = match gid_of.get(buf.as_slice()) {
+                Some(&g) => g,
+                None => {
+                    let g = gid_of.len() as u32;
+                    gid_of.insert(buf.clone(), g);
+                    keys.extend_from_slice(&buf);
+                    g
+                }
+            };
+            ids.push(id);
+        }
+        let counts: Vec<f64> = ct.counts.iter().map(|&c| c as f64).collect();
+        match self.rt.segsum(&ids, &counts, gid_of.len()) {
+            Ok(sums) => {
+                let counts_u: Vec<u64> = sums.iter().map(|&s| s as u64).collect();
+                CtTable::from_raw(keep_sorted, keys, counts_u)
+            }
+            Err(_) => ct.project(keep), // exceeds ladder: native fallback
+        }
+    }
+
+    /// − subtraction via the fused pivot kernel: rust aligns the rows
+    /// (merge pass over the sorted inputs), XLA computes
+    /// `max(star - t, 0)` in bulk.
+    fn subtract(&self, a: &CtTable, b: &CtTable) -> Result<CtTable, SubtractError> {
+        if a.vars != b.vars {
+            return Err(SubtractError::VarMismatch);
+        }
+        if a.width() == 0 || a.is_empty() || b.is_empty() {
+            return a.subtract(b);
+        }
+        // Alignment: b's rows must be a subset of a's.
+        let mut t_aligned = vec![0.0f64; a.len()];
+        let (mut i, mut j) = (0usize, 0usize);
+        while j < b.len() {
+            if i >= a.len() {
+                return Err(SubtractError::MissingRow(b.row(j).to_vec()));
+            }
+            match a.row(i).cmp(b.row(j)) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => {
+                    return Err(SubtractError::MissingRow(b.row(j).to_vec()));
+                }
+                std::cmp::Ordering::Equal => {
+                    if b.counts[j] > a.counts[i] {
+                        return Err(SubtractError::CountUnderflow {
+                            row: a.row(i).to_vec(),
+                            have: a.counts[i],
+                            sub: b.counts[j],
+                        });
+                    }
+                    t_aligned[i] = b.counts[j] as f64;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        let star: Vec<f64> = a.counts.iter().map(|&c| c as f64).collect();
+        let diff = match self.rt.pivot(&star, &t_aligned, 1.0) {
+            Ok(d) => d,
+            Err(_) => return a.subtract(b), // exceeds ladder: native fallback
+        };
+        // Rebuild, dropping zero rows.
+        let _w = a.width();
+        let mut rows = Vec::with_capacity(a.rows.len());
+        let mut counts = Vec::with_capacity(a.len());
+        for (idx, &d) in diff.iter().enumerate() {
+            if d > 0.0 {
+                rows.extend_from_slice(a.row(idx));
+                counts.push(d as u64);
+            }
+        }
+        Ok(CtTable { vars: a.vars.clone(), rows, counts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mobius::NativeEngine;
+
+    fn runtime() -> Option<XlaRuntime> {
+        XlaRuntime::load_default().ok()
+    }
+
+    #[test]
+    fn project_bit_identical_to_native() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping (no artifacts)");
+            return;
+        };
+        let e = XlaEngine::new(&rt);
+        let n = NativeEngine;
+        let ct = CtTable::from_raw(
+            vec![1, 3, 5],
+            vec![
+                0, 0, 1, 0, 1, 0, 1, 0, 1, 1, 1, 0, 0, 0, 0, 2, 1, 1,
+            ],
+            vec![5, 7, 11, 13, 17, 19],
+        );
+        for keep in [vec![1], vec![3, 5], vec![1, 5], vec![1, 3, 5]] {
+            assert_eq!(e.project(&ct, &keep), n.project(&ct, &keep), "keep={keep:?}");
+        }
+    }
+
+    #[test]
+    fn subtract_bit_identical_to_native() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping (no artifacts)");
+            return;
+        };
+        let e = XlaEngine::new(&rt);
+        let a = CtTable::from_raw(vec![0, 2], vec![0, 0, 0, 1, 1, 0], vec![10, 20, 30]);
+        let b = CtTable::from_raw(vec![0, 2], vec![0, 1, 1, 0], vec![20, 5]);
+        let native = a.subtract(&b).unwrap();
+        let xla = e.subtract(&a, &b).unwrap();
+        assert_eq!(native, xla);
+        // Errors propagate identically.
+        let bad = CtTable::from_raw(vec![0, 2], vec![1, 1], vec![1]);
+        assert!(e.subtract(&a, &bad).is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! Fluent construction of schemas, including the FO-variable instantiation
+//! policy and the canonical random-variable registry.
+
+use super::{
+    AttrId, Attribute, FoVar, FoVarId, PopId, Population, RandomVar, RelId, RelationshipType,
+    Schema,
+};
+
+/// Builder for [`Schema`]. Populations and attributes are declared first,
+/// then relationships; `finish()` freezes the random-variable registry.
+///
+/// FO-variable policy (matches the paper's benchmark setup, cf. Table 1):
+/// each population gets one canonical FO variable on first use; a
+/// self-relationship upgrades the population to two FO variables (`X1`,
+/// `X2`) and uses both, while non-self relationships always bind the first.
+#[derive(Debug)]
+pub struct SchemaBuilder {
+    name: String,
+    populations: Vec<Population>,
+    attributes: Vec<Attribute>,
+    relationships: Vec<RelationshipType>,
+    fo_vars: Vec<FoVar>,
+    rel_attr_owner: Vec<Vec<AttrId>>, // parallel to relationships
+}
+
+impl SchemaBuilder {
+    pub fn new(name: &str) -> Self {
+        SchemaBuilder {
+            name: name.to_string(),
+            populations: Vec::new(),
+            attributes: Vec::new(),
+            relationships: Vec::new(),
+            fo_vars: Vec::new(),
+            rel_attr_owner: Vec::new(),
+        }
+    }
+
+    /// Declare an entity type.
+    pub fn population(&mut self, name: &str) -> PopId {
+        self.populations.push(Population {
+            name: name.to_string(),
+            attrs: Vec::new(),
+            fo_vars: Vec::new(),
+        });
+        self.populations.len() - 1
+    }
+
+    /// Declare a descriptive attribute on an entity type.
+    pub fn attr(&mut self, pop: PopId, name: &str, values: &[&str]) -> AttrId {
+        assert!(values.len() >= 2, "attribute {name} needs >= 2 values");
+        let id = self.push_attr(name, values);
+        self.populations[pop].attrs.push(id);
+        id
+    }
+
+    /// Declare a binary relationship between two entity types.
+    pub fn relationship(&mut self, name: &str, p1: PopId, p2: PopId) -> RelId {
+        let fo1 = self.fo_var_for(p1, 0);
+        let fo2 = if p1 == p2 { self.fo_var_for(p2, 1) } else { self.fo_var_for(p2, 0) };
+        self.relationships.push(RelationshipType {
+            name: name.to_string(),
+            pops: [p1, p2],
+            attrs: Vec::new(),
+            fo_vars: [fo1, fo2],
+        });
+        self.rel_attr_owner.push(Vec::new());
+        self.relationships.len() - 1
+    }
+
+    /// Declare a descriptive attribute on a relationship.
+    pub fn rel_attr(&mut self, rel: RelId, name: &str, values: &[&str]) -> AttrId {
+        assert!(values.len() >= 2, "attribute {name} needs >= 2 values");
+        let id = self.push_attr(name, values);
+        self.relationships[rel].attrs.push(id);
+        self.rel_attr_owner[rel].push(id);
+        id
+    }
+
+    fn push_attr(&mut self, name: &str, values: &[&str]) -> AttrId {
+        self.attributes.push(Attribute {
+            name: name.to_string(),
+            values: values.iter().map(|s| s.to_string()).collect(),
+        });
+        self.attributes.len() - 1
+    }
+
+    /// Get or create the `idx`-th FO variable of a population (idx 0 or 1).
+    fn fo_var_for(&mut self, pop: PopId, idx: usize) -> FoVarId {
+        assert!(idx < 2);
+        while self.populations[pop].fo_vars.len() <= idx {
+            let n = self.populations[pop].fo_vars.len();
+            let base = short_var_name(&self.populations[pop].name);
+            // A second variable forces numbering on both ("C1", "C2").
+            let name = if idx == 0 && n == 0 { base.clone() } else { format!("{base}{}", n + 1) };
+            self.fo_vars.push(FoVar { name, pop });
+            let id = self.fo_vars.len() - 1;
+            self.populations[pop].fo_vars.push(id);
+        }
+        // When the second variable is created lazily, rename the first for
+        // display consistency ("C" -> "C1").
+        if idx == 1 {
+            let first = self.populations[pop].fo_vars[0];
+            let base = short_var_name(&self.populations[pop].name);
+            self.fo_vars[first].name = format!("{base}1");
+        }
+        self.populations[pop].fo_vars[idx]
+    }
+
+    /// Freeze the schema: build the canonical random-variable registry.
+    /// Order: all entity-attribute variables (by FO var, then attribute),
+    /// then per relationship its indicator followed by its 2Atts.
+    pub fn finish(mut self) -> Schema {
+        // Populations outside every relationship still get one FO variable:
+        // their 1Atts join the statistical space via cross product (e.g.
+        // UW-CSE's isolated Course table).
+        for pop in 0..self.populations.len() {
+            if self.populations[pop].fo_vars.is_empty() {
+                self.fo_var_for(pop, 0);
+            }
+        }
+        self.finish_inner()
+    }
+
+    fn finish_inner(self) -> Schema {
+        let mut random_vars = Vec::new();
+        for (fo_id, fo) in self.fo_vars.iter().enumerate() {
+            for &attr in &self.populations[fo.pop].attrs {
+                random_vars.push(RandomVar::EntityAttr { fo: fo_id, attr });
+            }
+        }
+        for (rel_id, rel) in self.relationships.iter().enumerate() {
+            random_vars.push(RandomVar::RelInd { rel: rel_id });
+            for &attr in &rel.attrs {
+                random_vars.push(RandomVar::RelAttr { rel: rel_id, attr });
+            }
+        }
+        Schema {
+            name: self.name,
+            populations: self.populations,
+            attributes: self.attributes,
+            relationships: self.relationships,
+            fo_vars: self.fo_vars,
+            random_vars,
+        }
+    }
+}
+
+/// Short FO-variable name from a population name: first letter, uppercased
+/// (e.g. "Student" -> "S"); falls back to the full name on collision.
+fn short_var_name(pop_name: &str) -> String {
+    pop_name.chars().take(1).collect::<String>().to_uppercase()
+}
+
+/// The paper's running example (Figures 1-2): Student, Course, Professor;
+/// Registration(S,C) with grade/satisfaction; RA(P,S) with capability/salary.
+pub fn university_schema() -> Schema {
+    let mut b = SchemaBuilder::new("university");
+    let s = b.population("Student");
+    b.attr(s, "intelligence", &["1", "2", "3"]);
+    b.attr(s, "ranking", &["1", "2"]);
+    let c = b.population("Course");
+    b.attr(c, "rating", &["1", "2", "3"]);
+    b.attr(c, "difficulty", &["1", "2"]);
+    let p = b.population("Professor");
+    b.attr(p, "popularity", &["1", "2", "3"]);
+    b.attr(p, "teachingability", &["1", "2"]);
+    let reg = b.relationship("Registration", s, c);
+    b.rel_attr(reg, "grade", &["1", "2", "3"]);
+    b.rel_attr(reg, "satisfaction", &["1", "2"]);
+    let ra = b.relationship("RA", p, s);
+    b.rel_attr(ra, "capability", &["1", "2", "3"]);
+    b.rel_attr(ra, "salary", &["Low", "Med", "High"]);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schema::VarKind;
+
+    #[test]
+    fn registry_order_is_stable() {
+        let s = university_schema();
+        // Entity-attr vars come first, then rel blocks in declaration order.
+        let kinds: Vec<VarKind> = s.random_vars.iter().map(|v| v.kind()).collect();
+        let first_rel = kinds.iter().position(|k| *k != VarKind::EntityAttr).unwrap();
+        assert!(kinds[..first_rel].iter().all(|k| *k == VarKind::EntityAttr));
+        assert_eq!(kinds[first_rel], VarKind::RelInd);
+    }
+
+    #[test]
+    fn fo_var_naming_non_self() {
+        let s = university_schema();
+        let names: Vec<&str> = s.fo_vars.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["S", "C", "P"]);
+    }
+
+    #[test]
+    fn fo_var_naming_self_rel() {
+        let mut b = SchemaBuilder::new("toy");
+        let c = b.population("Country");
+        b.attr(c, "size", &["s", "b"]);
+        b.relationship("Borders", c, c);
+        let s = b.finish();
+        let names: Vec<&str> = s.fo_vars.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["C1", "C2"]);
+    }
+
+    #[test]
+    fn mixed_self_and_normal_share_first_var() {
+        let mut b = SchemaBuilder::new("uwcse");
+        let person = b.population("Person");
+        b.attr(person, "pos", &["fac", "stu"]);
+        let course = b.population("Course");
+        b.attr(course, "level", &["ug", "grad"]);
+        let adv = b.relationship("AdvisedBy", person, person);
+        let taught = b.relationship("TaughtBy", course, person);
+        let s = b.finish();
+        // AdvisedBy uses (P1, P2); TaughtBy binds P1.
+        assert_eq!(s.relationships[adv].fo_vars[0], s.relationships[taught].fo_vars[1]);
+        assert_ne!(s.relationships[adv].fo_vars[0], s.relationships[adv].fo_vars[1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs >= 2 values")]
+    fn attr_arity_checked() {
+        let mut b = SchemaBuilder::new("bad");
+        let p = b.population("P");
+        b.attr(p, "x", &["only"]);
+    }
+}

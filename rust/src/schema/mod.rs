@@ -1,0 +1,348 @@
+//! Relational schema and the functor/random-variable view of it.
+//!
+//! Mirrors Section 2 of the paper: a schema derived from an ER model has
+//! *entity tables* (populations with descriptive attributes) and *binary
+//! relationship tables* (with their own descriptive attributes). The
+//! statistical view instantiates each population with first-order (FO)
+//! variables and each relationship with a relationship variable; descriptive
+//! attributes become attribute random variables:
+//!
+//! * `1Atts` — entity attribute variables, e.g. `intelligence(S)`;
+//! * `2Atts` — relationship attribute variables, e.g. `capability(P,S)`;
+//! * relationship indicator variables, e.g. `RA(P,S) ∈ {F,T}`.
+//!
+//! Self-relationships (e.g. `Borders(Country,Country)`) instantiate two FO
+//! variables over the same population, which duplicates that population's
+//! 1Atts in the statistical view — exactly as in the paper's Mondial/UW-CSE
+//! benchmarks.
+
+pub mod builder;
+mod vars;
+
+pub use builder::{university_schema, SchemaBuilder};
+pub use vars::{RandomVar, VarId, VarKind};
+
+/// Index types into the schema registries.
+pub type PopId = usize;
+pub type AttrId = usize;
+pub type RelId = usize;
+pub type FoVarId = usize;
+
+/// Value code reserved for "n/a" on relationship attributes: the value of a
+/// 2Att is undefined when the relationship does not hold (paper §2.2). The
+/// code equals the attribute's arity, so codes are `0..arity` for real
+/// values and `arity` for n/a.
+pub const NA: u16 = u16::MAX;
+
+/// A descriptive attribute with a finite categorical domain.
+#[derive(Debug, Clone)]
+pub struct Attribute {
+    pub name: String,
+    pub values: Vec<String>,
+}
+
+impl Attribute {
+    /// Number of real (non-n/a) values.
+    pub fn arity(&self) -> usize {
+        self.values.len()
+    }
+}
+
+/// An entity type ("population") with its descriptive attributes.
+#[derive(Debug, Clone)]
+pub struct Population {
+    pub name: String,
+    pub attrs: Vec<AttrId>,
+    /// FO variables instantiated over this population (1, or 2 when the
+    /// population participates in a self-relationship).
+    pub fo_vars: Vec<FoVarId>,
+}
+
+/// A binary relationship type between two populations (possibly the same
+/// population — a self-relationship).
+#[derive(Debug, Clone)]
+pub struct RelationshipType {
+    pub name: String,
+    pub pops: [PopId; 2],
+    pub attrs: Vec<AttrId>,
+    /// The FO variables this relationship's canonical relationship variable
+    /// is instantiated with, e.g. `RA(P, S)` or `Borders(C1, C2)`.
+    pub fo_vars: [FoVarId; 2],
+}
+
+impl RelationshipType {
+    pub fn is_self(&self) -> bool {
+        self.pops[0] == self.pops[1]
+    }
+}
+
+/// A first-order variable, e.g. `S` ranging over students.
+#[derive(Debug, Clone)]
+pub struct FoVar {
+    pub name: String,
+    pub pop: PopId,
+}
+
+/// A complete relational schema plus its statistical (random-variable) view.
+#[derive(Debug, Clone)]
+pub struct Schema {
+    pub name: String,
+    pub populations: Vec<Population>,
+    pub attributes: Vec<Attribute>,
+    pub relationships: Vec<RelationshipType>,
+    pub fo_vars: Vec<FoVar>,
+    /// Canonical ordered registry of all random variables. `VarId` indexes
+    /// into this; contingency-table columns are always sorted by `VarId`.
+    pub random_vars: Vec<RandomVar>,
+}
+
+impl Schema {
+    /// Number of relationship variables (the paper's parameter `m`).
+    pub fn num_rel_vars(&self) -> usize {
+        self.relationships.len()
+    }
+
+    /// Arity (number of distinct value codes, incl. n/a for 2Atts) of a
+    /// random variable.
+    pub fn var_arity(&self, v: VarId) -> usize {
+        match self.random_vars[v] {
+            RandomVar::EntityAttr { attr, .. } => self.attributes[attr].arity(),
+            RandomVar::RelAttr { attr, .. } => self.attributes[attr].arity() + 1, // + n/a
+            RandomVar::RelInd { .. } => 2,
+        }
+    }
+
+    /// The `VarId` of a relationship indicator variable.
+    pub fn rel_ind_var(&self, rel: RelId) -> VarId {
+        self.random_vars
+            .iter()
+            .position(|rv| matches!(rv, RandomVar::RelInd { rel: r } if *r == rel))
+            .expect("every relationship has an indicator variable")
+    }
+
+    /// 1Atts(fo): entity attribute variables of one FO variable.
+    pub fn one_atts_of_fo(&self, fo: FoVarId) -> Vec<VarId> {
+        self.random_vars
+            .iter()
+            .enumerate()
+            .filter(|(_, rv)| matches!(rv, RandomVar::EntityAttr { fo: f, .. } if *f == fo))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// 2Atts(rel): relationship attribute variables of one relationship.
+    pub fn two_atts_of_rel(&self, rel: RelId) -> Vec<VarId> {
+        self.random_vars
+            .iter()
+            .enumerate()
+            .filter(|(_, rv)| matches!(rv, RandomVar::RelAttr { rel: r, .. } if *r == rel))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// The FO variables appearing in a set of relationships.
+    pub fn fo_vars_of_rels(&self, rels: &[RelId]) -> Vec<FoVarId> {
+        let mut out: Vec<FoVarId> = rels
+            .iter()
+            .flat_map(|&r| self.relationships[r].fo_vars.iter().copied())
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// 1Atts(R-set) ∪ 2Atts(R-set): all attribute variables of a
+    /// relationship set (paper's `Atts(R)`).
+    pub fn atts_of_rels(&self, rels: &[RelId]) -> Vec<VarId> {
+        let mut out = Vec::new();
+        for fo in self.fo_vars_of_rels(rels) {
+            out.extend(self.one_atts_of_fo(fo));
+        }
+        for &r in rels {
+            out.extend(self.two_atts_of_rel(r));
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// All variables of the ct-table for a relationship chain:
+    /// indicators ∪ Atts (paper's `R ∪ Atts(R)`).
+    pub fn ct_vars_of_rels(&self, rels: &[RelId]) -> Vec<VarId> {
+        let mut out = self.atts_of_rels(rels);
+        out.extend(rels.iter().map(|&r| self.rel_ind_var(r)));
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Human-readable name of a random variable, e.g. `intelligence(S)`,
+    /// `capability(P,S)`, `RA(P,S)`.
+    pub fn var_name(&self, v: VarId) -> String {
+        match &self.random_vars[v] {
+            RandomVar::EntityAttr { fo, attr } => {
+                format!("{}({})", self.attributes[*attr].name, self.fo_vars[*fo].name)
+            }
+            RandomVar::RelAttr { rel, attr } => {
+                let r = &self.relationships[*rel];
+                format!(
+                    "{}({},{})",
+                    self.attributes[*attr].name,
+                    self.fo_vars[r.fo_vars[0]].name,
+                    self.fo_vars[r.fo_vars[1]].name
+                )
+            }
+            RandomVar::RelInd { rel } => {
+                let r = &self.relationships[*rel];
+                format!(
+                    "{}({},{})",
+                    r.name, self.fo_vars[r.fo_vars[0]].name, self.fo_vars[r.fo_vars[1]].name
+                )
+            }
+        }
+    }
+
+    /// Human-readable value of a random variable code (handles T/F and n/a).
+    pub fn value_name(&self, v: VarId, code: u16) -> String {
+        match &self.random_vars[v] {
+            RandomVar::EntityAttr { attr, .. } => self.attributes[*attr].values[code as usize].clone(),
+            RandomVar::RelAttr { attr, .. } => {
+                if code == NA {
+                    "n/a".to_string()
+                } else {
+                    self.attributes[*attr].values[code as usize].clone()
+                }
+            }
+            RandomVar::RelInd { .. } => if code == 1 { "T" } else { "F" }.to_string(),
+        }
+    }
+
+    /// Find a random variable by display name (used by the CLI/config layer).
+    pub fn var_by_name(&self, name: &str) -> Option<VarId> {
+        (0..self.random_vars.len()).find(|&v| self.var_name(v) == name)
+    }
+
+    /// Number of value codes for a variable *as stored in ct-tables*:
+    /// arity for 1Atts, arity+1 (n/a) for 2Atts, 2 for indicators. The n/a
+    /// code itself is `NA`, not `arity`, so this is only used for
+    /// cardinality estimates, not code enumeration.
+    pub fn ct_cardinality(&self, v: VarId) -> usize {
+        self.var_arity(v)
+    }
+
+    /// Enumerate the valid ct codes for a variable (n/a encoded as `NA`).
+    pub fn var_codes(&self, v: VarId) -> Vec<u16> {
+        match self.random_vars[v] {
+            RandomVar::EntityAttr { attr, .. } => {
+                (0..self.attributes[attr].arity() as u16).collect()
+            }
+            RandomVar::RelAttr { attr, .. } => {
+                let mut c: Vec<u16> = (0..self.attributes[attr].arity() as u16).collect();
+                c.push(NA);
+                c
+            }
+            RandomVar::RelInd { .. } => vec![0, 1],
+        }
+    }
+
+    /// Total number of attributes (paper Table 2 "#Attributes" column):
+    /// descriptive attributes of entity and relationship tables.
+    pub fn num_attributes(&self) -> usize {
+        self.attributes.len()
+    }
+
+    /// Total number of tables (entity + relationship).
+    pub fn num_tables(&self) -> usize {
+        self.populations.len() + self.relationships.len()
+    }
+
+    /// Number of self-relationships.
+    pub fn num_self_rels(&self) -> usize {
+        self.relationships.iter().filter(|r| r.is_self()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn university() -> Schema {
+        crate::schema::builder::university_schema()
+    }
+
+    #[test]
+    fn university_shape() {
+        let s = university();
+        assert_eq!(s.populations.len(), 3);
+        assert_eq!(s.relationships.len(), 2);
+        assert_eq!(s.num_tables(), 5);
+        assert_eq!(s.num_self_rels(), 0);
+        // 6 entity attrs + 4 rel attrs
+        assert_eq!(s.num_attributes(), 10);
+        // random vars: 6 entity-attr vars + 4 rel-attr vars + 2 indicators
+        assert_eq!(s.random_vars.len(), 12);
+    }
+
+    #[test]
+    fn var_names_and_values() {
+        let s = university();
+        let names: Vec<String> = (0..s.random_vars.len()).map(|v| s.var_name(v)).collect();
+        assert!(names.contains(&"intelligence(S)".to_string()));
+        assert!(names.contains(&"RA(P,S)".to_string()));
+        assert!(names.contains(&"capability(P,S)".to_string()));
+        let ra = s.var_by_name("RA(P,S)").unwrap();
+        assert_eq!(s.value_name(ra, 0), "F");
+        assert_eq!(s.value_name(ra, 1), "T");
+        let cap = s.var_by_name("capability(P,S)").unwrap();
+        assert_eq!(s.value_name(cap, NA), "n/a");
+    }
+
+    #[test]
+    fn atts_partition() {
+        let s = university();
+        let ra: RelId = s.relationships.iter().position(|r| r.name == "RA").unwrap();
+        let atts = s.atts_of_rels(&[ra]);
+        // RA(P,S): 2 prof attrs + 2 student attrs + 2 rel attrs
+        assert_eq!(atts.len(), 6);
+        let ct_vars = s.ct_vars_of_rels(&[ra]);
+        assert_eq!(ct_vars.len(), 7); // + indicator
+        assert!(ct_vars.contains(&s.rel_ind_var(ra)));
+    }
+
+    #[test]
+    fn self_relationship_duplicates_one_atts() {
+        let mut b = SchemaBuilder::new("toy");
+        let c = b.population("Country");
+        b.attr(c, "size", &["small", "big"]);
+        let _borders = b.relationship("Borders", c, c);
+        let s = b.finish();
+        assert_eq!(s.populations[c].fo_vars.len(), 2);
+        assert_eq!(s.num_self_rels(), 1);
+        // size(Country1) and size(Country2) are distinct random variables
+        let ea: Vec<VarId> = (0..s.random_vars.len())
+            .filter(|&v| matches!(s.random_vars[v], RandomVar::EntityAttr { .. }))
+            .collect();
+        assert_eq!(ea.len(), 2);
+        assert_ne!(s.var_name(ea[0]), s.var_name(ea[1]));
+    }
+
+    #[test]
+    fn var_codes_include_na_for_two_atts() {
+        let s = university();
+        let cap = s.var_by_name("capability(P,S)").unwrap();
+        let codes = s.var_codes(cap);
+        assert_eq!(*codes.last().unwrap(), NA);
+        assert_eq!(codes.len(), s.var_arity(cap));
+        let intel = s.var_by_name("intelligence(S)").unwrap();
+        assert!(!s.var_codes(intel).contains(&NA));
+    }
+
+    #[test]
+    fn fo_vars_of_rels_dedup() {
+        let s = university();
+        let all: Vec<RelId> = (0..s.relationships.len()).collect();
+        let fos = s.fo_vars_of_rels(&all);
+        // Reg(S,C) and RA(P,S) share S: {S, C, P}
+        assert_eq!(fos.len(), 3);
+    }
+}

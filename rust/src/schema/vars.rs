@@ -1,0 +1,66 @@
+//! Random-variable registry types.
+
+use super::{AttrId, FoVarId, RelId};
+
+/// Index into `Schema::random_vars`. Contingency-table columns are always
+/// kept sorted by `VarId`, which gives every variable set a canonical
+/// column order.
+pub type VarId = usize;
+
+/// A parametrized random variable (PRV) in the statistical view of the
+/// schema (paper §2.1).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum RandomVar {
+    /// Entity attribute variable, e.g. `intelligence(S)` (a 1Att).
+    EntityAttr { fo: FoVarId, attr: AttrId },
+    /// Relationship attribute variable, e.g. `capability(P,S)` (a 2Att).
+    /// Takes the reserved value `n/a` when the relationship is false.
+    RelAttr { rel: RelId, attr: AttrId },
+    /// Boolean relationship indicator, e.g. `RA(P,S)`; codes 0 = F, 1 = T.
+    RelInd { rel: RelId },
+}
+
+/// Coarse kind tag, useful for filtering variable sets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VarKind {
+    EntityAttr,
+    RelAttr,
+    RelInd,
+}
+
+impl RandomVar {
+    pub fn kind(&self) -> VarKind {
+        match self {
+            RandomVar::EntityAttr { .. } => VarKind::EntityAttr,
+            RandomVar::RelAttr { .. } => VarKind::RelAttr,
+            RandomVar::RelInd { .. } => VarKind::RelInd,
+        }
+    }
+
+    /// The relationship this variable belongs to, if any.
+    pub fn rel(&self) -> Option<RelId> {
+        match self {
+            RandomVar::RelAttr { rel, .. } | RandomVar::RelInd { rel } => Some(*rel),
+            RandomVar::EntityAttr { .. } => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_tags() {
+        assert_eq!(RandomVar::EntityAttr { fo: 0, attr: 0 }.kind(), VarKind::EntityAttr);
+        assert_eq!(RandomVar::RelAttr { rel: 1, attr: 2 }.kind(), VarKind::RelAttr);
+        assert_eq!(RandomVar::RelInd { rel: 1 }.kind(), VarKind::RelInd);
+    }
+
+    #[test]
+    fn rel_accessor() {
+        assert_eq!(RandomVar::EntityAttr { fo: 0, attr: 0 }.rel(), None);
+        assert_eq!(RandomVar::RelAttr { rel: 3, attr: 2 }.rel(), Some(3));
+        assert_eq!(RandomVar::RelInd { rel: 5 }.rel(), Some(5));
+    }
+}

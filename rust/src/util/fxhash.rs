@@ -1,0 +1,100 @@
+//! FxHash (the Firefox/rustc multiply-xor hash): the std SipHash is far too
+//! slow for the join group-count hot loop, and the `fxhash` crate is not
+//! available offline.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Fast non-cryptographic hasher for internal hash maps keyed by row codes
+/// and entity ids. Not DoS-resistant — inputs are our own data.
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u128(&mut self, n: u128) {
+        self.add(n as u64);
+        self.add((n >> 64) as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+/// HashMap with the fast hasher.
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+/// HashSet with the fast hasher.
+pub type FxHashSet<K> = std::collections::HashSet<K, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_roundtrip() {
+        let mut m: FxHashMap<Vec<u16>, u64> = FxHashMap::default();
+        for i in 0..1000u16 {
+            m.insert(vec![i, i + 1], i as u64);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m[&vec![10u16, 11]], 10);
+    }
+
+    #[test]
+    fn distinct_inputs_hash_differently_mostly() {
+        use std::hash::{BuildHasher, Hash};
+        let b = FxBuildHasher::default();
+        let h = |x: u64| {
+            let mut s = b.build_hasher();
+            x.hash(&mut s);
+            s.finish()
+        };
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            seen.insert(h(i));
+        }
+        assert!(seen.len() > 9_990);
+    }
+}

@@ -1,0 +1,16 @@
+//! Small self-contained utilities: deterministic RNG, timers, text tables,
+//! and a hand-rolled property-testing harness.
+//!
+//! The build environment is fully offline with only `xla` and `anyhow`
+//! available, so the usual crates (`rand`, `criterion`, `proptest`) are
+//! re-implemented here at the scale this project needs.
+
+pub mod rng;
+pub mod timer;
+pub mod table;
+pub mod proptest;
+pub mod fxhash;
+
+pub use rng::Pcg64;
+pub use timer::{Stopwatch, format_duration};
+pub use table::TextTable;

@@ -1,0 +1,116 @@
+//! Wall-clock timing helpers used by the metrics layer and the bench
+//! harnesses (criterion is unavailable offline; `benches/` use these).
+
+use std::time::{Duration, Instant};
+
+/// A resettable stopwatch that accumulates elapsed time across start/stop
+/// intervals. Used to attribute MJ run time to phases (Fig. 8 breakdown).
+#[derive(Debug)]
+pub struct Stopwatch {
+    acc: Duration,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { acc: Duration::ZERO, started: None }
+    }
+
+    /// Start (or restart) the current interval.
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    /// Stop the current interval, folding it into the accumulator.
+    pub fn stop(&mut self) {
+        if let Some(t) = self.started.take() {
+            self.acc += t.elapsed();
+        }
+    }
+
+    /// Total accumulated time (not counting a still-running interval).
+    pub fn total(&self) -> Duration {
+        self.acc
+    }
+
+    /// Run `f`, attributing its wall time to this stopwatch.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+}
+
+/// Render a duration as a compact human string ("1.42s", "318ms", "12.5us").
+pub fn format_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 100.0 {
+        format!("{:.0}s", s)
+    } else if s >= 1.0 {
+        format!("{:.2}s", s)
+    } else if s >= 1e-3 {
+        format!("{:.1}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.1}us", s * 1e6)
+    } else {
+        format!("{}ns", d.as_nanos())
+    }
+}
+
+/// Measure the median wall time of `f` over `iters` runs (plus one warmup).
+/// A minimal criterion stand-in for the micro benchmarks.
+pub fn bench_median<T>(iters: usize, mut f: impl FnMut() -> T) -> Duration {
+    assert!(iters > 0);
+    let _ = f(); // warmup
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        let out = f();
+        samples.push(t.elapsed());
+        std::hint::black_box(out);
+    }
+    samples.sort_unstable();
+    samples[samples.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        assert!(sw.total() >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn stop_without_start_is_noop() {
+        let mut sw = Stopwatch::new();
+        sw.stop();
+        assert_eq!(sw.total(), Duration::ZERO);
+    }
+
+    #[test]
+    fn format_ranges() {
+        assert_eq!(format_duration(Duration::from_secs(120)), "120s");
+        assert_eq!(format_duration(Duration::from_millis(1500)), "1.50s");
+        assert_eq!(format_duration(Duration::from_millis(3)), "3.0ms");
+        assert_eq!(format_duration(Duration::from_micros(12)), "12.0us");
+        assert_eq!(format_duration(Duration::from_nanos(90)), "90ns");
+    }
+
+    #[test]
+    fn bench_median_returns_positive() {
+        let d = bench_median(5, || (0..1000).sum::<u64>());
+        assert!(d > Duration::ZERO);
+    }
+}

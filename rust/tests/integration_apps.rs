@@ -1,0 +1,98 @@
+//! Integration: the statistical applications on generated benchmarks —
+//! the paper's qualitative claims as assertions.
+
+use mrss::apps::{apriori, bayesnet, cfs};
+use mrss::datagen;
+use mrss::mobius::MobiusJoin;
+use mrss::schema::RandomVar;
+
+#[test]
+fn mondial_link_off_ct_is_empty_so_cfs_returns_nothing() {
+    let db = datagen::generate("mondial", 0.5, 7).unwrap();
+    let res = MobiusJoin::new(&db).run();
+    let off = res.link_off();
+    assert!(off.is_empty(), "paper §6.3.1: Mondial all-true table empty");
+    let target = db.schema.var_by_name("percentage(C1)").unwrap();
+    let feats: Vec<usize> = (0..db.schema.random_vars.len()).collect();
+    let sel = cfs::cfs_select(&off, target, &feats, None);
+    assert!(sel.selected.is_empty());
+}
+
+#[test]
+fn uwcse_link_off_statistics_tiny() {
+    let db = datagen::generate("uwcse", 1.0, 7).unwrap();
+    let res = MobiusJoin::new(&db).run();
+    // Paper Table 4: 2 link-off statistics for UW-CSE. In our schema the
+    // isolated Course table cross-multiplies the joint, so the bound is
+    // 2 x (observed course combos); the relationship part itself must be 2.
+    let jc = mrss::db::JoinCounter::new(&db);
+    assert_eq!(jc.positive_ct(&[0, 1]).total(), 2, "exactly two overlapping advisor pairs");
+    let course_fo = db.schema.populations[1].fo_vars[0];
+    let course_combos = db.ct_entity(course_fo).len();
+    assert!(
+        res.link_off().len() <= 2 * course_combos.max(1),
+        "got {} (course combos {})",
+        res.link_off().len(),
+        course_combos
+    );
+    assert!(res.num_extra_statistics() > 100);
+}
+
+#[test]
+fn rules_with_rel_vars_only_appear_link_on() {
+    let db = datagen::generate("mutagenesis", 0.3, 7).unwrap();
+    let res = MobiusJoin::new(&db).run();
+    let schema = &db.schema;
+    let on_rules = apriori::apriori(schema, res.joint_ct(), Default::default(), None);
+    let off_rules = apriori::apriori(schema, &res.link_off(), Default::default(), None);
+    // Link-off: indicators constant T => they never appear with value F and
+    // lift of a constant-T item is 1 (filtered); realistically no rel-var
+    // rule should survive.
+    assert!(off_rules
+        .iter()
+        .all(|r| !r.uses_rel_var(schema) || r.lift < 1.2));
+    assert!(
+        on_rules.iter().any(|r| r.uses_rel_var(schema)),
+        "link-on should surface relationship rules"
+    );
+}
+
+#[test]
+fn bn_link_on_can_learn_rel_edges_off_cannot() {
+    for name in ["financial", "mutagenesis"] {
+        let db = datagen::generate(name, 0.1, 7).unwrap();
+        let res = MobiusJoin::new(&db).run();
+        let schema = &db.schema;
+        let off = bayesnet::learn_structure(schema, &res, false, Default::default());
+        let (r2r, a2r) = off.bn.edge_kinds(schema);
+        assert_eq!(r2r + a2r, 0, "{name}: off learned rel edges");
+        let on = bayesnet::learn_structure(schema, &res, true, Default::default());
+        let m_on = bayesnet::score_structure(schema, &on.bn, res.joint_ct(), None);
+        let m_off = bayesnet::score_structure(schema, &off.bn, res.joint_ct(), None);
+        // Link-on sees strictly more information; its fit on the link-on
+        // table must be at least as good.
+        assert!(
+            m_on.loglik >= m_off.loglik - 1e-9,
+            "{name}: on {} < off {}",
+            m_on.loglik,
+            m_off.loglik
+        );
+    }
+}
+
+#[test]
+fn cfs_selects_rel_feature_on_planted_schema() {
+    // financial plants balance(T) <- account freq via HasTrans; with link
+    // on, CFS must select a different set than link off (Table 5 shape).
+    let db = datagen::generate("financial", 0.15, 7).unwrap();
+    let res = MobiusJoin::new(&db).run();
+    let schema = &db.schema;
+    let target = schema.var_by_name("balance(T)").unwrap();
+    let attrs: Vec<usize> = (0..schema.random_vars.len())
+        .filter(|&v| !matches!(schema.random_vars[v], RandomVar::RelInd { .. }))
+        .collect();
+    let all: Vec<usize> = (0..schema.random_vars.len()).collect();
+    let off = cfs::cfs_select(&res.link_off(), target, &attrs, None);
+    let on = cfs::cfs_select(res.joint_ct(), target, &all, None);
+    assert!(cfs::distinctness(&off.selected, &on.selected) > 0.0);
+}

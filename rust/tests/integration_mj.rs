@@ -1,0 +1,83 @@
+//! Integration: the Möbius Join against the cross-product oracle on every
+//! benchmark schema (small scales), plus suite-level consistency checks.
+
+use mrss::baseline::{cross_product_ct, CpBudget};
+use mrss::coordinator::{run_job, SuiteJob};
+use mrss::datagen;
+use mrss::mobius::MobiusJoin;
+use std::time::Duration;
+
+/// Every benchmark, scaled down, must agree exactly with brute force.
+#[test]
+fn mj_equals_cp_on_all_benchmarks_small() {
+    for b in datagen::BENCHMARKS {
+        // Scale so the cross product stays enumerable.
+        let scale = match b.name {
+            "movielens" => 0.01,
+            "imdb" => 0.002,
+            "financial" => 0.005,
+            "hepatitis" => 0.01,
+            "mutagenesis" => 0.02,
+            _ => 0.1,
+        };
+        let db = datagen::generate(b.name, scale, 11).unwrap();
+        let res = MobiusJoin::new(&db).run();
+        let cp = cross_product_ct(
+            &db,
+            CpBudget { max_time: Duration::from_secs(120), max_tuples: 50_000_000 },
+        );
+        let cp_ct = cp.ct().unwrap_or_else(|| panic!("{}: CP did not terminate", b.name));
+        assert_eq!(res.joint_ct(), cp_ct, "{}: MJ != CP", b.name);
+    }
+}
+
+#[test]
+fn joint_total_is_population_product_everywhere() {
+    for b in datagen::BENCHMARKS {
+        let db = datagen::generate(b.name, 0.02, 3).unwrap();
+        let res = MobiusJoin::new(&db).run();
+        let expect: u128 = db
+            .schema
+            .fo_vars
+            .iter()
+            .map(|f| db.entity_counts[f.pop] as u128)
+            .product();
+        assert_eq!(res.joint_ct().total(), expect, "{}", b.name);
+    }
+}
+
+#[test]
+fn report_identities_hold() {
+    let rep = run_job(&SuiteJob::new("mutagenesis", 0.05, 5)).unwrap();
+    assert_eq!(rep.statistics, rep.link_off_statistics + rep.extra_statistics);
+    assert!(rep.mj_time >= rep.extra_time);
+    assert_eq!(rep.rel_tables, 2);
+    assert_eq!(rep.attributes, 11);
+}
+
+#[test]
+fn seeds_change_data_not_invariants() {
+    for seed in [1u64, 2, 3] {
+        let db = datagen::generate("uwcse", 0.3, seed).unwrap();
+        let res = MobiusJoin::new(&db).run();
+        res.joint_ct().check_invariants().unwrap();
+        let expect: u128 = db
+            .schema
+            .fo_vars
+            .iter()
+            .map(|f| db.entity_counts[f.pop] as u128)
+            .product();
+        assert_eq!(res.joint_ct().total(), expect);
+    }
+}
+
+#[test]
+fn depth_cap_tables_match_full_run_prefix() {
+    let db = datagen::generate("hepatitis", 0.05, 7).unwrap();
+    let full = MobiusJoin::new(&db).run();
+    let capped = MobiusJoin::new(&db).max_chain_len(2).run();
+    for (chain, table) in &capped.tables {
+        assert_eq!(table, &full.tables[chain], "chain {chain:?} differs under cap");
+    }
+    assert!(capped.tables.len() < full.tables.len());
+}

@@ -1,0 +1,64 @@
+//! Integration: the XLA engine (AOT PJRT artifacts) must be bit-identical
+//! to the native engine across whole Möbius Join runs. Skips (with a
+//! message) when `make artifacts` has not been run.
+
+use mrss::datagen;
+use mrss::mobius::MobiusJoin;
+use mrss::runtime::{XlaEngine, XlaRuntime};
+
+fn runtime() -> Option<XlaRuntime> {
+    match XlaRuntime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping xla integration test: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn whole_mj_bit_identical_on_three_schemas() {
+    let Some(rt) = runtime() else { return };
+    let engine = XlaEngine::new(&rt);
+    for (name, scale) in [("mutagenesis", 0.2), ("mondial", 0.3), ("uwcse", 0.5)] {
+        let db = datagen::generate(name, scale, 7).unwrap();
+        let native = MobiusJoin::new(&db).run();
+        let xla = MobiusJoin::with_engine(&db, &engine).run();
+        assert_eq!(native.joint_ct(), xla.joint_ct(), "{name}: joint differs");
+        for (chain, table) in &native.tables {
+            assert_eq!(table, &xla.tables[chain], "{name}: chain {chain:?} differs");
+        }
+    }
+}
+
+#[test]
+fn batched_scores_match_native() {
+    let Some(rt) = runtime() else { return };
+    use mrss::apps::info::{family_loglik_batch, family_loglik_native, su_batch, JointCounts};
+    let joints: Vec<JointCounts> = (1..20)
+        .map(|i| {
+            let v1 = 2 + (i % 4);
+            let v2 = 2 + (i % 3);
+            let data: Vec<f64> = (0..v1 * v2).map(|k| ((i * k + 3) % 17) as f64).collect();
+            JointCounts { data, v1, v2 }
+        })
+        .collect();
+    let with_rt = su_batch(&joints, Some(&rt));
+    let without = su_batch(&joints, None);
+    for (a, b) in with_rt.iter().zip(&without) {
+        assert!((a - b).abs() < 1e-9, "su {a} vs {b}");
+    }
+    let fams: Vec<(Vec<f64>, usize, usize)> = (1..12)
+        .map(|i| {
+            let p = 2 + (i % 5);
+            let c = 2 + (i % 3);
+            let data: Vec<f64> = (0..p * c).map(|k| ((i * 7 + k) % 23) as f64).collect();
+            (data, p, c)
+        })
+        .collect();
+    let with_rt = family_loglik_batch(&fams, Some(&rt));
+    for ((m, p, c), got) in fams.iter().zip(&with_rt) {
+        let want = family_loglik_native(m, *p, *c);
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+}
