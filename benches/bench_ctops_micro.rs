@@ -1,12 +1,22 @@
 //! Micro-benchmarks of the ct-algebra operators (the unit costs behind the
-//! §4.1.3 cost model): projection, add/subtract sort-merge, cross product,
-//! plus the XLA-offloaded project/subtract for comparison.
+//! §4.1.3 cost model): every packed-key operator is measured against the
+//! retained row-major reference implementation (`mrss::ct::reference`) on
+//! identical inputs, asserting bit-identical results as it goes.
+//!
+//! Output: a human-readable table on stdout, then a JSON record (printed to
+//! stdout, or written to the path in `MRSS_BENCH_JSON` when set) in the
+//! shape of `BENCH_ctops_micro.json` at the repo root — refresh that file
+//! with:
+//!
+//! ```text
+//! MRSS_BENCH_JSON=BENCH_ctops_micro.json cargo bench --bench bench_ctops_micro
+//! ```
 
+use mrss::ct::reference::RefTable;
 use mrss::ct::CtTable;
-use mrss::mobius::{CtEngine, NativeEngine};
-use mrss::runtime::{XlaEngine, XlaRuntime};
 use mrss::util::timer::bench_median;
-use mrss::util::Pcg64;
+use mrss::util::{format_duration, Pcg64};
+use std::time::Duration;
 
 fn random_ct(rng: &mut Pcg64, n: usize, width: usize, arity: u16) -> CtTable {
     let vars: Vec<usize> = (0..width).collect();
@@ -21,45 +31,137 @@ fn random_ct(rng: &mut Pcg64, n: usize, width: usize, arity: u16) -> CtTable {
     CtTable::from_raw(vars, rows, counts)
 }
 
+struct Sample {
+    rows: usize,
+    op: &'static str,
+    packed: Duration,
+    rowmajor: Duration,
+}
+
+fn record(
+    out: &mut Vec<Sample>,
+    rows: usize,
+    op: &'static str,
+    packed: Duration,
+    rowmajor: Duration,
+) {
+    let speedup = rowmajor.as_secs_f64() / packed.as_secs_f64().max(1e-12);
+    println!(
+        "  {op:<18} packed {:>10}   row-major {:>10}   {speedup:>5.2}x",
+        format_duration(packed),
+        format_duration(rowmajor),
+    );
+    out.push(Sample { rows, op, packed, rowmajor });
+}
+
 fn main() {
     let mut rng = Pcg64::seeded(42);
     let iters = 9;
-    println!("=== ct-algebra operator micro-benchmarks (median of {iters}) ===\n");
+    let mut samples: Vec<Sample> = Vec::new();
+    println!("=== ct-algebra: packed keys vs row-major reference (median of {iters}) ===\n");
     for &n in &[10_000usize, 100_000, 400_000] {
         let a = random_ct(&mut rng, n, 8, 4);
         let b = random_ct(&mut rng, n, 8, 4);
+        let (ra, rb) = (RefTable::from(&a), RefTable::from(&b));
         let rows = a.len();
         println!("-- ct with {rows} rows (requested {n}), width 8 --");
 
-        let d = bench_median(iters, || a.project(&[0, 1, 2]));
-        println!("  project/3cols      {:>10}", mrss::util::format_duration(d));
-        let d = bench_median(iters, || a.add(&b));
-        println!("  add (sort-merge)   {:>10}", mrss::util::format_duration(d));
+        // Correctness cross-checks before timing anything.
+        assert_eq!(a.project(&[0, 1, 2]), ra.project(&[0, 1, 2]).to_ct());
+        assert_eq!(a.add(&b), ra.add(&rb).to_ct());
+        assert_eq!(a.select(&[(0, 1)]), ra.select(&[(0, 1)]).to_ct());
+        assert_eq!(a.condition(&[(0, 1)]), ra.condition(&[(0, 1)]).to_ct());
+
+        let p = bench_median(iters, || a.project(&[0, 1, 2]));
+        let r = bench_median(iters, || ra.project(&[0, 1, 2]));
+        record(&mut samples, rows, "project/3cols", p, r);
+
+        let p = bench_median(iters, || a.add(&b));
+        let r = bench_median(iters, || ra.add(&rb));
+        record(&mut samples, rows, "add", p, r);
+
         let sum = a.add(&b);
-        let d = bench_median(iters, || sum.subtract(&b).unwrap());
-        println!("  subtract           {:>10}", mrss::util::format_duration(d));
+        let rsum = ra.add(&rb);
+        assert_eq!(sum.subtract(&b).unwrap(), rsum.subtract(&rb).unwrap().to_ct());
+        let p = bench_median(iters, || sum.subtract(&b).unwrap());
+        let r = bench_median(iters, || rsum.subtract(&rb).unwrap());
+        record(&mut samples, rows, "subtract", p, r);
+
+        let p = bench_median(iters, || a.select(&[(0, 1)]));
+        let r = bench_median(iters, || ra.select(&[(0, 1)]));
+        record(&mut samples, rows, "select", p, r);
+
+        let p = bench_median(iters, || a.condition(&[(0, 1)]));
+        let r = bench_median(iters, || ra.condition(&[(0, 1)]));
+        record(&mut samples, rows, "condition", p, r);
+
+        let p = bench_median(iters, || a.extend_const(&[(50, 1), (51, 0)]));
+        let r = bench_median(iters, || ra.extend_const(&[(50, 1), (51, 0)]));
+        record(&mut samples, rows, "extend_const", p, r);
+
+        // Cross stays on small operands (its output is quadratic).
         let small = random_ct(&mut rng, 64, 2, 3);
         let small2 = {
-            let mut s = small.clone();
+            let mut s = RefTable::from(&small);
             s.vars = vec![100, 101];
-            s
+            s.to_ct()
         };
-        let d = bench_median(iters, || small.cross(&small2));
-        println!("  cross (64x64)      {:>10}", mrss::util::format_duration(d));
-        let d = bench_median(iters, || a.select(&[(0, 1)]));
-        println!("  select             {:>10}", mrss::util::format_duration(d));
-        let d = bench_median(iters, || a.extend_const(&[(50, 1), (51, 0)]));
-        println!("  extend_const       {:>10}", mrss::util::format_duration(d));
-
-        if let Ok(rt) = XlaRuntime::load_default() {
-            let e = XlaEngine::new(&rt);
-            let ne = NativeEngine;
-            assert_eq!(e.project(&a, &[0, 1, 2]), ne.project(&a, &[0, 1, 2]));
-            let d = bench_median(iters, || e.project(&a, &[0, 1, 2]));
-            println!("  project via XLA    {:>10}", mrss::util::format_duration(d));
-            let d = bench_median(iters, || e.subtract(&sum, &b).unwrap());
-            println!("  subtract via XLA   {:>10}", mrss::util::format_duration(d));
-        }
+        let (rsmall, rsmall2) = (RefTable::from(&small), RefTable::from(&small2));
+        assert_eq!(small.cross(&small2), rsmall.cross(&rsmall2).to_ct());
+        let p = bench_median(iters, || small.cross(&small2));
+        let r = bench_median(iters, || rsmall.cross(&rsmall2));
+        record(&mut samples, rows, "cross(64x64)", p, r);
         println!();
     }
+
+    let json = render_json(&samples, iters);
+    match std::env::var("MRSS_BENCH_JSON") {
+        Ok(path) if !path.is_empty() => {
+            std::fs::write(&path, &json).expect("writing bench json");
+            println!("wrote {path}");
+        }
+        _ => println!("{json}"),
+    }
+
+    // The point of the packed-key refactor: the hot operators must beat the
+    // row-major baseline at the largest size. Opt-in (MRSS_BENCH_ASSERT=1)
+    // so noisy shared CI runners don't turn timing jitter into red builds.
+    if std::env::var("MRSS_BENCH_ASSERT").as_deref() == Ok("1") {
+        for op in ["project/3cols", "subtract", "cross(64x64)"] {
+            let worst = samples
+                .iter()
+                .filter(|s| s.op == op)
+                .max_by_key(|s| s.rows)
+                .expect("sample missing");
+            assert!(
+                worst.packed <= worst.rowmajor,
+                "{op}: packed {a:?} slower than row-major {b:?}",
+                a = worst.packed,
+                b = worst.rowmajor,
+            );
+        }
+        println!("packed >= row-major on all headline ops: OK");
+    }
+}
+
+fn render_json(samples: &[Sample], iters: usize) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"ctops_micro\",\n");
+    s.push_str("  \"unit\": \"nanoseconds (median)\",\n");
+    s.push_str(&format!("  \"iters\": {iters},\n"));
+    s.push_str("  \"results\": [\n");
+    for (i, sm) in samples.iter().enumerate() {
+        let speedup = sm.rowmajor.as_secs_f64() / sm.packed.as_secs_f64().max(1e-12);
+        s.push_str(&format!(
+            "    {{\"rows\": {}, \"op\": \"{}\", \"packed_ns\": {}, \"rowmajor_ns\": {}, \"speedup\": {:.2}}}{}\n",
+            sm.rows,
+            sm.op,
+            sm.packed.as_nanos(),
+            sm.rowmajor.as_nanos(),
+            speedup,
+            if i + 1 == samples.len() { "" } else { "," },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
 }

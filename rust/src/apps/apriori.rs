@@ -102,9 +102,10 @@ pub fn apriori(
     for &v in &vars {
         let p = base.project(&[v]);
         let mut any = false;
-        for (row, c) in p.iter() {
+        let codes = p.decode_rows(); // width 1: one code per row
+        for (&code, &c) in codes.iter().zip(&p.counts) {
             if (c as f64) >= min_count {
-                item_support.insert((v, row[0]), c as f64);
+                item_support.insert((v, code), c as f64);
                 any = true;
             }
         }
@@ -123,10 +124,13 @@ pub fn apriori(
         for vs in candidates {
             let p = base.project(&vs);
             let mut any = false;
-            for (row, c) in p.iter() {
+            let w = p.width();
+            let matrix = p.decode_rows(); // decode once, not per row
+            for (i, &c) in p.counts.iter().enumerate() {
                 if (c as f64) < min_count {
                     continue;
                 }
+                let row = &matrix[i * w..(i + 1) * w];
                 // Apriori pruning at the item level: all single items must
                 // be frequent.
                 let items: Vec<(VarId, u16)> =

@@ -154,7 +154,11 @@ fn family_counts(ct: &CtTable, child: VarId, parents: &[VarId]) -> (Vec<f64>, us
     let mut cidx: FxHashMap<u16, usize> = FxHashMap::default();
     let mut cells: Vec<(usize, usize, f64)> = Vec::with_capacity(proj.len());
     let mut pbuf = vec![0u16; pcols.len()];
-    for (row, c) in proj.iter() {
+    // Decode the packed projection once; per-row `iter()` would allocate.
+    let w = proj.width();
+    let matrix = proj.decode_rows();
+    for (i, &c) in proj.counts.iter().enumerate() {
+        let row = &matrix[i * w..(i + 1) * w];
         for (slot, &pc) in pcols.iter().enumerate() {
             pbuf[slot] = row[pc];
         }

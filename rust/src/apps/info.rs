@@ -46,7 +46,11 @@ pub fn joint_counts(ct: &CtTable, x: VarId, y: VarId) -> JointCounts {
     let mut ix: FxHashMap<u16, usize> = FxHashMap::default();
     let mut iy: FxHashMap<u16, usize> = FxHashMap::default();
     let mut cells: Vec<(usize, usize, f64)> = Vec::with_capacity(ct.len());
-    for (row, c) in ct.iter() {
+    // Decode the packed table once; per-row `iter()` would allocate.
+    let w = ct.width();
+    let matrix = ct.decode_rows();
+    for (i, &c) in ct.counts.iter().enumerate() {
+        let row = &matrix[i * w..(i + 1) * w];
         let nx = ix.len();
         let xi = *ix.entry(row[cx]).or_insert(nx);
         let ny = iy.len();

@@ -4,7 +4,8 @@
 //! Precedence: defaults < config file (`--config path`, `KEY = VALUE`
 //! lines, `#` comments) < command-line flags.
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::collections::HashMap;
 use std::time::Duration;
 

@@ -16,6 +16,7 @@ pub use report::{CpReport, SuiteReport};
 use crate::baseline::{cross_product_ct, CpBudget};
 use crate::datagen;
 use crate::mobius::MobiusJoin;
+use crate::util::error::Result;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -31,6 +32,9 @@ pub struct SuiteJob {
     pub cp_budget: CpBudget,
     /// Cap the chain length (paper §8 option; None = full lattice).
     pub max_chain_len: Option<usize>,
+    /// Worker threads for the Möbius Join's per-level chain loop (1 =
+    /// serial). Output is identical for any value.
+    pub mj_workers: usize,
 }
 
 impl SuiteJob {
@@ -42,12 +46,18 @@ impl SuiteJob {
             run_cp: false,
             cp_budget: CpBudget::default(),
             max_chain_len: None,
+            mj_workers: 1,
         }
     }
 
     pub fn with_cp(mut self, budget: CpBudget) -> Self {
         self.run_cp = true;
         self.cp_budget = budget;
+        self
+    }
+
+    pub fn with_mj_workers(mut self, workers: usize) -> Self {
+        self.mj_workers = workers.max(1);
         self
     }
 }
@@ -72,12 +82,12 @@ impl Default for PoolConfig {
 }
 
 /// Execute one job (generation + MJ [+ CP]) and build its report.
-pub fn run_job(job: &SuiteJob) -> anyhow::Result<SuiteReport> {
+pub fn run_job(job: &SuiteJob) -> Result<SuiteReport> {
     let t0 = Instant::now();
     let db = datagen::generate(&job.dataset, job.scale, job.seed)?;
     let gen_time = t0.elapsed();
 
-    let mut mj = MobiusJoin::new(&db);
+    let mut mj = MobiusJoin::new(&db).workers(job.mj_workers);
     if let Some(l) = job.max_chain_len {
         mj = mj.max_chain_len(l);
     }
@@ -103,14 +113,14 @@ pub fn run_job(job: &SuiteJob) -> anyhow::Result<SuiteReport> {
 
 /// Run a batch of jobs over a bounded worker pool; reports come back in
 /// job order.
-pub fn run_suite(jobs: Vec<SuiteJob>, pool: PoolConfig) -> Vec<anyhow::Result<SuiteReport>> {
+pub fn run_suite(jobs: Vec<SuiteJob>, pool: PoolConfig) -> Vec<Result<SuiteReport>> {
     let n = jobs.len();
     if pool.workers <= 1 || n <= 1 {
         return jobs.iter().map(run_job).collect();
     }
     let (job_tx, job_rx) = mpsc::sync_channel::<(usize, SuiteJob)>(pool.queue_depth);
     let job_rx = Arc::new(Mutex::new(job_rx));
-    let (rep_tx, rep_rx) = mpsc::channel::<(usize, anyhow::Result<SuiteReport>)>();
+    let (rep_tx, rep_rx) = mpsc::channel::<(usize, Result<SuiteReport>)>();
 
     let mut handles = Vec::new();
     for _ in 0..pool.workers.min(n) {
@@ -139,7 +149,7 @@ pub fn run_suite(jobs: Vec<SuiteJob>, pool: PoolConfig) -> Vec<anyhow::Result<Su
     }
     drop(job_tx);
 
-    let mut slots: Vec<Option<anyhow::Result<SuiteReport>>> = (0..n).map(|_| None).collect();
+    let mut slots: Vec<Option<Result<SuiteReport>>> = (0..n).map(|_| None).collect();
     for (idx, rep) in rep_rx {
         slots[idx] = Some(rep);
     }
@@ -187,6 +197,15 @@ mod tests {
             assert_eq!(a.statistics, b.statistics);
             assert_eq!(a.extra_statistics, b.extra_statistics);
         }
+    }
+
+    #[test]
+    fn mj_workers_do_not_change_results() {
+        let serial = run_job(&SuiteJob::new("uwcse", 0.2, 7)).unwrap();
+        let parallel = run_job(&SuiteJob::new("uwcse", 0.2, 7).with_mj_workers(4)).unwrap();
+        assert_eq!(serial.statistics, parallel.statistics);
+        assert_eq!(serial.extra_statistics, parallel.extra_statistics);
+        assert_eq!(serial.link_off_statistics, parallel.link_off_statistics);
     }
 
     #[test]

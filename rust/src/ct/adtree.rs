@@ -58,15 +58,18 @@ struct Vary {
 }
 
 impl AdTree {
-    /// Build an ADtree from a contingency table.
+    /// Build an ADtree from a contingency table. The (possibly packed)
+    /// table is decoded to a row-major code matrix once up front — tree
+    /// construction indexes rows many times per node.
     pub fn build(ct: &CtTable, cfg: AdTreeConfig) -> AdTree {
         let width = ct.width();
+        let matrix = ct.decode_rows();
         // Observed codes per column with counts, MCV first.
         let mut codes: Vec<Vec<u16>> = Vec::with_capacity(width);
         for c in 0..width {
             let mut tally: std::collections::BTreeMap<u16, u64> = Default::default();
-            for (row, n) in ct.iter() {
-                *tally.entry(row[c]).or_insert(0) += n;
+            for (r, &n) in ct.counts.iter().enumerate() {
+                *tally.entry(matrix[r * width + c]).or_insert(0) += n;
             }
             let mut pairs: Vec<(u16, u64)> = tally.into_iter().collect();
             pairs.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
@@ -74,12 +77,15 @@ impl AdTree {
         }
         let idx: Vec<usize> = (0..ct.len()).collect();
         let mut nodes = 0usize;
-        let root = Self::build_node(ct, &codes, &idx, 0, &cfg, &mut nodes);
+        let root = Self::build_node(&matrix, &ct.counts, width, &codes, &idx, 0, &cfg, &mut nodes);
         AdTree { vars: ct.vars.clone(), codes, root, nodes }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn build_node(
-        ct: &CtTable,
+        matrix: &[u16],
+        row_counts: &[u64],
+        width: usize,
         codes: &[Vec<u16>],
         rows: &[usize],
         depth: usize,
@@ -87,15 +93,14 @@ impl AdTree {
         nodes: &mut usize,
     ) -> Node {
         *nodes += 1;
-        let width = ct.width();
-        let count: u64 = rows.iter().map(|&r| ct.counts[r]).sum();
+        let count: u64 = rows.iter().map(|&r| row_counts[r]).sum();
         if count < cfg.min_count && depth > 0 {
             // Leaf list: copy the sub-table rows.
             let mut data = Vec::with_capacity(rows.len() * width);
             let mut counts = Vec::with_capacity(rows.len());
             for &r in rows {
-                data.extend_from_slice(ct.row(r));
-                counts.push(ct.counts[r]);
+                data.extend_from_slice(&matrix[r * width..(r + 1) * width]);
+                counts.push(row_counts[r]);
             }
             return Node::Leaf { rows: data, counts, width };
         }
@@ -104,14 +109,14 @@ impl AdTree {
             // Partition rows by value of `col`.
             let mut by_val: Vec<Vec<usize>> = vec![Vec::new(); codes[col].len()];
             for &r in rows {
-                let v = ct.row(r)[col];
+                let v = matrix[r * width + col];
                 let slot = codes[col].iter().position(|&c| c == v).unwrap();
                 by_val[slot].push(r);
             }
             // MCV within this node = heaviest slot (not necessarily the
             // global MCV; classic ADtrees use per-node MCV).
             let mcv = (0..by_val.len())
-                .max_by_key(|&s| by_val[s].iter().map(|&r| ct.counts[r]).sum::<u64>())
+                .max_by_key(|&s| by_val[s].iter().map(|&r| row_counts[r]).sum::<u64>())
                 .unwrap_or(0);
             let mut children: Vec<Option<Box<Node>>> = Vec::with_capacity(by_val.len());
             for (slot, sub) in by_val.iter().enumerate() {
@@ -119,7 +124,9 @@ impl AdTree {
                     children.push(None);
                 } else {
                     children.push(Some(Box::new(Self::build_node(
-                        ct,
+                        matrix,
+                        row_counts,
+                        width,
                         codes,
                         sub,
                         col + 1,

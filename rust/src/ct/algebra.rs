@@ -1,13 +1,30 @@
 //! The ct-algebra operators (paper §4.1): σ selection, π projection,
 //! χ conditioning, × cross product, + addition, − subtraction, plus the
-//! `extend`/`union` helpers Algorithm 1 needs.
+//! `extend`/`union` helpers Algorithm 1 needs — implemented as **integer
+//! kernels over packed row keys** (see [`CtLayout`](super::CtLayout)):
+//!
+//! * σ / χ — one mask-AND + compare per row;
+//! * π — shift-compress each key into the kept columns' sub-layout, then a
+//!   radix-sort group-by;
+//! * × — OR of precomputed per-operand partial keys under the merged
+//!   (disjoint) layout;
+//! * + / − / ∪ — single-pass sort-merge scans over scalar `u64` keys,
+//!   matching the sort-merge cost model of §4.1.3.
+//!
+//! Operands whose layouts differ are re-encoded into the column-wise union
+//! layout first (order-preserving, linear). Any operand on the wide store —
+//! or any result whose layout would exceed 64 bits — routes through the
+//! retained row-major implementation in [`reference`](super::reference);
+//! the property tests at the bottom assert both paths are bit-identical.
 //!
 //! All operators preserve the [`CtTable`] invariants (sorted unique rows,
-//! positive counts). Binary merge operators are single-pass scans over the
-//! sorted inputs, matching the sort-merge cost model of §4.1.3.
+//! positive counts, canonical column order).
 
-use super::CtTable;
+use super::layout::radix_sort_pairs;
+use super::reference::RefTable;
+use super::{CtLayout, CtTable, RowStore};
 use crate::schema::VarId;
+use std::borrow::Cow;
 
 /// Error from [`CtTable::subtract`]: the paper defines `ct1 − ct2` only when
 /// ct2's rows are a subset of ct1's with pointwise smaller-or-equal counts.
@@ -35,7 +52,35 @@ impl std::fmt::Display for SubtractError {
 
 impl std::error::Error for SubtractError {}
 
+/// Mask/value pair for a packed selection filter, or the reason none can
+/// match.
+enum Filter {
+    /// `key & mask == want` selects the row.
+    MaskCompare { mask: u64, want: u64 },
+    /// A condition value is unrepresentable or contradictory: no row matches.
+    Never,
+}
+
 impl CtTable {
+    /// Build the mask-compare filter for `(column, value)` conditions.
+    fn filter_for(&self, cols: &[(usize, u16)]) -> Filter {
+        let mut mask = 0u64;
+        let mut want = 0u64;
+        for &(c, val) in cols {
+            let Some(enc) = self.layout.try_encode(c, val) else {
+                return Filter::Never;
+            };
+            let fmask = self.layout.field_mask(c) << self.layout.col(c).shift;
+            let fwant = enc << self.layout.col(c).shift;
+            if mask & fmask != 0 && want & fmask != fwant {
+                return Filter::Never; // two different values for one column
+            }
+            mask |= fmask;
+            want |= fwant;
+        }
+        Filter::MaskCompare { mask, want }
+    }
+
     /// σ_φ: keep rows matching all `(var, value)` conditions. Columns are
     /// unchanged. Conditions on absent variables panic (caller bug).
     pub fn select(&self, cond: &[(VarId, u16)]) -> CtTable {
@@ -43,22 +88,39 @@ impl CtTable {
             .iter()
             .map(|&(v, val)| (self.col_of(v).expect("select: unknown var"), val))
             .collect();
-        let w = self.width();
-        let mut rows = Vec::new();
-        let mut counts = Vec::new();
-        for (i, &c) in self.counts.iter().enumerate() {
-            let r = &self.rows[i * w..(i + 1) * w];
-            if cols.iter().all(|&(ci, val)| r[ci] == val) {
-                rows.extend_from_slice(r);
-                counts.push(c);
+        if cols.is_empty() {
+            return self.clone();
+        }
+        let keys = match &self.store {
+            RowStore::Packed(keys) => keys,
+            RowStore::Wide(_) => return RefTable::from(self).select(cond).to_ct(),
+        };
+        let (mask, want) = match self.filter_for(&cols) {
+            Filter::MaskCompare { mask, want } => (mask, want),
+            Filter::Never => {
+                return CtTable::empty_with_layout(self.vars.clone(), self.layout.clone())
+            }
+        };
+        let mut out_keys = Vec::new();
+        let mut out_counts = Vec::new();
+        for (i, &k) in keys.iter().enumerate() {
+            if k & mask == want {
+                out_keys.push(k);
+                out_counts.push(self.counts[i]);
             }
         }
         // Selection preserves sortedness and uniqueness.
-        CtTable { vars: self.vars.clone(), rows, counts }
+        CtTable {
+            vars: self.vars.clone(),
+            counts: out_counts,
+            layout: self.layout.clone(),
+            store: RowStore::Packed(out_keys),
+        }
     }
 
     /// π_keep: project onto a subset of columns, summing counts of rows that
-    /// collapse together (SQL GROUP BY, §4.1.1).
+    /// collapse together (SQL GROUP BY, §4.1.1). Packed path: shift-compress
+    /// every key into the kept sub-layout, radix sort, fold equal keys.
     pub fn project(&self, keep: &[VarId]) -> CtTable {
         let mut keep_sorted: Vec<VarId> = keep.to_vec();
         keep_sorted.sort_unstable();
@@ -70,9 +132,7 @@ impl CtTable {
         if cols.len() == self.width() {
             return self.clone();
         }
-        let w = self.width();
-        let nw = cols.len();
-        if nw == 0 {
+        if cols.is_empty() {
             let total: u128 = self.total();
             return if total == 0 {
                 CtTable::empty(Vec::new())
@@ -80,29 +140,96 @@ impl CtTable {
                 CtTable::scalar(u64::try_from(total).expect("count overflow"))
             };
         }
-        let mut rows = Vec::with_capacity(self.len() * nw);
-        for i in 0..self.len() {
-            let r = &self.rows[i * w..(i + 1) * w];
-            rows.extend(cols.iter().map(|&c| r[c]));
+        let keys = match &self.store {
+            RowStore::Packed(keys) => keys,
+            RowStore::Wide(_) => return RefTable::from(self).project(keep).to_ct(),
+        };
+        let sub = self.layout.sub(&cols);
+        let plans = self.layout.compress_plan(&cols, &sub);
+        let mut keyed: Vec<(u64, u64)> = Vec::with_capacity(self.len());
+        for (i, &k) in keys.iter().enumerate() {
+            keyed.push((CtLayout::apply_plan(k, &plans), self.counts[i]));
         }
-        // `cols` is increasing, so projected rows keep relative order only
-        // per-prefix; re-sort + fold via from_raw.
-        CtTable::from_raw(keep_sorted, rows, self.counts.clone())
+        radix_sort_pairs(&mut keyed, sub.total_bits());
+        let mut out_keys: Vec<u64> = Vec::with_capacity(keyed.len());
+        let mut out_counts: Vec<u64> = Vec::with_capacity(keyed.len());
+        for (k, c) in keyed {
+            if out_keys.last() == Some(&k) {
+                let li = out_counts.len() - 1;
+                out_counts[li] = out_counts[li].checked_add(c).expect("count overflow");
+            } else {
+                out_keys.push(k);
+                out_counts.push(c);
+            }
+        }
+        CtTable { vars: keep_sorted, counts: out_counts, layout: sub, store: RowStore::Packed(out_keys) }
     }
 
     /// χ_φ: conditioning = select then drop the conditioned columns
-    /// (§4.1.1: `χ_φ ct = π_rest (σ_φ ct)`).
+    /// (§4.1.1: `χ_φ ct = π_rest (σ_φ ct)`). Packed path fuses both: one
+    /// mask-compare filter plus a shift-compress — no re-sort is needed
+    /// because the dropped fields are constant across the surviving rows.
     pub fn condition(&self, cond: &[(VarId, u16)]) -> CtTable {
-        let sel = self.select(cond);
-        let drop: Vec<VarId> = cond.iter().map(|&(v, _)| v).collect();
-        let rest: Vec<VarId> = self.vars.iter().copied().filter(|v| !drop.contains(v)).collect();
-        // After fixing the dropped columns to constants, remaining rows are
-        // still unique and sorted; project() handles the general case anyway.
-        sel.project(&rest)
+        let cols: Vec<(usize, u16)> = cond
+            .iter()
+            .map(|&(v, val)| (self.col_of(v).expect("select: unknown var"), val))
+            .collect();
+        if cols.is_empty() {
+            return self.clone();
+        }
+        let keys = match &self.store {
+            RowStore::Packed(keys) => keys,
+            RowStore::Wide(_) => return RefTable::from(self).condition(cond).to_ct(),
+        };
+        let mut drop: Vec<usize> = cols.iter().map(|&(c, _)| c).collect();
+        drop.sort_unstable();
+        drop.dedup();
+        let rest_cols: Vec<usize> = (0..self.width()).filter(|c| !drop.contains(c)).collect();
+        let rest_vars: Vec<VarId> = rest_cols.iter().map(|&c| self.vars[c]).collect();
+
+        let filter = self.filter_for(&cols);
+        if rest_cols.is_empty() {
+            // Conditioned on every column: the result is nullary.
+            let total: u128 = match filter {
+                Filter::Never => 0,
+                Filter::MaskCompare { mask, want } => keys
+                    .iter()
+                    .zip(&self.counts)
+                    .filter(|(&k, _)| k & mask == want)
+                    .map(|(_, &c)| c as u128)
+                    .sum(),
+            };
+            return if total == 0 {
+                CtTable::empty(Vec::new())
+            } else {
+                CtTable::scalar(u64::try_from(total).expect("count overflow"))
+            };
+        }
+        let sub = self.layout.sub(&rest_cols);
+        let (mask, want) = match filter {
+            Filter::MaskCompare { mask, want } => (mask, want),
+            Filter::Never => return CtTable::empty_with_layout(rest_vars, sub),
+        };
+        let plans = self.layout.compress_plan(&rest_cols, &sub);
+        let mut out_keys = Vec::new();
+        let mut out_counts = Vec::new();
+        for (i, &k) in keys.iter().enumerate() {
+            if k & mask != want {
+                continue;
+            }
+            out_keys.push(CtLayout::apply_plan(k, &plans));
+            out_counts.push(self.counts[i]);
+        }
+        // Dropped fields are fixed constants over the survivors, so the
+        // compressed keys stay sorted and unique.
+        CtTable { vars: rest_vars, counts: out_counts, layout: sub, store: RowStore::Packed(out_keys) }
     }
 
     /// ×: cross product; counts multiply (§4.1.2). Variable sets must be
-    /// disjoint.
+    /// disjoint. Packed path: each operand row contributes a precomputed
+    /// partial key at its final column positions, so every output row is a
+    /// single `pa | pb` (no u16 materialization), then one radix sort puts
+    /// the interleaved columns in canonical order.
     pub fn cross(&self, other: &CtTable) -> CtTable {
         for v in &other.vars {
             assert!(self.col_of(*v).is_none(), "cross: overlapping var {v}");
@@ -116,165 +243,162 @@ impl CtTable {
             let k = if other.is_empty() { 0 } else { other.counts[0] };
             return self.scale(k);
         }
-        if let Some(out) = self.cross_packed(other) {
-            return out;
-        }
-        let mut vars = Vec::with_capacity(self.width() + other.width());
-        vars.extend_from_slice(&self.vars);
-        vars.extend_from_slice(&other.vars);
-        let mut rows = Vec::with_capacity((self.len() * other.len()) * vars.len());
-        let mut counts = Vec::with_capacity(self.len() * other.len());
-        for (ra, ca) in self.iter() {
-            for (rb, cb) in other.iter() {
-                rows.extend_from_slice(ra);
-                rows.extend_from_slice(rb);
-                counts.push(ca.checked_mul(cb).expect("count overflow in cross"));
+        if let (RowStore::Packed(ka), RowStore::Packed(kb)) = (&self.store, &other.store) {
+            // Merged column plan: (var, from_self, source column).
+            let mut merged: Vec<(VarId, bool, usize)> =
+                Vec::with_capacity(self.width() + other.width());
+            for (c, &v) in self.vars.iter().enumerate() {
+                merged.push((v, true, c));
             }
-        }
-        CtTable::from_raw(vars, rows, counts)
-    }
-
-    /// Packed cross product (§Perf): when the merged row fits 128 bits,
-    /// precompute each operand row's bit contribution at its final column
-    /// positions, so each output row is a single `pa | pb` — no u16 row
-    /// materialization, and the output is produced in sorted order by
-    /// iterating the (pre-sorted) key lists nested. Returns None when the
-    /// packed width overflows.
-    fn cross_packed(&self, other: &CtTable) -> Option<CtTable> {
-        let wa = self.width();
-        let wb = other.width();
-        let width = wa + wb;
-        // Merged column layout.
-        let mut vars: Vec<(VarId, bool, usize)> = Vec::with_capacity(width); // (var, from_a, src col)
-        for (c, &v) in self.vars.iter().enumerate() {
-            vars.push((v, true, c));
-        }
-        for (c, &v) in other.vars.iter().enumerate() {
-            vars.push((v, false, c));
-        }
-        vars.sort_unstable_by_key(|&(v, _, _)| v);
-        // Bits per merged column from observed max codes.
-        let max_of = |t: &CtTable, c: usize| {
-            (0..t.len()).map(|i| t.row(i)[c]).max().unwrap_or(0)
-        };
-        let mut bits = Vec::with_capacity(width);
-        for &(_, from_a, c) in &vars {
-            let m = if from_a { max_of(self, c) } else { max_of(other, c) };
-            bits.push(16 - (m.max(1)).leading_zeros());
-        }
-        let total_bits: u32 = bits.iter().sum();
-        if total_bits > 128 {
-            return None;
-        }
-        let mut shifts = vec![0u32; width];
-        let mut acc = 0u32;
-        for col in (0..width).rev() {
-            shifts[col] = acc;
-            acc += bits[col];
-        }
-        // Partial keys per operand row.
-        let partial = |t: &CtTable, from_a: bool| -> Vec<u128> {
-            (0..t.len())
-                .map(|i| {
-                    let row = t.row(i);
-                    let mut k = 0u128;
-                    for (col, &(_, fa, c)) in vars.iter().enumerate() {
-                        if fa == from_a {
-                            k |= (row[c] as u128) << shifts[col];
-                        }
+            for (c, &v) in other.vars.iter().enumerate() {
+                merged.push((v, false, c));
+            }
+            merged.sort_unstable_by_key(|&(v, _, _)| v);
+            let specs: Vec<(u16, bool)> = merged
+                .iter()
+                .map(|&(_, fa, c)| if fa { self.layout.spec(c) } else { other.layout.spec(c) })
+                .collect();
+            let ml = CtLayout::from_specs(&specs);
+            if ml.fits() {
+                let partial = |t: &CtTable, keys: &[u64], from_self: bool| -> Vec<u64> {
+                    keys.iter()
+                        .map(|&k| {
+                            let mut out = 0u64;
+                            for (mc, &(_, fa, c)) in merged.iter().enumerate() {
+                                if fa == from_self {
+                                    out |= t.layout.extract(c, k) << ml.col(mc).shift;
+                                }
+                            }
+                            out
+                        })
+                        .collect()
+                };
+                let pa = partial(self, ka, true);
+                let pb = partial(other, kb, false);
+                let mut keyed: Vec<(u64, u64)> = Vec::with_capacity(pa.len() * pb.len());
+                for (x, &ca) in pa.iter().zip(&self.counts) {
+                    for (y, &cb) in pb.iter().zip(&other.counts) {
+                        keyed.push((x | y, ca.checked_mul(cb).expect("count overflow in cross")));
                     }
-                    k
-                })
-                .collect()
-        };
-        let pa = partial(self, true);
-        let pb = partial(other, false);
-        // Keys ordered by (a-part, b-part); that is NOT globally sorted when
-        // columns interleave, so sort the combined keys. Rows are unique by
-        // construction (operands are unique), so no fold needed.
-        let mut keyed: Vec<(u128, u64)> = Vec::with_capacity(pa.len() * pb.len());
-        for (ka, &ca) in pa.iter().zip(&self.counts) {
-            for (kb, &cb) in pb.iter().zip(&other.counts) {
-                keyed.push((ka | kb, ca.checked_mul(cb).expect("count overflow in cross")));
+                }
+                // Interleaved columns break the nested-loop order; one radix
+                // sort restores it. Keys are unique by construction
+                // (operands are unique and fields partition), so no fold.
+                radix_sort_pairs(&mut keyed, ml.total_bits());
+                let mut keys = Vec::with_capacity(keyed.len());
+                let mut counts = Vec::with_capacity(keyed.len());
+                for (k, c) in keyed {
+                    keys.push(k);
+                    counts.push(c);
+                }
+                let vars: Vec<VarId> = merged.iter().map(|&(v, _, _)| v).collect();
+                return CtTable { vars, counts, layout: ml, store: RowStore::Packed(keys) };
             }
         }
-        keyed.sort_unstable_by_key(|&(k, _)| k);
-        let mut rows = Vec::with_capacity(keyed.len() * width);
-        let mut counts = Vec::with_capacity(keyed.len());
-        for (k, c) in keyed {
-            for col in 0..width {
-                let mask = (1u128 << bits[col]) - 1;
-                rows.push(((k >> shifts[col]) & mask) as u16);
-            }
-            counts.push(c);
-        }
-        Some(CtTable { vars: vars.iter().map(|&(v, _, _)| v).collect(), rows, counts })
+        RefTable::from(self).cross(&RefTable::from(other)).to_ct()
     }
 
     /// Multiply every count by `k` (k = 0 empties the table).
     pub fn scale(&self, k: u64) -> CtTable {
         if k == 0 {
-            return CtTable::empty(self.vars.clone());
+            return CtTable::empty_with_layout(self.vars.clone(), self.layout.clone());
         }
         let counts = self
             .counts
             .iter()
             .map(|&c| c.checked_mul(k).expect("count overflow in scale"))
             .collect();
-        CtTable { vars: self.vars.clone(), rows: self.rows.clone(), counts }
+        CtTable {
+            vars: self.vars.clone(),
+            counts,
+            layout: self.layout.clone(),
+            store: self.store.clone(),
+        }
+    }
+
+    /// Align two packed operands onto one layout. The common case — equal
+    /// (schema-derived) layouts — borrows the key slices directly; only
+    /// differing layouts pay a re-encode pass. Returns `None` when either
+    /// operand is wide or the unified layout does not fit 64 bits (callers
+    /// fall back to the row-major reference path).
+    fn aligned_keys<'a>(
+        &'a self,
+        other: &'a CtTable,
+    ) -> Option<(CtLayout, Cow<'a, [u64]>, Cow<'a, [u64]>)> {
+        let (ka, kb) = match (&self.store, &other.store) {
+            (RowStore::Packed(a), RowStore::Packed(b)) => (a, b),
+            _ => return None,
+        };
+        if self.layout == other.layout {
+            return Some((
+                self.layout.clone(),
+                Cow::Borrowed(ka.as_slice()),
+                Cow::Borrowed(kb.as_slice()),
+            ));
+        }
+        let u = self.layout.union_with(&other.layout);
+        if !u.fits() {
+            return None;
+        }
+        let ra: Vec<u64> = ka.iter().map(|&k| self.layout.reencode(&u, k)).collect();
+        let rb: Vec<u64> = kb.iter().map(|&k| other.layout.reencode(&u, k)).collect();
+        Some((u, Cow::Owned(ra), Cow::Owned(rb)))
     }
 
     /// +: count addition over identical variable sets; rows present in only
-    /// one operand keep that operand's count (§4.1.2). Sort-merge.
+    /// one operand keep that operand's count (§4.1.2). Sort-merge on scalar
+    /// keys.
     pub fn add(&self, other: &CtTable) -> CtTable {
         assert_eq!(self.vars, other.vars, "add: variable sets differ");
-        let w = self.width();
-        if w == 0 {
+        if self.width() == 0 {
             let t = self.total() + other.total();
             return CtTable::scalar(u64::try_from(t).expect("count overflow"));
         }
-        let mut rows = Vec::with_capacity(self.rows.len() + other.rows.len());
-        let mut counts = Vec::with_capacity(self.len() + other.len());
+        let Some((layout, ka, kb)) = self.aligned_keys(other) else {
+            return RefTable::from(self).add(&RefTable::from(other)).to_ct();
+        };
+        let mut keys = Vec::with_capacity(ka.len() + kb.len());
+        let mut counts = Vec::with_capacity(ka.len() + kb.len());
         let (mut i, mut j) = (0, 0);
-        while i < self.len() || j < other.len() {
-            let ord = if i == self.len() {
+        while i < ka.len() || j < kb.len() {
+            let ord = if i == ka.len() {
                 std::cmp::Ordering::Greater
-            } else if j == other.len() {
+            } else if j == kb.len() {
                 std::cmp::Ordering::Less
             } else {
-                self.row(i).cmp(other.row(j))
+                ka[i].cmp(&kb[j])
             };
             match ord {
                 std::cmp::Ordering::Less => {
-                    rows.extend_from_slice(self.row(i));
+                    keys.push(ka[i]);
                     counts.push(self.counts[i]);
                     i += 1;
                 }
                 std::cmp::Ordering::Greater => {
-                    rows.extend_from_slice(other.row(j));
+                    keys.push(kb[j]);
                     counts.push(other.counts[j]);
                     j += 1;
                 }
                 std::cmp::Ordering::Equal => {
-                    rows.extend_from_slice(self.row(i));
+                    keys.push(ka[i]);
                     counts.push(self.counts[i].checked_add(other.counts[j]).expect("overflow"));
                     i += 1;
                     j += 1;
                 }
             }
         }
-        CtTable { vars: self.vars.clone(), rows, counts }
+        CtTable { vars: self.vars.clone(), counts, layout, store: RowStore::Packed(keys) }
     }
 
     /// −: count subtraction (§4.1.2). Defined only when `other`'s rows ⊆
     /// `self`'s rows with pointwise `count_other <= count_self`; rows whose
-    /// difference is zero are omitted from the result. Sort-merge.
+    /// difference is zero are omitted from the result. Sort-merge on scalar
+    /// keys.
     pub fn subtract(&self, other: &CtTable) -> Result<CtTable, SubtractError> {
         if self.vars != other.vars {
             return Err(SubtractError::VarMismatch);
         }
-        let w = self.width();
-        if w == 0 {
+        if self.width() == 0 {
             let (a, b) = (self.total(), other.total());
             if b > a {
                 return Err(SubtractError::CountUnderflow {
@@ -286,31 +410,36 @@ impl CtTable {
             let d = (a - b) as u64;
             return Ok(if d == 0 { CtTable::empty(vec![]) } else { CtTable::scalar(d) });
         }
-        let mut rows = Vec::with_capacity(self.rows.len());
-        let mut counts = Vec::with_capacity(self.len());
+        let Some((layout, ka, kb)) = self.aligned_keys(other) else {
+            return RefTable::from(self)
+                .subtract(&RefTable::from(other))
+                .map(|r| r.to_ct());
+        };
+        let mut keys = Vec::with_capacity(ka.len());
+        let mut counts = Vec::with_capacity(ka.len());
         let (mut i, mut j) = (0, 0);
-        while i < self.len() {
-            if j < other.len() {
-                match self.row(i).cmp(other.row(j)) {
+        while i < ka.len() {
+            if j < kb.len() {
+                match ka[i].cmp(&kb[j]) {
                     std::cmp::Ordering::Less => {
-                        rows.extend_from_slice(self.row(i));
+                        keys.push(ka[i]);
                         counts.push(self.counts[i]);
                         i += 1;
                     }
                     std::cmp::Ordering::Greater => {
-                        return Err(SubtractError::MissingRow(other.row(j).to_vec()));
+                        return Err(SubtractError::MissingRow(layout.unpack(kb[j])));
                     }
                     std::cmp::Ordering::Equal => {
                         let (a, b) = (self.counts[i], other.counts[j]);
                         if b > a {
                             return Err(SubtractError::CountUnderflow {
-                                row: self.row(i).to_vec(),
+                                row: layout.unpack(ka[i]),
                                 have: a,
                                 sub: b,
                             });
                         }
                         if a > b {
-                            rows.extend_from_slice(self.row(i));
+                            keys.push(ka[i]);
                             counts.push(a - b);
                         }
                         i += 1;
@@ -318,78 +447,99 @@ impl CtTable {
                     }
                 }
             } else {
-                rows.extend_from_slice(self.row(i));
+                keys.push(ka[i]);
                 counts.push(self.counts[i]);
                 i += 1;
             }
         }
-        if j < other.len() {
-            return Err(SubtractError::MissingRow(other.row(j).to_vec()));
+        if j < kb.len() {
+            return Err(SubtractError::MissingRow(layout.unpack(kb[j])));
         }
-        Ok(CtTable { vars: self.vars.clone(), rows, counts })
+        Ok(CtTable { vars: self.vars.clone(), counts, layout, store: RowStore::Packed(keys) })
     }
 
     /// Extend with constant columns (Algorithm 1 lines 2-3: tag a partial
     /// table with `R = T/F` and `2Atts = n/a`). New vars must not already be
-    /// present. Inserting constant columns preserves row order.
+    /// present. Packed path: every key gains the same constant fields, so
+    /// row order is preserved and the rewrite is one shift-OR pass.
     pub fn extend_const(&self, consts: &[(VarId, u16)]) -> CtTable {
         if consts.is_empty() {
             return self.clone();
         }
-        let mut merged: Vec<(VarId, Option<u16>)> =
-            self.vars.iter().map(|&v| (v, None)).collect();
-        for &(v, val) in consts {
+        for &(v, _) in consts {
             assert!(self.col_of(v).is_none(), "extend_const: var {v} already present");
-            merged.push((v, Some(val)));
         }
-        merged.sort_unstable_by_key(|&(v, _)| v);
-        let vars: Vec<VarId> = merged.iter().map(|&(v, _)| v).collect();
-        debug_assert!(vars.windows(2).all(|w| w[0] < w[1]));
-        let w = self.width();
-        let nw = vars.len();
-        // Special case: extending an *empty-width* table (scalar) — each
-        // count row becomes the constant row.
-        if w == 0 {
-            if self.is_empty() {
-                return CtTable::empty(vars);
+        if let RowStore::Packed(keys) = &self.store {
+            use crate::schema::NA;
+            // Merged column plan: source column or constant value.
+            #[derive(Clone, Copy)]
+            enum Entry {
+                Src(usize),
+                Const(u16),
             }
-            let rows: Vec<u16> = merged.iter().map(|&(_, c)| c.unwrap()).collect();
-            return CtTable { vars, rows, counts: self.counts.clone() };
-        }
-        // §Perf: copy contiguous source segments between constant inserts
-        // instead of a per-column match (the pivot extends multi-million-row
-        // tables twice per chain).
-        #[derive(Clone, Copy)]
-        enum Piece {
-            Src { start: usize, len: usize },
-            Const(u16),
-        }
-        let mut pieces: Vec<Piece> = Vec::new();
-        let mut src = 0usize;
-        for &(_, c) in &merged {
-            match c {
-                Some(val) => pieces.push(Piece::Const(val)),
-                None => {
-                    if let Some(Piece::Src { len, .. }) = pieces.last_mut() {
-                        *len += 1;
-                    } else {
-                        pieces.push(Piece::Src { start: src, len: 1 });
+            let mut merged: Vec<(VarId, Entry)> =
+                self.vars.iter().enumerate().map(|(c, &v)| (v, Entry::Src(c))).collect();
+            for &(v, val) in consts {
+                merged.push((v, Entry::Const(val)));
+            }
+            merged.sort_unstable_by_key(|&(v, _)| v);
+            let vars: Vec<VarId> = merged.iter().map(|&(v, _)| v).collect();
+            debug_assert!(vars.windows(2).all(|w| w[0] < w[1]));
+            let specs: Vec<(u16, bool)> = merged
+                .iter()
+                .map(|&(_, e)| match e {
+                    Entry::Src(c) => self.layout.spec(c),
+                    Entry::Const(val) => {
+                        if val == NA {
+                            (1, true)
+                        } else {
+                            (val + 1, false)
+                        }
                     }
-                    src += 1;
+                })
+                .collect();
+            let nl = CtLayout::from_specs(&specs);
+            if nl.fits() {
+                let mut const_bits = 0u64;
+                let mut plans: Vec<(u32, u64, u32)> = Vec::new();
+                for (out_c, &(_, e)) in merged.iter().enumerate() {
+                    match e {
+                        Entry::Const(val) => {
+                            const_bits |= nl.encode(out_c, val) << nl.col(out_c).shift;
+                        }
+                        Entry::Src(c) => plans.push((
+                            self.layout.col(c).shift,
+                            self.layout.field_mask(c),
+                            nl.col(out_c).shift,
+                        )),
+                    }
                 }
+                if self.width() == 0 {
+                    // Extending a scalar: each count row becomes the
+                    // constant row.
+                    if self.is_empty() {
+                        return CtTable::empty_with_layout(vars, nl);
+                    }
+                    return CtTable {
+                        vars,
+                        counts: self.counts.clone(),
+                        layout: nl,
+                        store: RowStore::Packed(vec![const_bits]),
+                    };
+                }
+                let out_keys: Vec<u64> = keys
+                    .iter()
+                    .map(|&k| const_bits | CtLayout::apply_plan(k, &plans))
+                    .collect();
+                return CtTable {
+                    vars,
+                    counts: self.counts.clone(),
+                    layout: nl,
+                    store: RowStore::Packed(out_keys),
+                };
             }
         }
-        let mut rows = Vec::with_capacity(self.len() * nw);
-        for i in 0..self.len() {
-            let r = self.row(i);
-            for &p in &pieces {
-                match p {
-                    Piece::Const(val) => rows.push(val),
-                    Piece::Src { start, len } => rows.extend_from_slice(&r[start..start + len]),
-                }
-            }
-        }
-        CtTable { vars, rows, counts: self.counts.clone() }
+        RefTable::from(self).extend_const(consts).to_ct()
     }
 
     /// ∪ of two tables over the same variables whose row sets are disjoint
@@ -397,8 +547,7 @@ impl CtTable {
     /// column differs). Single merge pass; panics on a shared row.
     pub fn union_disjoint(&self, other: &CtTable) -> CtTable {
         assert_eq!(self.vars, other.vars, "union: variable sets differ");
-        let w = self.width();
-        if w == 0 {
+        if self.width() == 0 {
             assert!(
                 self.is_empty() || other.is_empty(),
                 "union_disjoint: two nullary rows always collide"
@@ -410,38 +559,42 @@ impl CtTable {
                 CtTable::scalar(u64::try_from(t).unwrap())
             };
         }
-        let mut rows = Vec::with_capacity(self.rows.len() + other.rows.len());
-        let mut counts = Vec::with_capacity(self.len() + other.len());
+        let Some((layout, ka, kb)) = self.aligned_keys(other) else {
+            return RefTable::from(self).union_disjoint(&RefTable::from(other)).to_ct();
+        };
+        let mut keys = Vec::with_capacity(ka.len() + kb.len());
+        let mut counts = Vec::with_capacity(ka.len() + kb.len());
         let (mut i, mut j) = (0, 0);
-        while i < self.len() || j < other.len() {
-            let take_left = if i == self.len() {
+        while i < ka.len() || j < kb.len() {
+            let take_left = if i == ka.len() {
                 false
-            } else if j == other.len() {
+            } else if j == kb.len() {
                 true
             } else {
-                match self.row(i).cmp(other.row(j)) {
+                match ka[i].cmp(&kb[j]) {
                     std::cmp::Ordering::Less => true,
                     std::cmp::Ordering::Greater => false,
                     std::cmp::Ordering::Equal => panic!("union_disjoint: shared row"),
                 }
             };
             if take_left {
-                rows.extend_from_slice(self.row(i));
+                keys.push(ka[i]);
                 counts.push(self.counts[i]);
                 i += 1;
             } else {
-                rows.extend_from_slice(other.row(j));
+                keys.push(kb[j]);
                 counts.push(other.counts[j]);
                 j += 1;
             }
         }
-        CtTable { vars: self.vars.clone(), rows, counts }
+        CtTable { vars: self.vars.clone(), counts, layout, store: RowStore::Packed(keys) }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::schema::NA;
     use crate::util::proptest::run_prop;
     use crate::util::Pcg64;
 
@@ -453,6 +606,25 @@ mod tests {
         for _ in 0..n {
             for &a in arities {
                 rows.push(rng.below(a as u64) as u16);
+            }
+            counts.push(rng.below(20) + 1);
+        }
+        CtTable::from_raw(vars.to_vec(), rows, counts)
+    }
+
+    /// Random ct-table that also draws the NA sentinel on some columns
+    /// (odd column indices), exercising the n/a remap inside the codec.
+    fn random_ct_na(rng: &mut Pcg64, vars: &[VarId], arities: &[u16]) -> CtTable {
+        let n = rng.index(12) + 1;
+        let mut rows = Vec::new();
+        let mut counts = Vec::new();
+        for _ in 0..n {
+            for (c, &a) in arities.iter().enumerate() {
+                if c % 2 == 1 && rng.chance(0.3) {
+                    rows.push(NA);
+                } else {
+                    rows.push(rng.below(a as u64) as u16);
+                }
             }
             counts.push(rng.below(20) + 1);
         }
@@ -471,6 +643,17 @@ mod tests {
         assert_eq!(s.count_of(&[0, 1]), 11);
         assert_eq!(s.count_of(&[1, 1]), 13);
         s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn select_unrepresentable_value_matches_nothing() {
+        let t = CtTable::from_raw(vec![1, 3], vec![0, 0, 1, 1], vec![1, 2]);
+        assert!(t.select(&[(1, 9)]).is_empty());
+        assert!(t.select(&[(1, NA)]).is_empty());
+        // Contradictory conditions on one column match nothing.
+        assert!(t.select(&[(1, 0), (1, 1)]).is_empty());
+        // ... but a repeated identical condition is fine.
+        assert_eq!(t.select(&[(1, 0), (1, 0)]).len(), 1);
     }
 
     #[test]
@@ -506,6 +689,16 @@ mod tests {
         assert_eq!(c.vars, vec![1]);
         assert_eq!(c.count_of(&[0]), 10);
         assert_eq!(c.count_of(&[1]), 12);
+    }
+
+    #[test]
+    fn condition_on_all_columns_gives_scalar() {
+        let t = CtTable::from_raw(vec![1, 3], vec![0, 0, 1, 1], vec![4, 5]);
+        let c = t.condition(&[(1, 1), (3, 1)]);
+        assert_eq!(c.width(), 0);
+        assert_eq!(c.total(), 5);
+        let miss = t.condition(&[(1, 0), (3, 1)]);
+        assert!(miss.is_empty());
     }
 
     #[test]
@@ -561,12 +754,33 @@ mod tests {
     }
 
     #[test]
+    fn subtract_error_rows_decode() {
+        // The row carried inside the error must be decoded codes (incl. NA),
+        // not raw packed fields.
+        let a = CtTable::from_raw(vec![1], vec![0], vec![5]);
+        let m = CtTable::from_raw(vec![1], vec![NA], vec![1]);
+        match a.subtract(&m) {
+            Err(SubtractError::MissingRow(r)) => assert_eq!(r, vec![NA]),
+            other => panic!("expected MissingRow, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn extend_const_inserts_sorted() {
         let t = CtTable::from_raw(vec![2], vec![0, 1], vec![4, 6]);
         let e = t.extend_const(&[(0, 9), (5, 1)]);
         assert_eq!(e.vars, vec![0, 2, 5]);
         assert_eq!(e.count_of(&[9, 0, 1]), 4);
         assert_eq!(e.count_of(&[9, 1, 1]), 6);
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn extend_const_with_na() {
+        let t = CtTable::from_raw(vec![2], vec![0, 1], vec![4, 6]);
+        let e = t.extend_const(&[(3, NA)]);
+        assert_eq!(e.count_of(&[0, NA]), 4);
+        assert_eq!(e.count_of(&[1, NA]), 6);
         e.check_invariants().unwrap();
     }
 
@@ -696,5 +910,184 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    // ---------- packed vs row-major reference equivalence ----------
+
+    /// Compare a packed-path result against the reference row-major result;
+    /// also check every invariant on the packed side.
+    fn expect_same(got: &CtTable, want: &RefTable, what: &str) -> Result<(), String> {
+        got.check_invariants().map_err(|e| format!("{what}: invariant broken: {e}"))?;
+        if got != &want.to_ct() {
+            return Err(format!("{what}: packed != reference\n got {got:?}\nwant {want:?}"));
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn prop_unary_ops_match_reference() {
+        run_prop(
+            "unary_ops_match_reference",
+            250,
+            0x5EED_01,
+            |r| random_ct_na(r, &[0, 2, 5], &[3, 4, 2]),
+            |t| {
+                let rt = RefTable::from(t);
+                expect_same(&t.select(&[(2, 1)]), &rt.select(&[(2, 1)]), "select")?;
+                expect_same(&t.select(&[(2, NA)]), &rt.select(&[(2, NA)]), "select NA")?;
+                for keep in [vec![0], vec![2], vec![0, 5], vec![2, 5], vec![]] {
+                    expect_same(&t.project(&keep), &rt.project(&keep), "project")?;
+                }
+                for cond in [vec![(2usize, 0u16)], vec![(0, 1), (5, 1)], vec![(2, NA)]] {
+                    expect_same(&t.condition(&cond), &rt.condition(&cond), "condition")?;
+                }
+                expect_same(
+                    &t.extend_const(&[(1, 3), (7, NA)]),
+                    &rt.extend_const(&[(1, 3), (7, NA)]),
+                    "extend_const",
+                )?;
+                expect_same(&t.scale(3), &rt.scale(3), "scale")?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_binary_ops_match_reference() {
+        run_prop(
+            "binary_ops_match_reference",
+            250,
+            0x5EED_02,
+            |r| {
+                (
+                    random_ct_na(r, &[1, 4], &[3, 3]),
+                    random_ct_na(r, &[1, 4], &[3, 3]),
+                )
+            },
+            |(a, b)| {
+                let (ra, rb) = (RefTable::from(a), RefTable::from(b));
+                expect_same(&a.add(b), &ra.add(&rb), "add")?;
+                let sum = a.add(b);
+                let rsum = ra.add(&rb);
+                expect_same(
+                    &sum.subtract(b).map_err(|e| e.to_string())?,
+                    &rsum.subtract(&rb).map_err(|e| e.to_string())?,
+                    "subtract",
+                )?;
+                // cross needs disjoint vars; shift b's projection's VarIds.
+                let b_shifted = rename_vars(&b.project(&[4]), 100);
+                let got = a.cross(&b_shifted);
+                let want = ra.cross(&RefTable::from(&b_shifted));
+                expect_same(&got, &want, "cross")?;
+                Ok(())
+            },
+        );
+    }
+
+    /// Test helper: shift vars to make two tables disjoint for cross.
+    fn rename_vars(t: &CtTable, by: usize) -> CtTable {
+        let mut t = t.clone();
+        t.vars = t.vars.iter().map(|v| v + by).collect();
+        t
+    }
+
+    #[test]
+    fn prop_union_disjoint_matches_reference() {
+        run_prop(
+            "union_matches_reference",
+            200,
+            0x5EED_03,
+            |r| random_ct_na(r, &[1, 4], &[3, 4]),
+            |t| {
+                if t.len() < 2 {
+                    return Ok(());
+                }
+                // Split rows into two disjoint halves by index.
+                let rt = RefTable::from(t);
+                let (mut ar, mut ac, mut br, mut bc) = (vec![], vec![], vec![], vec![]);
+                for i in 0..rt.len() {
+                    if i % 2 == 0 {
+                        ar.extend_from_slice(rt.row(i));
+                        ac.push(rt.counts[i]);
+                    } else {
+                        br.extend_from_slice(rt.row(i));
+                        bc.push(rt.counts[i]);
+                    }
+                }
+                let ra = RefTable { vars: rt.vars.clone(), rows: ar, counts: ac };
+                let rb = RefTable { vars: rt.vars.clone(), rows: br, counts: bc };
+                let got = ra.to_ct().union_disjoint(&rb.to_ct());
+                expect_same(&got, &ra.union_disjoint(&rb), "union_disjoint")?;
+                if &got != t {
+                    return Err("union of halves != whole".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_wide_storage_matches_packed() {
+        // The same logical table, forced onto the wide store, must give the
+        // same operator results (wide ops run the reference path).
+        run_prop(
+            "wide_matches_packed",
+            150,
+            0x5EED_04,
+            |r| random_ct_na(r, &[0, 3, 6], &[4, 3, 2]),
+            |t| {
+                let rt = RefTable::from(t);
+                let wide = CtTable::from_parts_wide_unchecked(
+                    rt.vars.clone(),
+                    rt.rows.clone(),
+                    rt.counts.clone(),
+                );
+                if t.is_packed() == wide.is_packed() {
+                    return Err("expected differing storage".into());
+                }
+                for keep in [vec![0], vec![3, 6]] {
+                    if t.project(&keep) != wide.project(&keep) {
+                        return Err("project differs across storage".into());
+                    }
+                }
+                if t.select(&[(3, 1)]) != wide.select(&[(3, 1)]) {
+                    return Err("select differs across storage".into());
+                }
+                // Mixed-storage merge falls back to the reference path.
+                if t.add(&wide) != t.add(t) {
+                    return Err("mixed-storage add differs".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn packed_ops_on_wide_tables_fall_back() {
+        // 40 two-bit columns: 80-bit layout, wide store throughout.
+        let width = 40usize;
+        let vars: Vec<VarId> = (0..width).collect();
+        let mut rows = Vec::new();
+        let mut counts = Vec::new();
+        let mut rng = Pcg64::seeded(77);
+        for _ in 0..20 {
+            for _ in 0..width {
+                rows.push(rng.below(3) as u16);
+            }
+            counts.push(rng.below(9) + 1);
+        }
+        let t = CtTable::from_raw(vars.clone(), rows, counts);
+        assert!(!t.is_packed());
+        let p = t.project(&vars[..2]);
+        assert_eq!(p.total(), t.total());
+        p.check_invariants().unwrap();
+        let s = t.select(&[(0, 1)]);
+        s.check_invariants().unwrap();
+        let sum = t.add(&t);
+        assert_eq!(sum.total(), 2 * t.total());
+        assert_eq!(sum.subtract(&t).unwrap(), t);
+        let e = t.extend_const(&[(100, 1)]);
+        assert_eq!(e.width(), width + 1);
+        e.check_invariants().unwrap();
     }
 }

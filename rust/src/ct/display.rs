@@ -13,9 +13,8 @@ pub fn render_ct(ct: &CtTable, schema: &Schema, limit: usize) -> String {
     let n = if limit == 0 { ct.len() } else { ct.len().min(limit) };
     for i in 0..n {
         let mut cells = vec![ct.counts[i].to_string()];
-        cells.extend(
-            ct.row(i).iter().zip(&ct.vars).map(|(&code, &v)| schema.value_name(v, code)),
-        );
+        let row = ct.row(i);
+        cells.extend(row.iter().zip(&ct.vars).map(|(&code, &v)| schema.value_name(v, code)));
         t.row(cells);
     }
     let mut s = t.render();

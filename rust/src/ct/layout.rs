@@ -1,0 +1,446 @@
+//! `CtLayout` — the schema-driven bit-packing codec behind [`CtTable`].
+//!
+//! Every contingency-table column gets a fixed-width bit field sized from
+//! its value cardinality; a whole row then packs into a single `u64` key
+//! (spilling to the row-major wide path only when the total exceeds 64
+//! bits). Fields are assigned most-significant-first in canonical column
+//! order, so **unsigned integer order of packed keys equals lexicographic
+//! row order** — the property every sort-merge operator relies on.
+//!
+//! The `n/a` code of relationship attributes (stored as `NA = u16::MAX` in
+//! unpacked rows, paper §2.2) is re-mapped inside the field to `cap` (one
+//! past the largest real code). Since every real code is `< cap`, the
+//! remap preserves the seed's ordering convention that n/a sorts after all
+//! real values, which keeps packed tables bit-identical to the historical
+//! row-major semantics once decoded.
+//!
+//! [`CtTable`]: super::CtTable
+
+use crate::schema::{RandomVar, Schema, VarId, NA};
+
+/// One column's slot in the packed key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ColLayout {
+    /// Exclusive upper bound on *real* codes (real codes are `0..cap`).
+    pub cap: u16,
+    /// Whether the column can hold the `NA` sentinel (encoded as `cap`).
+    pub na: bool,
+    /// Field width in bits (≥ 1).
+    pub bits: u32,
+    /// Left shift of the field within the key (MSB-first assignment).
+    pub shift: u32,
+}
+
+impl ColLayout {
+    /// Largest encoded field value this column can produce.
+    fn enc_max(cap: u16, na: bool) -> u32 {
+        if na {
+            cap as u32
+        } else {
+            (cap as u32).saturating_sub(1)
+        }
+    }
+}
+
+/// Packing layout for one canonical column order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CtLayout {
+    cols: Vec<ColLayout>,
+    total_bits: u32,
+}
+
+impl CtLayout {
+    /// Build from `(cap, na)` specs in column order.
+    pub fn from_specs(specs: &[(u16, bool)]) -> CtLayout {
+        let mut cols: Vec<ColLayout> = specs
+            .iter()
+            .map(|&(cap, na)| {
+                let cap = cap.max(1);
+                let bits = (32 - ColLayout::enc_max(cap, na).leading_zeros()).max(1);
+                ColLayout { cap, na, bits, shift: 0 }
+            })
+            .collect();
+        let total_bits: u32 = cols.iter().map(|c| c.bits).sum();
+        // MSB-first: column 0 occupies the highest bits.
+        let mut acc = total_bits;
+        for c in cols.iter_mut() {
+            acc -= c.bits;
+            c.shift = acc;
+        }
+        CtLayout { cols, total_bits }
+    }
+
+    /// Schema-driven layout for a canonical (sorted) variable set: caps come
+    /// from attribute cardinalities, so tables built anywhere in the system
+    /// over the same variables share one layout and merge without
+    /// re-encoding.
+    pub fn for_vars(schema: &Schema, vars: &[VarId]) -> CtLayout {
+        let specs: Vec<(u16, bool)> = vars
+            .iter()
+            .map(|&v| match schema.random_vars[v] {
+                RandomVar::EntityAttr { attr, .. } => {
+                    (schema.attributes[attr].arity() as u16, false)
+                }
+                RandomVar::RelAttr { attr, .. } => (schema.attributes[attr].arity() as u16, true),
+                RandomVar::RelInd { .. } => (2, false),
+            })
+            .collect();
+        CtLayout::from_specs(&specs)
+    }
+
+    /// Observe `(cap, na)` specs from row-major data, reading input column
+    /// `col_of(out_col)` for each output column (identity for pre-permuted
+    /// data). Used by the schema-less [`CtTable::from_raw`] constructor.
+    ///
+    /// [`CtTable::from_raw`]: super::CtTable::from_raw
+    pub fn observe(
+        width: usize,
+        n_rows: usize,
+        rows: &[u16],
+        col_of: impl Fn(usize) -> usize,
+    ) -> CtLayout {
+        let mut specs = vec![(1u16, false); width];
+        for r in 0..n_rows {
+            let row = &rows[r * width..(r + 1) * width];
+            for (out_col, spec) in specs.iter_mut().enumerate() {
+                let code = row[col_of(out_col)];
+                if code == NA {
+                    spec.1 = true;
+                } else if code >= spec.0 {
+                    spec.0 = code + 1;
+                }
+            }
+        }
+        CtLayout::from_specs(&specs)
+    }
+
+    pub fn width(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn total_bits(&self) -> u32 {
+        self.total_bits
+    }
+
+    /// Whether a whole row fits one `u64` key.
+    pub fn fits(&self) -> bool {
+        self.total_bits <= 64
+    }
+
+    pub fn col(&self, c: usize) -> &ColLayout {
+        &self.cols[c]
+    }
+
+    /// `(cap, na)` spec of one column.
+    pub fn spec(&self, c: usize) -> (u16, bool) {
+        (self.cols[c].cap, self.cols[c].na)
+    }
+
+    /// Mask of one column's field (before shifting).
+    #[inline]
+    pub fn field_mask(&self, c: usize) -> u64 {
+        (1u64 << self.cols[c].bits) - 1
+    }
+
+    /// Encode one code into its field value. Caller guarantees validity
+    /// (checked in debug builds).
+    #[inline]
+    pub fn encode(&self, c: usize, code: u16) -> u64 {
+        let col = &self.cols[c];
+        if code == NA {
+            debug_assert!(col.na, "NA code in a column without n/a support");
+            col.cap as u64
+        } else {
+            debug_assert!(code < col.cap, "code {code} out of range (cap {})", col.cap);
+            code as u64
+        }
+    }
+
+    /// Encode a code if it is representable; `None` means no stored row can
+    /// match it (selection conditions use this to answer "empty").
+    #[inline]
+    pub fn try_encode(&self, c: usize, code: u16) -> Option<u64> {
+        let col = &self.cols[c];
+        if code == NA {
+            col.na.then_some(col.cap as u64)
+        } else if code < col.cap {
+            Some(code as u64)
+        } else {
+            None
+        }
+    }
+
+    /// Decode one raw field value back to a `u16` code.
+    #[inline]
+    pub fn decode(&self, c: usize, field: u64) -> u16 {
+        let col = &self.cols[c];
+        if col.na && field == col.cap as u64 {
+            NA
+        } else {
+            field as u16
+        }
+    }
+
+    /// Extract the raw field value of column `c` from a packed key.
+    #[inline]
+    pub fn extract(&self, c: usize, key: u64) -> u64 {
+        (key >> self.cols[c].shift) & self.field_mask(c)
+    }
+
+    /// Decode column `c` of a packed key to its `u16` code.
+    #[inline]
+    pub fn decode_field(&self, c: usize, key: u64) -> u16 {
+        self.decode(c, self.extract(c, key))
+    }
+
+    /// Pack a full row (codes in layout column order).
+    #[inline]
+    pub fn pack(&self, row: &[u16]) -> u64 {
+        debug_assert_eq!(row.len(), self.cols.len());
+        let mut key = 0u64;
+        for (c, &code) in row.iter().enumerate() {
+            key |= self.encode(c, code) << self.cols[c].shift;
+        }
+        key
+    }
+
+    /// Pack a row if every code is representable.
+    pub fn try_pack(&self, row: &[u16]) -> Option<u64> {
+        debug_assert_eq!(row.len(), self.cols.len());
+        let mut key = 0u64;
+        for (c, &code) in row.iter().enumerate() {
+            key |= self.try_encode(c, code)? << self.cols[c].shift;
+        }
+        Some(key)
+    }
+
+    /// Append the decoded row of `key` to `out`.
+    pub fn unpack_into(&self, key: u64, out: &mut Vec<u16>) {
+        for c in 0..self.cols.len() {
+            out.push(self.decode_field(c, key));
+        }
+    }
+
+    /// Decoded row of `key` as a fresh vector.
+    pub fn unpack(&self, key: u64) -> Vec<u16> {
+        let mut out = Vec::with_capacity(self.cols.len());
+        self.unpack_into(key, &mut out);
+        out
+    }
+
+    /// Column-wise least upper bound of two layouts over the same variable
+    /// set: both sides' keys re-encode into the result losslessly and
+    /// order-preservingly.
+    pub fn union_with(&self, other: &CtLayout) -> CtLayout {
+        debug_assert_eq!(self.width(), other.width());
+        let specs: Vec<(u16, bool)> = self
+            .cols
+            .iter()
+            .zip(&other.cols)
+            .map(|(a, b)| (a.cap.max(b.cap), a.na || b.na))
+            .collect();
+        CtLayout::from_specs(&specs)
+    }
+
+    /// Sub-layout over a subset of columns (indices ascending).
+    pub fn sub(&self, keep: &[usize]) -> CtLayout {
+        let specs: Vec<(u16, bool)> = keep.iter().map(|&c| self.spec(c)).collect();
+        CtLayout::from_specs(&specs)
+    }
+
+    /// Shift-compress plan mapping source columns `cols` (ascending) onto
+    /// `target` (whose column `i` is `cols[i]`): one
+    /// `(source shift, field mask, destination shift)` triple per kept
+    /// column. Specs must match pairwise so raw field values carry over
+    /// without decode — true for [`sub`]-derived targets.
+    ///
+    /// [`sub`]: CtLayout::sub
+    pub fn compress_plan(&self, cols: &[usize], target: &CtLayout) -> Vec<(u32, u64, u32)> {
+        debug_assert_eq!(cols.len(), target.width());
+        cols.iter()
+            .enumerate()
+            .map(|(out_c, &src_c)| {
+                debug_assert_eq!(self.spec(src_c), target.spec(out_c));
+                (self.cols[src_c].shift, self.field_mask(src_c), target.cols[out_c].shift)
+            })
+            .collect()
+    }
+
+    /// Apply a [`compress_plan`]: extract each planned field from `key` and
+    /// place it at its destination shift. The single shift-compress kernel
+    /// shared by π projection, fused χ conditioning, and `extend_const`.
+    ///
+    /// [`compress_plan`]: CtLayout::compress_plan
+    #[inline]
+    pub fn apply_plan(key: u64, plans: &[(u32, u64, u32)]) -> u64 {
+        let mut out = 0u64;
+        for &(ss, m, ds) in plans {
+            out |= ((key >> ss) & m) << ds;
+        }
+        out
+    }
+
+    /// Translate a key of `self` into `target`'s encoding (same variable
+    /// set; `target` must cover `self`, e.g. come from [`union_with`]).
+    ///
+    /// [`union_with`]: CtLayout::union_with
+    #[inline]
+    pub fn reencode(&self, target: &CtLayout, key: u64) -> u64 {
+        debug_assert_eq!(self.width(), target.width());
+        let mut out = 0u64;
+        for c in 0..self.cols.len() {
+            out |= target.encode(c, self.decode_field(c, key)) << target.cols[c].shift;
+        }
+        out
+    }
+}
+
+/// LSD radix sort of `(key, payload)` pairs by key, base 256, touching only
+/// the bytes that `key_bits` covers. Equal keys keep their relative input
+/// order (stable), which the group-by fold after projection relies on not
+/// at all — but stability comes free with counting sort.
+pub fn radix_sort_pairs(data: &mut Vec<(u64, u64)>, key_bits: u32) {
+    let n = data.len();
+    if n <= 1 {
+        return;
+    }
+    // Small inputs: comparison sort beats the bucket passes.
+    if n < 64 {
+        data.sort_unstable_by_key(|&(k, _)| k);
+        return;
+    }
+    let passes = ((key_bits + 7) / 8).max(1);
+    let mut scratch: Vec<(u64, u64)> = vec![(0, 0); n];
+    for pass in 0..passes {
+        let shift = pass * 8;
+        let mut counts = [0usize; 256];
+        for &(k, _) in data.iter() {
+            counts[((k >> shift) & 0xFF) as usize] += 1;
+        }
+        // All keys share this byte: nothing to move.
+        if counts.iter().any(|&c| c == n) {
+            continue;
+        }
+        let mut starts = [0usize; 256];
+        let mut acc = 0;
+        for (b, &c) in counts.iter().enumerate() {
+            starts[b] = acc;
+            acc += c;
+        }
+        for &(k, p) in data.iter() {
+            let b = ((k >> shift) & 0xFF) as usize;
+            scratch[starts[b]] = (k, p);
+            starts[b] += 1;
+        }
+        std::mem::swap(data, &mut scratch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn pack_unpack_roundtrip_with_na() {
+        let l = CtLayout::from_specs(&[(3, false), (4, true), (2, false)]);
+        assert_eq!(l.width(), 3);
+        // bits: 2 (max 2), 3 (max 4 = NA), 1 (max 1)
+        assert_eq!(l.total_bits(), 6);
+        assert!(l.fits());
+        for row in [[0u16, 0, 0], [2, 3, 1], [1, NA, 0]] {
+            assert_eq!(l.unpack(l.pack(&row)), row.to_vec());
+        }
+    }
+
+    #[test]
+    fn packed_order_is_lexicographic() {
+        let l = CtLayout::from_specs(&[(3, true), (5, false)]);
+        let rows: Vec<Vec<u16>> = vec![
+            vec![0, 0],
+            vec![0, 4],
+            vec![1, 0],
+            vec![2, 4],
+            vec![NA, 0], // NA sorts after every real code
+            vec![NA, 4],
+        ];
+        let keys: Vec<u64> = rows.iter().map(|r| l.pack(r)).collect();
+        for w in keys.windows(2) {
+            assert!(w[0] < w[1], "packed order broke: {keys:?}");
+        }
+    }
+
+    #[test]
+    fn try_encode_rejects_unrepresentable() {
+        let l = CtLayout::from_specs(&[(3, false)]);
+        assert_eq!(l.try_encode(0, 2), Some(2));
+        assert_eq!(l.try_encode(0, 3), None);
+        assert_eq!(l.try_encode(0, NA), None);
+        let lna = CtLayout::from_specs(&[(3, true)]);
+        assert_eq!(lna.try_encode(0, NA), Some(3));
+    }
+
+    #[test]
+    fn observe_matches_data() {
+        let rows: Vec<u16> = vec![0, 5, 2, NA, 1, 3];
+        let l = CtLayout::observe(2, 3, &rows, |c| c);
+        assert_eq!(l.spec(0), (3, false));
+        assert_eq!(l.spec(1), (6, true));
+    }
+
+    #[test]
+    fn union_covers_both_and_reencode_preserves_order() {
+        let a = CtLayout::from_specs(&[(2, false), (3, false)]);
+        let b = CtLayout::from_specs(&[(4, false), (2, true)]);
+        let u = a.union_with(&b);
+        assert_eq!(u.spec(0), (4, false));
+        assert_eq!(u.spec(1), (3, true));
+        let mut rng = Pcg64::seeded(5);
+        let mut rows: Vec<Vec<u16>> = (0..50)
+            .map(|_| vec![rng.below(2) as u16, rng.below(3) as u16])
+            .collect();
+        rows.sort_unstable();
+        let re: Vec<u64> = rows.iter().map(|r| a.reencode(&u, a.pack(r))).collect();
+        for w in re.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        for (r, &k) in rows.iter().zip(&re) {
+            assert_eq!(&u.unpack(k), r);
+        }
+    }
+
+    #[test]
+    fn sub_layout_decodes_kept_columns() {
+        let l = CtLayout::from_specs(&[(3, false), (4, true), (5, false)]);
+        let s = l.sub(&[0, 2]);
+        assert_eq!(s.width(), 2);
+        assert_eq!(s.spec(0), (3, false));
+        assert_eq!(s.spec(1), (5, false));
+    }
+
+    #[test]
+    fn radix_sort_matches_std_sort() {
+        let mut rng = Pcg64::seeded(11);
+        for n in [0usize, 1, 2, 63, 64, 1000] {
+            for bits in [8u32, 24, 64] {
+                let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+                let mut a: Vec<(u64, u64)> =
+                    (0..n).map(|i| (rng.next_u64() & mask, i as u64)).collect();
+                let mut b = a.clone();
+                radix_sort_pairs(&mut a, bits);
+                b.sort_by_key(|&(k, _)| k);
+                let ka: Vec<u64> = a.iter().map(|&(k, _)| k).collect();
+                let kb: Vec<u64> = b.iter().map(|&(k, _)| k).collect();
+                assert_eq!(ka, kb, "n={n} bits={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_layout_reports_not_fitting() {
+        let specs: Vec<(u16, bool)> = (0..40).map(|_| (4u16, false)).collect();
+        let l = CtLayout::from_specs(&specs);
+        assert_eq!(l.total_bits(), 80);
+        assert!(!l.fits());
+    }
+}

@@ -1,60 +1,154 @@
 //! Contingency tables and the ct-algebra (paper §2.2, §4.1).
 //!
 //! A contingency table `ct(V)` over a variable set `V = {V1..Vn}` has one
-//! row per value assignment with a positive count. We store it columnar-ish:
-//! a flat row-major code matrix plus a parallel count vector, with three
-//! invariants that every operation preserves:
+//! row per value assignment with a positive count, with three invariants
+//! that every operation preserves:
 //!
 //! 1. `vars` is strictly increasing (canonical column order by `VarId`);
 //! 2. rows are sorted lexicographically and unique;
 //! 3. all counts are positive (zero-count rows are omitted, paper §2.2).
 //!
-//! Sorted order is what makes the binary operations (`add`, `subtract`,
-//! `union_disjoint`) single-pass sort-merge scans, which the paper's cost
-//! analysis (§4.1.3) assumes.
+//! ## Storage: packed row keys (`CtLayout`)
+//!
+//! Rows are not stored as `u16` code slices. Each table carries a
+//! [`CtLayout`] — per-column bit widths derived from value cardinalities
+//! (schema arities where available, observed maxima otherwise) — and stores
+//! every row as **one packed `u64` key** whose unsigned order equals the
+//! lexicographic row order. The ct-algebra operators then become integer
+//! kernels:
+//!
+//! * σ `select` / χ `condition` — mask-compare filters (one AND + compare
+//!   per row instead of a `width`-cell scan);
+//! * π `project` — shift-compress into a sub-layout + radix-sort group-by;
+//! * × `cross` — a single `OR` of precomputed partial keys per output row;
+//! * `+` / `−` / `∪` — single-pass sort-merge scans over scalar keys,
+//!   exactly the cost model §4.1.3 assumes.
+//!
+//! When the packed width exceeds 64 bits the table spills to the historical
+//! row-major *wide* store and every operator falls back to the retained
+//! row-major reference path ([`reference`]) — results are bit-identical
+//! either way (asserted by the property tests in `algebra.rs`).
+//!
+//! The `n/a` sentinel (`NA = u16::MAX`) packs as `cap` (one past the
+//! largest real code) per column, preserving the convention that n/a sorts
+//! after all real values; keys decode back to `NA` losslessly.
 
 mod algebra;
 mod display;
+mod layout;
 pub mod adtree;
+pub mod reference;
 
 pub use adtree::{AdTree, AdTreeConfig};
 pub use algebra::SubtractError;
 pub use display::render_ct;
+pub use layout::{radix_sort_pairs, ColLayout, CtLayout};
 
 use crate::schema::VarId;
 
+/// Physical row storage: packed scalar keys, or the row-major wide
+/// fallback when the layout exceeds 64 bits.
+#[derive(Debug, Clone)]
+pub(crate) enum RowStore {
+    /// One `u64` key per row, sorted ascending (== lexicographic rows).
+    Packed(Vec<u64>),
+    /// Row-major `u16` codes (`NA = u16::MAX`), sorted lexicographically.
+    Wide(Vec<u16>),
+}
+
 /// A contingency table: sufficient statistics for one variable set.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Clone)]
 pub struct CtTable {
     /// Column headers, strictly increasing.
     pub vars: Vec<VarId>,
-    /// Row-major value codes; `rows.len() == vars.len() * len()`.
-    pub rows: Vec<u16>,
-    /// Per-row query counts, parallel to rows.
+    /// Per-row query counts, parallel to the rows.
     pub counts: Vec<u64>,
+    pub(crate) layout: CtLayout,
+    pub(crate) store: RowStore,
 }
 
 impl CtTable {
     /// An empty table over a variable set.
     pub fn empty(vars: Vec<VarId>) -> Self {
         debug_assert!(vars.windows(2).all(|w| w[0] < w[1]), "vars must be sorted+unique");
-        CtTable { vars, rows: Vec::new(), counts: Vec::new() }
+        let layout = CtLayout::from_specs(&vec![(1u16, false); vars.len()]);
+        // Store choice must follow the layout: 1 bit per column still
+        // exceeds 64 bits for very wide variable sets.
+        Self::empty_with_layout(vars, layout)
+    }
+
+    /// An empty table that keeps a caller-chosen layout (so later merges
+    /// with sibling tables stay re-encode-free).
+    pub(crate) fn empty_with_layout(vars: Vec<VarId>, layout: CtLayout) -> Self {
+        debug_assert_eq!(vars.len(), layout.width());
+        let store = if layout.fits() {
+            RowStore::Packed(Vec::new())
+        } else {
+            RowStore::Wide(Vec::new())
+        };
+        CtTable { vars, counts: Vec::new(), layout, store }
     }
 
     /// The nullary table with a single row of count `n` (identity for ×).
     pub fn scalar(n: u64) -> Self {
-        CtTable { vars: Vec::new(), rows: Vec::new(), counts: vec![n] }
+        CtTable {
+            vars: Vec::new(),
+            counts: vec![n],
+            layout: CtLayout::from_specs(&[]),
+            store: RowStore::Packed(Vec::new()),
+        }
+    }
+
+    /// Trusted constructor: `keys` already sorted ascending and unique,
+    /// `counts` positive, `vars` canonical, `layout.fits()`.
+    pub(crate) fn from_sorted_packed(
+        vars: Vec<VarId>,
+        layout: CtLayout,
+        keys: Vec<u64>,
+        counts: Vec<u64>,
+    ) -> Self {
+        debug_assert!(layout.fits());
+        debug_assert_eq!(keys.len(), counts.len());
+        debug_assert!(keys.windows(2).all(|w| w[0] < w[1]), "keys must be sorted+unique");
+        CtTable { vars, counts, layout, store: RowStore::Packed(keys) }
+    }
+
+    /// Trusted constructor from sorted-unique row-major codes: packs them
+    /// when the observed layout fits, else keeps the wide store.
+    pub(crate) fn from_sorted_rows(vars: Vec<VarId>, rows: Vec<u16>, counts: Vec<u64>) -> Self {
+        let width = vars.len();
+        debug_assert!(width > 0);
+        debug_assert_eq!(rows.len(), counts.len() * width);
+        let layout = CtLayout::observe(width, counts.len(), &rows, |c| c);
+        if layout.fits() {
+            // Per-column encoding is monotone, so packing preserves order.
+            let keys: Vec<u64> =
+                (0..counts.len()).map(|r| layout.pack(&rows[r * width..(r + 1) * width])).collect();
+            CtTable { vars, counts, layout, store: RowStore::Packed(keys) }
+        } else {
+            CtTable { vars, counts, layout, store: RowStore::Wide(rows) }
+        }
+    }
+
+    /// Test-only escape hatch: store arbitrary (possibly invalid) wide rows
+    /// so the invariant checker has something to catch.
+    #[cfg(test)]
+    pub(crate) fn from_parts_wide_unchecked(
+        vars: Vec<VarId>,
+        rows: Vec<u16>,
+        counts: Vec<u64>,
+    ) -> Self {
+        let layout = CtLayout::observe(vars.len(), counts.len(), &rows, |c| c);
+        CtTable { vars, counts, layout, store: RowStore::Wide(rows) }
     }
 
     /// Build from unsorted (row, count) pairs over possibly-unsorted
     /// columns: sorts columns, permutes codes, sorts rows, folds duplicates,
     /// drops zero counts. The general-purpose normalizing constructor.
     ///
-    /// Hot path (§Perf): when every column fits a small bit-width and the
-    /// packed row fits 128 bits, rows are sorted as packed `u128` keys
-    /// (single integer compare) instead of through an index/comparator
-    /// indirection — 3-6x faster on the multi-million-row tables the
-    /// Möbius Join produces.
+    /// Hot path (§Perf): with the observed layout fitting 64 bits, rows are
+    /// packed once and radix-sorted as scalar keys — no comparator
+    /// indirection, no index permutation.
     pub fn from_raw(vars: Vec<VarId>, rows: Vec<u16>, counts: Vec<u64>) -> Self {
         let width = vars.len();
         if width == 0 {
@@ -65,32 +159,77 @@ impl CtTable {
         // Sort columns into canonical order, tracking the permutation.
         let mut perm: Vec<usize> = (0..width).collect();
         perm.sort_by_key(|&i| vars[i]);
-        let mut svars: Vec<VarId> = perm.iter().map(|&i| vars[i]).collect();
-        svars.dedup();
-        assert_eq!(svars.len(), width, "duplicate column vars");
+        let svars: Vec<VarId> = perm.iter().map(|&i| vars[i]).collect();
+        assert!(svars.windows(2).all(|w| w[0] != w[1]), "duplicate column vars");
 
-        // Packed fast path: per-column bit widths from the observed max
-        // code (NA = 0xFFFF needs 16 bits and still packs).
         let n = counts.len();
-        let mut max_code = vec![0u16; width];
-        for r in 0..n {
-            let row = &rows[r * width..(r + 1) * width];
-            for (c, &v) in row.iter().enumerate() {
-                if v > max_code[c] {
-                    max_code[c] = v;
+        let layout = CtLayout::observe(width, n, &rows, |out_col| perm[out_col]);
+        if layout.fits() {
+            let mut keyed: Vec<(u64, u64)> = Vec::with_capacity(n);
+            for r in 0..n {
+                if counts[r] == 0 {
+                    continue;
+                }
+                let row = &rows[r * width..(r + 1) * width];
+                let mut key = 0u64;
+                for (out_col, &p) in perm.iter().enumerate() {
+                    key |= layout.encode(out_col, row[p]) << layout.col(out_col).shift;
+                }
+                keyed.push((key, counts[r]));
+            }
+            radix_sort_pairs(&mut keyed, layout.total_bits());
+            let mut keys: Vec<u64> = Vec::with_capacity(keyed.len());
+            let mut out_counts: Vec<u64> = Vec::with_capacity(keyed.len());
+            for (k, c) in keyed {
+                if keys.last() == Some(&k) {
+                    let li = out_counts.len() - 1;
+                    out_counts[li] = out_counts[li].checked_add(c).expect("count overflow");
+                } else {
+                    keys.push(k);
+                    out_counts.push(c);
                 }
             }
-        }
-        let bits: Vec<u32> = max_code
-            .iter()
-            .map(|&m| 16 - (m.max(1)).leading_zeros().saturating_sub(0))
-            .collect();
-        let total_bits: u32 = perm.iter().map(|&p| bits[p]).sum();
-        if total_bits <= 128 {
-            return Self::from_raw_packed(svars, &rows, &counts, &perm, &bits);
+            return CtTable { vars: svars, counts: out_counts, layout, store: RowStore::Packed(keys) };
         }
 
-        let n = counts.len();
+        // 65..128-bit tier (the seed's fast path): sort as transient u128
+        // keys — one scalar compare per row instead of a comparator walk —
+        // then decode into the wide store.
+        if layout.total_bits() <= 128 {
+            let mut keyed: Vec<(u128, u64)> = Vec::with_capacity(n);
+            for r in 0..n {
+                if counts[r] == 0 {
+                    continue;
+                }
+                let row = &rows[r * width..(r + 1) * width];
+                let mut key = 0u128;
+                for (out_col, &p) in perm.iter().enumerate() {
+                    key |= (layout.encode(out_col, row[p]) as u128) << layout.col(out_col).shift;
+                }
+                keyed.push((key, counts[r]));
+            }
+            keyed.sort_unstable_by_key(|&(k, _)| k);
+            let mut out_rows: Vec<u16> = Vec::with_capacity(keyed.len() * width);
+            let mut out_counts: Vec<u64> = Vec::with_capacity(keyed.len());
+            let mut last_key: Option<u128> = None;
+            for (key, c) in keyed {
+                if last_key == Some(key) {
+                    let li = out_counts.len() - 1;
+                    out_counts[li] = out_counts[li].checked_add(c).expect("count overflow");
+                } else {
+                    for out_col in 0..width {
+                        let mask = layout.field_mask(out_col) as u128;
+                        let v = ((key >> layout.col(out_col).shift) & mask) as u64;
+                        out_rows.push(layout.decode(out_col, v));
+                    }
+                    out_counts.push(c);
+                    last_key = Some(key);
+                }
+            }
+            return CtTable { vars: svars, counts: out_counts, layout, store: RowStore::Wide(out_rows) };
+        }
+
+        // Wide path: comparator sort over an index permutation.
         let mut idx: Vec<u32> = (0..n as u32).collect();
         let key = |r: usize| &rows[r * width..(r + 1) * width];
         let permuted_cmp = |a: usize, b: usize| {
@@ -125,57 +264,7 @@ impl CtTable {
                 out_counts.push(counts[i]);
             }
         }
-        CtTable { vars: svars, rows: out_rows, counts: out_counts }
-    }
-
-    /// Packed-key constructor (see `from_raw`). `perm` maps output column
-    /// -> input column; `bits` are per-input-column widths.
-    fn from_raw_packed(
-        svars: Vec<VarId>,
-        rows: &[u16],
-        counts: &[u64],
-        perm: &[usize],
-        bits: &[u32],
-    ) -> Self {
-        let width = perm.len();
-        let n = counts.len();
-        // Shifts per output column, most-significant first so that packed
-        // integer order == lexicographic row order.
-        let mut shifts = vec![0u32; width];
-        let mut acc = 0u32;
-        for out_col in (0..width).rev() {
-            shifts[out_col] = acc;
-            acc += bits[perm[out_col]];
-        }
-        let mut keyed: Vec<(u128, u64)> = Vec::with_capacity(n);
-        for r in 0..n {
-            if counts[r] == 0 {
-                continue;
-            }
-            let row = &rows[r * width..(r + 1) * width];
-            let mut key = 0u128;
-            for (out_col, &p) in perm.iter().enumerate() {
-                key |= (row[p] as u128) << shifts[out_col];
-            }
-            keyed.push((key, counts[r]));
-        }
-        keyed.sort_unstable_by_key(|&(k, _)| k);
-        let mut out_rows: Vec<u16> = Vec::with_capacity(keyed.len() * width);
-        let mut out_counts: Vec<u64> = Vec::with_capacity(keyed.len());
-        let mut last_key: Option<u128> = None;
-        for (key, c) in keyed {
-            if last_key == Some(key) {
-                *out_counts.last_mut().unwrap() += c;
-            } else {
-                for (out_col, &p) in perm.iter().enumerate() {
-                    let mask = (1u128 << bits[p]) - 1;
-                    out_rows.push(((key >> shifts[out_col]) & mask) as u16);
-                }
-                out_counts.push(c);
-                last_key = Some(key);
-            }
-        }
-        CtTable { vars: svars, rows: out_rows, counts: out_counts }
+        CtTable { vars: svars, counts: out_counts, layout, store: RowStore::Wide(out_rows) }
     }
 
     /// Number of rows (sufficient statistics) in the table.
@@ -192,9 +281,51 @@ impl CtTable {
         self.vars.len()
     }
 
-    /// The `i`-th row as a code slice.
-    pub fn row(&self, i: usize) -> &[u16] {
-        &self.rows[i * self.width()..(i + 1) * self.width()]
+    /// The packing layout of this table.
+    pub fn layout(&self) -> &CtLayout {
+        &self.layout
+    }
+
+    /// The packed keys, when this table uses the packed store.
+    pub fn keys(&self) -> Option<&[u64]> {
+        match &self.store {
+            RowStore::Packed(k) => Some(k),
+            RowStore::Wide(_) => None,
+        }
+    }
+
+    /// Whether rows are stored as packed `u64` keys (vs the wide fallback).
+    pub fn is_packed(&self) -> bool {
+        matches!(self.store, RowStore::Packed(_))
+    }
+
+    /// The `i`-th row, decoded to value codes.
+    pub fn row(&self, i: usize) -> Vec<u16> {
+        let w = self.width();
+        match &self.store {
+            RowStore::Packed(keys) => {
+                if w == 0 {
+                    Vec::new()
+                } else {
+                    self.layout.unpack(keys[i])
+                }
+            }
+            RowStore::Wide(rows) => rows[i * w..(i + 1) * w].to_vec(),
+        }
+    }
+
+    /// All rows decoded to a row-major code matrix (`len() * width()`).
+    pub fn decode_rows(&self) -> Vec<u16> {
+        match &self.store {
+            RowStore::Wide(rows) => rows.clone(),
+            RowStore::Packed(keys) => {
+                let mut out = Vec::with_capacity(self.len() * self.width());
+                for &k in keys {
+                    self.layout.unpack_into(k, &mut out);
+                }
+                out
+            }
+        }
     }
 
     /// Sum of all counts (total number of instantiations covered).
@@ -211,18 +342,29 @@ impl CtTable {
     /// cover all columns, in column order.
     pub fn count_of(&self, assignment: &[u16]) -> u64 {
         assert_eq!(assignment.len(), self.width());
-        let w = self.width();
-        let mut lo = 0usize;
-        let mut hi = self.len();
-        while lo < hi {
-            let mid = (lo + hi) / 2;
-            match self.rows[mid * w..(mid + 1) * w].cmp(assignment) {
-                std::cmp::Ordering::Less => lo = mid + 1,
-                std::cmp::Ordering::Greater => hi = mid,
-                std::cmp::Ordering::Equal => return self.counts[mid],
+        if self.width() == 0 {
+            return self.counts.first().copied().unwrap_or(0);
+        }
+        match &self.store {
+            RowStore::Packed(keys) => match self.layout.try_pack(assignment) {
+                None => 0,
+                Some(k) => keys.binary_search(&k).map(|i| self.counts[i]).unwrap_or(0),
+            },
+            RowStore::Wide(rows) => {
+                let w = self.width();
+                let mut lo = 0usize;
+                let mut hi = self.len();
+                while lo < hi {
+                    let mid = (lo + hi) / 2;
+                    match rows[mid * w..(mid + 1) * w].cmp(assignment) {
+                        std::cmp::Ordering::Less => lo = mid + 1,
+                        std::cmp::Ordering::Greater => hi = mid,
+                        std::cmp::Ordering::Equal => return self.counts[mid],
+                    }
+                }
+                0
             }
         }
-        0
     }
 
     /// Verify all invariants (test/debug helper).
@@ -231,20 +373,52 @@ impl CtTable {
             return Err("vars not strictly increasing".into());
         }
         let w = self.width();
+        if self.layout.width() != w {
+            return Err(format!("layout width {} != table width {w}", self.layout.width()));
+        }
         if w == 0 {
             if self.counts.len() > 1 {
                 return Err("nullary table with >1 row".into());
             }
-        } else if self.rows.len() != self.counts.len() * w {
-            return Err(format!(
-                "shape mismatch: {} codes, {} counts, width {w}",
-                self.rows.len(),
-                self.counts.len()
-            ));
-        }
-        for i in 1..self.len() {
-            if self.row(i - 1) >= self.row(i) {
-                return Err(format!("rows not sorted/unique at {i}"));
+        } else {
+            match &self.store {
+                RowStore::Packed(keys) => {
+                    if keys.len() != self.counts.len() {
+                        return Err(format!(
+                            "shape mismatch: {} keys, {} counts",
+                            keys.len(),
+                            self.counts.len()
+                        ));
+                    }
+                    if !self.layout.fits() {
+                        return Err("packed store with a >64-bit layout".into());
+                    }
+                    for i in 1..keys.len() {
+                        if keys[i - 1] >= keys[i] {
+                            return Err(format!("keys not sorted/unique at {i}"));
+                        }
+                    }
+                    if self.layout.total_bits() < 64 {
+                        let mask = !((1u64 << self.layout.total_bits()) - 1);
+                        if keys.iter().any(|&k| k & mask != 0) {
+                            return Err("key uses bits outside the layout".into());
+                        }
+                    }
+                }
+                RowStore::Wide(rows) => {
+                    if rows.len() != self.counts.len() * w {
+                        return Err(format!(
+                            "shape mismatch: {} codes, {} counts, width {w}",
+                            rows.len(),
+                            self.counts.len()
+                        ));
+                    }
+                    for i in 1..self.len() {
+                        if rows[(i - 1) * w..i * w] >= rows[i * w..(i + 1) * w] {
+                            return Err(format!("rows not sorted/unique at {i}"));
+                        }
+                    }
+                }
             }
         }
         if self.counts.iter().any(|&c| c == 0) {
@@ -253,14 +427,46 @@ impl CtTable {
         Ok(())
     }
 
-    /// Iterate `(row, count)` pairs.
-    pub fn iter(&self) -> impl Iterator<Item = (&[u16], u64)> + '_ {
+    /// Iterate `(row, count)` pairs (rows decoded per item).
+    pub fn iter(&self) -> impl Iterator<Item = (Vec<u16>, u64)> + '_ {
         (0..self.len()).map(move |i| (self.row(i), self.counts[i]))
     }
 
     /// Approximate heap footprint in bytes (for metrics/backpressure).
     pub fn mem_bytes(&self) -> usize {
-        self.rows.len() * 2 + self.counts.len() * 8 + self.vars.len() * 8
+        let store = match &self.store {
+            RowStore::Packed(keys) => keys.len() * 8,
+            RowStore::Wide(rows) => rows.len() * 2,
+        };
+        store + self.counts.len() * 8 + self.vars.len() * 8
+    }
+}
+
+impl PartialEq for CtTable {
+    /// Logical equality: same variables, rows, and counts — independent of
+    /// packed-vs-wide storage and of layout bit widths.
+    fn eq(&self, other: &Self) -> bool {
+        if self.vars != other.vars || self.counts != other.counts {
+            return false;
+        }
+        match (&self.store, &other.store) {
+            (RowStore::Packed(a), RowStore::Packed(b)) if self.layout == other.layout => a == b,
+            _ => self.decode_rows() == other.decode_rows(),
+        }
+    }
+}
+
+impl Eq for CtTable {}
+
+impl std::fmt::Debug for CtTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let rows: Vec<Vec<u16>> = (0..self.len()).map(|i| self.row(i)).collect();
+        f.debug_struct("CtTable")
+            .field("vars", &self.vars)
+            .field("rows", &rows)
+            .field("counts", &self.counts)
+            .field("packed", &self.is_packed())
+            .finish()
     }
 }
 
@@ -335,7 +541,55 @@ mod tests {
 
     #[test]
     fn invariant_checker_catches_unsorted() {
-        let bad = CtTable { vars: vec![0], rows: vec![2, 1], counts: vec![1, 1] };
+        let bad = CtTable::from_parts_wide_unchecked(vec![0], vec![2, 1], vec![1, 1]);
         assert!(bad.check_invariants().is_err());
+    }
+
+    #[test]
+    fn small_tables_use_packed_store() {
+        let t = CtTable::from_raw(vec![0, 1], vec![0, 0, 1, 1], vec![1, 2]);
+        assert!(t.is_packed());
+        assert_eq!(t.keys().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn oversized_layout_spills_to_wide() {
+        // 40 columns x 2 bits = 80 bits > 64: must use the wide store and
+        // still satisfy every invariant.
+        let width = 40usize;
+        let vars: Vec<VarId> = (0..width).collect();
+        let mut rows = Vec::new();
+        for r in 0..3u16 {
+            rows.extend(std::iter::repeat(r).take(width));
+        }
+        let t = CtTable::from_raw(vars, rows, vec![1, 2, 3]);
+        assert!(!t.is_packed());
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.row(1), vec![1u16; width]);
+        assert_eq!(t.count_of(&vec![2u16; width]), 3);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn na_codes_roundtrip_through_packing() {
+        use crate::schema::NA;
+        let t = CtTable::from_raw(vec![3, 9], vec![0, NA, 1, 2, 0, 0], vec![4, 5, 6]);
+        assert!(t.is_packed());
+        assert_eq!(t.count_of(&[0, NA]), 4);
+        assert_eq!(t.count_of(&[0, 0]), 6);
+        // NA sorts after real codes: rows (0,0) < (0,NA) < (1,2).
+        assert_eq!(t.row(0), &[0, 0]);
+        assert_eq!(t.row(1), &[0, NA]);
+        assert_eq!(t.row(2), &[1, 2]);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn logical_equality_ignores_storage() {
+        let packed = CtTable::from_raw(vec![0, 1], vec![0, 1, 1, 0], vec![2, 3]);
+        let wide = CtTable::from_parts_wide_unchecked(vec![0, 1], vec![0, 1, 1, 0], vec![2, 3]);
+        assert!(packed.is_packed());
+        assert!(!wide.is_packed());
+        assert_eq!(packed, wide);
     }
 }

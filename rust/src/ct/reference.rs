@@ -1,0 +1,473 @@
+//! The retained **row-major reference implementation** of the ct-algebra.
+//!
+//! This is the seed's `Vec<u16>`-slice semantics, kept for three jobs:
+//!
+//! 1. **oracle** — the property tests in `algebra.rs` assert the packed-key
+//!    operators are bit-identical to these implementations;
+//! 2. **wide fallback** — tables whose [`CtLayout`] exceeds 64 bits route
+//!    their operators through here (decoded rows in, sorted rows out);
+//! 3. **baseline** — `benches/bench_ctops_micro.rs` measures packed vs
+//!    row-major on identical inputs.
+//!
+//! Rows here are plain `u16` code slices with `NA = u16::MAX`, compared
+//! lexicographically; `NA` sorts after every real code by construction.
+//!
+//! [`CtLayout`]: super::CtLayout
+
+use super::{CtTable, SubtractError};
+use crate::schema::VarId;
+
+/// A row-major contingency table (the seed's storage): sorted unique rows,
+/// positive counts, canonical column order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RefTable {
+    pub vars: Vec<VarId>,
+    /// Row-major value codes; `rows.len() == vars.len() * counts.len()`.
+    pub rows: Vec<u16>,
+    pub counts: Vec<u64>,
+}
+
+impl From<&CtTable> for RefTable {
+    fn from(ct: &CtTable) -> RefTable {
+        RefTable { vars: ct.vars.clone(), rows: ct.decode_rows(), counts: ct.counts.clone() }
+    }
+}
+
+impl RefTable {
+    pub fn empty(vars: Vec<VarId>) -> RefTable {
+        RefTable { vars, rows: Vec::new(), counts: Vec::new() }
+    }
+
+    pub fn scalar(n: u64) -> RefTable {
+        RefTable { vars: Vec::new(), rows: Vec::new(), counts: vec![n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+
+    pub fn width(&self) -> usize {
+        self.vars.len()
+    }
+
+    pub fn row(&self, i: usize) -> &[u16] {
+        &self.rows[i * self.width()..(i + 1) * self.width()]
+    }
+
+    pub fn total(&self) -> u128 {
+        self.counts.iter().map(|&c| c as u128).sum()
+    }
+
+    pub fn col_of(&self, v: VarId) -> Option<usize> {
+        self.vars.binary_search(&v).ok()
+    }
+
+    /// Convert back to a (packed-if-possible) [`CtTable`].
+    pub fn to_ct(&self) -> CtTable {
+        if self.width() == 0 {
+            let total: u64 = self.counts.iter().sum();
+            return if total == 0 { CtTable::empty(Vec::new()) } else { CtTable::scalar(total) };
+        }
+        if self.is_empty() {
+            return CtTable::empty(self.vars.clone());
+        }
+        CtTable::from_sorted_rows(self.vars.clone(), self.rows.clone(), self.counts.clone())
+    }
+
+    /// Normalize unsorted (row, count) pairs over possibly-unsorted columns
+    /// (the seed's `from_raw`): sort columns, permute codes, sort rows,
+    /// fold duplicates, drop zeros.
+    pub fn from_raw(vars: Vec<VarId>, rows: Vec<u16>, counts: Vec<u64>) -> RefTable {
+        let width = vars.len();
+        if width == 0 {
+            let total: u64 = counts.iter().sum();
+            return if total == 0 { RefTable::empty(vars) } else { RefTable::scalar(total) };
+        }
+        assert_eq!(rows.len(), counts.len() * width, "rows/counts shape mismatch");
+        let mut perm: Vec<usize> = (0..width).collect();
+        perm.sort_by_key(|&i| vars[i]);
+        let svars: Vec<VarId> = perm.iter().map(|&i| vars[i]).collect();
+        assert!(svars.windows(2).all(|w| w[0] != w[1]), "duplicate column vars");
+
+        let n = counts.len();
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        let key = |r: usize| &rows[r * width..(r + 1) * width];
+        let permuted_cmp = |a: usize, b: usize| {
+            let (ka, kb) = (key(a), key(b));
+            for &p in &perm {
+                match ka[p].cmp(&kb[p]) {
+                    std::cmp::Ordering::Equal => continue,
+                    o => return o,
+                }
+            }
+            std::cmp::Ordering::Equal
+        };
+        idx.sort_unstable_by(|&a, &b| permuted_cmp(a as usize, b as usize));
+
+        let mut out_rows: Vec<u16> = Vec::with_capacity(rows.len());
+        let mut out_counts: Vec<u64> = Vec::with_capacity(n);
+        for &i in &idx {
+            let i = i as usize;
+            if counts[i] == 0 {
+                continue;
+            }
+            let is_dup = !out_counts.is_empty() && {
+                let last = &out_rows[out_rows.len() - width..];
+                (0..width).all(|c| last[c] == key(i)[perm[c]])
+            };
+            if is_dup {
+                let li = out_counts.len() - 1;
+                out_counts[li] += counts[i];
+            } else {
+                out_rows.extend(perm.iter().map(|&p| key(i)[p]));
+                out_counts.push(counts[i]);
+            }
+        }
+        RefTable { vars: svars, rows: out_rows, counts: out_counts }
+    }
+
+    /// σ_φ: keep rows matching all `(var, value)` conditions.
+    pub fn select(&self, cond: &[(VarId, u16)]) -> RefTable {
+        let cols: Vec<(usize, u16)> = cond
+            .iter()
+            .map(|&(v, val)| (self.col_of(v).expect("select: unknown var"), val))
+            .collect();
+        let w = self.width();
+        let mut rows = Vec::new();
+        let mut counts = Vec::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let r = &self.rows[i * w..(i + 1) * w];
+            if cols.iter().all(|&(ci, val)| r[ci] == val) {
+                rows.extend_from_slice(r);
+                counts.push(c);
+            }
+        }
+        RefTable { vars: self.vars.clone(), rows, counts }
+    }
+
+    /// π_keep: project onto a subset of columns, summing collapsing rows.
+    pub fn project(&self, keep: &[VarId]) -> RefTable {
+        let mut keep_sorted: Vec<VarId> = keep.to_vec();
+        keep_sorted.sort_unstable();
+        keep_sorted.dedup();
+        let cols: Vec<usize> = keep_sorted
+            .iter()
+            .map(|&v| self.col_of(v).expect("project: unknown var"))
+            .collect();
+        if cols.len() == self.width() {
+            return self.clone();
+        }
+        let w = self.width();
+        let nw = cols.len();
+        if nw == 0 {
+            let total: u128 = self.total();
+            return if total == 0 {
+                RefTable::empty(Vec::new())
+            } else {
+                RefTable::scalar(u64::try_from(total).expect("count overflow"))
+            };
+        }
+        let mut rows = Vec::with_capacity(self.len() * nw);
+        for i in 0..self.len() {
+            let r = &self.rows[i * w..(i + 1) * w];
+            rows.extend(cols.iter().map(|&c| r[c]));
+        }
+        RefTable::from_raw(keep_sorted, rows, self.counts.clone())
+    }
+
+    /// χ_φ: conditioning = select then drop the conditioned columns.
+    pub fn condition(&self, cond: &[(VarId, u16)]) -> RefTable {
+        let sel = self.select(cond);
+        let drop: Vec<VarId> = cond.iter().map(|&(v, _)| v).collect();
+        let rest: Vec<VarId> = self.vars.iter().copied().filter(|v| !drop.contains(v)).collect();
+        sel.project(&rest)
+    }
+
+    /// ×: cross product; counts multiply. Variable sets must be disjoint.
+    pub fn cross(&self, other: &RefTable) -> RefTable {
+        for v in &other.vars {
+            assert!(self.col_of(*v).is_none(), "cross: overlapping var {v}");
+        }
+        if self.width() == 0 {
+            let k = if self.is_empty() { 0 } else { self.counts[0] };
+            return other.scale(k);
+        }
+        if other.width() == 0 {
+            let k = if other.is_empty() { 0 } else { other.counts[0] };
+            return self.scale(k);
+        }
+        let mut vars = Vec::with_capacity(self.width() + other.width());
+        vars.extend_from_slice(&self.vars);
+        vars.extend_from_slice(&other.vars);
+        let mut rows = Vec::with_capacity((self.len() * other.len()) * vars.len());
+        let mut counts = Vec::with_capacity(self.len() * other.len());
+        for i in 0..self.len() {
+            for j in 0..other.len() {
+                rows.extend_from_slice(self.row(i));
+                rows.extend_from_slice(other.row(j));
+                counts.push(
+                    self.counts[i].checked_mul(other.counts[j]).expect("count overflow in cross"),
+                );
+            }
+        }
+        RefTable::from_raw(vars, rows, counts)
+    }
+
+    /// Multiply every count by `k` (k = 0 empties the table).
+    pub fn scale(&self, k: u64) -> RefTable {
+        if k == 0 {
+            return RefTable::empty(self.vars.clone());
+        }
+        let counts = self
+            .counts
+            .iter()
+            .map(|&c| c.checked_mul(k).expect("count overflow in scale"))
+            .collect();
+        RefTable { vars: self.vars.clone(), rows: self.rows.clone(), counts }
+    }
+
+    /// +: count addition over identical variable sets (sort-merge).
+    pub fn add(&self, other: &RefTable) -> RefTable {
+        assert_eq!(self.vars, other.vars, "add: variable sets differ");
+        let w = self.width();
+        if w == 0 {
+            let t = self.total() + other.total();
+            return RefTable::scalar(u64::try_from(t).expect("count overflow"));
+        }
+        let mut rows = Vec::with_capacity(self.rows.len() + other.rows.len());
+        let mut counts = Vec::with_capacity(self.len() + other.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.len() || j < other.len() {
+            let ord = if i == self.len() {
+                std::cmp::Ordering::Greater
+            } else if j == other.len() {
+                std::cmp::Ordering::Less
+            } else {
+                self.row(i).cmp(other.row(j))
+            };
+            match ord {
+                std::cmp::Ordering::Less => {
+                    rows.extend_from_slice(self.row(i));
+                    counts.push(self.counts[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    rows.extend_from_slice(other.row(j));
+                    counts.push(other.counts[j]);
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    rows.extend_from_slice(self.row(i));
+                    counts.push(self.counts[i].checked_add(other.counts[j]).expect("overflow"));
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        RefTable { vars: self.vars.clone(), rows, counts }
+    }
+
+    /// −: count subtraction; defined only when `other ⊆ self` pointwise.
+    pub fn subtract(&self, other: &RefTable) -> Result<RefTable, SubtractError> {
+        if self.vars != other.vars {
+            return Err(SubtractError::VarMismatch);
+        }
+        let w = self.width();
+        if w == 0 {
+            let (a, b) = (self.total(), other.total());
+            if b > a {
+                return Err(SubtractError::CountUnderflow {
+                    row: vec![],
+                    have: a as u64,
+                    sub: b as u64,
+                });
+            }
+            let d = (a - b) as u64;
+            return Ok(if d == 0 { RefTable::empty(vec![]) } else { RefTable::scalar(d) });
+        }
+        let mut rows = Vec::with_capacity(self.rows.len());
+        let mut counts = Vec::with_capacity(self.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.len() {
+            if j < other.len() {
+                match self.row(i).cmp(other.row(j)) {
+                    std::cmp::Ordering::Less => {
+                        rows.extend_from_slice(self.row(i));
+                        counts.push(self.counts[i]);
+                        i += 1;
+                    }
+                    std::cmp::Ordering::Greater => {
+                        return Err(SubtractError::MissingRow(other.row(j).to_vec()));
+                    }
+                    std::cmp::Ordering::Equal => {
+                        let (a, b) = (self.counts[i], other.counts[j]);
+                        if b > a {
+                            return Err(SubtractError::CountUnderflow {
+                                row: self.row(i).to_vec(),
+                                have: a,
+                                sub: b,
+                            });
+                        }
+                        if a > b {
+                            rows.extend_from_slice(self.row(i));
+                            counts.push(a - b);
+                        }
+                        i += 1;
+                        j += 1;
+                    }
+                }
+            } else {
+                rows.extend_from_slice(self.row(i));
+                counts.push(self.counts[i]);
+                i += 1;
+            }
+        }
+        if j < other.len() {
+            return Err(SubtractError::MissingRow(other.row(j).to_vec()));
+        }
+        Ok(RefTable { vars: self.vars.clone(), rows, counts })
+    }
+
+    /// ∪ of two tables over the same variables with disjoint row sets.
+    pub fn union_disjoint(&self, other: &RefTable) -> RefTable {
+        assert_eq!(self.vars, other.vars, "union: variable sets differ");
+        let w = self.width();
+        if w == 0 {
+            assert!(
+                self.is_empty() || other.is_empty(),
+                "union_disjoint: two nullary rows always collide"
+            );
+            let t = self.total() + other.total();
+            return if t == 0 {
+                RefTable::empty(vec![])
+            } else {
+                RefTable::scalar(u64::try_from(t).unwrap())
+            };
+        }
+        let mut rows = Vec::with_capacity(self.rows.len() + other.rows.len());
+        let mut counts = Vec::with_capacity(self.len() + other.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.len() || j < other.len() {
+            let take_left = if i == self.len() {
+                false
+            } else if j == other.len() {
+                true
+            } else {
+                match self.row(i).cmp(other.row(j)) {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Greater => false,
+                    std::cmp::Ordering::Equal => panic!("union_disjoint: shared row"),
+                }
+            };
+            if take_left {
+                rows.extend_from_slice(self.row(i));
+                counts.push(self.counts[i]);
+                i += 1;
+            } else {
+                rows.extend_from_slice(other.row(j));
+                counts.push(other.counts[j]);
+                j += 1;
+            }
+        }
+        RefTable { vars: self.vars.clone(), rows, counts }
+    }
+
+    /// Extend with constant columns (Algorithm 1 lines 2-3).
+    pub fn extend_const(&self, consts: &[(VarId, u16)]) -> RefTable {
+        if consts.is_empty() {
+            return self.clone();
+        }
+        let mut merged: Vec<(VarId, Option<u16>)> =
+            self.vars.iter().map(|&v| (v, None)).collect();
+        for &(v, val) in consts {
+            assert!(self.col_of(v).is_none(), "extend_const: var {v} already present");
+            merged.push((v, Some(val)));
+        }
+        merged.sort_unstable_by_key(|&(v, _)| v);
+        let vars: Vec<VarId> = merged.iter().map(|&(v, _)| v).collect();
+        debug_assert!(vars.windows(2).all(|w| w[0] < w[1]));
+        let w = self.width();
+        let nw = vars.len();
+        if w == 0 {
+            if self.is_empty() {
+                return RefTable::empty(vars);
+            }
+            let rows: Vec<u16> = merged.iter().map(|&(_, c)| c.unwrap()).collect();
+            return RefTable { vars, rows, counts: self.counts.clone() };
+        }
+        // Copy contiguous source segments between constant inserts.
+        #[derive(Clone, Copy)]
+        enum Piece {
+            Src { start: usize, len: usize },
+            Const(u16),
+        }
+        let mut pieces: Vec<Piece> = Vec::new();
+        let mut src = 0usize;
+        for &(_, c) in &merged {
+            match c {
+                Some(val) => pieces.push(Piece::Const(val)),
+                None => {
+                    if let Some(Piece::Src { len, .. }) = pieces.last_mut() {
+                        *len += 1;
+                    } else {
+                        pieces.push(Piece::Src { start: src, len: 1 });
+                    }
+                    src += 1;
+                }
+            }
+        }
+        let mut rows = Vec::with_capacity(self.len() * nw);
+        for i in 0..self.len() {
+            let r = self.row(i);
+            for &p in &pieces {
+                match p {
+                    Piece::Const(val) => rows.push(val),
+                    Piece::Src { start, len } => rows.extend_from_slice(&r[start..start + len]),
+                }
+            }
+        }
+        RefTable { vars, rows, counts: self.counts.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_through_ct() {
+        let ct = CtTable::from_raw(vec![2, 7], vec![0, 1, 1, 0, 0, 0], vec![3, 4, 5]);
+        let r = RefTable::from(&ct);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.to_ct(), ct);
+    }
+
+    #[test]
+    fn ref_ops_mirror_seed_semantics() {
+        let t = RefTable::from_raw(
+            vec![1, 3],
+            vec![0, 0, 0, 1, 1, 0, 1, 1],
+            vec![10, 11, 12, 13],
+        );
+        let s = t.select(&[(3, 1)]);
+        assert_eq!(s.len(), 2);
+        let p = t.project(&[1]);
+        assert_eq!(p.total(), t.total());
+        let c = t.condition(&[(3, 0)]);
+        assert_eq!(c.vars, vec![1]);
+        let sum = t.add(&t);
+        assert_eq!(sum.total(), 2 * t.total());
+        let back = sum.subtract(&t).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_and_empty_to_ct() {
+        assert_eq!(RefTable::scalar(4).to_ct(), CtTable::scalar(4));
+        assert_eq!(RefTable::empty(vec![1]).to_ct(), CtTable::empty(vec![1]));
+    }
+}

@@ -20,10 +20,11 @@ mod imdb;
 mod mondial;
 mod uwcse;
 
+use crate::bail;
 use crate::db::Database;
 use crate::schema::Schema;
+use crate::util::error::Result;
 use crate::util::Pcg64;
-use anyhow::{bail, Result};
 
 /// Static description of one benchmark.
 #[derive(Debug, Clone, Copy)]

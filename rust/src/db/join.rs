@@ -8,7 +8,7 @@
 //! without materializing the join.
 
 use super::Database;
-use crate::ct::CtTable;
+use crate::ct::{radix_sort_pairs, CtLayout, CtTable};
 use crate::schema::{RandomVar, RelId, VarId};
 use crate::util::fxhash::FxHashMap;
 
@@ -66,23 +66,23 @@ impl<'a> JoinCounter<'a> {
             })
             .collect();
 
-        // §Perf: pack the group key into a u128 when the column bit-widths
-        // fit (they always do on the benchmark schemas) — one integer hash
-        // per joined tuple instead of hashing a u16 slice.
-        let bits: Vec<u32> = vars
-            .iter()
-            .map(|&v| {
-                let a = schema.var_arity(v).max(2) as u32;
-                32 - (a - 1).leading_zeros()
-            })
-            .collect();
-        let total_bits: u32 = bits.iter().sum();
-        let mut shifts = vec![0u32; vars.len()];
-        let mut acc = 0u32;
-        for col in (0..vars.len()).rev() {
-            shifts[col] = acc;
-            acc += bits[col];
-        }
+        // §Perf: group keys ARE the table's packed row keys. The layout
+        // comes from the schema ([`CtLayout::for_vars`]), so the grouped
+        // counts sort straight into a packed `CtTable` with no decode or
+        // re-encode round trip — the table every downstream ct-algebra
+        // operator consumes as-is. All codes here are real values (every
+        // relationship is true, so no `NA`), hence encoding is the identity
+        // within each field. Rows past 64 bits group as transient u128 keys
+        // (the seed's tier); only past 128 bits do we hash u16 slices.
+        let layout = CtLayout::for_vars(schema, &vars);
+        let shifts: Vec<u32> = (0..vars.len()).map(|c| layout.col(c).shift).collect();
+        let mode = if layout.fits() {
+            KeyMode::U64
+        } else if layout.total_bits() <= 128 {
+            KeyMode::U128
+        } else {
+            KeyMode::Wide
+        };
 
         let mut state = JoinState {
             db: self.db,
@@ -92,37 +92,61 @@ impl<'a> JoinCounter<'a> {
             tuple_choice: vec![0u32; order.len()],
             groups: FxHashMap::default(),
             packed_groups: FxHashMap::default(),
+            packed128_groups: FxHashMap::default(),
             key_buf: vec![0u16; vars.len()],
             sources: &sources,
             shifts: &shifts,
-            packed: total_bits <= 128,
+            mode,
         };
         state.enumerate(0);
 
-        if state.packed {
-            let mut keyed: Vec<(u128, u64)> = state.packed_groups.into_iter().collect();
-            keyed.sort_unstable_by_key(|&(k, _)| k);
-            let width = vars.len();
-            let mut rows = Vec::with_capacity(keyed.len() * width);
-            let mut counts = Vec::with_capacity(keyed.len());
-            for (k, c) in keyed {
-                for col in 0..width {
-                    let mask = (1u128 << bits[col]) - 1;
-                    rows.push(((k >> shifts[col]) & mask) as u16);
+        match mode {
+            KeyMode::U64 => {
+                if vars.is_empty() {
+                    // Attribute-less chain: normalize to the canonical
+                    // nullary representation (scalar stores no keys).
+                    let total: u64 = state.packed_groups.values().sum();
+                    return if total == 0 { CtTable::empty(vars) } else { CtTable::scalar(total) };
                 }
-                counts.push(c);
+                let mut keyed: Vec<(u64, u64)> = state.packed_groups.into_iter().collect();
+                radix_sort_pairs(&mut keyed, layout.total_bits());
+                let mut keys = Vec::with_capacity(keyed.len());
+                let mut counts = Vec::with_capacity(keyed.len());
+                for (k, c) in keyed {
+                    keys.push(k);
+                    counts.push(c);
+                }
+                // Packed integer order == lexicographic row order: already
+                // canonical.
+                CtTable::from_sorted_packed(vars, layout, keys, counts)
             }
-            // Packed integer order == lexicographic row order: already
-            // canonical.
-            CtTable { vars, rows, counts }
-        } else {
-            let mut rows = Vec::with_capacity(state.groups.len() * vars.len());
-            let mut counts = Vec::with_capacity(state.groups.len());
-            for (k, c) in state.groups {
-                rows.extend_from_slice(&k);
-                counts.push(c);
+            KeyMode::U128 => {
+                let mut keyed: Vec<(u128, u64)> = state.packed128_groups.into_iter().collect();
+                keyed.sort_unstable_by_key(|&(k, _)| k);
+                if keyed.is_empty() {
+                    return CtTable::empty(vars);
+                }
+                let width = vars.len();
+                let mut rows = Vec::with_capacity(keyed.len() * width);
+                let mut counts = Vec::with_capacity(keyed.len());
+                for (k, c) in keyed {
+                    for col in 0..width {
+                        let mask = layout.field_mask(col) as u128;
+                        rows.push(((k >> shifts[col]) & mask) as u16);
+                    }
+                    counts.push(c);
+                }
+                CtTable::from_sorted_rows(vars, rows, counts)
             }
-            CtTable::from_raw(vars, rows, counts)
+            KeyMode::Wide => {
+                let mut rows = Vec::with_capacity(state.groups.len() * vars.len());
+                let mut counts = Vec::with_capacity(state.groups.len());
+                for (k, c) in state.groups {
+                    rows.extend_from_slice(&k);
+                    counts.push(c);
+                }
+                CtTable::from_raw(vars, rows, counts)
+            }
         }
     }
 }
@@ -151,6 +175,17 @@ fn connected_order(db: &Database, rels: &[RelId]) -> Vec<RelId> {
     order
 }
 
+/// How group keys are represented during join enumeration, by packed width.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum KeyMode {
+    /// ≤ 64 bits: keys double as the output table's packed row keys.
+    U64,
+    /// 65..=128 bits: transient u128 keys, decoded into the wide store.
+    U128,
+    /// > 128 bits: hash the u16 code slice.
+    Wide,
+}
+
 struct JoinState<'a> {
     db: &'a Database,
     order: &'a [RelId],
@@ -160,12 +195,13 @@ struct JoinState<'a> {
     /// Chosen tuple index per rel slot.
     tuple_choice: Vec<u32>,
     groups: FxHashMap<Vec<u16>, u64>,
-    packed_groups: FxHashMap<u128, u64>,
+    packed_groups: FxHashMap<u64, u64>,
+    packed128_groups: FxHashMap<u128, u64>,
     key_buf: Vec<u16>,
     sources: &'a [ColSource],
-    /// Per-column bit shifts for the packed key (§Perf).
+    /// Per-column bit shifts of the output `CtLayout` (§Perf).
     shifts: &'a [u32],
-    packed: bool,
+    mode: KeyMode,
 }
 
 impl JoinState<'_> {
@@ -228,26 +264,42 @@ impl JoinState<'_> {
         }
     }
 
+    /// Value code of one output column at the current enumeration leaf.
+    #[inline]
+    fn code_of(&self, src: &ColSource) -> u16 {
+        match *src {
+            ColSource::Entity { fo_slot, pop, attr_idx } => {
+                let e = self.binding[fo_slot].expect("unbound FO var at leaf");
+                self.db.entity_attr(pop, attr_idx, e)
+            }
+            ColSource::Rel { rel_slot, attr_idx } => {
+                let rel = self.order[rel_slot];
+                let t = self.tuple_choice[rel_slot] as usize;
+                self.db.rels[rel].attrs[attr_idx][t]
+            }
+        }
+    }
+
     #[inline]
     fn emit(&mut self) {
-        if self.packed {
-            let mut key = 0u128;
-            for (slot, src) in self.sources.iter().enumerate() {
-                let code = match *src {
-                    ColSource::Entity { fo_slot, pop, attr_idx } => {
-                        let e = self.binding[fo_slot].expect("unbound FO var at leaf");
-                        self.db.entity_attr(pop, attr_idx, e)
-                    }
-                    ColSource::Rel { rel_slot, attr_idx } => {
-                        let rel = self.order[rel_slot];
-                        let t = self.tuple_choice[rel_slot] as usize;
-                        self.db.rels[rel].attrs[attr_idx][t]
-                    }
-                };
-                key |= (code as u128) << self.shifts[slot];
+        match self.mode {
+            KeyMode::U64 => {
+                let mut key = 0u64;
+                for (slot, src) in self.sources.iter().enumerate() {
+                    key |= (self.code_of(src) as u64) << self.shifts[slot];
+                }
+                *self.packed_groups.entry(key).or_insert(0) += 1;
+                return;
             }
-            *self.packed_groups.entry(key).or_insert(0) += 1;
-            return;
+            KeyMode::U128 => {
+                let mut key = 0u128;
+                for (slot, src) in self.sources.iter().enumerate() {
+                    key |= (self.code_of(src) as u128) << self.shifts[slot];
+                }
+                *self.packed128_groups.entry(key).or_insert(0) += 1;
+                return;
+            }
+            KeyMode::Wide => {}
         }
         for (slot, src) in self.sources.iter().enumerate() {
             self.key_buf[slot] = match *src {

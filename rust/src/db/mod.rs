@@ -231,10 +231,18 @@ impl Database {
 
     /// Entity contingency table `ct(1Atts(X))` for one FO variable: a
     /// GROUP BY over the population's attribute columns. Columns are that
-    /// variable's EntityAttr random variables.
+    /// variable's EntityAttr random variables. Built directly in packed
+    /// form (group keys are the table's row keys under the schema-derived
+    /// [`crate::ct::CtLayout`]).
     pub fn ct_entity(&self, fo: FoVarId) -> crate::ct::CtTable {
+        use crate::ct::{radix_sort_pairs, CtLayout, CtTable};
         let pop = self.pop_of_fo(fo);
         let vars: Vec<VarId> = self.schema.one_atts_of_fo(fo);
+        let n = self.entity_counts[pop];
+        if vars.is_empty() {
+            // Attribute-less population: the nullary table counting it.
+            return if n == 0 { CtTable::empty(vars) } else { CtTable::scalar(n as u64) };
+        }
         // Attribute order within `vars` follows VarId order, which follows
         // population declaration order (builder emits them in order).
         let attr_idx: Vec<usize> = vars
@@ -246,7 +254,27 @@ impl Database {
                 _ => unreachable!(),
             })
             .collect();
-        let n = self.entity_counts[pop];
+        let layout = CtLayout::for_vars(&self.schema, &vars);
+        if layout.fits() {
+            let shifts: Vec<u32> = (0..vars.len()).map(|c| layout.col(c).shift).collect();
+            let mut groups: FxHashMap<u64, u64> = FxHashMap::default();
+            for e in 0..n {
+                let mut key = 0u64;
+                for (slot, &k) in attr_idx.iter().enumerate() {
+                    key |= (self.entity_attr(pop, k, e) as u64) << shifts[slot];
+                }
+                *groups.entry(key).or_insert(0) += 1;
+            }
+            let mut keyed: Vec<(u64, u64)> = groups.into_iter().collect();
+            radix_sort_pairs(&mut keyed, layout.total_bits());
+            let mut keys = Vec::with_capacity(keyed.len());
+            let mut counts = Vec::with_capacity(keyed.len());
+            for (k, c) in keyed {
+                keys.push(k);
+                counts.push(c);
+            }
+            return CtTable::from_sorted_packed(vars, layout, keys, counts);
+        }
         let mut groups: FxHashMap<Vec<u16>, u64> = FxHashMap::default();
         let mut key = vec![0u16; vars.len()];
         for e in 0..n {
@@ -261,7 +289,7 @@ impl Database {
             rows.extend_from_slice(&k);
             counts.push(c);
         }
-        crate::ct::CtTable::from_raw(vars, rows, counts)
+        CtTable::from_raw(vars, rows, counts)
     }
 }
 

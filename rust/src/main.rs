@@ -12,8 +12,9 @@
 //! Add `--engine xla` to route bulk ct-algebra through the AOT-compiled
 //! PJRT artifacts (`make artifacts` first).
 
-use anyhow::{bail, Result};
 use mrss::apps::{apriori, bayesnet, cfs};
+use mrss::bail;
+use mrss::util::error::Result;
 use mrss::baseline::cross_product_ct;
 use mrss::config::{Config, EngineKind};
 use mrss::coordinator::{run_suite, PoolConfig, SuiteJob};
@@ -116,14 +117,14 @@ fn cmd_ct(cfg: &Config) -> Result<()> {
     let res = match &rt {
         Some(rt) => {
             let engine = XlaEngine::new(rt);
-            let mut mj = MobiusJoin::with_engine(&db, &engine);
+            let mut mj = MobiusJoin::with_engine(&db, &engine).workers(cfg.workers);
             if let Some(l) = cfg.max_chain_len {
                 mj = mj.max_chain_len(l);
             }
             mj.run()
         }
         None => {
-            let mut mj = MobiusJoin::new(&db);
+            let mut mj = MobiusJoin::new(&db).workers(cfg.workers);
             if let Some(l) = cfg.max_chain_len {
                 mj = mj.max_chain_len(l);
             }
@@ -177,6 +178,8 @@ fn cmd_cp(cfg: &Config) -> Result<()> {
 }
 
 fn cmd_suite(cfg: &Config) -> Result<()> {
+    // `--workers` fans out across jobs here; per-job lattice levels stay
+    // serial to avoid oversubscription (use `ct --workers N` for that).
     let jobs: Vec<SuiteJob> = datagen::BENCHMARKS
         .iter()
         .map(|b| SuiteJob::new(b.name, cfg.scale, cfg.seed))
@@ -208,14 +211,14 @@ fn cmd_suite(cfg: &Config) -> Result<()> {
 fn cmd_mine(cfg: &Config) -> Result<()> {
     let db = datagen::generate(&cfg.dataset, cfg.scale, cfg.seed)?;
     let schema = &db.schema;
-    let res = MobiusJoin::new(&db).run();
+    let res = MobiusJoin::new(&db).workers(cfg.workers).run();
     let rt = maybe_runtime(cfg)?;
     let rt = rt.as_ref();
 
     let target_name = datagen::info(&cfg.dataset).map(|b| b.target).unwrap_or("");
     let target = schema
         .var_by_name(target_name)
-        .ok_or_else(|| anyhow::anyhow!("target {target_name} not found"))?;
+        .ok_or_else(|| mrss::anyhow!("target {target_name} not found"))?;
 
     // Feature selection, link off vs on (Table 5).
     let joint = res.joint_ct();
@@ -253,7 +256,7 @@ fn cmd_mine(cfg: &Config) -> Result<()> {
 fn cmd_bn(cfg: &Config) -> Result<()> {
     let db = datagen::generate(&cfg.dataset, cfg.scale, cfg.seed)?;
     let schema = &db.schema;
-    let res = MobiusJoin::new(&db).run();
+    let res = MobiusJoin::new(&db).workers(cfg.workers).run();
     let rt = maybe_runtime(cfg)?;
     let rt = rt.as_ref();
     let joint = res.joint_ct();

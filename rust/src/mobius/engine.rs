@@ -11,7 +11,10 @@ use crate::schema::VarId;
 /// The operations the Möbius Join delegates. Default methods call the
 /// native `CtTable` implementations; engines override whichever ops they
 /// accelerate and must be bit-identical to the native semantics.
-pub trait CtEngine {
+///
+/// `Sync` is a supertrait: the parallel level loop shares one engine
+/// reference across its worker threads.
+pub trait CtEngine: Sync {
     /// π projection with count summation (GROUP BY).
     fn project(&self, ct: &CtTable, keep: &[VarId]) -> CtTable {
         ct.project(keep)

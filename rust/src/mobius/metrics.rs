@@ -46,6 +46,10 @@ impl CtOp {
 }
 
 /// Möbius Join run metrics.
+///
+/// With `MobiusJoin::workers(n > 1)`, per-phase durations (`positive`,
+/// `pivot`, `main_loop`, per-op times) are summed across worker threads —
+/// they measure aggregate CPU time and can exceed `total` wall time.
 #[derive(Debug, Default, Clone)]
 pub struct MjMetrics {
     /// End-to-end wall time of the run.
@@ -83,7 +87,11 @@ impl MjMetrics {
         self.counts.iter().sum()
     }
 
-    /// The paper's "Extra Time": total minus positive-only time.
+    /// The paper's "Extra Time": total minus positive-only time. Only
+    /// meaningful for serial runs — with `MobiusJoin::workers(n > 1)`,
+    /// `positive` is summed CPU time across threads and can exceed the
+    /// wall-clock `total`, saturating this to zero (run the Table-4/Fig-7
+    /// measurements with workers = 1).
     pub fn extra_time(&self) -> Duration {
         self.total.saturating_sub(self.positive)
     }

@@ -11,6 +11,16 @@
 //! ```
 //!
 //! level-by-level over the relationship-chain lattice.
+//!
+//! ## Parallel levels
+//!
+//! Chains within one lattice level are independent given the previous
+//! levels' tables: each length-`l` chain reads only length-`l−1` tables
+//! (Algorithm 2 line 13) and the entity tables. [`MobiusJoin::workers`]
+//! therefore fans the per-level chain loop out over a scoped worker pool.
+//! Results are inserted in lattice order and every chain's computation is
+//! deterministic, so the output is **identical for any worker count**
+//! (asserted by `rust/tests/integration_mj.rs`).
 
 pub mod engine;
 pub mod metrics;
@@ -25,7 +35,8 @@ use crate::db::{Database, JoinCounter};
 use crate::lattice::{components, Lattice};
 use crate::schema::{FoVarId, RelId, VarId, NA};
 use crate::util::fxhash::FxHashMap;
-use crate::util::Stopwatch;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// Output of a Möbius Join run: one contingency table per relationship
@@ -78,22 +89,31 @@ impl MjResult {
     }
 }
 
+/// One chain's worth of work: the finished table plus locally-collected
+/// metrics (merged into the global record in lattice order, so the merge is
+/// deterministic regardless of worker scheduling).
+struct ChainOut {
+    table: CtTable,
+    metrics: MjMetrics,
+}
+
 /// Configuration + entry point for the Möbius Join.
 pub struct MobiusJoin<'a> {
     db: &'a Database,
     engine: &'a dyn CtEngine,
     max_chain_len: Option<usize>,
+    workers: usize,
 }
 
 impl<'a> MobiusJoin<'a> {
     /// Möbius Join with the native (pure-rust) engine.
     pub fn new(db: &'a Database) -> Self {
-        MobiusJoin { db, engine: &NativeEngine, max_chain_len: None }
+        MobiusJoin { db, engine: &NativeEngine, max_chain_len: None, workers: 1 }
     }
 
     /// Möbius Join with a custom execution engine.
     pub fn with_engine(db: &'a Database, engine: &'a dyn CtEngine) -> Self {
-        MobiusJoin { db, engine, max_chain_len: None }
+        MobiusJoin { db, engine, max_chain_len: None, workers: 1 }
     }
 
     /// Cap the chain length (paper §8: compute the lattice only up to a
@@ -103,63 +123,40 @@ impl<'a> MobiusJoin<'a> {
         self
     }
 
+    /// Evaluate each lattice level's chains on up to `n` worker threads
+    /// (1 = serial, the default). Output is identical for any `n`.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
     /// Run Algorithm 2.
     pub fn run(&self) -> MjResult {
         let t0 = Instant::now();
         let schema = &self.db.schema;
         let lattice = Lattice::build(schema, self.max_chain_len);
-        let jc = JoinCounter::new(self.db);
         let mut metrics = MjMetrics::default();
-        let mut positive_sw = Stopwatch::new();
 
         // --- Initialization: entity ct-tables (Algorithm 2 lines 1-3).
+        let tp = Instant::now();
         let mut entity_cts: FxHashMap<FoVarId, CtTable> = FxHashMap::default();
-        positive_sw.start();
         for fo in 0..schema.fo_vars.len() {
             entity_cts.insert(fo, self.db.ct_entity(fo));
         }
-        positive_sw.stop();
+        metrics.positive += tp.elapsed();
 
+        // --- Levels 1..m: chains within a level are independent given the
+        // previous level's tables, so each level fans out over the worker
+        // pool (lines 4-8 for level 1, lines 9-23 above).
         let mut tables: FxHashMap<Vec<RelId>, CtTable> = FxHashMap::default();
-
-        // --- Level 1 (lines 4-8): per relationship variable.
-        for r in 0..schema.num_rel_vars() {
-            let rel = &schema.relationships[r];
-            // ct_* := ct(X) × ct(Y) — both FO variables of the relationship.
-            let mut main_sw = Stopwatch::new();
-            main_sw.start();
-            let tx = Instant::now();
-            let ct_star = self
-                .engine
-                .cross(&entity_cts[&rel.fo_vars[0]], &entity_cts[&rel.fo_vars[1]]);
-            metrics.record(CtOp::Cross, tx.elapsed());
-            main_sw.stop();
-            metrics.main_loop += main_sw.total();
-
-            // ct_T := ct(1Atts(R), 2Atts(R) | R = T) via join (line 6).
-            positive_sw.start();
-            let ct_t = jc.positive_ct(&[r]);
-            positive_sw.stop();
-
-            let full = self.pivot(&ct_t, &ct_star, r, &mut metrics);
-            tables.insert(vec![r], full);
-        }
-
-        // --- Levels 2..m (lines 9-23).
-        for level in 2..=lattice.max_level() {
+        for level in 1..=lattice.max_level() {
             let chains: Vec<Vec<RelId>> = lattice.level(level).cloned().collect();
-            for chain in chains {
-                // line 11: all-true table via join.
-                positive_sw.start();
-                let mut current = jc.positive_ct(&chain);
-                positive_sw.stop();
-                // lines 12-21: pivot each relationship in turn.
-                for i in 0..chain.len() {
-                    let ct_star =
-                        self.ct_star_for(&chain, i, &tables, &entity_cts, &mut metrics);
-                    current = self.pivot(&current, &ct_star, chain[i], &mut metrics);
-                }
-                tables.insert(chain, current);
+            let outs = parallel_map(self.workers, chains.len(), |i| {
+                self.run_chain(&chains[i], &tables, &entity_cts)
+            });
+            for (chain, out) in chains.into_iter().zip(outs) {
+                metrics.merge(&out.metrics);
+                tables.insert(chain, out.table);
             }
         }
 
@@ -173,12 +170,54 @@ impl<'a> MobiusJoin<'a> {
             None
         };
 
-        metrics.positive = positive_sw.total();
         metrics.total = t0.elapsed();
         let mut indicator_ids: Vec<VarId> =
             (0..schema.num_rel_vars()).map(|r| schema.rel_ind_var(r)).collect();
         indicator_ids.sort_unstable();
         MjResult { lattice, entity_cts, tables, joint, metrics, indicator_ids }
+    }
+
+    /// Compute one chain's full table (any level). Level 1 (singleton
+    /// chains, Algorithm 2 lines 4-8) builds `ct_*` from the two entity
+    /// tables; deeper levels (lines 10-21) pivot each relationship in turn
+    /// against tables from the previous level.
+    fn run_chain(
+        &self,
+        chain: &[RelId],
+        tables: &FxHashMap<Vec<RelId>, CtTable>,
+        entity_cts: &FxHashMap<FoVarId, CtTable>,
+    ) -> ChainOut {
+        let schema = &self.db.schema;
+        let mut m = MjMetrics::default();
+        if let [r] = chain {
+            let rel = &schema.relationships[*r];
+            // ct_* := ct(X) × ct(Y) — both FO variables of the relationship.
+            let sw = Instant::now();
+            let tx = Instant::now();
+            let ct_star = self
+                .engine
+                .cross(&entity_cts[&rel.fo_vars[0]], &entity_cts[&rel.fo_vars[1]]);
+            m.record(CtOp::Cross, tx.elapsed());
+            m.main_loop += sw.elapsed();
+
+            // ct_T := ct(1Atts(R), 2Atts(R) | R = T) via join (line 6).
+            let tp = Instant::now();
+            let ct_t = JoinCounter::new(self.db).positive_ct(chain);
+            m.positive += tp.elapsed();
+
+            let table = self.pivot(&ct_t, &ct_star, *r, &mut m);
+            return ChainOut { table, metrics: m };
+        }
+        // line 11: all-true table via join.
+        let tp = Instant::now();
+        let mut current = JoinCounter::new(self.db).positive_ct(chain);
+        m.positive += tp.elapsed();
+        // lines 12-21: pivot each relationship in turn.
+        for i in 0..chain.len() {
+            let ct_star = self.ct_star_for(chain, i, tables, entity_cts, &mut m);
+            current = self.pivot(&current, &ct_star, chain[i], &mut m);
+        }
+        ChainOut { table: current, metrics: m }
     }
 
     /// Algorithm 1: the Pivot function. `ct_t` is the conditional table with
@@ -323,6 +362,38 @@ impl<'a> MobiusJoin<'a> {
         }
         acc.unwrap_or_else(|| CtTable::scalar(1))
     }
+}
+
+/// Run `f(0..n)` over up to `workers` scoped threads, returning results in
+/// index order. Work-steals via an atomic cursor; falls back to a plain
+/// serial loop for one worker or one item. A panicking job propagates when
+/// the scope joins, matching serial behaviour.
+fn parallel_map<T, F>(workers: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers.min(n) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                *slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker result missing"))
+        .collect()
 }
 
 // The indicator-id stash needs to be a real field; declared here to keep the

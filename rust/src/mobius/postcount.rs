@@ -172,7 +172,7 @@ mod tests {
         let full = MobiusJoin::new(&db).run();
         let joint_proj = full.joint_ct().project(&[diff]);
         for (row, c) in got.iter() {
-            assert_eq!(3 * c, joint_proj.count_of(row), "row {row:?}");
+            assert_eq!(3 * c, joint_proj.count_of(&row), "row {row:?}");
         }
     }
 

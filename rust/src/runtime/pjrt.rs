@@ -1,0 +1,368 @@
+//! PJRT runtime: load the AOT-compiled XLA artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts` — python never runs on the request
+//! path) and execute them from the coordinator.
+//!
+//! Artifacts are compiled at a ladder of static bucket shapes
+//! (`manifest.txt`); inputs are padded up to the nearest bucket and one
+//! compiled `PjRtLoadedExecutable` is cached per artifact. All count
+//! arithmetic is f64 (exact for integer counts below 2^53), so results are
+//! bit-identical to the native engine — asserted by the integration tests.
+//!
+//! Only compiled with `--features xla` (requires the `xla` bindings crate).
+
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One artifact from `manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub kind: String,
+    pub params: HashMap<String, usize>,
+    pub file: String,
+}
+
+impl ManifestEntry {
+    fn param(&self, k: &str) -> usize {
+        self.params[k]
+    }
+}
+
+/// A loaded PJRT runtime with lazily-compiled executables.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    entries: Vec<ManifestEntry>,
+    // Mutex (not RefCell) so the runtime is Sync: the parallel Möbius Join
+    // requires its CtEngine to be shareable across worker threads.
+    execs: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "XlaRuntime({} artifacts @ {})", self.entries.len(), self.dir.display())
+    }
+}
+
+impl XlaRuntime {
+    /// Load the artifact directory (reads `manifest.txt`, creates the PJRT
+    /// CPU client; compilation is lazy per artifact).
+    pub fn load(dir: &Path) -> Result<XlaRuntime> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() < 2 {
+                bail!("malformed manifest line: {line}");
+            }
+            let file = parts.pop().unwrap().to_string();
+            let kind = parts.remove(0).to_string();
+            let mut params = HashMap::new();
+            for p in parts {
+                let (k, v) = p
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("malformed manifest param `{p}`"))?;
+                params.insert(k.to_string(), v.parse::<usize>()?);
+            }
+            entries.push(ManifestEntry { kind, params, file });
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(XlaRuntime { client, dir: dir.to_path_buf(), entries, execs: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load from the conventional location (`$MRSS_ARTIFACTS` or
+    /// `<repo>/artifacts`).
+    pub fn load_default() -> Result<XlaRuntime> {
+        let dir = std::env::var("MRSS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+        Self::load(&dir)
+    }
+
+    /// Number of artifacts in the manifest.
+    pub fn num_artifacts(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Smallest bucket of `kind` satisfying all `(param >= value)` bounds.
+    fn pick_bucket(&self, kind: &str, bounds: &[(&str, usize)]) -> Result<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind)
+            .filter(|e| bounds.iter().all(|&(k, v)| e.params.get(k).is_some_and(|&p| p >= v)))
+            .min_by_key(|e| e.params.values().product::<usize>())
+            .ok_or_else(|| {
+                anyhow!("no `{kind}` bucket satisfies {bounds:?} (input exceeds ladder)")
+            })
+    }
+
+    /// Compile-on-first-use, then execute. Returns the flattened output
+    /// tuple.
+    fn run(&self, entry_file: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        {
+            let execs = self.execs.lock().unwrap();
+            if let Some(exe) = execs.get(entry_file) {
+                return self.exec_with(exe, inputs);
+            }
+        }
+        let path = self.dir.join(entry_file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        let out = self.exec_with(&exe, inputs);
+        self.execs.lock().unwrap().insert(entry_file.to_string(), exe);
+        out
+    }
+
+    fn exec_with(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("pjrt execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    /// Segment sum: `out[k] = Σ counts[i] where ids[i] == k` for
+    /// `k < num_segments`. Pads to the nearest `(n, k)` bucket.
+    pub fn segsum(&self, ids: &[u32], counts: &[f64], num_segments: usize) -> Result<Vec<f64>> {
+        assert_eq!(ids.len(), counts.len());
+        let entry =
+            self.pick_bucket("segsum", &[("n", ids.len()), ("k", num_segments)])?.clone();
+        let (n, k) = (entry.param("n"), entry.param("k"));
+        let mut ids_pad: Vec<i32> = ids.iter().map(|&i| i as i32).collect();
+        ids_pad.resize(n, k as i32); // out-of-range ids are dropped
+        let mut counts_pad = counts.to_vec();
+        counts_pad.resize(n, 0.0);
+        let out = self.run(
+            &entry.file,
+            &[xla::Literal::vec1(&ids_pad), xla::Literal::vec1(&counts_pad)],
+        )?;
+        let sums = out[0].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(sums[..num_segments].to_vec())
+    }
+
+    /// Fused pivot arithmetic: `max(star * scale - t, 0)` elementwise.
+    pub fn pivot(&self, star: &[f64], t: &[f64], scale: f64) -> Result<Vec<f64>> {
+        assert_eq!(star.len(), t.len());
+        let entry = self.pick_bucket("pivot", &[("n", star.len())])?.clone();
+        let n = entry.param("n");
+        let real = star.len();
+        let mut s = star.to_vec();
+        s.resize(n, 0.0);
+        let mut tt = t.to_vec();
+        tt.resize(n, 0.0);
+        let out = self.run(
+            &entry.file,
+            &[
+                xla::Literal::vec1(&s),
+                xla::Literal::vec1(&tt),
+                xla::Literal::vec1(&[scale]),
+            ],
+        )?;
+        let f = out[0].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(f[..real].to_vec())
+    }
+
+    /// Batched symmetric uncertainty. Each joint is a `v1 x v2` count
+    /// matrix (row-major); matrices are zero-padded into the bucket's
+    /// `v x v` cells (zero cells do not change entropies).
+    pub fn su_batch(&self, joints: &[(Vec<f64>, usize, usize)]) -> Result<Vec<f64>> {
+        if joints.is_empty() {
+            return Ok(Vec::new());
+        }
+        let vmax = joints.iter().map(|&(_, v1, v2)| v1.max(v2)).max().unwrap();
+        let entry = self.pick_bucket("su", &[("b", 1), ("v", vmax)])?.clone();
+        let (b, v) = (entry.param("b"), entry.param("v"));
+        let mut out = Vec::with_capacity(joints.len());
+        for chunk in joints.chunks(b) {
+            let mut data = vec![0.0f64; b * v * v];
+            for (bi, (m, v1, v2)) in chunk.iter().enumerate() {
+                assert_eq!(m.len(), v1 * v2);
+                for r in 0..*v1 {
+                    for c in 0..*v2 {
+                        data[bi * v * v + r * v + c] = m[r * v2 + c];
+                    }
+                }
+            }
+            let lit = xla::Literal::vec1(&data)
+                .reshape(&[b as i64, v as i64, v as i64])
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let res = self.run(&entry.file, &[lit])?;
+            let sus = res[0].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?;
+            out.extend_from_slice(&sus[..chunk.len()]);
+        }
+        Ok(out)
+    }
+
+    /// Batched BN family scores. Each family is a `p x c` count matrix
+    /// (row-major). Falls back with an error if `p` exceeds the ladder.
+    pub fn bnscore_batch(&self, families: &[(Vec<f64>, usize, usize)]) -> Result<Vec<f64>> {
+        if families.is_empty() {
+            return Ok(Vec::new());
+        }
+        let pmax = families.iter().map(|&(_, p, _)| p).max().unwrap();
+        let cmax = families.iter().map(|&(_, _, c)| c).max().unwrap();
+        let entry = self.pick_bucket("bnscore", &[("b", 1), ("p", pmax), ("c", cmax)])?.clone();
+        let (b, p, c) = (entry.param("b"), entry.param("p"), entry.param("c"));
+        let mut out = Vec::with_capacity(families.len());
+        for chunk in families.chunks(b) {
+            let mut data = vec![0.0f64; b * p * c];
+            for (bi, (m, fp, fc)) in chunk.iter().enumerate() {
+                assert_eq!(m.len(), fp * fc);
+                for r in 0..*fp {
+                    for cc in 0..*fc {
+                        data[bi * p * c + r * c + cc] = m[r * fc + cc];
+                    }
+                }
+            }
+            let lit = xla::Literal::vec1(&data)
+                .reshape(&[b as i64, p as i64, c as i64])
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let res = self.run(&entry.file, &[lit])?;
+            let scores = res[0].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?;
+            out.extend_from_slice(&scores[..chunk.len()]);
+        }
+        Ok(out)
+    }
+
+    /// Batched association-rule metrics: returns (support, confidence,
+    /// lift) triples.
+    pub fn lift_batch(
+        &self,
+        body: &[f64],
+        head: &[f64],
+        joint: &[f64],
+        total: f64,
+    ) -> Result<Vec<(f64, f64, f64)>> {
+        if body.is_empty() {
+            return Ok(Vec::new());
+        }
+        let entry = self.pick_bucket("lift", &[("b", 1)])?.clone();
+        let b = entry.param("b");
+        let mut out = Vec::with_capacity(body.len());
+        let mut i = 0;
+        while i < body.len() {
+            let hi = (i + b).min(body.len());
+            let mut bv = body[i..hi].to_vec();
+            let mut hv = head[i..hi].to_vec();
+            let mut jv = joint[i..hi].to_vec();
+            bv.resize(b, 0.0);
+            hv.resize(b, 0.0);
+            jv.resize(b, 0.0);
+            let tv = vec![total; b];
+            let res = self.run(
+                &entry.file,
+                &[
+                    xla::Literal::vec1(&bv),
+                    xla::Literal::vec1(&hv),
+                    xla::Literal::vec1(&jv),
+                    xla::Literal::vec1(&tv),
+                ],
+            )?;
+            let sup = res[0].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?;
+            let conf = res[1].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?;
+            let lift = res[2].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?;
+            for k in 0..(hi - i) {
+                out.push((sup[k], conf[k], lift[k]));
+            }
+            i = hi;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<XlaRuntime> {
+        match XlaRuntime::load_default() {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("skipping runtime test (run `make artifacts` first): {e}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn segsum_roundtrip() {
+        let Some(rt) = runtime() else { return };
+        let ids: Vec<u32> = vec![0, 1, 2, 1, 0, 5];
+        let counts = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let out = rt.segsum(&ids, &counts, 8).unwrap();
+        assert_eq!(out, vec![6.0, 6.0, 3.0, 0.0, 0.0, 6.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pivot_roundtrip() {
+        let Some(rt) = runtime() else { return };
+        let star = vec![5.0, 3.0, 2.0];
+        let t = vec![4.0, 9.0, 0.0];
+        let out = rt.pivot(&star, &t, 3.0).unwrap();
+        assert_eq!(out, vec![11.0, 0.0, 6.0]);
+    }
+
+    #[test]
+    fn su_matches_known_values() {
+        let Some(rt) = runtime() else { return };
+        // Perfectly dependent 2x2 joint: SU = 1. Independent uniform: SU = 0.
+        let dep = (vec![5.0, 0.0, 0.0, 5.0], 2, 2);
+        let indep = (vec![4.0, 4.0, 4.0, 4.0], 2, 2);
+        let out = rt.su_batch(&[dep, indep]).unwrap();
+        assert!((out[0] - 1.0).abs() < 1e-12, "dep su = {}", out[0]);
+        assert!(out[1].abs() < 1e-12, "indep su = {}", out[1]);
+    }
+
+    #[test]
+    fn bnscore_matches_hand_computation() {
+        let Some(rt) = runtime() else { return };
+        // One family, p=2 parent configs, c=2 values: counts [[3,1],[0,4]].
+        // L = (Σ n log n - Σ n_p log n_p) / N
+        let n: f64 = 8.0;
+        let expect = ((3f64 * 3f64.ln() + 1.0 * 1f64.ln() + 4.0 * 4f64.ln())
+            - (4f64 * 4f64.ln() + 4.0 * 4f64.ln()))
+            / n;
+        let out = rt.bnscore_batch(&[(vec![3.0, 1.0, 0.0, 4.0], 2, 2)]).unwrap();
+        assert!((out[0] - expect).abs() < 1e-12, "{} vs {expect}", out[0]);
+    }
+
+    #[test]
+    fn lift_roundtrip() {
+        let Some(rt) = runtime() else { return };
+        let out = rt.lift_batch(&[10.0], &[20.0], &[5.0], 100.0).unwrap();
+        let (sup, conf, lift) = out[0];
+        assert!((sup - 0.05).abs() < 1e-12);
+        assert!((conf - 0.5).abs() < 1e-12);
+        assert!((lift - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn oversized_input_errors_cleanly() {
+        let Some(rt) = runtime() else { return };
+        let ids = vec![0u32; 1 << 21];
+        let counts = vec![1.0; 1 << 21];
+        assert!(rt.segsum(&ids, &counts, 10).is_err());
+    }
+}

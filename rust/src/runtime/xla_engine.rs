@@ -4,8 +4,14 @@
 //! alignment) stays in rust. Falls back to the native implementation when
 //! an input exceeds the artifact bucket ladder.
 //!
+//! Conversion shims: the packed-key [`CtTable`] decodes to a row-major
+//! code matrix at the engine boundary and results re-enter through the
+//! sorted-row constructor, so the kernels stay layout-agnostic.
+//!
 //! Results are bit-identical to [`NativeEngine`] (integer counts in f64 are
 //! exact); `rust/tests/xla_vs_native.rs` asserts this end-to-end.
+//!
+//! [`NativeEngine`]: crate::mobius::NativeEngine
 
 use super::XlaRuntime;
 use crate::ct::{CtTable, SubtractError};
@@ -39,17 +45,19 @@ impl CtEngine for XlaEngine<'_> {
             .iter()
             .map(|&v| ct.col_of(v).expect("project: unknown var"))
             .collect();
-        if cols.len() == ct.width() || ct.is_empty() {
+        if cols.len() == ct.width() || ct.is_empty() || cols.is_empty() {
             return ct.project(keep);
         }
         // Group assignment (row bookkeeping stays on the coordinator).
+        let w = ct.width();
+        let matrix = ct.decode_rows();
         let mut gid_of: FxHashMap<Vec<u16>, u32> = FxHashMap::default();
         let mut keys: Vec<u16> = Vec::new();
         let mut ids: Vec<u32> = Vec::with_capacity(ct.len());
         let nw = cols.len();
         let mut buf = vec![0u16; nw];
         for i in 0..ct.len() {
-            let r = ct.row(i);
+            let r = &matrix[i * w..(i + 1) * w];
             for (slot, &c) in cols.iter().enumerate() {
                 buf[slot] = r[c];
             }
@@ -84,22 +92,27 @@ impl CtEngine for XlaEngine<'_> {
         if a.width() == 0 || a.is_empty() || b.is_empty() {
             return a.subtract(b);
         }
+        let w = a.width();
+        let am = a.decode_rows();
+        let bm = b.decode_rows();
+        let arow = |i: usize| &am[i * w..(i + 1) * w];
+        let brow = |j: usize| &bm[j * w..(j + 1) * w];
         // Alignment: b's rows must be a subset of a's.
         let mut t_aligned = vec![0.0f64; a.len()];
         let (mut i, mut j) = (0usize, 0usize);
         while j < b.len() {
             if i >= a.len() {
-                return Err(SubtractError::MissingRow(b.row(j).to_vec()));
+                return Err(SubtractError::MissingRow(brow(j).to_vec()));
             }
-            match a.row(i).cmp(b.row(j)) {
+            match arow(i).cmp(brow(j)) {
                 std::cmp::Ordering::Less => i += 1,
                 std::cmp::Ordering::Greater => {
-                    return Err(SubtractError::MissingRow(b.row(j).to_vec()));
+                    return Err(SubtractError::MissingRow(brow(j).to_vec()));
                 }
                 std::cmp::Ordering::Equal => {
                     if b.counts[j] > a.counts[i] {
                         return Err(SubtractError::CountUnderflow {
-                            row: a.row(i).to_vec(),
+                            row: arow(i).to_vec(),
                             have: a.counts[i],
                             sub: b.counts[j],
                         });
@@ -115,17 +128,19 @@ impl CtEngine for XlaEngine<'_> {
             Ok(d) => d,
             Err(_) => return a.subtract(b), // exceeds ladder: native fallback
         };
-        // Rebuild, dropping zero rows.
-        let _w = a.width();
-        let mut rows = Vec::with_capacity(a.rows.len());
+        // Rebuild, dropping zero rows; surviving rows keep sorted order.
+        let mut rows = Vec::with_capacity(am.len());
         let mut counts = Vec::with_capacity(a.len());
         for (idx, &d) in diff.iter().enumerate() {
             if d > 0.0 {
-                rows.extend_from_slice(a.row(idx));
+                rows.extend_from_slice(arow(idx));
                 counts.push(d as u64);
             }
         }
-        Ok(CtTable { vars: a.vars.clone(), rows, counts })
+        if counts.is_empty() {
+            return Ok(CtTable::empty(a.vars.clone()));
+        }
+        Ok(CtTable::from_sorted_rows(a.vars.clone(), rows, counts))
     }
 }
 

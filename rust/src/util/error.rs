@@ -1,0 +1,142 @@
+//! Minimal `anyhow` stand-in (the real crate is unavailable offline): a
+//! string-backed error type, `anyhow!`/`bail!` macros, and a `Context`
+//! extension trait for `Result` and `Option`. Only the surface this crate
+//! actually uses is implemented.
+
+/// A human-readable error. Context added via [`Context`] is prepended,
+/// `anyhow`-style (`"outer: inner"`).
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(self, ctx: impl std::fmt::Display) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // `{e}` and the anyhow-style `{e:#}` both print the full message.
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error { msg: s }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error { msg: s.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `Result` defaulting to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (or turn `None` into an error), like
+/// `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: std::fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: std::fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: std::fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string, like `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an [`Error`], like `anyhow::bail!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_context() {
+        let e = Error::msg("inner");
+        assert_eq!(e.to_string(), "inner");
+        assert_eq!(format!("{:#}", e.context("outer")), "outer: inner");
+    }
+
+    #[test]
+    fn result_context_chains() {
+        let r: std::result::Result<(), std::num::ParseIntError> = "x".parse::<u32>().map(|_| ());
+        let e = r.context("parsing x").unwrap_err();
+        assert!(e.to_string().starts_with("parsing x: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails() -> Result<()> {
+            bail!("bad {}", 42)
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "bad 42");
+        assert_eq!(anyhow!("x{}", 1).to_string(), "x1");
+    }
+}

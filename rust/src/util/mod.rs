@@ -1,16 +1,17 @@
 //! Small self-contained utilities: deterministic RNG, timers, text tables,
-//! and a hand-rolled property-testing harness.
+//! error handling, and a hand-rolled property-testing harness.
 //!
-//! The build environment is fully offline with only `xla` and `anyhow`
-//! available, so the usual crates (`rand`, `criterion`, `proptest`) are
+//! The build environment is fully offline with no registry access, so the
+//! usual crates (`rand`, `criterion`, `proptest`, `anyhow`, `fxhash`) are
 //! re-implemented here at the scale this project needs.
 
-pub mod rng;
-pub mod timer;
-pub mod table;
-pub mod proptest;
+pub mod error;
 pub mod fxhash;
+pub mod proptest;
+pub mod rng;
+pub mod table;
+pub mod timer;
 
 pub use rng::Pcg64;
-pub use timer::{Stopwatch, format_duration};
+pub use timer::{format_duration, Stopwatch};
 pub use table::TextTable;

@@ -71,6 +71,50 @@ fn seeds_change_data_not_invariants() {
     }
 }
 
+/// Proposition 1 equivalence on two generated datasets: the joint table
+/// must cover every entity instantiation exactly once, so its total equals
+/// the entity cross-product size — and a parallel run (4 workers on the
+/// per-level chain loop) must produce bit-identical tables to the serial
+/// run, chain by chain.
+#[test]
+fn proposition1_totals_and_parallel_determinism() {
+    for (name, scale) in [("uwcse", 0.3), ("mutagenesis", 0.05)] {
+        let db = datagen::generate(name, scale, 13).unwrap();
+        let serial = MobiusJoin::new(&db).run();
+        let parallel = MobiusJoin::new(&db).workers(4).run();
+
+        // Proposition 1: joint total == Π |population of FO var|.
+        let expect: u128 = db
+            .schema
+            .fo_vars
+            .iter()
+            .map(|f| db.entity_counts[f.pop] as u128)
+            .product();
+        assert_eq!(serial.joint_ct().total(), expect, "{name}: joint total");
+        serial.joint_ct().check_invariants().unwrap();
+
+        // Per-chain totals also satisfy the proposition (restricted to the
+        // chain's FO variables).
+        for (chain, table) in &serial.tables {
+            let chain_expect: u128 = db
+                .schema
+                .fo_vars_of_rels(chain)
+                .iter()
+                .map(|&f| db.entity_counts[db.schema.fo_vars[f].pop] as u128)
+                .product();
+            assert_eq!(table.total(), chain_expect, "{name}: chain {chain:?} total");
+        }
+
+        // Serial vs parallel: identical output, table by table.
+        assert_eq!(serial.joint_ct(), parallel.joint_ct(), "{name}: joint differs");
+        assert_eq!(serial.tables.len(), parallel.tables.len());
+        for (chain, table) in &serial.tables {
+            assert_eq!(table, &parallel.tables[chain], "{name}: chain {chain:?} differs");
+        }
+        assert_eq!(serial.num_extra_statistics(), parallel.num_extra_statistics());
+    }
+}
+
 #[test]
 fn depth_cap_tables_match_full_run_prefix() {
     let db = datagen::generate("hepatitis", 0.05, 7).unwrap();
