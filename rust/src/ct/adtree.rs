@@ -287,6 +287,27 @@ mod tests {
     }
 
     #[test]
+    fn wide_tier_table_builds_and_counts() {
+        // A 65–128-bit (two-word packed) source table: the tree decodes the
+        // u128 keys once up front and must answer exactly like selection.
+        let ct = random_ct(11, 120, &[6u16; 24]);
+        assert!(ct.is_packed2(), "expected the two-word tier, got {}", ct.tier());
+        let tree = AdTree::build(&ct, AdTreeConfig { min_count: 8 });
+        assert_eq!(tree.count(&[]) as u128, ct.total());
+        let mut rng = Pcg64::seeded(17);
+        for _ in 0..100 {
+            let nv = rng.index(3) + 1;
+            let mut q: Vec<(VarId, u16)> = Vec::new();
+            for v in rng.sample_indices(24, nv) {
+                q.push((v, rng.below(7) as u16)); // may be unobserved
+            }
+            q.sort_unstable();
+            q.dedup_by_key(|p| p.0);
+            assert_eq!(tree.count(&q), oracle(&ct, &q), "query {q:?}");
+        }
+    }
+
+    #[test]
     fn compression_smaller_than_rows_on_skewed_data() {
         // Heavily skewed data: MCV elision should keep the tree small.
         let mut rows = Vec::new();

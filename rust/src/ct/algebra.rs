@@ -1,29 +1,38 @@
 //! The ct-algebra operators (paper §4.1): σ selection, π projection,
 //! χ conditioning, × cross product, + addition, − subtraction, plus the
 //! `extend`/`union` helpers Algorithm 1 needs — implemented as **integer
-//! kernels over packed row keys** (see [`CtLayout`](super::CtLayout)):
+//! kernels generic over the packed key width** ([`RowKey`], monomorphized
+//! at `u64` for ≤ 64-bit layouts and `u128` for 65–128-bit layouts; see
+//! [`CtLayout`](super::CtLayout)):
 //!
 //! * σ / χ — one mask-AND + compare per row;
 //! * π — shift-compress each key into the kept columns' sub-layout, then a
 //!   radix-sort group-by;
 //! * × — OR of precomputed per-operand partial keys under the merged
 //!   (disjoint) layout;
-//! * + / − / ∪ — single-pass sort-merge scans over scalar `u64` keys,
+//! * + / − / ∪ — single-pass sort-merge scans over scalar keys,
 //!   matching the sort-merge cost model of §4.1.3.
 //!
 //! Operands whose layouts differ are re-encoded into the column-wise union
-//! layout first (order-preserving, linear). Any operand on the wide store —
-//! or any result whose layout would exceed 64 bits — routes through the
-//! retained row-major implementation in [`reference`](super::reference);
-//! the property tests at the bottom assert both paths are bit-identical.
+//! layout first (order-preserving, linear), widening one-word keys into a
+//! two-word union when needed; results land in the narrowest tier their
+//! layout allows. Only operands on the row-major wide store (> 128-bit
+//! layouts) — or results past 128 bits — route through the retained
+//! row-major implementation in [`reference`](super::reference); every such
+//! routing bumps [`reference_op_fallbacks`] so the integration tests can
+//! assert paper-scale schemas never leave the packed path. The property
+//! tests here and in `reference.rs` assert all paths are bit-identical.
 //!
 //! All operators preserve the [`CtTable`] invariants (sorted unique rows,
 //! positive counts, canonical column order).
+//!
+//! [`RowKey`]: super::RowKey
+//! [`reference_op_fallbacks`]: super::reference::reference_op_fallbacks
 
-use super::layout::radix_sort_pairs;
-use super::reference::RefTable;
-use super::{CtLayout, CtTable, RowStore};
-use crate::schema::VarId;
+use super::layout::{radix_sort_pairs_k, RowKey};
+use super::reference::{note_op_fallback, RefTable};
+use super::{CtLayout, CtTable, KeyStore, RowStore};
+use crate::schema::{VarId, NA};
 use std::borrow::Cow;
 
 /// Error from [`CtTable::subtract`]: the paper defines `ct1 − ct2` only when
@@ -52,31 +61,66 @@ impl std::fmt::Display for SubtractError {
 
 impl std::error::Error for SubtractError {}
 
-/// Mask/value pair for a packed selection filter, or the reason none can
-/// match.
-enum Filter {
+/// Mask/value pair for a packed selection filter at key width `K`, or the
+/// reason none can match.
+enum Filter<K> {
     /// `key & mask == want` selects the row.
-    MaskCompare { mask: u64, want: u64 },
+    MaskCompare { mask: K, want: K },
     /// A condition value is unrepresentable or contradictory: no row matches.
     Never,
 }
 
+/// One output column of `extend_const`: copied from a source column or
+/// filled with a constant value.
+#[derive(Clone, Copy)]
+enum Entry {
+    Src(usize),
+    Const(u16),
+}
+
+/// Two merge operands aligned onto one layout at a common key width,
+/// borrowing the key slices when the layouts already agree.
+enum Aligned<'a> {
+    K1(CtLayout, Cow<'a, [u64]>, Cow<'a, [u64]>),
+    K2(CtLayout, Cow<'a, [u128]>, Cow<'a, [u128]>),
+}
+
+/// Re-encode one operand's keys (stored at width `KS`) into the union
+/// layout `u` at two-word width — the shared body of every widening arm of
+/// [`CtTable::aligned_keys`].
+fn widen_into<KS: RowKey>(layout: &CtLayout, keys: &[KS], u: &CtLayout) -> Vec<u128> {
+    keys.iter().map(|&k| layout.reencode_k::<KS, u128>(u, k)).collect()
+}
+
+/// Align one operand's keys to a same-width union layout: borrow when its
+/// layout already equals the union (common when only the other operand
+/// needed re-encoding, e.g. the wider side of a mixed-width merge), else
+/// pay one re-encode pass.
+fn align<'a, K: RowKey>(layout: &CtLayout, keys: &'a [K], u: &CtLayout) -> Cow<'a, [K]> {
+    if layout == u {
+        Cow::Borrowed(keys)
+    } else {
+        Cow::Owned(keys.iter().map(|&k| layout.reencode_k::<K, K>(u, k)).collect())
+    }
+}
+
 impl CtTable {
     /// Build the mask-compare filter for `(column, value)` conditions.
-    fn filter_for(&self, cols: &[(usize, u16)]) -> Filter {
-        let mut mask = 0u64;
-        let mut want = 0u64;
+    fn filter_for<K: RowKey>(&self, cols: &[(usize, u16)]) -> Filter<K> {
+        let mut mask = K::ZERO;
+        let mut want = K::ZERO;
         for &(c, val) in cols {
             let Some(enc) = self.layout.try_encode(c, val) else {
                 return Filter::Never;
             };
-            let fmask = self.layout.field_mask(c) << self.layout.col(c).shift;
-            let fwant = enc << self.layout.col(c).shift;
-            if mask & fmask != 0 && want & fmask != fwant {
+            let shift = self.layout.col(c).shift;
+            let fmask = self.layout.field_mask_k::<K>(c) << shift;
+            let fwant = K::from_u64(enc) << shift;
+            if mask & fmask != K::ZERO && want & fmask != fwant {
                 return Filter::Never; // two different values for one column
             }
-            mask |= fmask;
-            want |= fwant;
+            mask = mask | fmask;
+            want = want | fwant;
         }
         Filter::MaskCompare { mask, want }
     }
@@ -91,11 +135,19 @@ impl CtTable {
         if cols.is_empty() {
             return self.clone();
         }
-        let keys = match &self.store {
-            RowStore::Packed(keys) => keys,
-            RowStore::Wide(_) => return RefTable::from(self).select(cond).to_ct(),
-        };
-        let (mask, want) = match self.filter_for(&cols) {
+        match &self.store {
+            RowStore::Packed(keys) => self.select_packed::<u64>(keys, &cols),
+            RowStore::Packed2(keys) => self.select_packed::<u128>(keys, &cols),
+            RowStore::Wide(_) => {
+                note_op_fallback();
+                RefTable::from(self).select(cond).to_ct()
+            }
+        }
+    }
+
+    /// σ kernel at key width `K`: one mask-AND + compare per row.
+    fn select_packed<K: KeyStore>(&self, keys: &[K], cols: &[(usize, u16)]) -> CtTable {
+        let (mask, want) = match self.filter_for::<K>(cols) {
             Filter::MaskCompare { mask, want } => (mask, want),
             Filter::Never => {
                 return CtTable::empty_with_layout(self.vars.clone(), self.layout.clone())
@@ -109,12 +161,13 @@ impl CtTable {
                 out_counts.push(self.counts[i]);
             }
         }
-        // Selection preserves sortedness and uniqueness.
+        // Selection preserves sortedness, uniqueness, and the layout, so the
+        // result stays in the operand's tier.
         CtTable {
             vars: self.vars.clone(),
             counts: out_counts,
             layout: self.layout.clone(),
-            store: RowStore::Packed(out_keys),
+            store: K::store(out_keys),
         }
     }
 
@@ -140,18 +193,32 @@ impl CtTable {
                 CtTable::scalar(u64::try_from(total).expect("count overflow"))
             };
         }
-        let keys = match &self.store {
-            RowStore::Packed(keys) => keys,
-            RowStore::Wide(_) => return RefTable::from(self).project(keep).to_ct(),
-        };
-        let sub = self.layout.sub(&cols);
-        let plans = self.layout.compress_plan(&cols, &sub);
-        let mut keyed: Vec<(u64, u64)> = Vec::with_capacity(self.len());
-        for (i, &k) in keys.iter().enumerate() {
-            keyed.push((CtLayout::apply_plan(k, &plans), self.counts[i]));
+        match &self.store {
+            RowStore::Packed(keys) => self.project_packed::<u64>(keys, &cols, keep_sorted),
+            RowStore::Packed2(keys) => self.project_packed::<u128>(keys, &cols, keep_sorted),
+            RowStore::Wide(_) => {
+                note_op_fallback();
+                RefTable::from(self).project(keep).to_ct()
+            }
         }
-        radix_sort_pairs(&mut keyed, sub.total_bits());
-        let mut out_keys: Vec<u64> = Vec::with_capacity(keyed.len());
+    }
+
+    /// π kernel at key width `K`. The result narrows to the one-word store
+    /// whenever the kept columns fit 64 bits (via [`KeyStore::finish`]).
+    fn project_packed<K: KeyStore>(
+        &self,
+        keys: &[K],
+        cols: &[usize],
+        keep_sorted: Vec<VarId>,
+    ) -> CtTable {
+        let sub = self.layout.sub(cols);
+        let plans = self.layout.compress_plan_k::<K>(cols, &sub);
+        let mut keyed: Vec<(K, u64)> = Vec::with_capacity(self.len());
+        for (i, &k) in keys.iter().enumerate() {
+            keyed.push((CtLayout::apply_plan_k::<K>(k, &plans), self.counts[i]));
+        }
+        radix_sort_pairs_k::<K>(&mut keyed, sub.total_bits());
+        let mut out_keys: Vec<K> = Vec::with_capacity(keyed.len());
         let mut out_counts: Vec<u64> = Vec::with_capacity(keyed.len());
         for (k, c) in keyed {
             if out_keys.last() == Some(&k) {
@@ -162,7 +229,7 @@ impl CtTable {
                 out_counts.push(c);
             }
         }
-        CtTable { vars: keep_sorted, counts: out_counts, layout: sub, store: RowStore::Packed(out_keys) }
+        K::finish(keep_sorted, sub, out_keys, out_counts)
     }
 
     /// χ_φ: conditioning = select then drop the conditioned columns
@@ -172,22 +239,31 @@ impl CtTable {
     pub fn condition(&self, cond: &[(VarId, u16)]) -> CtTable {
         let cols: Vec<(usize, u16)> = cond
             .iter()
-            .map(|&(v, val)| (self.col_of(v).expect("select: unknown var"), val))
+            .map(|&(v, val)| (self.col_of(v).expect("condition: unknown var"), val))
             .collect();
         if cols.is_empty() {
             return self.clone();
         }
-        let keys = match &self.store {
-            RowStore::Packed(keys) => keys,
-            RowStore::Wide(_) => return RefTable::from(self).condition(cond).to_ct(),
-        };
+        match &self.store {
+            RowStore::Packed(keys) => self.condition_packed::<u64>(keys, &cols),
+            RowStore::Packed2(keys) => self.condition_packed::<u128>(keys, &cols),
+            RowStore::Wide(_) => {
+                note_op_fallback();
+                RefTable::from(self).condition(cond).to_ct()
+            }
+        }
+    }
+
+    /// χ kernel at key width `K`: fused filter + shift-compress. Narrows to
+    /// the one-word store when the remaining columns fit 64 bits.
+    fn condition_packed<K: KeyStore>(&self, keys: &[K], cols: &[(usize, u16)]) -> CtTable {
         let mut drop: Vec<usize> = cols.iter().map(|&(c, _)| c).collect();
         drop.sort_unstable();
         drop.dedup();
         let rest_cols: Vec<usize> = (0..self.width()).filter(|c| !drop.contains(c)).collect();
         let rest_vars: Vec<VarId> = rest_cols.iter().map(|&c| self.vars[c]).collect();
 
-        let filter = self.filter_for(&cols);
+        let filter = self.filter_for::<K>(cols);
         if rest_cols.is_empty() {
             // Conditioned on every column: the result is nullary.
             let total: u128 = match filter {
@@ -210,26 +286,28 @@ impl CtTable {
             Filter::MaskCompare { mask, want } => (mask, want),
             Filter::Never => return CtTable::empty_with_layout(rest_vars, sub),
         };
-        let plans = self.layout.compress_plan(&rest_cols, &sub);
+        let plans = self.layout.compress_plan_k::<K>(&rest_cols, &sub);
         let mut out_keys = Vec::new();
         let mut out_counts = Vec::new();
         for (i, &k) in keys.iter().enumerate() {
             if k & mask != want {
                 continue;
             }
-            out_keys.push(CtLayout::apply_plan(k, &plans));
+            out_keys.push(CtLayout::apply_plan_k::<K>(k, &plans));
             out_counts.push(self.counts[i]);
         }
         // Dropped fields are fixed constants over the survivors, so the
         // compressed keys stay sorted and unique.
-        CtTable { vars: rest_vars, counts: out_counts, layout: sub, store: RowStore::Packed(out_keys) }
+        K::finish(rest_vars, sub, out_keys, out_counts)
     }
 
     /// ×: cross product; counts multiply (§4.1.2). Variable sets must be
     /// disjoint. Packed path: each operand row contributes a precomputed
     /// partial key at its final column positions, so every output row is a
     /// single `pa | pb` (no u16 materialization), then one radix sort puts
-    /// the interleaved columns in canonical order.
+    /// the interleaved columns in canonical order. Runs at whichever key
+    /// width the merged layout needs (either operand may be one- or
+    /// two-word).
     pub fn cross(&self, other: &CtTable) -> CtTable {
         for v in &other.vars {
             assert!(self.col_of(*v).is_none(), "cross: overlapping var {v}");
@@ -243,7 +321,7 @@ impl CtTable {
             let k = if other.is_empty() { 0 } else { other.counts[0] };
             return self.scale(k);
         }
-        if let (RowStore::Packed(ka), RowStore::Packed(kb)) = (&self.store, &other.store) {
+        if self.is_packed() && other.is_packed() {
             // Merged column plan: (var, from_self, source column).
             let mut merged: Vec<(VarId, bool, usize)> =
                 Vec::with_capacity(self.width() + other.width());
@@ -260,41 +338,13 @@ impl CtTable {
                 .collect();
             let ml = CtLayout::from_specs(&specs);
             if ml.fits() {
-                let partial = |t: &CtTable, keys: &[u64], from_self: bool| -> Vec<u64> {
-                    keys.iter()
-                        .map(|&k| {
-                            let mut out = 0u64;
-                            for (mc, &(_, fa, c)) in merged.iter().enumerate() {
-                                if fa == from_self {
-                                    out |= t.layout.extract(c, k) << ml.col(mc).shift;
-                                }
-                            }
-                            out
-                        })
-                        .collect()
-                };
-                let pa = partial(self, ka, true);
-                let pb = partial(other, kb, false);
-                let mut keyed: Vec<(u64, u64)> = Vec::with_capacity(pa.len() * pb.len());
-                for (x, &ca) in pa.iter().zip(&self.counts) {
-                    for (y, &cb) in pb.iter().zip(&other.counts) {
-                        keyed.push((x | y, ca.checked_mul(cb).expect("count overflow in cross")));
-                    }
-                }
-                // Interleaved columns break the nested-loop order; one radix
-                // sort restores it. Keys are unique by construction
-                // (operands are unique and fields partition), so no fold.
-                radix_sort_pairs(&mut keyed, ml.total_bits());
-                let mut keys = Vec::with_capacity(keyed.len());
-                let mut counts = Vec::with_capacity(keyed.len());
-                for (k, c) in keyed {
-                    keys.push(k);
-                    counts.push(c);
-                }
-                let vars: Vec<VarId> = merged.iter().map(|&(v, _, _)| v).collect();
-                return CtTable { vars, counts, layout: ml, store: RowStore::Packed(keys) };
+                return cross_packed::<u64>(self, other, &merged, ml);
+            }
+            if ml.fits2() {
+                return cross_packed::<u128>(self, other, &merged, ml);
             }
         }
+        note_op_fallback();
         RefTable::from(self).cross(&RefTable::from(other)).to_ct()
     }
 
@@ -318,82 +368,104 @@ impl CtTable {
 
     /// Align two packed operands onto one layout. The common case — equal
     /// (schema-derived) layouts — borrows the key slices directly; only
-    /// differing layouts pay a re-encode pass. Returns `None` when either
-    /// operand is wide or the unified layout does not fit 64 bits (callers
-    /// fall back to the row-major reference path).
-    fn aligned_keys<'a>(
-        &'a self,
-        other: &'a CtTable,
-    ) -> Option<(CtLayout, Cow<'a, [u64]>, Cow<'a, [u64]>)> {
-        let (ka, kb) = match (&self.store, &other.store) {
-            (RowStore::Packed(a), RowStore::Packed(b)) => (a, b),
-            _ => return None,
-        };
-        if self.layout == other.layout {
-            return Some((
-                self.layout.clone(),
-                Cow::Borrowed(ka.as_slice()),
-                Cow::Borrowed(kb.as_slice()),
-            ));
+    /// differing layouts pay a re-encode pass, widening into a two-word
+    /// union when the unified layout exceeds 64 bits. Returns `None` when
+    /// either operand is on the wide store or the unified layout does not
+    /// fit 128 bits (callers fall back to the row-major reference path).
+    fn aligned_keys<'a>(&'a self, other: &'a CtTable) -> Option<Aligned<'a>> {
+        match (&self.store, &other.store) {
+            (RowStore::Packed(ka), RowStore::Packed(kb)) => {
+                if self.layout == other.layout {
+                    return Some(Aligned::K1(
+                        self.layout.clone(),
+                        Cow::Borrowed(ka.as_slice()),
+                        Cow::Borrowed(kb.as_slice()),
+                    ));
+                }
+                let u = self.layout.union_with(&other.layout);
+                if u.fits() {
+                    let ra = align::<u64>(&self.layout, ka, &u);
+                    let rb = align::<u64>(&other.layout, kb, &u);
+                    Some(Aligned::K1(u, ra, rb))
+                } else if u.fits2() {
+                    let ra = widen_into::<u64>(&self.layout, ka, &u);
+                    let rb = widen_into::<u64>(&other.layout, kb, &u);
+                    Some(Aligned::K2(u, Cow::Owned(ra), Cow::Owned(rb)))
+                } else {
+                    None
+                }
+            }
+            (RowStore::Packed2(ka), RowStore::Packed2(kb)) => {
+                if self.layout == other.layout {
+                    return Some(Aligned::K2(
+                        self.layout.clone(),
+                        Cow::Borrowed(ka.as_slice()),
+                        Cow::Borrowed(kb.as_slice()),
+                    ));
+                }
+                // The union covers each operand column-wise, so it is at
+                // least as wide as the wider operand: never back under 65
+                // bits here.
+                let u = self.layout.union_with(&other.layout);
+                if !u.fits2() {
+                    return None;
+                }
+                let ra = align::<u128>(&self.layout, ka, &u);
+                let rb = align::<u128>(&other.layout, kb, &u);
+                Some(Aligned::K2(u, ra, rb))
+            }
+            (RowStore::Packed(ka), RowStore::Packed2(kb)) => {
+                // The one-word side always widens; the two-word side often
+                // already IS the union (its layout dominates column-wise)
+                // and then borrows.
+                let u = self.layout.union_with(&other.layout);
+                if !u.fits2() {
+                    return None;
+                }
+                let ra = widen_into::<u64>(&self.layout, ka, &u);
+                let rb = align::<u128>(&other.layout, kb, &u);
+                Some(Aligned::K2(u, Cow::Owned(ra), rb))
+            }
+            (RowStore::Packed2(ka), RowStore::Packed(kb)) => {
+                let u = self.layout.union_with(&other.layout);
+                if !u.fits2() {
+                    return None;
+                }
+                let ra = align::<u128>(&self.layout, ka, &u);
+                let rb = widen_into::<u64>(&other.layout, kb, &u);
+                Some(Aligned::K2(u, ra, Cow::Owned(rb)))
+            }
+            _ => None,
         }
-        let u = self.layout.union_with(&other.layout);
-        if !u.fits() {
-            return None;
-        }
-        let ra: Vec<u64> = ka.iter().map(|&k| self.layout.reencode(&u, k)).collect();
-        let rb: Vec<u64> = kb.iter().map(|&k| other.layout.reencode(&u, k)).collect();
-        Some((u, Cow::Owned(ra), Cow::Owned(rb)))
     }
 
     /// +: count addition over identical variable sets; rows present in only
     /// one operand keep that operand's count (§4.1.2). Sort-merge on scalar
-    /// keys.
+    /// keys at the aligned width.
     pub fn add(&self, other: &CtTable) -> CtTable {
         assert_eq!(self.vars, other.vars, "add: variable sets differ");
         if self.width() == 0 {
             let t = self.total() + other.total();
-            return CtTable::scalar(u64::try_from(t).expect("count overflow"));
-        }
-        let Some((layout, ka, kb)) = self.aligned_keys(other) else {
-            return RefTable::from(self).add(&RefTable::from(other)).to_ct();
-        };
-        let mut keys = Vec::with_capacity(ka.len() + kb.len());
-        let mut counts = Vec::with_capacity(ka.len() + kb.len());
-        let (mut i, mut j) = (0, 0);
-        while i < ka.len() || j < kb.len() {
-            let ord = if i == ka.len() {
-                std::cmp::Ordering::Greater
-            } else if j == kb.len() {
-                std::cmp::Ordering::Less
+            return if t == 0 {
+                CtTable::empty(Vec::new())
             } else {
-                ka[i].cmp(&kb[j])
+                CtTable::scalar(u64::try_from(t).expect("count overflow"))
             };
-            match ord {
-                std::cmp::Ordering::Less => {
-                    keys.push(ka[i]);
-                    counts.push(self.counts[i]);
-                    i += 1;
-                }
-                std::cmp::Ordering::Greater => {
-                    keys.push(kb[j]);
-                    counts.push(other.counts[j]);
-                    j += 1;
-                }
-                std::cmp::Ordering::Equal => {
-                    keys.push(ka[i]);
-                    counts.push(self.counts[i].checked_add(other.counts[j]).expect("overflow"));
-                    i += 1;
-                    j += 1;
-                }
+        }
+        match self.aligned_keys(other) {
+            Some(Aligned::K1(layout, ka, kb)) => merge_add::<u64>(self, other, layout, &ka, &kb),
+            Some(Aligned::K2(layout, ka, kb)) => merge_add::<u128>(self, other, layout, &ka, &kb),
+            None => {
+                note_op_fallback();
+                RefTable::from(self).add(&RefTable::from(other)).to_ct()
             }
         }
-        CtTable { vars: self.vars.clone(), counts, layout, store: RowStore::Packed(keys) }
     }
 
     /// −: count subtraction (§4.1.2). Defined only when `other`'s rows ⊆
     /// `self`'s rows with pointwise `count_other <= count_self`; rows whose
     /// difference is zero are omitted from the result. Sort-merge on scalar
-    /// keys.
+    /// keys at the aligned width.
     pub fn subtract(&self, other: &CtTable) -> Result<CtTable, SubtractError> {
         if self.vars != other.vars {
             return Err(SubtractError::VarMismatch);
@@ -410,58 +482,28 @@ impl CtTable {
             let d = (a - b) as u64;
             return Ok(if d == 0 { CtTable::empty(vec![]) } else { CtTable::scalar(d) });
         }
-        let Some((layout, ka, kb)) = self.aligned_keys(other) else {
-            return RefTable::from(self)
-                .subtract(&RefTable::from(other))
-                .map(|r| r.to_ct());
-        };
-        let mut keys = Vec::with_capacity(ka.len());
-        let mut counts = Vec::with_capacity(ka.len());
-        let (mut i, mut j) = (0, 0);
-        while i < ka.len() {
-            if j < kb.len() {
-                match ka[i].cmp(&kb[j]) {
-                    std::cmp::Ordering::Less => {
-                        keys.push(ka[i]);
-                        counts.push(self.counts[i]);
-                        i += 1;
-                    }
-                    std::cmp::Ordering::Greater => {
-                        return Err(SubtractError::MissingRow(layout.unpack(kb[j])));
-                    }
-                    std::cmp::Ordering::Equal => {
-                        let (a, b) = (self.counts[i], other.counts[j]);
-                        if b > a {
-                            return Err(SubtractError::CountUnderflow {
-                                row: layout.unpack(ka[i]),
-                                have: a,
-                                sub: b,
-                            });
-                        }
-                        if a > b {
-                            keys.push(ka[i]);
-                            counts.push(a - b);
-                        }
-                        i += 1;
-                        j += 1;
-                    }
-                }
-            } else {
-                keys.push(ka[i]);
-                counts.push(self.counts[i]);
-                i += 1;
+        match self.aligned_keys(other) {
+            Some(Aligned::K1(layout, ka, kb)) => {
+                merge_subtract::<u64>(self, other, layout, &ka, &kb)
+            }
+            Some(Aligned::K2(layout, ka, kb)) => {
+                merge_subtract::<u128>(self, other, layout, &ka, &kb)
+            }
+            None => {
+                note_op_fallback();
+                RefTable::from(self)
+                    .subtract(&RefTable::from(other))
+                    .map(|r| r.to_ct())
             }
         }
-        if j < kb.len() {
-            return Err(SubtractError::MissingRow(layout.unpack(kb[j])));
-        }
-        Ok(CtTable { vars: self.vars.clone(), counts, layout, store: RowStore::Packed(keys) })
     }
 
     /// Extend with constant columns (Algorithm 1 lines 2-3: tag a partial
     /// table with `R = T/F` and `2Atts = n/a`). New vars must not already be
     /// present. Packed path: every key gains the same constant fields, so
-    /// row order is preserved and the rewrite is one shift-OR pass.
+    /// row order is preserved and the rewrite is one shift-OR pass — the
+    /// result widens to the two-word tier when the constants push the
+    /// layout past 64 bits.
     pub fn extend_const(&self, consts: &[(VarId, u16)]) -> CtTable {
         if consts.is_empty() {
             return self.clone();
@@ -469,82 +511,51 @@ impl CtTable {
         for &(v, _) in consts {
             assert!(self.col_of(v).is_none(), "extend_const: var {v} already present");
         }
-        if let RowStore::Packed(keys) = &self.store {
-            use crate::schema::NA;
-            // Merged column plan: source column or constant value.
-            #[derive(Clone, Copy)]
-            enum Entry {
-                Src(usize),
-                Const(u16),
-            }
-            let mut merged: Vec<(VarId, Entry)> =
-                self.vars.iter().enumerate().map(|(c, &v)| (v, Entry::Src(c))).collect();
-            for &(v, val) in consts {
-                merged.push((v, Entry::Const(val)));
-            }
-            merged.sort_unstable_by_key(|&(v, _)| v);
-            let vars: Vec<VarId> = merged.iter().map(|&(v, _)| v).collect();
-            debug_assert!(vars.windows(2).all(|w| w[0] < w[1]));
-            let specs: Vec<(u16, bool)> = merged
-                .iter()
-                .map(|&(_, e)| match e {
-                    Entry::Src(c) => self.layout.spec(c),
-                    Entry::Const(val) => {
-                        if val == NA {
-                            (1, true)
-                        } else {
-                            (val + 1, false)
-                        }
-                    }
-                })
-                .collect();
-            let nl = CtLayout::from_specs(&specs);
-            if nl.fits() {
-                let mut const_bits = 0u64;
-                let mut plans: Vec<(u32, u64, u32)> = Vec::new();
-                for (out_c, &(_, e)) in merged.iter().enumerate() {
-                    match e {
-                        Entry::Const(val) => {
-                            const_bits |= nl.encode(out_c, val) << nl.col(out_c).shift;
-                        }
-                        Entry::Src(c) => plans.push((
-                            self.layout.col(c).shift,
-                            self.layout.field_mask(c),
-                            nl.col(out_c).shift,
-                        )),
+        // Merged column plan (key-width independent): source column or
+        // constant value per output column.
+        let mut merged: Vec<(VarId, Entry)> =
+            self.vars.iter().enumerate().map(|(c, &v)| (v, Entry::Src(c))).collect();
+        for &(v, val) in consts {
+            merged.push((v, Entry::Const(val)));
+        }
+        merged.sort_unstable_by_key(|&(v, _)| v);
+        let vars: Vec<VarId> = merged.iter().map(|&(v, _)| v).collect();
+        debug_assert!(vars.windows(2).all(|w| w[0] < w[1]));
+        let specs: Vec<(u16, bool)> = merged
+            .iter()
+            .map(|&(_, e)| match e {
+                Entry::Src(c) => self.layout.spec(c),
+                Entry::Const(val) => {
+                    if val == NA {
+                        (1, true)
+                    } else {
+                        (val + 1, false)
                     }
                 }
-                if self.width() == 0 {
-                    // Extending a scalar: each count row becomes the
-                    // constant row.
-                    if self.is_empty() {
-                        return CtTable::empty_with_layout(vars, nl);
-                    }
-                    return CtTable {
-                        vars,
-                        counts: self.counts.clone(),
-                        layout: nl,
-                        store: RowStore::Packed(vec![const_bits]),
-                    };
-                }
-                let out_keys: Vec<u64> = keys
-                    .iter()
-                    .map(|&k| const_bits | CtLayout::apply_plan(k, &plans))
-                    .collect();
-                return CtTable {
-                    vars,
-                    counts: self.counts.clone(),
-                    layout: nl,
-                    store: RowStore::Packed(out_keys),
-                };
+            })
+            .collect();
+        let nl = CtLayout::from_specs(&specs);
+        match (&self.store, nl.total_bits()) {
+            (RowStore::Packed(keys), 0..=64) => {
+                extend_packed::<u64, u64>(self, keys, &merged, vars, nl)
+            }
+            (RowStore::Packed(keys), 65..=128) => {
+                extend_packed::<u64, u128>(self, keys, &merged, vars, nl)
+            }
+            (RowStore::Packed2(keys), 65..=128) => {
+                extend_packed::<u128, u128>(self, keys, &merged, vars, nl)
+            }
+            _ => {
+                note_op_fallback();
+                RefTable::from(self).extend_const(consts).to_ct()
             }
         }
-        RefTable::from(self).extend_const(consts).to_ct()
     }
 
     /// ∪ of two tables over the same variables whose row sets are disjoint
     /// (Algorithm 1 line 4: `ct_F^+ ∪ ct_T^+`, disjoint because the pivot
-    /// column differs). Single merge pass; panics on a shared row.
+    /// column differs). Single merge pass at the aligned key width; panics
+    /// on a shared row.
     pub fn union_disjoint(&self, other: &CtTable) -> CtTable {
         assert_eq!(self.vars, other.vars, "union: variable sets differ");
         if self.width() == 0 {
@@ -559,36 +570,245 @@ impl CtTable {
                 CtTable::scalar(u64::try_from(t).unwrap())
             };
         }
-        let Some((layout, ka, kb)) = self.aligned_keys(other) else {
-            return RefTable::from(self).union_disjoint(&RefTable::from(other)).to_ct();
-        };
-        let mut keys = Vec::with_capacity(ka.len() + kb.len());
-        let mut counts = Vec::with_capacity(ka.len() + kb.len());
-        let (mut i, mut j) = (0, 0);
-        while i < ka.len() || j < kb.len() {
-            let take_left = if i == ka.len() {
-                false
-            } else if j == kb.len() {
-                true
-            } else {
-                match ka[i].cmp(&kb[j]) {
-                    std::cmp::Ordering::Less => true,
-                    std::cmp::Ordering::Greater => false,
-                    std::cmp::Ordering::Equal => panic!("union_disjoint: shared row"),
+        match self.aligned_keys(other) {
+            Some(Aligned::K1(layout, ka, kb)) => merge_union::<u64>(self, other, layout, &ka, &kb),
+            Some(Aligned::K2(layout, ka, kb)) => {
+                merge_union::<u128>(self, other, layout, &ka, &kb)
+            }
+            None => {
+                note_op_fallback();
+                RefTable::from(self).union_disjoint(&RefTable::from(other)).to_ct()
+            }
+        }
+    }
+}
+
+/// × kernel at merged key width `KM`. Each operand's partial keys are built
+/// from its own store width (`u64` or `u128`), widened into `KM` fields.
+fn cross_packed<KM: KeyStore>(
+    a: &CtTable,
+    b: &CtTable,
+    merged: &[(VarId, bool, usize)],
+    ml: CtLayout,
+) -> CtTable {
+    fn partials<KO: RowKey, KM: RowKey>(
+        t: &CtTable,
+        keys: &[KO],
+        merged: &[(VarId, bool, usize)],
+        ml: &CtLayout,
+        from_self: bool,
+    ) -> Vec<KM> {
+        keys.iter()
+            .map(|&k| {
+                let mut out = KM::ZERO;
+                for (mc, &(_, fa, c)) in merged.iter().enumerate() {
+                    if fa == from_self {
+                        let field = t.layout.extract_k::<KO>(c, k);
+                        out = out | (KM::from_u64(field) << ml.col(mc).shift);
+                    }
                 }
-            };
-            if take_left {
+                out
+            })
+            .collect()
+    }
+    let side = |t: &CtTable, from_self: bool| -> Vec<KM> {
+        match &t.store {
+            RowStore::Packed(keys) => partials::<u64, KM>(t, keys, merged, &ml, from_self),
+            RowStore::Packed2(keys) => partials::<u128, KM>(t, keys, merged, &ml, from_self),
+            RowStore::Wide(_) => unreachable!("cross_packed requires packed operands"),
+        }
+    };
+    let pa = side(a, true);
+    let pb = side(b, false);
+    let mut keyed: Vec<(KM, u64)> = Vec::with_capacity(pa.len() * pb.len());
+    for (x, &ca) in pa.iter().zip(&a.counts) {
+        for (y, &cb) in pb.iter().zip(&b.counts) {
+            keyed.push((*x | *y, ca.checked_mul(cb).expect("count overflow in cross")));
+        }
+    }
+    // Interleaved columns break the nested-loop order; one radix sort
+    // restores it. Keys are unique by construction (operands are unique and
+    // fields partition), so no fold.
+    radix_sort_pairs_k::<KM>(&mut keyed, ml.total_bits());
+    let mut keys = Vec::with_capacity(keyed.len());
+    let mut counts = Vec::with_capacity(keyed.len());
+    for (k, c) in keyed {
+        keys.push(k);
+        counts.push(c);
+    }
+    let vars: Vec<VarId> = merged.iter().map(|&(v, _, _)| v).collect();
+    KM::finish(vars, ml, keys, counts)
+}
+
+/// + kernel: single-pass sort-merge at key width `K`.
+fn merge_add<K: KeyStore>(
+    a: &CtTable,
+    b: &CtTable,
+    layout: CtLayout,
+    ka: &[K],
+    kb: &[K],
+) -> CtTable {
+    let mut keys = Vec::with_capacity(ka.len() + kb.len());
+    let mut counts = Vec::with_capacity(ka.len() + kb.len());
+    let (mut i, mut j) = (0, 0);
+    while i < ka.len() || j < kb.len() {
+        let ord = if i == ka.len() {
+            std::cmp::Ordering::Greater
+        } else if j == kb.len() {
+            std::cmp::Ordering::Less
+        } else {
+            ka[i].cmp(&kb[j])
+        };
+        match ord {
+            std::cmp::Ordering::Less => {
                 keys.push(ka[i]);
-                counts.push(self.counts[i]);
+                counts.push(a.counts[i]);
                 i += 1;
-            } else {
+            }
+            std::cmp::Ordering::Greater => {
                 keys.push(kb[j]);
-                counts.push(other.counts[j]);
+                counts.push(b.counts[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                keys.push(ka[i]);
+                counts.push(a.counts[i].checked_add(b.counts[j]).expect("overflow"));
+                i += 1;
                 j += 1;
             }
         }
-        CtTable { vars: self.vars.clone(), counts, layout, store: RowStore::Packed(keys) }
     }
+    K::finish(a.vars.clone(), layout, keys, counts)
+}
+
+/// − kernel: single-pass sort-merge at key width `K`; error rows decode
+/// through the aligned layout.
+fn merge_subtract<K: KeyStore>(
+    a: &CtTable,
+    b: &CtTable,
+    layout: CtLayout,
+    ka: &[K],
+    kb: &[K],
+) -> Result<CtTable, SubtractError> {
+    let mut keys = Vec::with_capacity(ka.len());
+    let mut counts = Vec::with_capacity(ka.len());
+    let (mut i, mut j) = (0, 0);
+    while i < ka.len() {
+        if j < kb.len() {
+            match ka[i].cmp(&kb[j]) {
+                std::cmp::Ordering::Less => {
+                    keys.push(ka[i]);
+                    counts.push(a.counts[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    return Err(SubtractError::MissingRow(layout.unpack_k::<K>(kb[j])));
+                }
+                std::cmp::Ordering::Equal => {
+                    let (ca, cb) = (a.counts[i], b.counts[j]);
+                    if cb > ca {
+                        return Err(SubtractError::CountUnderflow {
+                            row: layout.unpack_k::<K>(ka[i]),
+                            have: ca,
+                            sub: cb,
+                        });
+                    }
+                    if ca > cb {
+                        keys.push(ka[i]);
+                        counts.push(ca - cb);
+                    }
+                    i += 1;
+                    j += 1;
+                }
+            }
+        } else {
+            keys.push(ka[i]);
+            counts.push(a.counts[i]);
+            i += 1;
+        }
+    }
+    if j < kb.len() {
+        return Err(SubtractError::MissingRow(layout.unpack_k::<K>(kb[j])));
+    }
+    Ok(K::finish(a.vars.clone(), layout, keys, counts))
+}
+
+/// ∪ kernel: single-pass disjoint merge at key width `K`.
+fn merge_union<K: KeyStore>(
+    a: &CtTable,
+    b: &CtTable,
+    layout: CtLayout,
+    ka: &[K],
+    kb: &[K],
+) -> CtTable {
+    let mut keys = Vec::with_capacity(ka.len() + kb.len());
+    let mut counts = Vec::with_capacity(ka.len() + kb.len());
+    let (mut i, mut j) = (0, 0);
+    while i < ka.len() || j < kb.len() {
+        let take_left = if i == ka.len() {
+            false
+        } else if j == kb.len() {
+            true
+        } else {
+            match ka[i].cmp(&kb[j]) {
+                std::cmp::Ordering::Less => true,
+                std::cmp::Ordering::Greater => false,
+                std::cmp::Ordering::Equal => panic!("union_disjoint: shared row"),
+            }
+        };
+        if take_left {
+            keys.push(ka[i]);
+            counts.push(a.counts[i]);
+            i += 1;
+        } else {
+            keys.push(kb[j]);
+            counts.push(b.counts[j]);
+            j += 1;
+        }
+    }
+    K::finish(a.vars.clone(), layout, keys, counts)
+}
+
+/// `extend_const` kernel from source key width `KS` to destination width
+/// `KD` (extension only widens, so `KD` covers `KS`): every key gains the
+/// same constant fields in one shift-OR pass, preserving row order.
+fn extend_packed<KS: RowKey, KD: KeyStore>(
+    t: &CtTable,
+    keys: &[KS],
+    merged: &[(VarId, Entry)],
+    vars: Vec<VarId>,
+    nl: CtLayout,
+) -> CtTable {
+    let mut const_bits = KD::ZERO;
+    // (source column, destination shift) per copied column.
+    let mut plans: Vec<(usize, u32)> = Vec::new();
+    for (out_c, &(_, e)) in merged.iter().enumerate() {
+        match e {
+            Entry::Const(val) => {
+                const_bits =
+                    const_bits | (KD::from_u64(nl.encode(out_c, val)) << nl.col(out_c).shift);
+            }
+            Entry::Src(c) => plans.push((c, nl.col(out_c).shift)),
+        }
+    }
+    if t.width() == 0 {
+        // Extending a scalar: each count row becomes the constant row.
+        if t.is_empty() {
+            return CtTable::empty_with_layout(vars, nl);
+        }
+        return KD::finish(vars, nl, vec![const_bits], t.counts.clone());
+    }
+    let out_keys: Vec<KD> = keys
+        .iter()
+        .map(|&k| {
+            let mut out = const_bits;
+            for &(c, ds) in &plans {
+                out = out | (KD::from_u64(t.layout.extract_k::<KS>(c, k)) << ds);
+            }
+            out
+        })
+        .collect();
+    KD::finish(vars, nl, out_keys, t.counts.clone())
 }
 
 #[cfg(test)]
@@ -790,6 +1010,29 @@ mod tests {
         let e = s.extend_const(&[(1, 0), (2, 7)]);
         assert_eq!(e.len(), 1);
         assert_eq!(e.count_of(&[0, 7]), 3);
+    }
+
+    #[test]
+    fn extend_const_widens_into_two_word_tier() {
+        // A 64-bit table plus one constant column crosses the word
+        // boundary: the result must stay packed, on the u128 store.
+        let width = 32usize;
+        let vars: Vec<VarId> = (0..width).collect();
+        let mut rows = Vec::new();
+        for r in 0..3u16 {
+            rows.extend(std::iter::repeat(r).take(width));
+        }
+        let t = CtTable::from_raw(vars, rows, vec![1, 2, 3]);
+        assert!(t.is_packed() && !t.is_packed2());
+        assert_eq!(t.layout().total_bits(), 64); // 32 cols x 2 bits
+        let e = t.extend_const(&[(100, 1), (101, NA)]);
+        assert!(e.is_packed2(), "widened extension left the packed path");
+        assert_eq!(e.len(), 3);
+        let mut q = vec![1u16; width];
+        q.push(1);
+        q.push(NA);
+        assert_eq!(e.count_of(&q), 2);
+        e.check_invariants().unwrap();
     }
 
     #[test]
@@ -1064,8 +1307,9 @@ mod tests {
 
     #[test]
     fn packed_ops_on_wide_tables_fall_back() {
-        // 40 two-bit columns: 80-bit layout, wide store throughout.
-        let width = 40usize;
+        // 70 two-bit columns: a 140-bit layout is past both packed tiers,
+        // so the wide store and the reference operators take over.
+        let width = 70usize;
         let vars: Vec<VarId> = (0..width).collect();
         let mut rows = Vec::new();
         let mut counts = Vec::new();
@@ -1078,6 +1322,7 @@ mod tests {
         }
         let t = CtTable::from_raw(vars.clone(), rows, counts);
         assert!(!t.is_packed());
+        let before = super::super::reference::reference_op_fallbacks();
         let p = t.project(&vars[..2]);
         assert_eq!(p.total(), t.total());
         p.check_invariants().unwrap();
@@ -1089,5 +1334,8 @@ mod tests {
         let e = t.extend_const(&[(100, 1)]);
         assert_eq!(e.width(), width + 1);
         e.check_invariants().unwrap();
+        // Each routed operator bumped the fallback counter at least once
+        // (other tests run concurrently, so only a lower bound is safe).
+        assert!(super::super::reference::reference_op_fallbacks() >= before + 5);
     }
 }

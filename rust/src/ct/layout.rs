@@ -1,11 +1,13 @@
 //! `CtLayout` — the schema-driven bit-packing codec behind [`CtTable`].
 //!
 //! Every contingency-table column gets a fixed-width bit field sized from
-//! its value cardinality; a whole row then packs into a single `u64` key
-//! (spilling to the row-major wide path only when the total exceeds 64
-//! bits). Fields are assigned most-significant-first in canonical column
-//! order, so **unsigned integer order of packed keys equals lexicographic
-//! row order** — the property every sort-merge operator relies on.
+//! its value cardinality; a whole row then packs into a single integer key
+//! — a `u64` for layouts up to 64 bits, a two-word `u128` for layouts up
+//! to 128 bits (the [`RowKey`] abstraction), spilling to the row-major
+//! wide path only past 128 bits. Fields are assigned most-significant-first
+//! in canonical column order, so **unsigned integer order of packed keys
+//! equals lexicographic row order** — the property every sort-merge
+//! operator relies on, at either key width.
 //!
 //! The `n/a` code of relationship attributes (stored as `NA = u16::MAX` in
 //! unpacked rows, paper §2.2) is re-mapped inside the field to `cap` (one
@@ -17,6 +19,88 @@
 //! [`CtTable`]: super::CtTable
 
 use crate::schema::{RandomVar, Schema, VarId, NA};
+
+/// An unsigned integer wide enough to hold one packed row.
+///
+/// The ct-algebra kernels are generic over this trait and monomorphized at
+/// two widths: `u64` (the one-word tier, layouts ≤ 64 bits) and `u128`
+/// (the two-word tier, layouts ≤ 128 bits — the hepatitis/imdb-scale joint
+/// tables). Individual fields are always narrow (≤ 17 bits, a `u16` code
+/// plus the n/a slot), so field values travel as `u64` and only whole keys
+/// need the generic width.
+pub trait RowKey:
+    Copy
+    + Ord
+    + Eq
+    + std::hash::Hash
+    + std::fmt::Debug
+    + Send
+    + Sync
+    + std::ops::BitOr<Output = Self>
+    + std::ops::BitAnd<Output = Self>
+    + std::ops::Shl<u32, Output = Self>
+    + std::ops::Shr<u32, Output = Self>
+    + 'static
+{
+    /// Key width in bits.
+    const BITS: u32;
+    /// The all-zero key.
+    const ZERO: Self;
+    /// Widen a (narrow) field value into a key.
+    fn from_u64(v: u64) -> Self;
+    /// The low 64 bits (lossless for masked fields ≤ 64 bits wide).
+    fn low_u64(self) -> u64;
+    /// A mask of the `bits` lowest bits (`bits` may equal `BITS`).
+    fn ones(bits: u32) -> Self;
+}
+
+impl RowKey for u64 {
+    const BITS: u32 = 64;
+    const ZERO: Self = 0;
+
+    #[inline]
+    fn from_u64(v: u64) -> Self {
+        v
+    }
+
+    #[inline]
+    fn low_u64(self) -> u64 {
+        self
+    }
+
+    #[inline]
+    fn ones(bits: u32) -> Self {
+        if bits >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << bits) - 1
+        }
+    }
+}
+
+impl RowKey for u128 {
+    const BITS: u32 = 128;
+    const ZERO: Self = 0;
+
+    #[inline]
+    fn from_u64(v: u64) -> Self {
+        v as u128
+    }
+
+    #[inline]
+    fn low_u64(self) -> u64 {
+        self as u64
+    }
+
+    #[inline]
+    fn ones(bits: u32) -> Self {
+        if bits >= 128 {
+            u128::MAX
+        } else {
+            (1u128 << bits) - 1
+        }
+    }
+}
 
 /// One column's slot in the packed key.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -122,9 +206,19 @@ impl CtLayout {
         self.total_bits
     }
 
-    /// Whether a whole row fits one `u64` key.
+    /// Whether a whole row fits one `u64` key (the one-word packed tier).
     pub fn fits(&self) -> bool {
         self.total_bits <= 64
+    }
+
+    /// Whether a whole row fits one `u128` key (either packed tier).
+    pub fn fits2(&self) -> bool {
+        self.total_bits <= 128
+    }
+
+    /// Whether a whole row fits the key type `K`.
+    pub fn fits_key<K: RowKey>(&self) -> bool {
+        self.total_bits <= K::BITS
     }
 
     pub fn col(&self, c: usize) -> &ColLayout {
@@ -136,10 +230,10 @@ impl CtLayout {
         (self.cols[c].cap, self.cols[c].na)
     }
 
-    /// Mask of one column's field (before shifting).
+    /// Mask of one column's field at key width `K` (before shifting).
     #[inline]
-    pub fn field_mask(&self, c: usize) -> u64 {
-        (1u64 << self.cols[c].bits) - 1
+    pub fn field_mask_k<K: RowKey>(&self, c: usize) -> K {
+        K::ones(self.cols[c].bits)
     }
 
     /// Encode one code into its field value. Caller guarantees validity
@@ -181,50 +275,73 @@ impl CtLayout {
         }
     }
 
-    /// Extract the raw field value of column `c` from a packed key.
+    /// Extract the raw field value of column `c` from a key of width `K`.
+    /// Fields are ≤ 17 bits, so the value comes back as a plain `u64`.
     #[inline]
-    pub fn extract(&self, c: usize, key: u64) -> u64 {
-        (key >> self.cols[c].shift) & self.field_mask(c)
+    pub fn extract_k<K: RowKey>(&self, c: usize, key: K) -> u64 {
+        ((key >> self.cols[c].shift) & self.field_mask_k::<K>(c)).low_u64()
     }
 
-    /// Decode column `c` of a packed key to its `u16` code.
+    /// Decode column `c` of a key of width `K` to its `u16` code.
     #[inline]
-    pub fn decode_field(&self, c: usize, key: u64) -> u16 {
-        self.decode(c, self.extract(c, key))
+    pub fn decode_field_k<K: RowKey>(&self, c: usize, key: K) -> u16 {
+        self.decode(c, self.extract_k::<K>(c, key))
     }
 
     /// Pack a full row (codes in layout column order).
     #[inline]
     pub fn pack(&self, row: &[u16]) -> u64 {
+        self.pack_k::<u64>(row)
+    }
+
+    /// Pack a full row into a key of width `K`.
+    #[inline]
+    pub fn pack_k<K: RowKey>(&self, row: &[u16]) -> K {
         debug_assert_eq!(row.len(), self.cols.len());
-        let mut key = 0u64;
+        debug_assert!(self.fits_key::<K>());
+        let mut key = K::ZERO;
         for (c, &code) in row.iter().enumerate() {
-            key |= self.encode(c, code) << self.cols[c].shift;
+            key = key | (K::from_u64(self.encode(c, code)) << self.cols[c].shift);
         }
         key
     }
 
     /// Pack a row if every code is representable.
     pub fn try_pack(&self, row: &[u16]) -> Option<u64> {
+        self.try_pack_k::<u64>(row)
+    }
+
+    /// Pack a row into a key of width `K` if every code is representable.
+    pub fn try_pack_k<K: RowKey>(&self, row: &[u16]) -> Option<K> {
         debug_assert_eq!(row.len(), self.cols.len());
-        let mut key = 0u64;
+        let mut key = K::ZERO;
         for (c, &code) in row.iter().enumerate() {
-            key |= self.try_encode(c, code)? << self.cols[c].shift;
+            key = key | (K::from_u64(self.try_encode(c, code)?) << self.cols[c].shift);
         }
         Some(key)
     }
 
     /// Append the decoded row of `key` to `out`.
     pub fn unpack_into(&self, key: u64, out: &mut Vec<u16>) {
+        self.unpack_into_k::<u64>(key, out)
+    }
+
+    /// Append the decoded row of a width-`K` key to `out`.
+    pub fn unpack_into_k<K: RowKey>(&self, key: K, out: &mut Vec<u16>) {
         for c in 0..self.cols.len() {
-            out.push(self.decode_field(c, key));
+            out.push(self.decode_field_k::<K>(c, key));
         }
     }
 
     /// Decoded row of `key` as a fresh vector.
     pub fn unpack(&self, key: u64) -> Vec<u16> {
+        self.unpack_k::<u64>(key)
+    }
+
+    /// Decoded row of a width-`K` key as a fresh vector.
+    pub fn unpack_k<K: RowKey>(&self, key: K) -> Vec<u16> {
         let mut out = Vec::with_capacity(self.cols.len());
-        self.unpack_into(key, &mut out);
+        self.unpack_into_k::<K>(key, &mut out);
         out
     }
 
@@ -251,31 +368,36 @@ impl CtLayout {
     /// Shift-compress plan mapping source columns `cols` (ascending) onto
     /// `target` (whose column `i` is `cols[i]`): one
     /// `(source shift, field mask, destination shift)` triple per kept
-    /// column. Specs must match pairwise so raw field values carry over
-    /// without decode — true for [`sub`]-derived targets.
+    /// column, at key width `K`. Specs must match pairwise so raw field
+    /// values carry over without decode — true for [`sub`]-derived targets.
     ///
     /// [`sub`]: CtLayout::sub
-    pub fn compress_plan(&self, cols: &[usize], target: &CtLayout) -> Vec<(u32, u64, u32)> {
+    pub fn compress_plan_k<K: RowKey>(
+        &self,
+        cols: &[usize],
+        target: &CtLayout,
+    ) -> Vec<(u32, K, u32)> {
         debug_assert_eq!(cols.len(), target.width());
         cols.iter()
             .enumerate()
             .map(|(out_c, &src_c)| {
                 debug_assert_eq!(self.spec(src_c), target.spec(out_c));
-                (self.cols[src_c].shift, self.field_mask(src_c), target.cols[out_c].shift)
+                (self.cols[src_c].shift, self.field_mask_k::<K>(src_c), target.cols[out_c].shift)
             })
             .collect()
     }
 
-    /// Apply a [`compress_plan`]: extract each planned field from `key` and
-    /// place it at its destination shift. The single shift-compress kernel
-    /// shared by π projection, fused χ conditioning, and `extend_const`.
+    /// Apply a [`compress_plan_k`]: extract each planned field from `key`
+    /// and place it at its destination shift. The single shift-compress
+    /// kernel shared by π projection and fused χ conditioning; source and
+    /// destination keys share the width (compression never widens).
     ///
-    /// [`compress_plan`]: CtLayout::compress_plan
+    /// [`compress_plan_k`]: CtLayout::compress_plan_k
     #[inline]
-    pub fn apply_plan(key: u64, plans: &[(u32, u64, u32)]) -> u64 {
-        let mut out = 0u64;
+    pub fn apply_plan_k<K: RowKey>(key: K, plans: &[(u32, K, u32)]) -> K {
+        let mut out = K::ZERO;
         for &(ss, m, ds) in plans {
-            out |= ((key >> ss) & m) << ds;
+            out = out | (((key >> ss) & m) << ds);
         }
         out
     }
@@ -286,10 +408,20 @@ impl CtLayout {
     /// [`union_with`]: CtLayout::union_with
     #[inline]
     pub fn reencode(&self, target: &CtLayout, key: u64) -> u64 {
+        self.reencode_k::<u64, u64>(target, key)
+    }
+
+    /// [`reencode`](CtLayout::reencode) across key widths: a `KS` key of
+    /// `self` becomes a `KT` key of `target` (e.g. a one-word key widening
+    /// into a two-word union layout).
+    #[inline]
+    pub fn reencode_k<KS: RowKey, KT: RowKey>(&self, target: &CtLayout, key: KS) -> KT {
         debug_assert_eq!(self.width(), target.width());
-        let mut out = 0u64;
+        debug_assert!(target.fits_key::<KT>());
+        let mut out = KT::ZERO;
         for c in 0..self.cols.len() {
-            out |= target.encode(c, self.decode_field(c, key)) << target.cols[c].shift;
+            let code = self.decode_field_k::<KS>(c, key);
+            out = out | (KT::from_u64(target.encode(c, code)) << target.cols[c].shift);
         }
         out
     }
@@ -300,6 +432,14 @@ impl CtLayout {
 /// order (stable), which the group-by fold after projection relies on not
 /// at all — but stability comes free with counting sort.
 pub fn radix_sort_pairs(data: &mut Vec<(u64, u64)>, key_bits: u32) {
+    radix_sort_pairs_k::<u64>(data, key_bits)
+}
+
+/// [`radix_sort_pairs`] at key width `K`: the same byte-wise counting sort
+/// over one- or two-word keys. Wide keys with few populated high bytes pay
+/// almost nothing for the extra passes (an all-equal byte is skipped after
+/// one counting scan).
+pub fn radix_sort_pairs_k<K: RowKey>(data: &mut Vec<(K, u64)>, key_bits: u32) {
     let n = data.len();
     if n <= 1 {
         return;
@@ -309,13 +449,13 @@ pub fn radix_sort_pairs(data: &mut Vec<(u64, u64)>, key_bits: u32) {
         data.sort_unstable_by_key(|&(k, _)| k);
         return;
     }
-    let passes = ((key_bits + 7) / 8).max(1);
-    let mut scratch: Vec<(u64, u64)> = vec![(0, 0); n];
+    let passes = ((key_bits + 7) / 8).max(1).min(K::BITS / 8);
+    let mut scratch: Vec<(K, u64)> = vec![(K::ZERO, 0); n];
     for pass in 0..passes {
         let shift = pass * 8;
         let mut counts = [0usize; 256];
         for &(k, _) in data.iter() {
-            counts[((k >> shift) & 0xFF) as usize] += 1;
+            counts[((k >> shift).low_u64() & 0xFF) as usize] += 1;
         }
         // All keys share this byte: nothing to move.
         if counts.iter().any(|&c| c == n) {
@@ -328,7 +468,7 @@ pub fn radix_sort_pairs(data: &mut Vec<(u64, u64)>, key_bits: u32) {
             acc += c;
         }
         for &(k, p) in data.iter() {
-            let b = ((k >> shift) & 0xFF) as usize;
+            let b = ((k >> shift).low_u64() & 0xFF) as usize;
             scratch[starts[b]] = (k, p);
             starts[b] += 1;
         }
@@ -442,5 +582,85 @@ mod tests {
         let l = CtLayout::from_specs(&specs);
         assert_eq!(l.total_bits(), 80);
         assert!(!l.fits());
+        assert!(l.fits2());
+        assert!(!l.fits_key::<u64>());
+        assert!(l.fits_key::<u128>());
+        let specs: Vec<(u16, bool)> = (0..70).map(|_| (4u16, false)).collect();
+        let l = CtLayout::from_specs(&specs);
+        assert_eq!(l.total_bits(), 140);
+        assert!(!l.fits2());
+    }
+
+    #[test]
+    fn two_word_pack_unpack_roundtrip_with_na() {
+        // 30 columns, mixed widths with NA on odd columns: 65..=128 bits.
+        let specs: Vec<(u16, bool)> = (0..30).map(|c| (4u16, c % 2 == 1)).collect();
+        let l = CtLayout::from_specs(&specs);
+        assert!(!l.fits() && l.fits2(), "total_bits = {}", l.total_bits());
+        let mut rng = Pcg64::seeded(21);
+        let mut rows: Vec<Vec<u16>> = (0..200)
+            .map(|_| {
+                (0..30)
+                    .map(|c| {
+                        if c % 2 == 1 && rng.chance(0.25) {
+                            NA
+                        } else {
+                            rng.below(4) as u16
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        for r in &rows {
+            assert_eq!(l.unpack_k::<u128>(l.pack_k::<u128>(r)), *r);
+            assert_eq!(l.try_pack_k::<u128>(r), Some(l.pack_k::<u128>(r)));
+        }
+        // Integer order of two-word keys == lexicographic row order (with
+        // NA comparing after every real code, as the remap guarantees).
+        let na_last = |a: &[u16], b: &[u16]| {
+            let rank = |x: u16| if x == NA { u32::MAX } else { x as u32 };
+            a.iter().map(|&x| rank(x)).cmp(b.iter().map(|&x| rank(x)))
+        };
+        rows.sort_unstable_by(|a, b| na_last(a, b));
+        let keys: Vec<u128> = rows.iter().map(|r| l.pack_k::<u128>(r)).collect();
+        for w in keys.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn reencode_widens_across_key_widths() {
+        // A 60-bit layout re-encoded into an 80-bit union target.
+        let a = CtLayout::from_specs(&vec![(8u16, false); 20]);
+        let b = CtLayout::from_specs(&vec![(16u16, false); 20]);
+        assert!(a.fits());
+        let u = a.union_with(&b);
+        assert!(!u.fits() && u.fits2());
+        let row: Vec<u16> = (0..20).map(|c| (c % 8) as u16).collect();
+        let k64 = a.pack(&row);
+        let k128: u128 = a.reencode_k::<u64, u128>(&u, k64);
+        assert_eq!(u.unpack_k::<u128>(k128), row);
+    }
+
+    #[test]
+    fn radix_sort_u128_matches_std_sort() {
+        let mut rng = Pcg64::seeded(13);
+        for n in [0usize, 1, 2, 63, 64, 1000] {
+            for bits in [8u32, 72, 128] {
+                let mask = if bits == 128 { u128::MAX } else { (1u128 << bits) - 1 };
+                let mut a: Vec<(u128, u64)> = (0..n)
+                    .map(|i| {
+                        let k = ((rng.next_u64() as u128) << 64) | rng.next_u64() as u128;
+                        (k & mask, i as u64)
+                    })
+                    .collect();
+                let mut b = a.clone();
+                radix_sort_pairs_k::<u128>(&mut a, bits);
+                b.sort_by_key(|&(k, _)| k);
+                let ka: Vec<u128> = a.iter().map(|&(k, _)| k).collect();
+                let kb: Vec<u128> = b.iter().map(|&(k, _)| k).collect();
+                assert_eq!(ka, kb, "n={n} bits={bits}");
+            }
+        }
     }
 }

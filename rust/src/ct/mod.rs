@@ -8,14 +8,22 @@
 //! 2. rows are sorted lexicographically and unique;
 //! 3. all counts are positive (zero-count rows are omitted, paper §2.2).
 //!
-//! ## Storage: packed row keys (`CtLayout`)
+//! ## Storage: three tiers of packed row keys (`CtLayout`)
 //!
 //! Rows are not stored as `u16` code slices. Each table carries a
 //! [`CtLayout`] — per-column bit widths derived from value cardinalities
-//! (schema arities where available, observed maxima otherwise) — and stores
-//! every row as **one packed `u64` key** whose unsigned order equals the
-//! lexicographic row order. The ct-algebra operators then become integer
-//! kernels:
+//! (schema arities where available, observed maxima otherwise) — and
+//! chooses one of **three storage tiers** by the layout's total width:
+//!
+//! 1. **one-word packed** (≤ 64 bits): one `u64` key per row;
+//! 2. **two-word packed** (65–128 bits): one `u128` key per row — the
+//!    regime of the paper's large hepatitis/imdb-style joint tables;
+//! 3. **row-major wide** (> 128 bits): the historical `u16`-slice store,
+//!    kept as the escape hatch and the property-test oracle.
+//!
+//! In both packed tiers the key's unsigned order equals the lexicographic
+//! row order, and the ct-algebra operators are **integer kernels generic
+//! over the key width** ([`RowKey`], monomorphized at `u64` and `u128`):
 //!
 //! * σ `select` / χ `condition` — mask-compare filters (one AND + compare
 //!   per row instead of a `width`-cell scan);
@@ -24,10 +32,14 @@
 //! * `+` / `−` / `∪` — single-pass sort-merge scans over scalar keys,
 //!   exactly the cost model §4.1.3 assumes.
 //!
-//! When the packed width exceeds 64 bits the table spills to the historical
-//! row-major *wide* store and every operator falls back to the retained
-//! row-major reference path ([`reference`]) — results are bit-identical
-//! either way (asserted by the property tests in `algebra.rs`).
+//! Results always land in the narrowest tier their layout allows (a
+//! projection of a two-word table whose kept columns fit 64 bits comes
+//! back one-word packed). Only tables on the wide store route operators
+//! through the retained row-major reference path ([`reference`]) — results
+//! are bit-identical either way (asserted by the property tests in
+//! `algebra.rs` and `reference.rs`), and every such routing bumps the
+//! [`reference::reference_op_fallbacks`] counter so scale tests can assert
+//! the fast path was never left.
 //!
 //! The `n/a` sentinel (`NA = u16::MAX`) packs as `cap` (one past the
 //! largest real code) per column, preserving the convention that n/a sorts
@@ -42,18 +54,99 @@ pub mod reference;
 pub use adtree::{AdTree, AdTreeConfig};
 pub use algebra::SubtractError;
 pub use display::render_ct;
-pub use layout::{radix_sort_pairs, ColLayout, CtLayout};
+pub use layout::{radix_sort_pairs, radix_sort_pairs_k, ColLayout, CtLayout, RowKey};
 
 use crate::schema::VarId;
 
-/// Physical row storage: packed scalar keys, or the row-major wide
-/// fallback when the layout exceeds 64 bits.
+/// Physical row storage: one- or two-word packed scalar keys, or the
+/// row-major wide fallback when the layout exceeds 128 bits.
 #[derive(Debug, Clone)]
 pub(crate) enum RowStore {
     /// One `u64` key per row, sorted ascending (== lexicographic rows).
+    /// Used whenever the layout fits 64 bits.
     Packed(Vec<u64>),
+    /// One `u128` key per row, sorted ascending. Used for 65–128-bit
+    /// layouts (never for layouts that fit 64 bits — constructors narrow).
+    Packed2(Vec<u128>),
     /// Row-major `u16` codes (`NA = u16::MAX`), sorted lexicographically.
     Wide(Vec<u16>),
+}
+
+/// Crate-internal bridge between a [`RowKey`] width and the [`RowStore`]
+/// variant that holds it: lets one generic kernel read and build tables at
+/// either packed width.
+pub(crate) trait KeyStore: RowKey {
+    /// Wrap sorted-unique keys in the matching store variant.
+    fn store(keys: Vec<Self>) -> RowStore;
+
+    /// Build a table from sorted-unique keys under `layout`, narrowing to
+    /// the one-word store when the layout allows it (keys produced at
+    /// `u128` width whose layout fits 64 bits truncate losslessly and
+    /// order-preservingly).
+    fn finish(vars: Vec<VarId>, layout: CtLayout, keys: Vec<Self>, counts: Vec<u64>) -> CtTable;
+}
+
+impl KeyStore for u64 {
+    fn store(keys: Vec<Self>) -> RowStore {
+        RowStore::Packed(keys)
+    }
+
+    fn finish(vars: Vec<VarId>, layout: CtLayout, keys: Vec<Self>, counts: Vec<u64>) -> CtTable {
+        CtTable::from_sorted_packed(vars, layout, keys, counts)
+    }
+}
+
+impl KeyStore for u128 {
+    fn store(keys: Vec<Self>) -> RowStore {
+        RowStore::Packed2(keys)
+    }
+
+    fn finish(vars: Vec<VarId>, layout: CtLayout, keys: Vec<Self>, counts: Vec<u64>) -> CtTable {
+        if layout.fits() {
+            let narrow: Vec<u64> = keys.iter().map(|&k| k as u64).collect();
+            return CtTable::from_sorted_packed(vars, layout, narrow, counts);
+        }
+        CtTable::from_sorted_packed2(vars, layout, keys, counts)
+    }
+}
+
+/// The packed half of [`CtTable::from_raw`], generic over the key width:
+/// pack every positive-count row under the column permutation `perm`,
+/// radix sort, and fold duplicate keys. Returns `(keys, counts)` ready for
+/// the matching store variant.
+fn pack_raw_keyed<K: KeyStore>(
+    layout: &CtLayout,
+    perm: &[usize],
+    width: usize,
+    rows: &[u16],
+    counts: &[u64],
+) -> (Vec<K>, Vec<u64>) {
+    let n = counts.len();
+    let mut keyed: Vec<(K, u64)> = Vec::with_capacity(n);
+    for r in 0..n {
+        if counts[r] == 0 {
+            continue;
+        }
+        let row = &rows[r * width..(r + 1) * width];
+        let mut key = K::ZERO;
+        for (out_col, &p) in perm.iter().enumerate() {
+            key = key | (K::from_u64(layout.encode(out_col, row[p])) << layout.col(out_col).shift);
+        }
+        keyed.push((key, counts[r]));
+    }
+    radix_sort_pairs_k::<K>(&mut keyed, layout.total_bits());
+    let mut keys: Vec<K> = Vec::with_capacity(keyed.len());
+    let mut folded: Vec<u64> = Vec::with_capacity(keyed.len());
+    for (k, c) in keyed {
+        if keys.last() == Some(&k) {
+            let li = folded.len() - 1;
+            folded[li] = folded[li].checked_add(c).expect("count overflow");
+        } else {
+            keys.push(k);
+            folded.push(c);
+        }
+    }
+    (keys, folded)
 }
 
 /// A contingency table: sufficient statistics for one variable set.
@@ -83,6 +176,8 @@ impl CtTable {
         debug_assert_eq!(vars.len(), layout.width());
         let store = if layout.fits() {
             RowStore::Packed(Vec::new())
+        } else if layout.fits2() {
+            RowStore::Packed2(Vec::new())
         } else {
             RowStore::Wide(Vec::new())
         };
@@ -113,8 +208,25 @@ impl CtTable {
         CtTable { vars, counts, layout, store: RowStore::Packed(keys) }
     }
 
+    /// Trusted constructor for the two-word tier: `keys` already sorted
+    /// ascending and unique, `counts` positive, `vars` canonical, and the
+    /// layout strictly wider than 64 bits but within 128 (narrower layouts
+    /// must use [`from_sorted_packed`](CtTable::from_sorted_packed)).
+    pub(crate) fn from_sorted_packed2(
+        vars: Vec<VarId>,
+        layout: CtLayout,
+        keys: Vec<u128>,
+        counts: Vec<u64>,
+    ) -> Self {
+        debug_assert!(!layout.fits() && layout.fits2());
+        debug_assert_eq!(keys.len(), counts.len());
+        debug_assert!(keys.windows(2).all(|w| w[0] < w[1]), "keys must be sorted+unique");
+        CtTable { vars, counts, layout, store: RowStore::Packed2(keys) }
+    }
+
     /// Trusted constructor from sorted-unique row-major codes: packs them
-    /// when the observed layout fits, else keeps the wide store.
+    /// at the narrowest width the observed layout allows, keeping the wide
+    /// store only past 128 bits.
     pub(crate) fn from_sorted_rows(vars: Vec<VarId>, rows: Vec<u16>, counts: Vec<u64>) -> Self {
         let width = vars.len();
         debug_assert!(width > 0);
@@ -125,6 +237,11 @@ impl CtTable {
             let keys: Vec<u64> =
                 (0..counts.len()).map(|r| layout.pack(&rows[r * width..(r + 1) * width])).collect();
             CtTable { vars, counts, layout, store: RowStore::Packed(keys) }
+        } else if layout.fits2() {
+            let keys: Vec<u128> = (0..counts.len())
+                .map(|r| layout.pack_k::<u128>(&rows[r * width..(r + 1) * width]))
+                .collect();
+            CtTable { vars, counts, layout, store: RowStore::Packed2(keys) }
         } else {
             CtTable { vars, counts, layout, store: RowStore::Wide(rows) }
         }
@@ -164,69 +281,17 @@ impl CtTable {
 
         let n = counts.len();
         let layout = CtLayout::observe(width, n, &rows, |out_col| perm[out_col]);
+        // Packed tiers: pack each row under the column permutation, radix
+        // sort, fold duplicates — the keys ARE the stored rows at either
+        // width (the 65..128-bit tier used to sort as transient u128 keys
+        // and spill to the wide store).
         if layout.fits() {
-            let mut keyed: Vec<(u64, u64)> = Vec::with_capacity(n);
-            for r in 0..n {
-                if counts[r] == 0 {
-                    continue;
-                }
-                let row = &rows[r * width..(r + 1) * width];
-                let mut key = 0u64;
-                for (out_col, &p) in perm.iter().enumerate() {
-                    key |= layout.encode(out_col, row[p]) << layout.col(out_col).shift;
-                }
-                keyed.push((key, counts[r]));
-            }
-            radix_sort_pairs(&mut keyed, layout.total_bits());
-            let mut keys: Vec<u64> = Vec::with_capacity(keyed.len());
-            let mut out_counts: Vec<u64> = Vec::with_capacity(keyed.len());
-            for (k, c) in keyed {
-                if keys.last() == Some(&k) {
-                    let li = out_counts.len() - 1;
-                    out_counts[li] = out_counts[li].checked_add(c).expect("count overflow");
-                } else {
-                    keys.push(k);
-                    out_counts.push(c);
-                }
-            }
-            return CtTable { vars: svars, counts: out_counts, layout, store: RowStore::Packed(keys) };
+            let (keys, folded) = pack_raw_keyed::<u64>(&layout, &perm, width, &rows, &counts);
+            return CtTable { vars: svars, counts: folded, layout, store: RowStore::Packed(keys) };
         }
-
-        // 65..128-bit tier (the seed's fast path): sort as transient u128
-        // keys — one scalar compare per row instead of a comparator walk —
-        // then decode into the wide store.
-        if layout.total_bits() <= 128 {
-            let mut keyed: Vec<(u128, u64)> = Vec::with_capacity(n);
-            for r in 0..n {
-                if counts[r] == 0 {
-                    continue;
-                }
-                let row = &rows[r * width..(r + 1) * width];
-                let mut key = 0u128;
-                for (out_col, &p) in perm.iter().enumerate() {
-                    key |= (layout.encode(out_col, row[p]) as u128) << layout.col(out_col).shift;
-                }
-                keyed.push((key, counts[r]));
-            }
-            keyed.sort_unstable_by_key(|&(k, _)| k);
-            let mut out_rows: Vec<u16> = Vec::with_capacity(keyed.len() * width);
-            let mut out_counts: Vec<u64> = Vec::with_capacity(keyed.len());
-            let mut last_key: Option<u128> = None;
-            for (key, c) in keyed {
-                if last_key == Some(key) {
-                    let li = out_counts.len() - 1;
-                    out_counts[li] = out_counts[li].checked_add(c).expect("count overflow");
-                } else {
-                    for out_col in 0..width {
-                        let mask = layout.field_mask(out_col) as u128;
-                        let v = ((key >> layout.col(out_col).shift) & mask) as u64;
-                        out_rows.push(layout.decode(out_col, v));
-                    }
-                    out_counts.push(c);
-                    last_key = Some(key);
-                }
-            }
-            return CtTable { vars: svars, counts: out_counts, layout, store: RowStore::Wide(out_rows) };
+        if layout.fits2() {
+            let (keys, folded) = pack_raw_keyed::<u128>(&layout, &perm, width, &rows, &counts);
+            return CtTable { vars: svars, counts: folded, layout, store: RowStore::Packed2(keys) };
         }
 
         // Wide path: comparator sort over an index permutation.
@@ -286,30 +351,51 @@ impl CtTable {
         &self.layout
     }
 
-    /// The packed keys, when this table uses the packed store.
+    /// The one-word packed keys, when this table uses the `u64` store.
     pub fn keys(&self) -> Option<&[u64]> {
         match &self.store {
             RowStore::Packed(k) => Some(k),
-            RowStore::Wide(_) => None,
+            _ => None,
         }
     }
 
-    /// Whether rows are stored as packed `u64` keys (vs the wide fallback).
+    /// The two-word packed keys, when this table uses the `u128` store.
+    pub fn keys2(&self) -> Option<&[u128]> {
+        match &self.store {
+            RowStore::Packed2(k) => Some(k),
+            _ => None,
+        }
+    }
+
+    /// Whether rows are stored as packed integer keys at either width (vs
+    /// the row-major wide fallback).
     pub fn is_packed(&self) -> bool {
-        matches!(self.store, RowStore::Packed(_))
+        matches!(self.store, RowStore::Packed(_) | RowStore::Packed2(_))
+    }
+
+    /// Whether rows are stored as two-word (`u128`) packed keys.
+    pub fn is_packed2(&self) -> bool {
+        matches!(self.store, RowStore::Packed2(_))
+    }
+
+    /// Storage tier name, for metrics and bench labels.
+    pub fn tier(&self) -> &'static str {
+        match self.store {
+            RowStore::Packed(_) => "packed64",
+            RowStore::Packed2(_) => "packed128",
+            RowStore::Wide(_) => "rowmajor",
+        }
     }
 
     /// The `i`-th row, decoded to value codes.
     pub fn row(&self, i: usize) -> Vec<u16> {
         let w = self.width();
+        if w == 0 {
+            return Vec::new();
+        }
         match &self.store {
-            RowStore::Packed(keys) => {
-                if w == 0 {
-                    Vec::new()
-                } else {
-                    self.layout.unpack(keys[i])
-                }
-            }
+            RowStore::Packed(keys) => self.layout.unpack(keys[i]),
+            RowStore::Packed2(keys) => self.layout.unpack_k::<u128>(keys[i]),
             RowStore::Wide(rows) => rows[i * w..(i + 1) * w].to_vec(),
         }
     }
@@ -322,6 +408,13 @@ impl CtTable {
                 let mut out = Vec::with_capacity(self.len() * self.width());
                 for &k in keys {
                     self.layout.unpack_into(k, &mut out);
+                }
+                out
+            }
+            RowStore::Packed2(keys) => {
+                let mut out = Vec::with_capacity(self.len() * self.width());
+                for &k in keys {
+                    self.layout.unpack_into_k::<u128>(k, &mut out);
                 }
                 out
             }
@@ -347,6 +440,10 @@ impl CtTable {
         }
         match &self.store {
             RowStore::Packed(keys) => match self.layout.try_pack(assignment) {
+                None => 0,
+                Some(k) => keys.binary_search(&k).map(|i| self.counts[i]).unwrap_or(0),
+            },
+            RowStore::Packed2(keys) => match self.layout.try_pack_k::<u128>(assignment) {
                 None => 0,
                 Some(k) => keys.binary_search(&k).map(|i| self.counts[i]).unwrap_or(0),
             },
@@ -405,6 +502,32 @@ impl CtTable {
                         }
                     }
                 }
+                RowStore::Packed2(keys) => {
+                    if keys.len() != self.counts.len() {
+                        return Err(format!(
+                            "shape mismatch: {} keys, {} counts",
+                            keys.len(),
+                            self.counts.len()
+                        ));
+                    }
+                    if self.layout.fits() {
+                        return Err("two-word store with a layout that fits 64 bits".into());
+                    }
+                    if !self.layout.fits2() {
+                        return Err("two-word store with a >128-bit layout".into());
+                    }
+                    for i in 1..keys.len() {
+                        if keys[i - 1] >= keys[i] {
+                            return Err(format!("keys not sorted/unique at {i}"));
+                        }
+                    }
+                    if self.layout.total_bits() < 128 {
+                        let mask = !((1u128 << self.layout.total_bits()) - 1);
+                        if keys.iter().any(|&k| k & mask != 0) {
+                            return Err("key uses bits outside the layout".into());
+                        }
+                    }
+                }
                 RowStore::Wide(rows) => {
                     if rows.len() != self.counts.len() * w {
                         return Err(format!(
@@ -436,6 +559,7 @@ impl CtTable {
     pub fn mem_bytes(&self) -> usize {
         let store = match &self.store {
             RowStore::Packed(keys) => keys.len() * 8,
+            RowStore::Packed2(keys) => keys.len() * 16,
             RowStore::Wide(rows) => rows.len() * 2,
         };
         store + self.counts.len() * 8 + self.vars.len() * 8
@@ -451,6 +575,7 @@ impl PartialEq for CtTable {
         }
         match (&self.store, &other.store) {
             (RowStore::Packed(a), RowStore::Packed(b)) if self.layout == other.layout => a == b,
+            (RowStore::Packed2(a), RowStore::Packed2(b)) if self.layout == other.layout => a == b,
             _ => self.decode_rows() == other.decode_rows(),
         }
     }
@@ -465,7 +590,7 @@ impl std::fmt::Debug for CtTable {
             .field("vars", &self.vars)
             .field("rows", &rows)
             .field("counts", &self.counts)
-            .field("packed", &self.is_packed())
+            .field("tier", &self.tier())
             .finish()
     }
 }
@@ -553,9 +678,9 @@ mod tests {
     }
 
     #[test]
-    fn oversized_layout_spills_to_wide() {
-        // 40 columns x 2 bits = 80 bits > 64: must use the wide store and
-        // still satisfy every invariant.
+    fn mid_width_layout_uses_two_word_store() {
+        // 40 columns x 2 bits = 80 bits: one-word packing overflows, but the
+        // two-word tier keeps the rows as u128 keys.
         let width = 40usize;
         let vars: Vec<VarId> = (0..width).collect();
         let mut rows = Vec::new();
@@ -563,10 +688,56 @@ mod tests {
             rows.extend(std::iter::repeat(r).take(width));
         }
         let t = CtTable::from_raw(vars, rows, vec![1, 2, 3]);
-        assert!(!t.is_packed());
+        assert!(t.is_packed() && t.is_packed2());
+        assert_eq!(t.tier(), "packed128");
+        assert!(t.keys().is_none());
+        assert_eq!(t.keys2().unwrap().len(), 3);
         assert_eq!(t.len(), 3);
         assert_eq!(t.row(1), vec![1u16; width]);
         assert_eq!(t.count_of(&vec![2u16; width]), 3);
+        assert_eq!(t.count_of(&vec![3u16; width]), 0);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oversized_layout_spills_to_wide() {
+        // 70 columns x 2 bits = 140 bits > 128: past both packed tiers, the
+        // row-major wide store takes over and still satisfies every
+        // invariant.
+        let width = 70usize;
+        let vars: Vec<VarId> = (0..width).collect();
+        let mut rows = Vec::new();
+        for r in 0..3u16 {
+            rows.extend(std::iter::repeat(r).take(width));
+        }
+        let t = CtTable::from_raw(vars, rows, vec![1, 2, 3]);
+        assert!(!t.is_packed());
+        assert_eq!(t.tier(), "rowmajor");
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.row(1), vec![1u16; width]);
+        assert_eq!(t.count_of(&vec![2u16; width]), 3);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn two_word_from_raw_sorts_and_folds() {
+        // Same normalization semantics as the one-word tier: columns given
+        // out of order, duplicate rows folded, zero counts dropped — but on
+        // a 75-bit layout (25 columns x 3 bits).
+        let width = 25usize;
+        let vars: Vec<VarId> = (0..width).rev().collect(); // descending on purpose
+        let mut rows = Vec::new();
+        // Three logical rows; the first and third collapse after the column
+        // permutation (identical code per column). Max code 4 -> 3 bits per
+        // column under the observed layout.
+        for r in [4u16, 1, 4] {
+            rows.extend(std::iter::repeat(r).take(width));
+        }
+        let t = CtTable::from_raw(vars, rows, vec![4, 5, 6]);
+        assert!(t.is_packed2());
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.count_of(&vec![1u16; width]), 5);
+        assert_eq!(t.count_of(&vec![4u16; width]), 10);
         t.check_invariants().unwrap();
     }
 

@@ -2,10 +2,13 @@
 //!
 //! This is the seed's `Vec<u16>`-slice semantics, kept for three jobs:
 //!
-//! 1. **oracle** — the property tests in `algebra.rs` assert the packed-key
-//!    operators are bit-identical to these implementations;
-//! 2. **wide fallback** — tables whose [`CtLayout`] exceeds 64 bits route
+//! 1. **oracle** — the property tests in `algebra.rs` and below assert the
+//!    packed-key operators (both the one-word `u64` and two-word `u128`
+//!    tiers) are bit-identical to these implementations;
+//! 2. **wide fallback** — tables whose [`CtLayout`] exceeds 128 bits route
 //!    their operators through here (decoded rows in, sorted rows out);
+//!    each routing bumps [`reference_op_fallbacks`] so scale tests can
+//!    assert the packed path was never left;
 //! 3. **baseline** — `benches/bench_ctops_micro.rs` measures packed vs
 //!    row-major on identical inputs.
 //!
@@ -16,6 +19,26 @@
 
 use super::{CtTable, SubtractError};
 use crate::schema::VarId;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of ct-algebra operator calls that routed through this
+/// row-major reference path instead of a packed kernel. Monotonic; read it
+/// before and after a workload and compare deltas. With both packed tiers
+/// in place (layouts ≤ 128 bits), a paper-scale Möbius Join should leave
+/// this counter untouched — `rust/tests/wide_tier.rs` asserts exactly that.
+static REF_OP_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+
+/// Current value of the reference-fallback counter (see [`note_op_fallback`]).
+pub fn reference_op_fallbacks() -> u64 {
+    REF_OP_FALLBACKS.load(Ordering::Relaxed)
+}
+
+/// Record one operator call that left the packed fast path. Called by the
+/// dispatch sites in `algebra.rs` only — constructing a [`RefTable`]
+/// directly (oracle tests, benches) does not count.
+pub(crate) fn note_op_fallback() {
+    REF_OP_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+}
 
 /// A row-major contingency table (the seed's storage): sorted unique rows,
 /// positive counts, canonical column order.
@@ -235,8 +258,15 @@ impl RefTable {
         assert_eq!(self.vars, other.vars, "add: variable sets differ");
         let w = self.width();
         if w == 0 {
+            // Two empty nullary operands sum to the empty table (a scalar
+            // row of count 0 would break the positive-counts invariant) —
+            // same convention as subtract and union_disjoint.
             let t = self.total() + other.total();
-            return RefTable::scalar(u64::try_from(t).expect("count overflow"));
+            return if t == 0 {
+                RefTable::empty(Vec::new())
+            } else {
+                RefTable::scalar(u64::try_from(t).expect("count overflow"))
+            };
         }
         let mut rows = Vec::with_capacity(self.rows.len() + other.rows.len());
         let mut counts = Vec::with_capacity(self.len() + other.len());
@@ -469,5 +499,236 @@ mod tests {
     fn scalar_and_empty_to_ct() {
         assert_eq!(RefTable::scalar(4).to_ct(), CtTable::scalar(4));
         assert_eq!(RefTable::empty(vec![1]).to_ct(), CtTable::empty(vec![1]));
+    }
+
+    // ---------- two-word (65–128-bit) tier vs row-major oracle ----------
+    //
+    // The property tests in `algebra.rs` cover the one-word tier; these
+    // drive every operator on layouts wider than 64 bits, where the packed
+    // path runs the u128-monomorphized kernels, and compare each result
+    // bit-for-bit against this module's row-major implementations.
+
+    use crate::util::proptest::run_prop;
+    use crate::util::Pcg64;
+    use crate::schema::NA;
+
+    const WIDE_COLS: usize = 24;
+
+    /// Random table over `WIDE_COLS` columns whose observed layout is
+    /// always 65..=128 bits wide: one forced row pins every column's cap to
+    /// 6 (3-bit fields, NA on odd columns), so 24 columns never fit 64 bits.
+    fn random_wide_ct(rng: &mut Pcg64, vars: &[VarId]) -> CtTable {
+        debug_assert_eq!(vars.len(), WIDE_COLS);
+        let n = rng.index(14) + 1;
+        let mut rows = Vec::new();
+        let mut counts = Vec::new();
+        for _ in 0..n {
+            for c in 0..WIDE_COLS {
+                if c % 2 == 1 && rng.chance(0.25) {
+                    rows.push(NA);
+                } else {
+                    rows.push(rng.below(6) as u16);
+                }
+            }
+            counts.push(rng.below(20) + 1);
+        }
+        // The cap-pinning row: max real code everywhere.
+        rows.extend(std::iter::repeat(5u16).take(WIDE_COLS));
+        counts.push(1);
+        let t = CtTable::from_raw(vars.to_vec(), rows, counts);
+        assert!(t.is_packed2(), "expected the two-word tier, got {}", t.tier());
+        t
+    }
+
+    /// Oracle comparison with invariant checking on the packed side.
+    fn expect_same(got: &CtTable, want: &RefTable, what: &str) -> Result<(), String> {
+        got.check_invariants().map_err(|e| format!("{what}: invariant broken: {e}"))?;
+        if got != &want.to_ct() {
+            return Err(format!("{what}: packed != reference\n got {got:?}\nwant {want:?}"));
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn prop_wide_unary_ops_match_reference() {
+        let vars: Vec<VarId> = (0..WIDE_COLS).collect();
+        run_prop(
+            "wide_unary_ops_match_reference",
+            120,
+            0x51DE_01,
+            |r| random_wide_ct(r, &vars),
+            |t| {
+                let rt = RefTable::from(t);
+                expect_same(&t.select(&[(2, 1)]), &rt.select(&[(2, 1)]), "select")?;
+                expect_same(&t.select(&[(3, NA)]), &rt.select(&[(3, NA)]), "select NA")?;
+                expect_same(&t.select(&[(0, 9)]), &rt.select(&[(0, 9)]), "select unrep")?;
+                // Projections that stay two-word (drop one column), narrow
+                // back to one word, and drop everything.
+                let wide_keep: Vec<VarId> = (0..WIDE_COLS - 1).collect();
+                let narrow_keep: Vec<VarId> = (0..4).collect();
+                for keep in [wide_keep, narrow_keep, vec![7], vec![]] {
+                    let p = t.project(&keep);
+                    expect_same(&p, &rt.project(&keep), "project")?;
+                    // Results always land on the narrowest tier the kept
+                    // columns allow.
+                    if !keep.is_empty() {
+                        if !p.is_packed() {
+                            return Err("projection left the packed tiers".into());
+                        }
+                        if p.is_packed2() != (p.layout().total_bits() > 64) {
+                            return Err(format!(
+                                "projection tier {} inconsistent with {} layout bits",
+                                p.tier(),
+                                p.layout().total_bits()
+                            ));
+                        }
+                    }
+                }
+                for cond in [vec![(2usize, 0u16)], vec![(0, 1), (5, 1)], vec![(3, NA)]] {
+                    expect_same(&t.condition(&cond), &rt.condition(&cond), "condition")?;
+                }
+                expect_same(
+                    &t.extend_const(&[(100, 3), (101, NA)]),
+                    &rt.extend_const(&[(100, 3), (101, NA)]),
+                    "extend_const",
+                )?;
+                expect_same(&t.scale(3), &rt.scale(3), "scale")?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_wide_binary_ops_match_reference() {
+        let vars: Vec<VarId> = (0..WIDE_COLS).collect();
+        run_prop(
+            "wide_binary_ops_match_reference",
+            100,
+            0x51DE_02,
+            |r| (random_wide_ct(r, &vars), random_wide_ct(r, &vars)),
+            |(a, b)| {
+                let (ra, rb) = (RefTable::from(a), RefTable::from(b));
+                expect_same(&a.add(b), &ra.add(&rb), "add")?;
+                let sum = a.add(b);
+                let rsum = ra.add(&rb);
+                expect_same(
+                    &sum.subtract(b).map_err(|e| e.to_string())?,
+                    &rsum.subtract(&rb).map_err(|e| e.to_string())?,
+                    "subtract",
+                )?;
+                if !sum.is_packed2() {
+                    return Err("wide add left the two-word tier".into());
+                }
+                // Cross with a small disjoint table stays within 128 bits
+                // and on the packed path.
+                let small = CtTable::from_raw(vec![200, 201], vec![0, 0, 1, 1], vec![2, 3]);
+                let x = a.cross(&small);
+                expect_same(&x, &ra.cross(&RefTable::from(&small)), "cross small")?;
+                if !x.is_packed2() {
+                    return Err("wide cross left the two-word tier".into());
+                }
+                // Wide × wide exceeds 128 bits: the reference fallback must
+                // still agree with the oracle end to end.
+                let b_shift = {
+                    let mut s = b.clone();
+                    s.vars = s.vars.iter().map(|v| v + 300).collect();
+                    s
+                };
+                let big = a.cross(&b_shift);
+                expect_same(&big, &ra.cross(&RefTable::from(&b_shift)), "cross wide")?;
+                if big.is_packed() {
+                    return Err(">128-bit cross should be row-major".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_wide_union_disjoint_matches_reference() {
+        let vars: Vec<VarId> = (0..WIDE_COLS).collect();
+        run_prop(
+            "wide_union_matches_reference",
+            80,
+            0x51DE_03,
+            |r| random_wide_ct(r, &vars),
+            |t| {
+                if t.len() < 2 {
+                    return Ok(());
+                }
+                let rt = RefTable::from(t);
+                let (mut ar, mut ac, mut br, mut bc) = (vec![], vec![], vec![], vec![]);
+                for i in 0..rt.len() {
+                    if i % 2 == 0 {
+                        ar.extend_from_slice(rt.row(i));
+                        ac.push(rt.counts[i]);
+                    } else {
+                        br.extend_from_slice(rt.row(i));
+                        bc.push(rt.counts[i]);
+                    }
+                }
+                let ra = RefTable { vars: rt.vars.clone(), rows: ar, counts: ac };
+                let rb = RefTable { vars: rt.vars.clone(), rows: br, counts: bc };
+                let got = ra.to_ct().union_disjoint(&rb.to_ct());
+                expect_same(&got, &ra.union_disjoint(&rb), "union_disjoint")?;
+                if &got != t {
+                    return Err("union of halves != whole".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_mixed_width_merges_match_reference() {
+        // One operand fits 64 bits, the other does not: the merge must
+        // widen the narrow side into the two-word union layout and agree
+        // with the oracle (the regression this guards is a silent fallback
+        // to row-major for mixed-width operands).
+        const COLS: usize = 20;
+        let vars: Vec<VarId> = (0..COLS).collect();
+        let gen_at = |rng: &mut Pcg64, max_code: u64, pin: u16| {
+            let n = rng.index(10) + 1;
+            let mut rows = Vec::new();
+            let mut counts = Vec::new();
+            for _ in 0..n {
+                for _ in 0..COLS {
+                    rows.push(rng.below(max_code) as u16);
+                }
+                counts.push(rng.below(20) + 1);
+            }
+            rows.extend(std::iter::repeat(pin).take(COLS));
+            counts.push(1);
+            CtTable::from_raw(vars.clone(), rows, counts)
+        };
+        run_prop(
+            "mixed_width_merges_match_reference",
+            100,
+            0x51DE_04,
+            |r| (gen_at(r, 8, 7), gen_at(r, 8, 31)),
+            |(a, b)| {
+                // a: 3-bit fields x20 = 60 bits; b: caps pinned to 32 ->
+                // 5-bit fields x20 = 100 bits.
+                if a.is_packed2() || !b.is_packed2() {
+                    return Err(format!(
+                        "unexpected tiers: a={} b={}",
+                        a.tier(),
+                        b.tier()
+                    ));
+                }
+                let (ra, rb) = (RefTable::from(a), RefTable::from(b));
+                let sum = a.add(b);
+                expect_same(&sum, &ra.add(&rb), "mixed add")?;
+                if !sum.is_packed2() {
+                    return Err("mixed add should land on the two-word tier".into());
+                }
+                expect_same(
+                    &sum.subtract(a).map_err(|e| e.to_string())?,
+                    &ra.add(&rb).subtract(&ra).map_err(|e| e.to_string())?,
+                    "mixed subtract",
+                )?;
+                Ok(())
+            },
+        );
     }
 }

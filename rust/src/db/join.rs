@@ -8,7 +8,7 @@
 //! without materializing the join.
 
 use super::Database;
-use crate::ct::{radix_sort_pairs, CtLayout, CtTable};
+use crate::ct::{radix_sort_pairs, radix_sort_pairs_k, CtLayout, CtTable};
 use crate::schema::{RandomVar, RelId, VarId};
 use crate::util::fxhash::FxHashMap;
 
@@ -72,8 +72,9 @@ impl<'a> JoinCounter<'a> {
         // re-encode round trip — the table every downstream ct-algebra
         // operator consumes as-is. All codes here are real values (every
         // relationship is true, so no `NA`), hence encoding is the identity
-        // within each field. Rows past 64 bits group as transient u128 keys
-        // (the seed's tier); only past 128 bits do we hash u16 slices.
+        // within each field. Rows of 65–128 bits group as u128 keys that
+        // become the two-word packed store directly; only past 128 bits do
+        // we hash u16 slices.
         let layout = CtLayout::for_vars(schema, &vars);
         let shifts: Vec<u32> = (0..vars.len()).map(|c| layout.col(c).shift).collect();
         let mode = if layout.fits() {
@@ -121,22 +122,19 @@ impl<'a> JoinCounter<'a> {
                 CtTable::from_sorted_packed(vars, layout, keys, counts)
             }
             KeyMode::U128 => {
+                // Two-word tier: the group keys become the table's u128 row
+                // keys as-is (previously this arm decoded into the row-major
+                // wide store, pushing every downstream operator off the
+                // packed path).
                 let mut keyed: Vec<(u128, u64)> = state.packed128_groups.into_iter().collect();
-                keyed.sort_unstable_by_key(|&(k, _)| k);
-                if keyed.is_empty() {
-                    return CtTable::empty(vars);
-                }
-                let width = vars.len();
-                let mut rows = Vec::with_capacity(keyed.len() * width);
+                radix_sort_pairs_k::<u128>(&mut keyed, layout.total_bits());
+                let mut keys = Vec::with_capacity(keyed.len());
                 let mut counts = Vec::with_capacity(keyed.len());
                 for (k, c) in keyed {
-                    for col in 0..width {
-                        let mask = layout.field_mask(col) as u128;
-                        rows.push(((k >> shifts[col]) & mask) as u16);
-                    }
+                    keys.push(k);
                     counts.push(c);
                 }
-                CtTable::from_sorted_rows(vars, rows, counts)
+                CtTable::from_sorted_packed2(vars, layout, keys, counts)
             }
             KeyMode::Wide => {
                 let mut rows = Vec::with_capacity(state.groups.len() * vars.len());

@@ -233,9 +233,11 @@ impl Database {
     /// GROUP BY over the population's attribute columns. Columns are that
     /// variable's EntityAttr random variables. Built directly in packed
     /// form (group keys are the table's row keys under the schema-derived
-    /// [`crate::ct::CtLayout`]).
+    /// [`crate::ct::CtLayout`]) at whichever key width the layout needs:
+    /// `u64` up to 64 bits, `u128` up to 128; only past that does the
+    /// group-by hash code slices.
     pub fn ct_entity(&self, fo: FoVarId) -> crate::ct::CtTable {
-        use crate::ct::{radix_sort_pairs, CtLayout, CtTable};
+        use crate::ct::{CtLayout, CtTable};
         let pop = self.pop_of_fo(fo);
         let vars: Vec<VarId> = self.schema.one_atts_of_fo(fo);
         let n = self.entity_counts[pop];
@@ -256,24 +258,10 @@ impl Database {
             .collect();
         let layout = CtLayout::for_vars(&self.schema, &vars);
         if layout.fits() {
-            let shifts: Vec<u32> = (0..vars.len()).map(|c| layout.col(c).shift).collect();
-            let mut groups: FxHashMap<u64, u64> = FxHashMap::default();
-            for e in 0..n {
-                let mut key = 0u64;
-                for (slot, &k) in attr_idx.iter().enumerate() {
-                    key |= (self.entity_attr(pop, k, e) as u64) << shifts[slot];
-                }
-                *groups.entry(key).or_insert(0) += 1;
-            }
-            let mut keyed: Vec<(u64, u64)> = groups.into_iter().collect();
-            radix_sort_pairs(&mut keyed, layout.total_bits());
-            let mut keys = Vec::with_capacity(keyed.len());
-            let mut counts = Vec::with_capacity(keyed.len());
-            for (k, c) in keyed {
-                keys.push(k);
-                counts.push(c);
-            }
-            return CtTable::from_sorted_packed(vars, layout, keys, counts);
+            return self.group_entities::<u64>(pop, &attr_idx, vars, layout);
+        }
+        if layout.fits2() {
+            return self.group_entities::<u128>(pop, &attr_idx, vars, layout);
         }
         let mut groups: FxHashMap<Vec<u16>, u64> = FxHashMap::default();
         let mut key = vec![0u16; vars.len()];
@@ -290,6 +278,36 @@ impl Database {
             counts.push(c);
         }
         CtTable::from_raw(vars, rows, counts)
+    }
+
+    /// Packed GROUP BY kernel behind [`Database::ct_entity`], generic over
+    /// the key width the layout needs (all codes are real values, so
+    /// encoding is the identity within each field).
+    fn group_entities<K: crate::ct::KeyStore>(
+        &self,
+        pop: PopId,
+        attr_idx: &[usize],
+        vars: Vec<VarId>,
+        layout: crate::ct::CtLayout,
+    ) -> crate::ct::CtTable {
+        let shifts: Vec<u32> = (0..vars.len()).map(|c| layout.col(c).shift).collect();
+        let mut groups: FxHashMap<K, u64> = FxHashMap::default();
+        for e in 0..self.entity_counts[pop] {
+            let mut key = K::ZERO;
+            for (slot, &k) in attr_idx.iter().enumerate() {
+                key = key | (K::from_u64(self.entity_attr(pop, k, e) as u64) << shifts[slot]);
+            }
+            *groups.entry(key).or_insert(0) += 1;
+        }
+        let mut keyed: Vec<(K, u64)> = groups.into_iter().collect();
+        crate::ct::radix_sort_pairs_k::<K>(&mut keyed, layout.total_bits());
+        let mut keys = Vec::with_capacity(keyed.len());
+        let mut counts = Vec::with_capacity(keyed.len());
+        for (k, c) in keyed {
+            keys.push(k);
+            counts.push(c);
+        }
+        K::finish(vars, layout, keys, counts)
     }
 }
 

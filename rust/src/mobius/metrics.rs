@@ -62,6 +62,14 @@ pub struct MjMetrics {
     /// Time building `ct_*` tables in the main loop (Algorithm 2 lines
     /// 13-19): conditioning shorter-chain tables + cross products.
     pub main_loop: Duration,
+    /// ct-algebra operator calls that left the packed fast path for the
+    /// row-major reference implementation during this run (delta of
+    /// [`crate::ct::reference::reference_op_fallbacks`]). Zero for every
+    /// schema whose tables stay within 128-bit layouts. Attribution is by
+    /// process-global counter delta, so concurrent `MobiusJoin` runs in one
+    /// process can cross-attribute each other's fallbacks — tests that
+    /// assert on this live in their own binary (`rust/tests/wide_tier.rs`).
+    pub reference_fallbacks: u64,
     counts: [u64; 6],
     times: [Duration; 6],
 }
@@ -102,6 +110,7 @@ impl MjMetrics {
         self.positive += other.positive;
         self.pivot += other.pivot;
         self.main_loop += other.main_loop;
+        self.reference_fallbacks += other.reference_fallbacks;
         for i in 0..6 {
             self.counts[i] += other.counts[i];
             self.times[i] += other.times[i];
@@ -127,6 +136,7 @@ impl MjMetrics {
                 fd(self.op_time(op))
             ));
         }
+        s.push_str(&format!("  row-major reference fallbacks: {}\n", self.reference_fallbacks));
         s
     }
 }

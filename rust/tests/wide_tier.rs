@@ -1,0 +1,131 @@
+//! End-to-end coverage of the two-word (65–128-bit) packed tier.
+//!
+//! A schema whose joint contingency-table layout is wider than 64 bits —
+//! the regime of the paper's hepatitis/imdb benchmarks — must run the whole
+//! Möbius Join on packed integer kernels, with **zero** routings into the
+//! row-major reference operators. This binary holds only wide-tier tests so
+//! the process-global fallback counter delta is meaningful (the lib tests
+//! exercise the fallback path deliberately and would inflate it).
+
+use mrss::ct::reference::reference_op_fallbacks;
+use mrss::db::{Database, DatabaseBuilder};
+use mrss::mobius::MobiusJoin;
+use mrss::schema::SchemaBuilder;
+use mrss::util::Pcg64;
+use std::sync::Arc;
+
+/// Two populations, two parallel relationships between them, and enough
+/// 8-ary attributes that every chain's table layout lands in 65..=128 bits:
+///
+/// * entity tables: 10 attrs x 3 bits = 30 bits each (one-word tier);
+/// * `ct_T(R_i)`: 30 + 30 + 2 x 4 = 68 bits (two-word tier);
+/// * full chain table `{R1, R2}`: 60 + 2 x 1 + 4 x 4 = 78 bits.
+fn wide_db(seed: u64) -> Database {
+    let mut sb = SchemaBuilder::new("wide-tier");
+    let pa = sb.population("Alpha");
+    let pb = sb.population("Beta");
+    for i in 0..10 {
+        sb.attr(pa, &format!("a{i}"), &["0", "1", "2", "3", "4", "5", "6", "7"]);
+        sb.attr(pb, &format!("b{i}"), &["0", "1", "2", "3", "4", "5", "6", "7"]);
+    }
+    let r1 = sb.relationship("R1", pa, pb);
+    sb.rel_attr(r1, "r1x", &["0", "1", "2", "3", "4", "5", "6", "7"]);
+    sb.rel_attr(r1, "r1y", &["0", "1", "2", "3", "4", "5", "6", "7"]);
+    let r2 = sb.relationship("R2", pa, pb);
+    sb.rel_attr(r2, "r2x", &["0", "1", "2", "3", "4", "5", "6", "7"]);
+    sb.rel_attr(r2, "r2y", &["0", "1", "2", "3", "4", "5", "6", "7"]);
+    let schema = Arc::new(sb.finish());
+
+    let mut rng = Pcg64::seeded(seed);
+    let mut b = DatabaseBuilder::new(schema);
+    let na = 6u32;
+    let nb = 5u32;
+    let mut alphas = Vec::new();
+    let mut betas = Vec::new();
+    for _ in 0..na {
+        let codes: Vec<u16> = (0..10).map(|_| rng.below(8) as u16).collect();
+        alphas.push(b.add_entity(pa, &codes));
+    }
+    for _ in 0..nb {
+        let codes: Vec<u16> = (0..10).map(|_| rng.below(8) as u16).collect();
+        betas.push(b.add_entity(pb, &codes));
+    }
+    for &x in &alphas {
+        for &y in &betas {
+            if rng.chance(0.6) {
+                b.add_rel(r1, x, y, &[rng.below(8) as u16, rng.below(8) as u16]);
+            }
+            if rng.chance(0.5) {
+                b.add_rel(r2, x, y, &[rng.below(8) as u16, rng.below(8) as u16]);
+            }
+        }
+    }
+    b.finish()
+}
+
+#[test]
+fn wide_joint_runs_packed_end_to_end_without_fallbacks() {
+    let db = wide_db(42);
+    let before = reference_op_fallbacks();
+    let res = MobiusJoin::new(&db).run();
+    let after = reference_op_fallbacks();
+
+    // The acceptance bar for the two-word operator tier: not one ct-algebra
+    // call left the packed path across the whole dynamic program.
+    assert_eq!(after - before, 0, "row-major reference fallbacks occurred");
+    assert_eq!(res.metrics.reference_fallbacks, 0);
+
+    // The joint table really is in the two-word regime.
+    let joint = res.joint_ct();
+    let bits = joint.layout().total_bits();
+    assert!((65..=128).contains(&bits), "joint layout is {bits} bits");
+    assert!(joint.is_packed2(), "joint tier is {}", joint.tier());
+    joint.check_invariants().unwrap();
+
+    // Proposition 1: the joint covers every entity instantiation once.
+    let expect: u128 = db
+        .schema
+        .fo_vars
+        .iter()
+        .map(|f| db.entity_counts[f.pop] as u128)
+        .product();
+    assert_eq!(joint.total(), expect);
+
+    // Every chain table (levels 1 and 2) is on a packed tier too.
+    for (chain, table) in &res.tables {
+        assert!(table.is_packed(), "chain {chain:?} on tier {}", table.tier());
+        table.check_invariants().unwrap();
+    }
+
+    // Consistency: conditioning the joint on both indicators true must
+    // reproduce the positive-only statistics (still fallback-free).
+    let link_off = res.link_off();
+    assert!(link_off.total() > 0);
+    assert_eq!(reference_op_fallbacks() - before, 0);
+}
+
+#[test]
+fn wide_parallel_run_matches_serial() {
+    let db = wide_db(7);
+    let serial = MobiusJoin::new(&db).run();
+    let parallel = MobiusJoin::new(&db).workers(4).run();
+    assert_eq!(serial.joint_ct(), parallel.joint_ct());
+    assert_eq!(serial.tables.len(), parallel.tables.len());
+    for (chain, table) in &serial.tables {
+        assert_eq!(table, &parallel.tables[chain], "chain {chain:?} differs");
+    }
+    assert_eq!(serial.metrics.reference_fallbacks, 0);
+    assert_eq!(parallel.metrics.reference_fallbacks, 0);
+}
+
+#[test]
+fn wide_depth_capped_run_stays_packed() {
+    let db = wide_db(9);
+    let before = reference_op_fallbacks();
+    let capped = MobiusJoin::new(&db).max_chain_len(1).run();
+    assert_eq!(reference_op_fallbacks() - before, 0);
+    assert!(capped.joint.is_none());
+    for table in capped.tables.values() {
+        assert!(table.is_packed2(), "level-1 table tier {}", table.tier());
+    }
+}
