@@ -22,6 +22,15 @@ pub struct Config {
     /// Subcommand (`datasets`, `ct`, `cp`, `suite`, `mine`, `bn`).
     pub command: String,
     pub dataset: String,
+    /// Whether `dataset` was set explicitly (flag or config file) rather
+    /// than left at the default — lets store-reading commands reject a
+    /// `--dataset`/manifest mismatch without breaking the default case.
+    pub dataset_explicit: bool,
+    /// Same for `scale` and `seed`: a store-reading command serves the
+    /// manifest's configuration, so explicitly asking for a different one
+    /// is an error, not a silent override.
+    pub scale_explicit: bool,
+    pub seed_explicit: bool,
     pub scale: f64,
     pub seed: u64,
     pub engine: EngineKind,
@@ -31,6 +40,22 @@ pub struct Config {
     pub max_chain_len: Option<usize>,
     /// Print the first N rows of the joint table (0 = skip).
     pub excerpt: usize,
+    /// Ct-store root directory: `ct`/`suite` persist into it, `query`/
+    /// `serve`/`mine`/`bn` read from it.
+    pub store: Option<String>,
+    /// `query`: batch file of queries, one per line (`#` comments).
+    pub queries: Option<String>,
+    /// `query`: a single inline query string.
+    pub query: Option<String>,
+    /// `query`: write the JSON answers here instead of stdout.
+    pub json: Option<String>,
+    /// `query --gen N`: emit N generated queries instead of answering.
+    pub gen: Option<usize>,
+    /// `query --fresh`: answer from a fresh in-memory Möbius Join instead
+    /// of the store (the store-smoke diff baseline).
+    pub fresh: bool,
+    /// LRU cache budget in bytes for store reads.
+    pub mem_budget: Option<usize>,
     /// Extra free-form options (forward-compatible).
     pub extra: HashMap<String, String>,
 }
@@ -40,6 +65,9 @@ impl Default for Config {
         Config {
             command: "datasets".into(),
             dataset: "university".into(),
+            dataset_explicit: false,
+            scale_explicit: false,
+            seed_explicit: false,
             scale: 0.1,
             seed: 7,
             engine: EngineKind::Native,
@@ -48,6 +76,13 @@ impl Default for Config {
             cp_max_tuples: 200_000_000,
             max_chain_len: None,
             excerpt: 0,
+            store: None,
+            queries: None,
+            query: None,
+            json: None,
+            gen: None,
+            fresh: false,
+            mem_budget: None,
             extra: HashMap::new(),
         }
     }
@@ -66,9 +101,18 @@ impl Config {
                     it.next().cloned().with_context(|| format!("--{flag} needs a value"))
                 };
                 match flag {
-                    "dataset" => cfg.dataset = take(&mut it)?,
-                    "scale" => cfg.scale = take(&mut it)?.parse().context("--scale")?,
-                    "seed" => cfg.seed = take(&mut it)?.parse().context("--seed")?,
+                    "dataset" => {
+                        cfg.dataset = take(&mut it)?;
+                        cfg.dataset_explicit = true;
+                    }
+                    "scale" => {
+                        cfg.scale = take(&mut it)?.parse().context("--scale")?;
+                        cfg.scale_explicit = true;
+                    }
+                    "seed" => {
+                        cfg.seed = take(&mut it)?.parse().context("--seed")?;
+                        cfg.seed_explicit = true;
+                    }
                     "engine" => {
                         cfg.engine = match take(&mut it)?.as_str() {
                             "native" => EngineKind::Native,
@@ -88,6 +132,15 @@ impl Config {
                             Some(take(&mut it)?.parse().context("--max-chain-len")?)
                     }
                     "excerpt" => cfg.excerpt = take(&mut it)?.parse().context("--excerpt")?,
+                    "store" => cfg.store = Some(take(&mut it)?),
+                    "queries" => cfg.queries = Some(take(&mut it)?),
+                    "query" => cfg.query = Some(take(&mut it)?),
+                    "json" => cfg.json = Some(take(&mut it)?),
+                    "gen" => cfg.gen = Some(take(&mut it)?.parse().context("--gen")?),
+                    "fresh" => cfg.fresh = true,
+                    "mem-budget" => {
+                        cfg.mem_budget = Some(take(&mut it)?.parse().context("--mem-budget")?)
+                    }
                     "config" => {
                         let path = take(&mut it)?;
                         cfg.apply_file(&path)?;
@@ -128,9 +181,18 @@ impl Config {
                 .with_context(|| format!("{path}:{}: expected KEY = VALUE", ln + 1))?;
             let (k, v) = (k.trim(), v.trim());
             match k {
-                "dataset" => self.dataset = v.to_string(),
-                "scale" => self.scale = v.parse().context("scale")?,
-                "seed" => self.seed = v.parse().context("seed")?,
+                "dataset" => {
+                    self.dataset = v.to_string();
+                    self.dataset_explicit = true;
+                }
+                "scale" => {
+                    self.scale = v.parse().context("scale")?;
+                    self.scale_explicit = true;
+                }
+                "seed" => {
+                    self.seed = v.parse().context("seed")?;
+                    self.seed_explicit = true;
+                }
                 "workers" => self.workers = v.parse().context("workers")?,
                 "engine" => {
                     self.engine = match v {
@@ -141,6 +203,8 @@ impl Config {
                 }
                 "cp_budget_secs" => self.cp_budget_secs = v.parse().context("cp_budget_secs")?,
                 "max_chain_len" => self.max_chain_len = Some(v.parse().context("max_chain_len")?),
+                "store" => self.store = Some(v.to_string()),
+                "mem_budget" => self.mem_budget = Some(v.parse().context("mem_budget")?),
                 other => {
                     self.extra.insert(other.to_string(), v.to_string());
                 }
@@ -203,5 +267,22 @@ mod tests {
     fn extra_flags_preserved() {
         let c = Config::from_args(&args("mine --min-support 0.1")).unwrap();
         assert_eq!(c.extra["min-support"], "0.1");
+    }
+
+    #[test]
+    fn store_and_query_flags_parse() {
+        let c = Config::from_args(&args(
+            "query --store /tmp/s --queries q.txt --json out.json --mem-budget 65536 --fresh",
+        ))
+        .unwrap();
+        assert_eq!(c.command, "query");
+        assert_eq!(c.store.as_deref(), Some("/tmp/s"));
+        assert_eq!(c.queries.as_deref(), Some("q.txt"));
+        assert_eq!(c.json.as_deref(), Some("out.json"));
+        assert_eq!(c.mem_budget, Some(65536));
+        assert!(c.fresh);
+        let g = Config::from_args(&args("query --store /tmp/s --gen 50")).unwrap();
+        assert_eq!(g.gen, Some(50));
+        assert!(!g.fresh);
     }
 }

@@ -13,10 +13,13 @@ mod report;
 
 pub use report::{CpReport, SuiteReport};
 
+use crate::anyhow;
 use crate::baseline::{cross_product_ct, CpBudget};
 use crate::datagen;
 use crate::mobius::MobiusJoin;
-use crate::util::error::Result;
+use crate::store::{CtStore, PersistConfig, StoreSink};
+use crate::util::error::{Context, Result};
+use std::path::Path;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -35,6 +38,9 @@ pub struct SuiteJob {
     /// Worker threads for the Möbius Join's per-level chain loop (1 =
     /// serial). Output is identical for any value.
     pub mj_workers: usize,
+    /// Persist every computed table to `<store_dir>/<dataset>` and verify
+    /// the stored joint by reading it back (`None` = no persistence).
+    pub store_dir: Option<String>,
 }
 
 impl SuiteJob {
@@ -47,6 +53,7 @@ impl SuiteJob {
             cp_budget: CpBudget::default(),
             max_chain_len: None,
             mj_workers: 1,
+            store_dir: None,
         }
     }
 
@@ -58,6 +65,12 @@ impl SuiteJob {
 
     pub fn with_mj_workers(mut self, workers: usize) -> Self {
         self.mj_workers = workers.max(1);
+        self
+    }
+
+    /// Persist this job's tables under `dir/<dataset>`.
+    pub fn with_store(mut self, dir: &str) -> Self {
+        self.store_dir = Some(dir.to_string());
         self
     }
 }
@@ -81,17 +94,57 @@ impl Default for PoolConfig {
     }
 }
 
-/// Execute one job (generation + MJ [+ CP]) and build its report.
+/// Execute one job (generation + MJ [+ CP] [+ persistence]) and build its
+/// report.
 pub fn run_job(job: &SuiteJob) -> Result<SuiteReport> {
     let t0 = Instant::now();
     let db = datagen::generate(&job.dataset, job.scale, job.seed)?;
     let gen_time = t0.elapsed();
 
+    // With persistence on, a write-on-complete sink streams every finished
+    // table into the store while the join runs.
+    let store = match &job.store_dir {
+        Some(dir) => Some(CtStore::create(
+            Path::new(dir).join(&job.dataset),
+            &job.dataset,
+            job.scale,
+            job.seed,
+        )?),
+        None => None,
+    };
+    let sink = store.as_ref().map(|s| StoreSink::new(s, &db.schema, PersistConfig::default()));
+
     let mut mj = MobiusJoin::new(&db).workers(job.mj_workers);
     if let Some(l) = job.max_chain_len {
         mj = mj.max_chain_len(l);
     }
-    let res = mj.run();
+    if let Some(s) = &sink {
+        mj = mj.sink(s);
+    }
+    let mut res = mj.run();
+
+    if let (Some(store), Some(sink)) = (&store, &sink) {
+        sink.take_error()?;
+        // Cold readback verification: re-open the store, decode the joint,
+        // and require bit-for-bit logical equality with the in-memory
+        // table; a second read exercises the cache-hit path. The handle's
+        // counters become the run's store metrics.
+        if let Some(joint) = &res.joint {
+            let cold = CtStore::open(store.dir())?;
+            let back = cold.get("joint").context("store readback")?;
+            if *back != *joint {
+                return Err(anyhow!(
+                    "store readback mismatch for {}: persisted joint differs",
+                    job.dataset
+                ));
+            }
+            let _ = cold.get("joint")?;
+            let s = cold.stats();
+            res.metrics.store_hits = s.hits;
+            res.metrics.store_misses = s.misses;
+            res.metrics.store_evictions = s.evictions;
+        }
+    }
 
     let cp = if job.run_cp {
         let out = cross_product_ct(&db, job.cp_budget);
@@ -206,6 +259,24 @@ mod tests {
         assert_eq!(serial.statistics, parallel.statistics);
         assert_eq!(serial.extra_statistics, parallel.extra_statistics);
         assert_eq!(serial.link_off_statistics, parallel.link_off_statistics);
+    }
+
+    #[test]
+    fn run_job_with_store_persists_and_verifies() {
+        let dir = std::env::temp_dir()
+            .join(format!("mrss_coord_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let job = SuiteJob::new("uwcse", 0.1, 7).with_store(dir.to_str().unwrap());
+        let rep = run_job(&job).unwrap();
+        // Readback verification ran: one cold miss + one warm hit.
+        assert_eq!(rep.metrics.store_misses, 1);
+        assert_eq!(rep.metrics.store_hits, 1);
+        // The store on disk holds entities + positives + chains + joint.
+        let store = CtStore::open(dir.join("uwcse")).unwrap();
+        assert!(store.contains("joint"));
+        assert!(store.len() > 3, "only {} tables persisted", store.len());
+        assert_eq!(store.get("joint").unwrap().len() as u64, rep.statistics);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

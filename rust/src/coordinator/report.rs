@@ -95,6 +95,20 @@ impl SuiteReport {
         }
     }
 
+    /// Row-major reference fallbacks during the job's Möbius Join (zero
+    /// for every ≤128-bit benchmark schema).
+    pub fn reference_fallbacks(&self) -> u64 {
+        self.metrics.reference_fallbacks
+    }
+
+    /// Ct-store cache counters `(hits, misses, evictions)` from the job's
+    /// persistence readback — all zero when the job ran without a store.
+    /// Reported alongside [`reference_fallbacks`](Self::reference_fallbacks)
+    /// so suite output shows both the fast-path and the storage health.
+    pub fn store_counters(&self) -> (u64, u64, u64) {
+        (self.metrics.store_hits, self.metrics.store_misses, self.metrics.store_evictions)
+    }
+
     /// Table 3 "Compress Ratio" = CP-#tuples / #Statistics.
     pub fn compression_ratio(&self) -> Option<f64> {
         let cp = self.cp.as_ref()?;
@@ -128,6 +142,28 @@ mod tests {
         let ratio = rep.compression_ratio().unwrap();
         let expect = cp.cp_tuples() as f64 / rep.statistics as f64;
         assert!((ratio - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn store_counters_surface_in_report() {
+        let dir = std::env::temp_dir()
+            .join(format!("mrss_report_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let job = crate::coordinator::SuiteJob::new("uwcse", 0.1, 7)
+            .with_store(dir.to_str().unwrap());
+        let rep = crate::coordinator::run_job(&job).unwrap();
+        let (hits, misses, evictions) = rep.store_counters();
+        assert_eq!((hits, misses, evictions), (1, 1, 0));
+        // reference_fallbacks is attributed by process-global delta, so
+        // concurrent lib tests can bump it — only assert it is exposed.
+        let _ = rep.reference_fallbacks();
+        // And the no-store path reports zeros.
+        let plain = crate::coordinator::run_job(&crate::coordinator::SuiteJob::new(
+            "uwcse", 0.1, 7,
+        ))
+        .unwrap();
+        assert_eq!(plain.store_counters(), (0, 0, 0));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

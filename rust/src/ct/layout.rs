@@ -202,6 +202,12 @@ impl CtLayout {
         self.cols.len()
     }
 
+    /// Heap bytes held by this layout (its column vector) — part of the
+    /// exact [`CtTable::mem_bytes`](super::CtTable::mem_bytes) accounting.
+    pub(crate) fn heap_bytes(&self) -> usize {
+        self.cols.capacity() * std::mem::size_of::<ColLayout>()
+    }
+
     pub fn total_bits(&self) -> u32 {
         self.total_bits
     }

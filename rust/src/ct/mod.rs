@@ -555,14 +555,24 @@ impl CtTable {
         (0..self.len()).map(move |i| (self.row(i), self.counts[i]))
     }
 
-    /// Approximate heap footprint in bytes (for metrics/backpressure).
+    /// Exact memory footprint in bytes: the struct itself plus every heap
+    /// allocation it owns, accounted per storage tier (one `u64` per
+    /// one-word key, one `u128` per two-word key, one `u16` per row-major
+    /// cell), using vector *capacities* — this is what the ct-store's LRU
+    /// eviction budget charges against, so under-counting would let the
+    /// cache blow its `mem_bytes` budget.
     pub fn mem_bytes(&self) -> usize {
+        use std::mem::size_of;
         let store = match &self.store {
-            RowStore::Packed(keys) => keys.len() * 8,
-            RowStore::Packed2(keys) => keys.len() * 16,
-            RowStore::Wide(rows) => rows.len() * 2,
+            RowStore::Packed(keys) => keys.capacity() * size_of::<u64>(),
+            RowStore::Packed2(keys) => keys.capacity() * size_of::<u128>(),
+            RowStore::Wide(rows) => rows.capacity() * size_of::<u16>(),
         };
-        store + self.counts.len() * 8 + self.vars.len() * 8
+        size_of::<Self>()
+            + store
+            + self.counts.capacity() * size_of::<u64>()
+            + self.vars.capacity() * size_of::<VarId>()
+            + self.layout.heap_bytes()
     }
 }
 
@@ -753,6 +763,59 @@ mod tests {
         assert_eq!(t.row(1), &[0, NA]);
         assert_eq!(t.row(2), &[1, 2]);
         t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn mem_bytes_accounts_every_tier_exactly() {
+        use std::mem::size_of;
+        // Shared fixed overhead: struct + vars + counts + layout columns.
+        let fixed = |t: &CtTable| {
+            size_of::<CtTable>()
+                + t.vars.capacity() * size_of::<VarId>()
+                + t.counts.capacity() * size_of::<u64>()
+                + t.layout.heap_bytes()
+        };
+
+        // One-word tier: 8 bytes per key slot.
+        let p64 = CtTable::from_raw(vec![0, 1], vec![0, 0, 0, 1, 1, 0], vec![1, 2, 3]);
+        assert_eq!(p64.tier(), "packed64");
+        let keys_cap = match &p64.store {
+            RowStore::Packed(k) => k.capacity(),
+            _ => unreachable!(),
+        };
+        assert_eq!(p64.mem_bytes(), fixed(&p64) + keys_cap * 8);
+
+        // Two-word tier: 16 bytes per key slot (a 75-bit layout).
+        let width = 25usize;
+        let mut rows = Vec::new();
+        for r in 0..3u16 {
+            rows.extend(std::iter::repeat(4 * r).take(width));
+        }
+        let p128 = CtTable::from_raw((0..width).collect(), rows, vec![1, 2, 3]);
+        assert_eq!(p128.tier(), "packed128");
+        let keys_cap = match &p128.store {
+            RowStore::Packed2(k) => k.capacity(),
+            _ => unreachable!(),
+        };
+        assert_eq!(p128.mem_bytes(), fixed(&p128) + keys_cap * 16);
+
+        // Row-major tier: 2 bytes per cell slot (a >128-bit layout).
+        let width = 70usize;
+        let mut rows = Vec::new();
+        for r in 0..3u16 {
+            rows.extend(std::iter::repeat(r).take(width));
+        }
+        let wide = CtTable::from_raw((0..width).collect(), rows, vec![1, 2, 3]);
+        assert_eq!(wide.tier(), "rowmajor");
+        let cells_cap = match &wide.store {
+            RowStore::Wide(r) => r.capacity(),
+            _ => unreachable!(),
+        };
+        assert_eq!(wide.mem_bytes(), fixed(&wide) + cells_cap * 2);
+
+        // Tier consistency: the same logical rows cost 2x key bytes on the
+        // two-word tier vs the one-word tier — never silently equal.
+        assert!(p128.mem_bytes() > p64.mem_bytes());
     }
 
     #[test]

@@ -15,6 +15,8 @@
 //! * [`mobius`] — the Möbius Join dynamic program (Algorithms 1 and 2);
 //! * [`baseline`] — cross-product enumeration baseline (the paper's CP);
 //! * [`datagen`] — synthetic generators mirroring the seven benchmarks;
+//! * [`store`] — persisted statistics repository (binary ct codec,
+//!   directory store with LRU cache) + the count-query service;
 //! * [`apps`] — feature selection, association rules, Bayesian networks;
 //! * [`runtime`] — AOT-compiled XLA kernels via PJRT, with native fallback;
 //! * [`coordinator`] — pipeline orchestration, metrics, configs;
@@ -28,6 +30,7 @@ pub mod lattice;
 pub mod mobius;
 pub mod baseline;
 pub mod datagen;
+pub mod store;
 pub mod runtime;
 pub mod apps;
 pub mod coordinator;

@@ -3,27 +3,35 @@
 //! ```text
 //! mrss datasets                               # Table 2: benchmark shapes
 //! mrss ct    --dataset imdb --scale 0.25      # Möbius Join + breakdown
+//! mrss ct    --dataset uwcse --store ./stats  # …and persist the ct-store
 //! mrss cp    --dataset movielens --scale 0.1  # cross-product baseline
 //! mrss suite --scale 0.1 --workers 2          # all seven benchmarks
+//! mrss query --store ./stats --dataset uwcse --queries q.txt   # counts, JSON
+//! mrss serve --store ./stats --dataset uwcse  # stdin/stdout count service
 //! mrss mine  --dataset financial --scale 0.2  # CFS + association rules
 //! mrss bn    --dataset financial --scale 0.2  # BN learning on vs off
 //! ```
 //!
 //! Add `--engine xla` to route bulk ct-algebra through the AOT-compiled
-//! PJRT artifacts (`make artifacts` first).
+//! PJRT artifacts (`make artifacts` first). `mine`/`bn` accept `--store`
+//! to score from a warm ct-store instead of re-running the join.
 
+use mrss::anyhow;
 use mrss::apps::{apriori, bayesnet, cfs};
 use mrss::bail;
-use mrss::util::error::Result;
+use mrss::util::error::{Context, Result};
 use mrss::baseline::cross_product_ct;
 use mrss::config::{Config, EngineKind};
 use mrss::coordinator::{run_suite, PoolConfig, SuiteJob};
 use mrss::ct::render_ct;
 use mrss::datagen;
-use mrss::mobius::MobiusJoin;
+use mrss::mobius::{MjResult, MobiusJoin};
 use mrss::runtime::{XlaEngine, XlaRuntime};
+use mrss::schema::Schema;
+use mrss::store::{gen_queries, parse_query, CountServer, CtStore, PersistConfig, StoreSink};
 use mrss::util::format_duration;
 use mrss::util::table::{commas, TextTable};
+use std::path::{Path, PathBuf};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -52,10 +60,14 @@ fn print_help() {
          \x20 ct     --dataset D --scale S    compute all contingency tables (Möbius Join)\n\
          \x20 cp     --dataset D --scale S    cross-product baseline (Table 3)\n\
          \x20 suite  --scale S --workers N    run every benchmark\n\
+         \x20 query  --store DIR --dataset D  answer count queries from a ct-store (JSON)\n\
+         \x20 serve  --store DIR --dataset D  stdin/stdout count-query service\n\
          \x20 mine   --dataset D --scale S    feature selection + association rules\n\
          \x20 bn     --dataset D --scale S    Bayesian-network learning, link on vs off\n\n\
          common flags: --seed N --engine native|xla --excerpt N --max-chain-len L\n\
-         \x20             --cp-budget-secs N --config FILE",
+         \x20             --cp-budget-secs N --config FILE --store DIR\n\
+         query flags:  --queries FILE --query STR --json FILE --gen N --fresh\n\
+         \x20             --mem-budget BYTES",
         mrss::VERSION
     );
 }
@@ -75,6 +87,8 @@ fn run(cfg: Config) -> Result<()> {
         "ct" => cmd_ct(&cfg),
         "cp" => cmd_cp(&cfg),
         "suite" => cmd_suite(&cfg),
+        "query" => cmd_query(&cfg),
+        "serve" => cmd_serve(&cfg),
         "mine" => cmd_mine(&cfg),
         "bn" => cmd_bn(&cfg),
         other => bail!("unknown command `{other}` (try --help)"),
@@ -113,6 +127,18 @@ fn cmd_ct(cfg: &Config) -> Result<()> {
         cfg.scale,
         commas(db.total_tuples() as u128)
     );
+    // With --store, a write-on-complete sink persists every table as the
+    // join produces it.
+    let store = match &cfg.store {
+        Some(root) => Some(CtStore::create(
+            Path::new(root).join(&cfg.dataset),
+            &cfg.dataset,
+            cfg.scale,
+            cfg.seed,
+        )?),
+        None => None,
+    };
+    let sink = store.as_ref().map(|s| StoreSink::new(s, &db.schema, PersistConfig::default()));
     let rt = maybe_runtime(cfg)?;
     let res = match &rt {
         Some(rt) => {
@@ -121,12 +147,18 @@ fn cmd_ct(cfg: &Config) -> Result<()> {
             if let Some(l) = cfg.max_chain_len {
                 mj = mj.max_chain_len(l);
             }
+            if let Some(s) = &sink {
+                mj = mj.sink(s);
+            }
             mj.run()
         }
         None => {
             let mut mj = MobiusJoin::new(&db).workers(cfg.workers);
             if let Some(l) = cfg.max_chain_len {
                 mj = mj.max_chain_len(l);
+            }
+            if let Some(s) = &sink {
+                mj = mj.sink(s);
             }
             mj.run()
         }
@@ -145,6 +177,15 @@ fn cmd_ct(cfg: &Config) -> Result<()> {
         );
     }
     println!("{}", res.metrics.breakdown());
+    if let (Some(store), Some(sink)) = (&store, &sink) {
+        sink.take_error()?;
+        println!(
+            "persisted {} tables ({} bytes) to {}",
+            store.len(),
+            commas(store.disk_bytes() as u128),
+            store.dir().display()
+        );
+    }
     if cfg.excerpt > 0 {
         if let Some(joint) = &res.joint {
             println!("{}", render_ct(joint, &db.schema, cfg.excerpt));
@@ -182,7 +223,13 @@ fn cmd_suite(cfg: &Config) -> Result<()> {
     // serial to avoid oversubscription (use `ct --workers N` for that).
     let jobs: Vec<SuiteJob> = datagen::BENCHMARKS
         .iter()
-        .map(|b| SuiteJob::new(b.name, cfg.scale, cfg.seed))
+        .map(|b| {
+            let mut job = SuiteJob::new(b.name, cfg.scale, cfg.seed);
+            if let Some(dir) = &cfg.store {
+                job = job.with_store(dir);
+            }
+            job
+        })
         .collect();
     let reports = run_suite(jobs, PoolConfig { workers: cfg.workers, queue_depth: 2 });
     let mut t = TextTable::new(vec![
@@ -191,6 +238,13 @@ fn cmd_suite(cfg: &Config) -> Result<()> {
     for rep in reports {
         match rep {
             Ok(r) => {
+                if cfg.store.is_some() {
+                    let (h, m, e) = r.store_counters();
+                    eprintln!(
+                        "{}: persisted + verified (store cache {h} hits / {m} misses / {e} evictions)",
+                        r.dataset
+                    );
+                }
                 t.row(vec![
                     r.dataset.clone(),
                     commas(r.tuples as u128),
@@ -208,17 +262,234 @@ fn cmd_suite(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+/// Resolve a `--store` root to the directory that actually holds a
+/// manifest: the root itself, or `<root>/<dataset>` (the layout `ct`/
+/// `suite` write).
+fn resolve_store_dir(root: &str, dataset: &str) -> Result<PathBuf> {
+    let root = PathBuf::from(root);
+    if root.join(mrss::store::MANIFEST).is_file() {
+        return Ok(root);
+    }
+    let sub = root.join(dataset);
+    if sub.join(mrss::store::MANIFEST).is_file() {
+        return Ok(sub);
+    }
+    bail!(
+        "no ctstore manifest under {} (looked there and in {}/) — run `mrss ct --store` first",
+        root.display(),
+        sub.display()
+    )
+}
+
+/// An explicitly-passed `--dataset` must match the opened store's
+/// manifest — otherwise a store root pointed one level too deep (e.g.
+/// `--store ./stats/uwcse --dataset imdb`) would silently answer for the
+/// wrong dataset.
+fn check_store_dataset(cfg: &Config, store: &CtStore) -> Result<()> {
+    if cfg.dataset_explicit && cfg.dataset != store.dataset {
+        bail!(
+            "--dataset {} does not match this store's dataset {} ({})",
+            cfg.dataset,
+            store.dataset,
+            store.dir().display()
+        );
+    }
+    Ok(())
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn render_json(answers: &[(String, u128)]) -> String {
+    let mut out = String::from("[\n");
+    for (i, (q, c)) in answers.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"query\":\"{}\",\"count\":{}}}{}\n",
+            json_escape(q),
+            c,
+            if i + 1 == answers.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("]\n");
+    out
+}
+
+fn cmd_query(cfg: &Config) -> Result<()> {
+    let root = cfg.store.as_deref().context("query: --store DIR is required")?;
+    let dir = resolve_store_dir(root, &cfg.dataset)?;
+    let store = CtStore::open(&dir)?;
+    check_store_dataset(cfg, &store)?;
+    let schema = datagen::schema_of(&store.dataset)?;
+
+    // --gen N: emit a deterministic query batch and stop.
+    if let Some(n) = cfg.gen {
+        for q in gen_queries(&schema, n, cfg.seed) {
+            println!("{q}");
+        }
+        return Ok(());
+    }
+
+    let mut queries: Vec<String> = Vec::new();
+    if let Some(f) = &cfg.queries {
+        let text =
+            std::fs::read_to_string(f).with_context(|| format!("reading query file {f}"))?;
+        for line in text.lines() {
+            let l = line.trim();
+            if l.is_empty() || l.starts_with('#') {
+                continue;
+            }
+            queries.push(l.to_string());
+        }
+    }
+    if let Some(q) = &cfg.query {
+        queries.push(q.clone());
+    }
+    if queries.is_empty() {
+        bail!("query: nothing to answer (pass --queries FILE and/or --query STR)");
+    }
+
+    let answers: Vec<(String, u128)> = if cfg.fresh {
+        // Baseline mode: recompute the joint in memory with the manifest's
+        // exact (dataset, scale, seed) and answer by selection — what the
+        // store-smoke CI job diffs the cold-store answers against.
+        let db = datagen::generate(&store.dataset, store.scale, store.seed)?;
+        let res = MobiusJoin::new(&db).workers(cfg.workers).run();
+        let joint = res.joint_ct();
+        queries
+            .iter()
+            .map(|q| Ok((q.clone(), joint.select(&parse_query(&db.schema, q)?).total())))
+            .collect::<Result<_>>()?
+    } else {
+        let server = CountServer::new(store, schema)?;
+        if let Some(b) = cfg.mem_budget {
+            server.store().set_mem_budget(Some(b));
+        }
+        let out = queries
+            .iter()
+            .map(|q| Ok((q.clone(), server.count_query(q)?)))
+            .collect::<Result<Vec<_>>>()?;
+        let s = server.stats();
+        eprintln!(
+            "answered {} queries from the store: cache {} hits / {} misses / {} evictions / {} bytes read",
+            out.len(),
+            s.hits,
+            s.misses,
+            s.evictions,
+            commas(s.bytes_read as u128)
+        );
+        out
+    };
+
+    let json = render_json(&answers);
+    match &cfg.json {
+        Some(p) => std::fs::write(p, json).with_context(|| format!("writing {p}"))?,
+        None => print!("{json}"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(cfg: &Config) -> Result<()> {
+    let root = cfg.store.as_deref().context("serve: --store DIR is required")?;
+    let dir = resolve_store_dir(root, &cfg.dataset)?;
+    let server = CountServer::open(&dir)?;
+    check_store_dataset(cfg, server.store())?;
+    if let Some(b) = cfg.mem_budget {
+        server.store().set_mem_budget(Some(b));
+    }
+    eprintln!(
+        "serving counts for {} from {} ({} tables); one query per line, e.g. `RA(P,S)=F`",
+        server.store().dataset,
+        dir.display(),
+        server.store().len()
+    );
+    for line in std::io::stdin().lines() {
+        let line = line?;
+        let q = line.trim();
+        if q.is_empty() {
+            continue;
+        }
+        match server.count_query(q) {
+            Ok(c) => println!("{{\"query\":\"{}\",\"count\":{c}}}", json_escape(q)),
+            Err(e) => println!(
+                "{{\"query\":\"{}\",\"error\":\"{}\"}}",
+                json_escape(q),
+                json_escape(&e.to_string())
+            ),
+        }
+    }
+    let s = server.stats();
+    eprintln!(
+        "store cache: {} hits / {} misses / {} evictions",
+        s.hits, s.misses, s.evictions
+    );
+    Ok(())
+}
+
+/// `mine`/`bn` input: either a fresh generate + Möbius Join, or — with
+/// `--store` — the reassembled result of a persisted run, no database
+/// needed.
+fn load_or_run(cfg: &Config) -> Result<(String, Schema, MjResult)> {
+    match &cfg.store {
+        Some(root) => {
+            let dir = resolve_store_dir(root, &cfg.dataset)?;
+            let store = CtStore::open(&dir)?;
+            check_store_dataset(cfg, &store)?;
+            // The store serves the configuration it was persisted with:
+            // explicitly asking for a different one must not be silently
+            // ignored. (`query --gen` reuses --seed for query generation,
+            // so this strict check applies only to mine/bn.)
+            if cfg.scale_explicit && cfg.scale != store.scale {
+                bail!(
+                    "--scale {} does not match this store's scale {} — re-persist or drop the flag",
+                    cfg.scale,
+                    store.scale
+                );
+            }
+            if cfg.seed_explicit && cfg.seed != store.seed {
+                bail!(
+                    "--seed {} does not match this store's seed {} — re-persist or drop the flag",
+                    cfg.seed,
+                    store.seed
+                );
+            }
+            let schema = datagen::schema_of(&store.dataset)?;
+            let res = store.load_mj_result(&schema)?;
+            eprintln!(
+                "scoring from warm store {} ({} tables, {} bytes)",
+                dir.display(),
+                store.len(),
+                commas(store.disk_bytes() as u128)
+            );
+            Ok((store.dataset.clone(), schema, res))
+        }
+        None => {
+            let db = datagen::generate(&cfg.dataset, cfg.scale, cfg.seed)?;
+            let res = MobiusJoin::new(&db).workers(cfg.workers).run();
+            Ok((cfg.dataset.clone(), (*db.schema).clone(), res))
+        }
+    }
+}
+
 fn cmd_mine(cfg: &Config) -> Result<()> {
-    let db = datagen::generate(&cfg.dataset, cfg.scale, cfg.seed)?;
-    let schema = &db.schema;
-    let res = MobiusJoin::new(&db).workers(cfg.workers).run();
+    let (dataset, schema, res) = load_or_run(cfg)?;
+    let schema = &schema;
     let rt = maybe_runtime(cfg)?;
     let rt = rt.as_ref();
 
-    let target_name = datagen::info(&cfg.dataset).map(|b| b.target).unwrap_or("");
+    let target_name = datagen::info(&dataset).map(|b| b.target).unwrap_or("");
     let target = schema
         .var_by_name(target_name)
-        .ok_or_else(|| mrss::anyhow!("target {target_name} not found"))?;
+        .ok_or_else(|| anyhow!("target {target_name} not found"))?;
 
     // Feature selection, link off vs on (Table 5).
     let joint = res.joint_ct();
@@ -254,9 +525,8 @@ fn cmd_mine(cfg: &Config) -> Result<()> {
 }
 
 fn cmd_bn(cfg: &Config) -> Result<()> {
-    let db = datagen::generate(&cfg.dataset, cfg.scale, cfg.seed)?;
-    let schema = &db.schema;
-    let res = MobiusJoin::new(&db).workers(cfg.workers).run();
+    let (_dataset, schema, res) = load_or_run(cfg)?;
+    let schema = &schema;
     let rt = maybe_runtime(cfg)?;
     let rt = rt.as_ref();
     let joint = res.joint_ct();

@@ -6,7 +6,7 @@
 //! can be benchmarked against each other (`benches/bench_ablation.rs`).
 
 use crate::ct::{CtTable, SubtractError};
-use crate::schema::VarId;
+use crate::schema::{FoVarId, RelId, VarId};
 
 /// The operations the Möbius Join delegates. Default methods call the
 /// native `CtTable` implementations; engines override whichever ops they
@@ -37,6 +37,29 @@ pub trait CtEngine: Sync {
 
     /// Engine name for metrics/reporting.
     fn name(&self) -> &'static str;
+}
+
+/// Write-on-complete hooks for the Möbius Join: the dynamic program calls
+/// these the moment each table is final, so a sink (e.g. the persistence
+/// layer, `crate::store::StoreSink`) can stream results out without a
+/// separate export pass over `MjResult`.
+///
+/// `Sync` because chain-level callbacks (`on_positive`) fire from the
+/// parallel level loop's worker threads. All default implementations are
+/// no-ops; tables are borrowed — clone if you need to keep them.
+pub trait CtSink: Sync {
+    /// An entity table `ct(1Atts(X))` is final (initialization phase).
+    fn on_entity(&self, _fo: FoVarId, _ct: &CtTable) {}
+
+    /// A chain's all-true ("positive") table is final — the join-counter
+    /// output before any pivot, with no indicator columns.
+    fn on_positive(&self, _chain: &[RelId], _ct: &CtTable) {}
+
+    /// A chain's complete table (indicators + n/a rows) is final.
+    fn on_chain(&self, _chain: &[RelId], _ct: &CtTable) {}
+
+    /// The joint table over the whole database is final.
+    fn on_joint(&self, _ct: &CtTable) {}
 }
 
 /// Pure-rust reference engine.

@@ -70,6 +70,14 @@ pub struct MjMetrics {
     /// process can cross-attribute each other's fallbacks — tests that
     /// assert on this live in their own binary (`rust/tests/wide_tier.rs`).
     pub reference_fallbacks: u64,
+    /// Ct-store cache hits during this run's store traffic (persistence
+    /// readback verification, or query serving attributed to the run).
+    /// Zero when the run had no store attached.
+    pub store_hits: u64,
+    /// Ct-store cache misses (tables decoded from disk).
+    pub store_misses: u64,
+    /// Ct-store LRU evictions under the `mem_bytes` budget.
+    pub store_evictions: u64,
     counts: [u64; 6],
     times: [Duration; 6],
 }
@@ -111,6 +119,9 @@ impl MjMetrics {
         self.pivot += other.pivot;
         self.main_loop += other.main_loop;
         self.reference_fallbacks += other.reference_fallbacks;
+        self.store_hits += other.store_hits;
+        self.store_misses += other.store_misses;
+        self.store_evictions += other.store_evictions;
         for i in 0..6 {
             self.counts[i] += other.counts[i];
             self.times[i] += other.times[i];
@@ -137,6 +148,10 @@ impl MjMetrics {
             ));
         }
         s.push_str(&format!("  row-major reference fallbacks: {}\n", self.reference_fallbacks));
+        s.push_str(&format!(
+            "  ct-store cache: {} hits / {} misses / {} evictions\n",
+            self.store_hits, self.store_misses, self.store_evictions
+        ));
         s
     }
 }
@@ -168,12 +183,27 @@ mod tests {
     fn merge_accumulates() {
         let mut a = MjMetrics::default();
         a.record(CtOp::Union, Duration::from_millis(1));
+        a.store_hits = 2;
         let mut b = MjMetrics::default();
         b.record(CtOp::Union, Duration::from_millis(2));
         b.total = Duration::from_secs(1);
+        b.store_hits = 3;
+        b.store_misses = 1;
+        b.store_evictions = 4;
         a.merge(&b);
         assert_eq!(a.op_count(CtOp::Union), 2);
         assert_eq!(a.total, Duration::from_secs(1));
+        assert_eq!((a.store_hits, a.store_misses, a.store_evictions), (5, 1, 4));
+    }
+
+    #[test]
+    fn breakdown_mentions_store_counters() {
+        let mut m = MjMetrics::default();
+        m.store_hits = 7;
+        m.store_evictions = 2;
+        let s = m.breakdown();
+        assert!(s.contains("ct-store cache: 7 hits"));
+        assert!(s.contains("2 evictions"));
     }
 
     #[test]

@@ -38,7 +38,7 @@ pub mod engine;
 pub mod metrics;
 pub mod postcount;
 
-pub use engine::{CtEngine, NativeEngine};
+pub use engine::{CtEngine, CtSink, NativeEngine};
 pub use postcount::PostCounter;
 pub use metrics::{CtOp, MjMetrics};
 
@@ -70,6 +70,30 @@ pub struct MjResult {
 }
 
 impl MjResult {
+    /// Reassemble a result from already-computed parts — the read side of
+    /// the persistence layer (`crate::store::CtStore::load_mj_result`), so
+    /// the statistical apps can score from a warm store without re-running
+    /// the join. Metrics are zeroed: no join was executed.
+    pub fn assemble(
+        schema: &crate::schema::Schema,
+        entity_cts: FxHashMap<FoVarId, CtTable>,
+        tables: FxHashMap<Vec<RelId>, CtTable>,
+        joint: Option<CtTable>,
+    ) -> MjResult {
+        let lattice = Lattice::build(schema, None);
+        let mut indicator_ids: Vec<VarId> =
+            (0..schema.num_rel_vars()).map(|r| schema.rel_ind_var(r)).collect();
+        indicator_ids.sort_unstable();
+        MjResult {
+            lattice,
+            entity_cts,
+            tables,
+            joint,
+            metrics: MjMetrics::default(),
+            indicator_ids,
+        }
+    }
+
     /// The joint contingency table (panics if the run was depth-capped).
     pub fn joint_ct(&self) -> &CtTable {
         self.joint.as_ref().expect("joint ct unavailable: run was depth-capped")
@@ -115,17 +139,27 @@ pub struct MobiusJoin<'a> {
     engine: &'a dyn CtEngine,
     max_chain_len: Option<usize>,
     workers: usize,
+    sink: Option<&'a dyn engine::CtSink>,
 }
 
 impl<'a> MobiusJoin<'a> {
     /// Möbius Join with the native (pure-rust) engine.
     pub fn new(db: &'a Database) -> Self {
-        MobiusJoin { db, engine: &NativeEngine, max_chain_len: None, workers: 1 }
+        MobiusJoin { db, engine: &NativeEngine, max_chain_len: None, workers: 1, sink: None }
     }
 
     /// Möbius Join with a custom execution engine.
     pub fn with_engine(db: &'a Database, engine: &'a dyn CtEngine) -> Self {
-        MobiusJoin { db, engine, max_chain_len: None, workers: 1 }
+        MobiusJoin { db, engine, max_chain_len: None, workers: 1, sink: None }
+    }
+
+    /// Attach a write-on-complete sink: every finished table (entity,
+    /// per-chain positive, per-chain complete, joint) is handed to it as
+    /// the dynamic program produces it. Positive-table callbacks may fire
+    /// from worker threads when `workers > 1`.
+    pub fn sink(mut self, s: &'a dyn engine::CtSink) -> Self {
+        self.sink = Some(s);
+        self
     }
 
     /// Cap the chain length (paper §8: compute the lattice only up to a
@@ -157,7 +191,11 @@ impl<'a> MobiusJoin<'a> {
         let tp = Instant::now();
         let mut entity_cts: FxHashMap<FoVarId, CtTable> = FxHashMap::default();
         for fo in 0..schema.fo_vars.len() {
-            entity_cts.insert(fo, self.db.ct_entity(fo));
+            let ct = self.db.ct_entity(fo);
+            if let Some(s) = self.sink {
+                s.on_entity(fo, &ct);
+            }
+            entity_cts.insert(fo, ct);
         }
         metrics.positive += tp.elapsed();
 
@@ -172,6 +210,9 @@ impl<'a> MobiusJoin<'a> {
             });
             for (chain, out) in chains.into_iter().zip(outs) {
                 metrics.merge(&out.metrics);
+                if let Some(s) = self.sink {
+                    s.on_chain(&chain, &out.table);
+                }
                 tables.insert(chain, out.table);
             }
         }
@@ -181,7 +222,11 @@ impl<'a> MobiusJoin<'a> {
         // relationships.
         let joint = if self.max_chain_len.is_none() || lattice.max_level() == schema.num_rel_vars()
         {
-            Some(self.build_joint(&tables, &entity_cts, &mut metrics))
+            let j = self.build_joint(&tables, &entity_cts, &mut metrics);
+            if let Some(s) = self.sink {
+                s.on_joint(&j);
+            }
+            Some(j)
         } else {
             None
         };
@@ -222,6 +267,9 @@ impl<'a> MobiusJoin<'a> {
             let tp = Instant::now();
             let ct_t = JoinCounter::new(self.db).positive_ct(chain);
             m.positive += tp.elapsed();
+            if let Some(s) = self.sink {
+                s.on_positive(chain, &ct_t);
+            }
 
             let table = self.pivot(&ct_t, &ct_star, *r, &mut m);
             return ChainOut { table, metrics: m };
@@ -230,6 +278,9 @@ impl<'a> MobiusJoin<'a> {
         let tp = Instant::now();
         let mut current = JoinCounter::new(self.db).positive_ct(chain);
         m.positive += tp.elapsed();
+        if let Some(s) = self.sink {
+            s.on_positive(chain, &current);
+        }
         // lines 12-21: pivot each relationship in turn.
         for i in 0..chain.len() {
             let ct_star = self.ct_star_for(chain, i, tables, entity_cts, &mut m);

@@ -1,0 +1,497 @@
+//! Versioned binary codec for [`CtTable`] — the on-disk row format of the
+//! [`CtStore`](super::CtStore).
+//!
+//! Layout of a `.ct` file:
+//!
+//! ```text
+//! magic      8 bytes   b"MRSSCT01"
+//! version    u16 LE    format version (currently 1)
+//! tier       u8        0 = packed64, 1 = packed128, 2 = row-major wide
+//! flags      u8        reserved (0)
+//! width      varint    number of columns
+//! columns    width ×   var id (varint), cap (varint), na flag (u8)
+//! nrows      varint
+//! rows       …         tier 0/1: first key absolute, then strictly
+//!                      positive deltas, all varints — the sorted-unique
+//!                      key invariant makes deltas small and dense;
+//!                      tier 2: nrows × width codes as varints (NA = 65535)
+//! counts     nrows ×   varint (all positive)
+//! checksum   u64 LE    FNV-1a over everything above
+//! ```
+//!
+//! The header stores only each column's `(var, cap, na)` spec: bit widths
+//! and shifts are a pure function of the specs ([`CtLayout::from_specs`]),
+//! so the decoded table carries the *identical* layout — and therefore the
+//! identical packed keys — as the encoded one. Decoding re-checks the
+//! magic, version, checksum, tier/layout consistency, key ordering, and
+//! the full [`CtTable::check_invariants`], so a truncated or bit-flipped
+//! file surfaces as an error, never as silently wrong counts.
+
+use crate::anyhow;
+use crate::bail;
+use crate::ct::{CtLayout, CtTable, RowStore};
+use crate::schema::VarId;
+use crate::util::error::Result;
+
+/// File magic: "MRSS contingency table, format generation 01".
+pub const MAGIC: [u8; 8] = *b"MRSSCT01";
+
+/// Current format version (bumped on incompatible changes).
+pub const FORMAT_VERSION: u16 = 1;
+
+const TIER_PACKED64: u8 = 0;
+const TIER_PACKED128: u8 = 1;
+const TIER_WIDE: u8 = 2;
+
+/// FNV-1a over a byte slice — the trailing corruption check.
+fn fnv1a(data: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// LEB128 varint (7 bits per byte, low group first). One routine covers
+/// u16 codes through u128 keys.
+fn put_varint(out: &mut Vec<u8>, mut v: u128) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Bounds-checked reader over the (already checksum-verified) body.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("ct file truncated: wanted {n} bytes, {} left", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16le(&mut self) -> Result<u16> {
+        let b = self.bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn varint(&mut self) -> Result<u128> {
+        let mut v: u128 = 0;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            if shift >= 128 || (shift == 126 && b & 0x7c != 0) {
+                bail!("ct file corrupt: varint overflows 128 bits");
+            }
+            v |= ((b & 0x7f) as u128) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    fn varint_u64(&mut self) -> Result<u64> {
+        let v = self.varint()?;
+        u64::try_from(v).map_err(|_| anyhow!("ct file corrupt: value {v} exceeds u64"))
+    }
+
+    fn varint_u16(&mut self) -> Result<u16> {
+        let v = self.varint()?;
+        u16::try_from(v).map_err(|_| anyhow!("ct file corrupt: value {v} exceeds u16"))
+    }
+}
+
+/// Serialize a table (any storage tier) to the versioned binary format.
+pub fn encode(ct: &CtTable) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + ct.len() * 4);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    let tier = match &ct.store {
+        RowStore::Packed(_) => TIER_PACKED64,
+        RowStore::Packed2(_) => TIER_PACKED128,
+        RowStore::Wide(_) => TIER_WIDE,
+    };
+    out.push(tier);
+    out.push(0); // flags, reserved
+    let width = ct.width();
+    put_varint(&mut out, width as u128);
+    for (c, &v) in ct.vars.iter().enumerate() {
+        let (cap, na) = ct.layout.spec(c);
+        put_varint(&mut out, v as u128);
+        put_varint(&mut out, cap as u128);
+        out.push(na as u8);
+    }
+    put_varint(&mut out, ct.len() as u128);
+    match &ct.store {
+        RowStore::Packed(keys) => {
+            let mut prev = 0u64;
+            for (i, &k) in keys.iter().enumerate() {
+                put_varint(&mut out, if i == 0 { k as u128 } else { (k - prev) as u128 });
+                prev = k;
+            }
+        }
+        RowStore::Packed2(keys) => {
+            let mut prev = 0u128;
+            for (i, &k) in keys.iter().enumerate() {
+                put_varint(&mut out, if i == 0 { k } else { k - prev });
+                prev = k;
+            }
+        }
+        RowStore::Wide(rows) => {
+            for &code in rows {
+                put_varint(&mut out, code as u128);
+            }
+        }
+    }
+    for &c in &ct.counts {
+        put_varint(&mut out, c as u128);
+    }
+    let sum = fnv1a(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Deserialize a table, validating the checksum, header, tier/layout
+/// consistency, and every [`CtTable`] invariant.
+pub fn decode(bytes: &[u8]) -> Result<CtTable> {
+    // 8 magic + 2 version + 2 tier/flags + 1 width + 1 nrows + 8 checksum.
+    if bytes.len() < 22 {
+        bail!("ct file truncated: only {} bytes", bytes.len());
+    }
+    let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+    let expect = u64::from_le_bytes(sum_bytes.try_into().expect("split_at gave 8 bytes"));
+    if fnv1a(body) != expect {
+        bail!("ct file checksum mismatch (corrupt or truncated)");
+    }
+    let mut r = Reader::new(body);
+    if r.bytes(8)? != MAGIC.as_slice() {
+        bail!("not a ct file: bad magic");
+    }
+    let version = r.u16le()?;
+    if version != FORMAT_VERSION {
+        bail!("unsupported ct format version {version} (this build reads {FORMAT_VERSION})");
+    }
+    let tier = r.u8()?;
+    let flags = r.u8()?;
+    if flags != 0 {
+        // Reserved for forward compatibility: a future writer setting a
+        // flag signals semantics this reader does not know.
+        bail!("unsupported ct file: unknown flags {flags:#04x}");
+    }
+    let width = usize::try_from(r.varint_u64()?)
+        .map_err(|_| anyhow!("ct file corrupt: width out of range"))?;
+    if width > u16::MAX as usize {
+        bail!("ct file corrupt: width {width} out of range");
+    }
+    let mut vars: Vec<VarId> = Vec::with_capacity(width);
+    let mut specs: Vec<(u16, bool)> = Vec::with_capacity(width);
+    for _ in 0..width {
+        let v = r.varint_u64()? as VarId;
+        if let Some(&last) = vars.last() {
+            if v <= last {
+                bail!("ct file corrupt: vars not strictly increasing");
+            }
+        }
+        let cap = r.varint_u16()?;
+        if cap == 0 {
+            bail!("ct file corrupt: zero column cap");
+        }
+        let na = match r.u8()? {
+            0 => false,
+            1 => true,
+            b => bail!("ct file corrupt: bad na flag {b}"),
+        };
+        vars.push(v);
+        specs.push((cap, na));
+    }
+    let layout = CtLayout::from_specs(&specs);
+    let nrows = usize::try_from(r.varint_u64()?)
+        .map_err(|_| anyhow!("ct file corrupt: row count out of range"))?;
+    // Every varint is ≥ 1 byte: packed rows need a key byte + a count
+    // byte, wide rows `width` code bytes + a count byte, nullary rows just
+    // the count byte. A cheap bound that stops a corrupt-but-checksummed
+    // header from asking for a huge allocation.
+    let min_row_bytes = match tier {
+        _ if width == 0 => 1,
+        TIER_WIDE => width + 1,
+        _ => 2,
+    };
+    if nrows.saturating_mul(min_row_bytes) > r.remaining() {
+        bail!("ct file corrupt: {nrows} rows cannot fit {} payload bytes", r.remaining());
+    }
+    let store = match tier {
+        // Nullary tables (the × identity / scalar): no key section at all.
+        _ if width == 0 => {
+            if tier != TIER_PACKED64 {
+                bail!("ct file corrupt: nullary table with tier {tier}");
+            }
+            RowStore::Packed(Vec::new())
+        }
+        TIER_PACKED64 => {
+            if !layout.fits() {
+                bail!("ct file corrupt: one-word tier with a {}-bit layout", layout.total_bits());
+            }
+            let mut keys: Vec<u64> = Vec::with_capacity(nrows);
+            for i in 0..nrows {
+                let d = r.varint_u64()?;
+                if i == 0 {
+                    keys.push(d);
+                } else {
+                    if d == 0 {
+                        bail!("ct file corrupt: zero key delta (keys not strictly increasing)");
+                    }
+                    let k = keys[i - 1]
+                        .checked_add(d)
+                        .ok_or_else(|| anyhow!("ct file corrupt: key delta overflows u64"))?;
+                    keys.push(k);
+                }
+            }
+            RowStore::Packed(keys)
+        }
+        TIER_PACKED128 => {
+            if layout.fits() || !layout.fits2() {
+                bail!("ct file corrupt: two-word tier with a {}-bit layout", layout.total_bits());
+            }
+            let mut keys: Vec<u128> = Vec::with_capacity(nrows);
+            for i in 0..nrows {
+                let d = r.varint()?;
+                if i == 0 {
+                    keys.push(d);
+                } else {
+                    if d == 0 {
+                        bail!("ct file corrupt: zero key delta (keys not strictly increasing)");
+                    }
+                    let k = keys[i - 1]
+                        .checked_add(d)
+                        .ok_or_else(|| anyhow!("ct file corrupt: key delta overflows u128"))?;
+                    keys.push(k);
+                }
+            }
+            RowStore::Packed2(keys)
+        }
+        TIER_WIDE => {
+            // Symmetric to the packed tiers: the wide store is only ever
+            // produced for layouts past 128 bits, and every cell must be
+            // representable under its column spec.
+            if layout.fits2() {
+                bail!("ct file corrupt: wide tier with a {}-bit layout", layout.total_bits());
+            }
+            let mut rows: Vec<u16> = Vec::with_capacity(nrows * width);
+            for i in 0..nrows * width {
+                let code = r.varint_u16()?;
+                if layout.try_encode(i % width, code).is_none() {
+                    bail!("ct file corrupt: code {code} outside column {} spec", i % width);
+                }
+                rows.push(code);
+            }
+            RowStore::Wide(rows)
+        }
+        t => bail!("ct file corrupt: unknown storage tier {t}"),
+    };
+    let mut counts: Vec<u64> = Vec::with_capacity(nrows);
+    for _ in 0..nrows {
+        counts.push(r.varint_u64()?);
+    }
+    if r.remaining() != 0 {
+        bail!("ct file corrupt: {} trailing bytes", r.remaining());
+    }
+    let ct = CtTable { vars, counts, layout, store };
+    ct.check_invariants().map_err(|e| anyhow!("decoded ct violates invariants: {e}"))?;
+    Ok(ct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schema::NA;
+    use crate::util::Pcg64;
+
+    /// Random normalized table: `width` columns of the given arities, with
+    /// optional n/a injection on odd columns. The first row pins every
+    /// column to its maximum code (and, with `with_na`, a second row pins
+    /// the n/a flag), so the observed layout — and therefore the storage
+    /// tier — is a deterministic function of `arities`.
+    fn random_ct(seed: u64, n: usize, arities: &[u16], with_na: bool) -> CtTable {
+        let mut rng = Pcg64::seeded(seed);
+        let vars: Vec<VarId> = (0..arities.len()).map(|i| i * 3).collect(); // sparse ids
+        let mut rows = Vec::new();
+        let mut counts = Vec::new();
+        rows.extend(arities.iter().map(|&a| a - 1));
+        counts.push(1);
+        if with_na {
+            rows.extend(
+                arities.iter().enumerate().map(|(c, &a)| if c % 2 == 1 { NA } else { a - 1 }),
+            );
+            counts.push(1);
+        }
+        for _ in 0..n {
+            for (c, &a) in arities.iter().enumerate() {
+                if with_na && c % 2 == 1 && rng.chance(0.3) {
+                    rows.push(NA);
+                } else {
+                    rows.push(rng.below(a as u64) as u16);
+                }
+            }
+            counts.push(rng.below(1000) + 1);
+        }
+        CtTable::from_raw(vars, rows, counts)
+    }
+
+    fn assert_roundtrip(ct: &CtTable) {
+        let bytes = encode(ct);
+        let back = decode(&bytes).expect("decode");
+        assert_eq!(&back, ct, "logical equality");
+        assert_eq!(back.tier(), ct.tier(), "storage tier preserved");
+        assert_eq!(back.layout(), ct.layout(), "layout preserved");
+        back.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_packed64_random_layouts() {
+        let mut rng = Pcg64::seeded(42);
+        for trial in 0..20 {
+            let width = rng.index(6) + 1;
+            let arities: Vec<u16> = (0..width).map(|_| rng.below(9) as u16 + 2).collect();
+            let ct = random_ct(100 + trial, rng.index(300), &arities, trial % 2 == 0);
+            assert!(ct.layout().fits(), "trial {trial} should stay one-word");
+            assert_roundtrip(&ct);
+        }
+    }
+
+    #[test]
+    fn roundtrip_packed128_random_layouts() {
+        let mut rng = Pcg64::seeded(43);
+        for trial in 0..10 {
+            // 24-29 columns × ≥3 bits (arities ≥ 5, max codes pinned by
+            // the generator) lands in the 65..=128-bit band.
+            let width = 24 + rng.index(6);
+            let arities: Vec<u16> = (0..width).map(|_| rng.below(7) as u16 + 5).collect();
+            let ct = random_ct(200 + trial, 50 + rng.index(150), &arities, true);
+            assert!(ct.is_packed2(), "trial {trial}: got tier {}", ct.tier());
+            assert_roundtrip(&ct);
+        }
+    }
+
+    #[test]
+    fn roundtrip_wide_random_layouts() {
+        let mut rng = Pcg64::seeded(44);
+        for trial in 0..5 {
+            // 66+ columns × ≥2 bits (arities ≥ 3, max codes pinned) always
+            // exceeds 128 bits.
+            let width = 66 + rng.index(10);
+            let arities: Vec<u16> = (0..width).map(|_| rng.below(2) as u16 + 3).collect();
+            let ct = random_ct(300 + trial, 30 + rng.index(50), &arities, true);
+            assert_eq!(ct.tier(), "rowmajor", "trial {trial}");
+            assert_roundtrip(&ct);
+        }
+    }
+
+    #[test]
+    fn roundtrip_empty_scalar_and_nullary() {
+        assert_roundtrip(&CtTable::empty(vec![2, 5, 9]));
+        assert_roundtrip(&CtTable::scalar(12345));
+        assert_roundtrip(&CtTable::from_raw(vec![], vec![], vec![])); // empty nullary
+    }
+
+    #[test]
+    fn roundtrip_na_values() {
+        let ct = CtTable::from_raw(vec![3, 9], vec![0, NA, 1, 2, 0, 0], vec![4, 5, 6]);
+        assert_eq!(ct.count_of(&[0, NA]), 4);
+        assert_roundtrip(&ct);
+        let back = decode(&encode(&ct)).unwrap();
+        assert_eq!(back.count_of(&[0, NA]), 4);
+    }
+
+    #[test]
+    fn truncated_file_is_an_error() {
+        let bytes = encode(&random_ct(1, 100, &[3, 4, 2], false));
+        for cut in [0, 5, 9, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode(&bytes[..cut]).is_err(), "truncation at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn corrupt_bytes_are_an_error() {
+        let bytes = encode(&random_ct(2, 80, &[4, 4], true));
+        // Flip one byte at every position: header, payload, or checksum —
+        // every single-byte corruption must be caught.
+        for pos in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x41;
+            assert!(decode(&bad).is_err(), "bit flip at {pos} accepted");
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_errors() {
+        let good = encode(&CtTable::scalar(3));
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        // Re-checksum so the magic check itself is what fires.
+        let body_len = bad_magic.len() - 8;
+        let sum = fnv1a(&bad_magic[..body_len]);
+        bad_magic[body_len..].copy_from_slice(&sum.to_le_bytes());
+        let err = decode(&bad_magic).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+
+        let mut bad_ver = good;
+        bad_ver[8] = 99;
+        let body_len = bad_ver.len() - 8;
+        let sum = fnv1a(&bad_ver[..body_len]);
+        bad_ver[body_len..].copy_from_slice(&sum.to_le_bytes());
+        let err = decode(&bad_ver).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn delta_encoding_is_compact_on_dense_keys() {
+        // 1000 dense one-word rows: deltas are tiny, so the file should be
+        // far smaller than the 8-bytes-per-key naive encoding.
+        let vars = vec![0, 1, 2];
+        let mut rows = Vec::new();
+        let mut counts = Vec::new();
+        for a in 0..10u16 {
+            for b in 0..10u16 {
+                for c in 0..10u16 {
+                    rows.extend_from_slice(&[a, b, c]);
+                    counts.push(1 + (a + b + c) as u64);
+                }
+            }
+        }
+        let ct = CtTable::from_raw(vars, rows, counts);
+        let bytes = encode(&ct);
+        assert!(
+            bytes.len() < ct.len() * 4,
+            "{} bytes for {} rows — delta varints should beat 4 B/row",
+            bytes.len(),
+            ct.len()
+        );
+        assert_roundtrip(&ct);
+    }
+}

@@ -1,0 +1,37 @@
+//! Persisted sufficient-statistics repository + count-query service.
+//!
+//! The Möbius Join's output — the contingency tables — is a *sufficient
+//! statistic*: once computed, every downstream consumer (feature
+//! selection, rule mining, Bayes-net scoring, ad-hoc counting) should read
+//! from it instead of touching the database. This module makes that split
+//! real, in three layers:
+//!
+//! 1. [`codec`] — a compact, versioned binary format for [`CtTable`]:
+//!    header carries the column specs (from which the exact [`CtLayout`]
+//!    and storage tier reconstruct), sorted packed keys are delta-encoded
+//!    varints, counts are varints, and a trailing checksum catches
+//!    corruption. All three storage tiers round-trip bit-identically.
+//! 2. [`CtStore`] — a directory-backed repository keyed by `(dataset,
+//!    chain signature)`: a `manifest.tsv` plus one `.ct` file per entity /
+//!    positive-chain / complete-chain / joint table, written on completion
+//!    by a [`StoreSink`] hooked into the Möbius Join, and read back
+//!    through an LRU cache bounded by a `mem_bytes` budget.
+//! 3. [`CountServer`] — a lazily-loading query service answering arbitrary
+//!    positive-and-negative conjunctive count queries via cached
+//!    [`AdTree`](crate::ct::AdTree)s, with Möbius subtraction for
+//!    indicator variables absent from the stored tables (the paper's
+//!    pre-counting regime: persist positives, derive negatives on demand).
+//!
+//! The `mrss query` / `mrss serve` CLI subcommands expose the service;
+//! `mrss ct|suite --store DIR` populates stores; `mrss mine|bn --store`
+//! re-score from a warm store with the database gone.
+//!
+//! [`CtTable`]: crate::ct::CtTable
+//! [`CtLayout`]: crate::ct::CtLayout
+
+pub mod codec;
+mod repo;
+mod service;
+
+pub use repo::{CtStore, PersistConfig, StoreSink, StoreStats, TableKind, TableMeta, MANIFEST};
+pub use service::{gen_queries, normalize, parse_query, CountServer};

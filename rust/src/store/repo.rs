@@ -1,0 +1,666 @@
+//! `CtStore` — the directory-backed sufficient-statistics repository.
+//!
+//! One store directory holds the Möbius Join output of one `(dataset,
+//! scale, seed)` run: a `manifest.tsv` plus one `.ct` file per table
+//! ([`codec`](super::codec) format). Tables are keyed by their provenance
+//! in the chain lattice:
+//!
+//! * `entity_<fo>` — `ct(1Atts(X))` for one FO variable;
+//! * `pos_<r1>_<r2>…` — the all-true ("positive") table of one chain,
+//!   `ct(Atts(C) | C = T)`, straight from the join counter — no indicator
+//!   columns (the paper's *pre-counting* statistics);
+//! * `chain_<r1>_<r2>…` — the complete per-chain table with indicator
+//!   columns and n/a rows (the Möbius Join's per-chain output);
+//! * `joint` — the joint table over the whole database.
+//!
+//! The manifest records per table: row count, grand total, storage tier,
+//! file size, the *scope* (which FO variables the counts range over — what
+//! lets the query service rescale counts between tables), and the column
+//! `VarId`s — enough for query planning without touching the `.ct` files.
+//!
+//! Reads go through an LRU cache bounded by a `mem_bytes` budget
+//! ([`CtStore::set_mem_budget`]): the ROADMAP's backpressure item. Hits,
+//! misses, and evictions are counted ([`CtStore::stats`]) and surfaced in
+//! run reports next to `MjMetrics::reference_fallbacks`.
+
+use crate::anyhow;
+use crate::bail;
+use crate::ct::CtTable;
+use crate::mobius::{CtSink, MjResult};
+use crate::schema::{FoVarId, RelId, Schema, VarId};
+use crate::util::error::{Context, Result};
+use crate::util::fxhash::FxHashMap;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use super::codec;
+
+/// Manifest file name inside a store directory.
+pub const MANIFEST: &str = "manifest.tsv";
+
+/// What a stored table is, parsed from (and rendered to) its key.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TableKind {
+    /// `ct(1Atts(X))` for one FO variable.
+    Entity(FoVarId),
+    /// All-true table of one chain (no indicator columns).
+    Positive(Vec<RelId>),
+    /// Complete per-chain table (indicators + n/a rows).
+    Chain(Vec<RelId>),
+    /// Joint table over the whole database.
+    Joint,
+}
+
+impl TableKind {
+    /// Canonical store key (doubles as the file stem).
+    pub fn key(&self) -> String {
+        fn rels(prefix: &str, rs: &[RelId]) -> String {
+            let mut s = String::from(prefix);
+            for r in rs {
+                s.push('_');
+                s.push_str(&r.to_string());
+            }
+            s
+        }
+        match self {
+            TableKind::Entity(fo) => format!("entity_{fo}"),
+            TableKind::Positive(rs) => rels("pos", rs),
+            TableKind::Chain(rs) => rels("chain", rs),
+            TableKind::Joint => "joint".to_string(),
+        }
+    }
+
+    /// Parse a store key back into its kind.
+    pub fn parse(key: &str) -> Result<TableKind> {
+        fn rels(body: &str) -> Result<Vec<RelId>> {
+            body.split('_')
+                .map(|t| t.parse::<RelId>().map_err(|_| anyhow!("bad rel id `{t}`")))
+                .collect()
+        }
+        if key == "joint" {
+            return Ok(TableKind::Joint);
+        }
+        if let Some(body) = key.strip_prefix("entity_") {
+            return Ok(TableKind::Entity(body.parse().map_err(|_| anyhow!("bad fo id"))?));
+        }
+        if let Some(body) = key.strip_prefix("pos_") {
+            return Ok(TableKind::Positive(rels(body)?));
+        }
+        if let Some(body) = key.strip_prefix("chain_") {
+            return Ok(TableKind::Chain(rels(body)?));
+        }
+        bail!("unrecognized store key `{key}`")
+    }
+}
+
+/// Per-table manifest record.
+#[derive(Debug, Clone)]
+pub struct TableMeta {
+    pub key: String,
+    pub kind: TableKind,
+    pub rows: u64,
+    /// Sum of all counts (`CtTable::total`).
+    pub total: u128,
+    /// Storage tier name (`packed64` / `packed128` / `rowmajor`).
+    pub tier: String,
+    /// Encoded file size in bytes.
+    pub bytes: u64,
+    /// FO variables the counts range over (sorted).
+    pub scope: Vec<FoVarId>,
+    /// Column variables (sorted — ct invariant).
+    pub vars: Vec<VarId>,
+}
+
+/// Cache / IO counters for one store handle.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct StoreStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Bytes read from disk (encoded size, before decode).
+    pub bytes_read: u64,
+}
+
+struct CacheEntry {
+    table: Arc<CtTable>,
+    mem: usize,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    tables: BTreeMap<String, TableMeta>,
+    cache: FxHashMap<String, CacheEntry>,
+    cached_bytes: usize,
+    tick: u64,
+    mem_budget: Option<usize>,
+    stats: StoreStats,
+}
+
+/// A directory-backed repository of contingency tables for one dataset run.
+pub struct CtStore {
+    dir: PathBuf,
+    /// Dataset name (matches `datagen` benchmark names).
+    pub dataset: String,
+    /// Generation scale the statistics were computed at.
+    pub scale: f64,
+    /// Generation seed.
+    pub seed: u64,
+    inner: Mutex<Inner>,
+}
+
+impl CtStore {
+    /// Create (or truncate) a store directory for one run. Any `.ct`
+    /// files and manifest from a previous run are removed, so the
+    /// directory always matches the new manifest exactly.
+    pub fn create(
+        dir: impl Into<PathBuf>,
+        dataset: &str,
+        scale: f64,
+        seed: u64,
+    ) -> Result<CtStore> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating store dir {}", dir.display()))?;
+        for entry in
+            std::fs::read_dir(&dir).with_context(|| format!("listing {}", dir.display()))?
+        {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            let stale =
+                name.starts_with(MANIFEST) || name.ends_with(".ct") || name.ends_with(".ct.tmp");
+            if stale {
+                std::fs::remove_file(&path)
+                    .with_context(|| format!("removing stale {}", path.display()))?;
+            }
+        }
+        let store = CtStore {
+            dir,
+            dataset: dataset.to_string(),
+            scale,
+            seed,
+            inner: Mutex::new(Inner::default()),
+        };
+        store.write_manifest(&store.inner.lock().unwrap())?;
+        Ok(store)
+    }
+
+    /// Open an existing store directory (reads the manifest).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<CtStore> {
+        let dir = dir.into();
+        let path = dir.join(MANIFEST);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading store manifest {}", path.display()))?;
+        let mut lines = text.lines().enumerate();
+        let (_, head) = lines.next().context("empty manifest")?;
+        let mut hf = head.split('\t');
+        if hf.next() != Some("mrss-ctstore") || hf.next() != Some("1") {
+            bail!("{}: not a v1 ctstore manifest", path.display());
+        }
+        let mut dataset = String::new();
+        let mut scale = 0.0f64;
+        let mut seed = 0u64;
+        let mut tables = BTreeMap::new();
+        for (ln, line) in lines {
+            let mut f = line.split('\t');
+            let tag = f.next().unwrap_or("");
+            let ctx = || format!("{}:{}", path.display(), ln + 1);
+            match tag {
+                "" => continue,
+                "dataset" => dataset = f.next().with_context(ctx)?.to_string(),
+                "scale" => scale = f.next().with_context(ctx)?.parse().with_context(ctx)?,
+                "seed" => seed = f.next().with_context(ctx)?.parse().with_context(ctx)?,
+                "table" => {
+                    let key = f.next().with_context(ctx)?.to_string();
+                    let kind = TableKind::parse(&key).with_context(ctx)?;
+                    let rows = f.next().with_context(ctx)?.parse().with_context(ctx)?;
+                    let total = f.next().with_context(ctx)?.parse().with_context(ctx)?;
+                    let tier = f.next().with_context(ctx)?.to_string();
+                    let bytes = f.next().with_context(ctx)?.parse().with_context(ctx)?;
+                    let scope = parse_ids(f.next().with_context(ctx)?).with_context(ctx)?;
+                    let vars = parse_ids(f.next().with_context(ctx)?).with_context(ctx)?;
+                    tables.insert(
+                        key.clone(),
+                        TableMeta { key, kind, rows, total, tier, bytes, scope, vars },
+                    );
+                }
+                other => bail!("{}: unknown manifest tag `{other}`", ctx()),
+            }
+        }
+        if dataset.is_empty() {
+            bail!("{}: manifest has no dataset line", path.display());
+        }
+        Ok(CtStore {
+            dir,
+            dataset,
+            scale,
+            seed,
+            inner: Mutex::new(Inner { tables, ..Inner::default() }),
+        })
+    }
+
+    /// The store directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Bound the in-memory cache (`None` = unbounded). Eviction is LRU and
+    /// never drops the most recently touched table, so a budget smaller
+    /// than one table still serves queries (it just stops caching).
+    pub fn set_mem_budget(&self, bytes: Option<usize>) {
+        let mut g = self.inner.lock().unwrap();
+        g.mem_budget = bytes;
+        evict_over_budget(&mut g);
+    }
+
+    /// Current cache budget.
+    pub fn mem_budget(&self) -> Option<usize> {
+        self.inner.lock().unwrap().mem_budget
+    }
+
+    /// Snapshot of the cache/IO counters.
+    pub fn stats(&self) -> StoreStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Manifest records, in key order.
+    pub fn tables(&self) -> Vec<TableMeta> {
+        self.inner.lock().unwrap().tables.values().cloned().collect()
+    }
+
+    /// Manifest record of one key.
+    pub fn meta(&self, key: &str) -> Option<TableMeta> {
+        self.inner.lock().unwrap().tables.get(key).cloned()
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.inner.lock().unwrap().tables.contains_key(key)
+    }
+
+    /// Number of stored tables.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().tables.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total encoded bytes across all stored tables.
+    pub fn disk_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().tables.values().map(|m| m.bytes).sum()
+    }
+
+    /// Persist one table. Writes the `.ct` file (via a temp file + rename,
+    /// so a crash never leaves a half-written table behind a manifest
+    /// entry) and rewrites the manifest.
+    ///
+    /// The manifest rewrite-and-rename per put is deliberate: it keeps the
+    /// store openable (as a complete prefix of the run) at every instant,
+    /// crash included. The manifest is lattice-sized — tens of KB — so the
+    /// O(tables²) rewrite bytes are noise next to the table encodes, and
+    /// only this small rewrite happens under the store mutex; the encode
+    /// and table-file IO above run outside it, so parallel sink callbacks
+    /// still overlap on the expensive part.
+    pub fn put(&self, kind: TableKind, scope: &[FoVarId], ct: &CtTable) -> Result<()> {
+        let key = kind.key();
+        let bytes = codec::encode(ct);
+        let path = self.dir.join(format!("{key}.ct"));
+        let tmp = self.dir.join(format!("{key}.ct.tmp"));
+        std::fs::write(&tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).with_context(|| format!("renaming to {}", path.display()))?;
+        let meta = TableMeta {
+            key: key.clone(),
+            kind,
+            rows: ct.len() as u64,
+            total: ct.total(),
+            tier: ct.tier().to_string(),
+            bytes: bytes.len() as u64,
+            scope: scope.to_vec(),
+            vars: ct.vars.clone(),
+        };
+        let mut g = self.inner.lock().unwrap();
+        g.tables.insert(key.clone(), meta);
+        // A re-put invalidates any cached copy of the old bytes.
+        if let Some(e) = g.cache.remove(&key) {
+            g.cached_bytes -= e.mem;
+        }
+        self.write_manifest(&g)
+    }
+
+    /// Load a table, going through the LRU cache. Disk IO and decode run
+    /// outside the store mutex, so concurrent readers only serialize on
+    /// the cheap cache bookkeeping (two misses racing on one key both
+    /// decode; the loser's copy is dropped).
+    pub fn get(&self, key: &str) -> Result<Arc<CtTable>> {
+        {
+            let mut guard = self.inner.lock().unwrap();
+            let g = &mut *guard;
+            g.tick += 1;
+            let tick = g.tick;
+            if let Some(e) = g.cache.get_mut(key) {
+                e.last_used = tick;
+                g.stats.hits += 1;
+                return Ok(Arc::clone(&e.table));
+            }
+            if !g.tables.contains_key(key) {
+                bail!("store has no table `{key}` (dataset {})", self.dataset);
+            }
+        }
+        let path = self.dir.join(format!("{key}.ct"));
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        let table = Arc::new(
+            codec::decode(&bytes).with_context(|| format!("decoding {}", path.display()))?,
+        );
+        let mut guard = self.inner.lock().unwrap();
+        let g = &mut *guard;
+        g.stats.misses += 1;
+        g.stats.bytes_read += bytes.len() as u64;
+        if let Some(e) = g.cache.get(key) {
+            // Raced with another miss on the same key: keep the cached one.
+            return Ok(Arc::clone(&e.table));
+        }
+        g.tick += 1;
+        let tick = g.tick;
+        let mem = table.mem_bytes();
+        g.cache.insert(
+            key.to_string(),
+            CacheEntry { table: Arc::clone(&table), mem, last_used: tick },
+        );
+        g.cached_bytes += mem;
+        evict_over_budget(g);
+        Ok(table)
+    }
+
+    /// Read and decode one table directly, bypassing the LRU cache — for
+    /// bulk loads that keep the table alive themselves (a cached copy
+    /// would double peak memory). Misses/bytes are still counted.
+    fn read_table(&self, key: &str) -> Result<CtTable> {
+        if !self.contains(key) {
+            bail!("store has no table `{key}` (dataset {})", self.dataset);
+        }
+        let path = self.dir.join(format!("{key}.ct"));
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        let table =
+            codec::decode(&bytes).with_context(|| format!("decoding {}", path.display()))?;
+        let mut g = self.inner.lock().unwrap();
+        g.stats.misses += 1;
+        g.stats.bytes_read += bytes.len() as u64;
+        Ok(table)
+    }
+
+    /// Reassemble an [`MjResult`] from the stored entity/chain/joint tables
+    /// — what lets `apps` (cfs/apriori/bayesnet) score from a warm store
+    /// with the database tables gone. Tables are decoded straight into the
+    /// result (not through the LRU cache), so each lives in memory once.
+    pub fn load_mj_result(&self, schema: &Schema) -> Result<MjResult> {
+        let metas = self.tables();
+        let mut entity_cts: FxHashMap<FoVarId, CtTable> = FxHashMap::default();
+        let mut tables: FxHashMap<Vec<RelId>, CtTable> = FxHashMap::default();
+        let mut joint: Option<CtTable> = None;
+        for m in metas {
+            match m.kind {
+                TableKind::Entity(fo) => {
+                    entity_cts.insert(fo, self.read_table(&m.key)?);
+                }
+                TableKind::Chain(rels) => {
+                    tables.insert(rels, self.read_table(&m.key)?);
+                }
+                TableKind::Joint => joint = Some(self.read_table(&m.key)?),
+                TableKind::Positive(_) => {}
+            }
+        }
+        if entity_cts.len() != schema.fo_vars.len() {
+            bail!(
+                "store has {} entity tables, schema {} needs {}",
+                entity_cts.len(),
+                schema.name,
+                schema.fo_vars.len()
+            );
+        }
+        if joint.is_none() {
+            bail!(
+                "store for {} has no joint table (depth-capped or positives-only run) — \
+                 mine/bn need a full-depth persisted run",
+                self.dataset
+            );
+        }
+        Ok(MjResult::assemble(schema, entity_cts, tables, joint))
+    }
+
+    fn write_manifest(&self, g: &Inner) -> Result<()> {
+        let mut out = String::from("mrss-ctstore\t1\n");
+        out.push_str(&format!("dataset\t{}\n", self.dataset));
+        out.push_str(&format!("scale\t{}\n", self.scale));
+        out.push_str(&format!("seed\t{}\n", self.seed));
+        for m in g.tables.values() {
+            out.push_str(&format!(
+                "table\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
+                m.key,
+                m.rows,
+                m.total,
+                m.tier,
+                m.bytes,
+                render_ids(&m.scope),
+                render_ids(&m.vars),
+            ));
+        }
+        let path = self.dir.join(MANIFEST);
+        let tmp = self.dir.join(format!("{MANIFEST}.tmp"));
+        std::fs::write(&tmp, out).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).with_context(|| format!("renaming to {}", path.display()))
+    }
+}
+
+/// Evict least-recently-used entries until the cache fits the budget,
+/// always keeping the most recently touched entry.
+fn evict_over_budget(g: &mut Inner) {
+    let Some(budget) = g.mem_budget else { return };
+    while g.cached_bytes > budget && g.cache.len() > 1 {
+        let newest = g.cache.values().map(|e| e.last_used).max().unwrap_or(0);
+        let victim = g
+            .cache
+            .iter()
+            .filter(|(_, e)| e.last_used != newest)
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| k.clone());
+        let Some(k) = victim else { break };
+        if let Some(e) = g.cache.remove(&k) {
+            g.cached_bytes -= e.mem;
+            g.stats.evictions += 1;
+        }
+    }
+}
+
+fn render_ids(ids: &[usize]) -> String {
+    if ids.is_empty() {
+        return "-".to_string();
+    }
+    ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+}
+
+fn parse_ids(s: &str) -> Result<Vec<usize>> {
+    if s == "-" {
+        return Ok(Vec::new());
+    }
+    s.split(',').map(|t| t.parse::<usize>().map_err(|_| anyhow!("bad id `{t}`"))).collect()
+}
+
+/// Which tables a [`StoreSink`] persists. Defaults to everything; a
+/// positives-only store is the paper's *pre-counting* regime — negative
+/// counts are then derived at query time by Möbius subtraction
+/// ([`super::CountServer`]).
+#[derive(Debug, Clone, Copy)]
+pub struct PersistConfig {
+    pub entities: bool,
+    pub positives: bool,
+    pub chains: bool,
+    pub joint: bool,
+}
+
+impl Default for PersistConfig {
+    fn default() -> Self {
+        PersistConfig { entities: true, positives: true, chains: true, joint: true }
+    }
+}
+
+impl PersistConfig {
+    /// Entity + positive tables only (no complete chain tables, no joint).
+    pub fn positives_only() -> Self {
+        PersistConfig { entities: true, positives: true, chains: false, joint: false }
+    }
+}
+
+/// Write-on-complete hook bridging [`MobiusJoin`](crate::mobius::MobiusJoin)
+/// to a [`CtStore`]: every table is persisted the moment the dynamic
+/// program finishes it, so a completed run leaves a complete store with no
+/// separate export pass. Sink callbacks may fire from worker threads; IO
+/// errors are latched and surfaced through [`StoreSink::take_error`].
+pub struct StoreSink<'a> {
+    store: &'a CtStore,
+    schema: &'a Schema,
+    cfg: PersistConfig,
+    error: Mutex<Option<crate::util::error::Error>>,
+}
+
+impl<'a> StoreSink<'a> {
+    pub fn new(store: &'a CtStore, schema: &'a Schema, cfg: PersistConfig) -> Self {
+        StoreSink { store, schema, cfg, error: Mutex::new(None) }
+    }
+
+    fn record(&self, r: Result<()>) {
+        if let Err(e) = r {
+            let mut g = self.error.lock().unwrap();
+            if g.is_none() {
+                *g = Some(e);
+            }
+        }
+    }
+
+    /// The first persistence error, if any (call after the join finishes).
+    pub fn take_error(&self) -> Result<()> {
+        match self.error.lock().unwrap().take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl CtSink for StoreSink<'_> {
+    fn on_entity(&self, fo: FoVarId, ct: &CtTable) {
+        if self.cfg.entities {
+            self.record(self.store.put(TableKind::Entity(fo), &[fo], ct));
+        }
+    }
+
+    fn on_positive(&self, chain: &[RelId], ct: &CtTable) {
+        if self.cfg.positives {
+            let scope = self.schema.fo_vars_of_rels(chain);
+            self.record(self.store.put(TableKind::Positive(chain.to_vec()), &scope, ct));
+        }
+    }
+
+    fn on_chain(&self, chain: &[RelId], ct: &CtTable) {
+        if self.cfg.chains {
+            let scope = self.schema.fo_vars_of_rels(chain);
+            self.record(self.store.put(TableKind::Chain(chain.to_vec()), &scope, ct));
+        }
+    }
+
+    fn on_joint(&self, ct: &CtTable) {
+        if self.cfg.joint {
+            let scope: Vec<FoVarId> = (0..self.schema.fo_vars.len()).collect();
+            self.record(self.store.put(TableKind::Joint, &scope, ct));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("mrss_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn small_ct(seed: u64) -> CtTable {
+        CtTable::from_raw(vec![0, 1], vec![0, 0, 0, 1, 1, 0], vec![seed + 1, 2, 3])
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_manifest_reload() {
+        let dir = tmpdir("roundtrip");
+        let store = CtStore::create(&dir, "uwcse", 0.3, 7).unwrap();
+        let ct = small_ct(4);
+        store.put(TableKind::Chain(vec![0]), &[0, 1], &ct).unwrap();
+        store.put(TableKind::Entity(2), &[2], &CtTable::scalar(9)).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(*store.get("chain_0").unwrap(), ct);
+
+        // Re-open cold: manifest metadata and bytes must survive.
+        let again = CtStore::open(&dir).unwrap();
+        assert_eq!(again.dataset, "uwcse");
+        assert_eq!(again.scale, 0.3);
+        assert_eq!(again.seed, 7);
+        let meta = again.meta("chain_0").unwrap();
+        assert_eq!(meta.kind, TableKind::Chain(vec![0]));
+        assert_eq!(meta.rows, ct.len() as u64);
+        assert_eq!(meta.total, ct.total());
+        assert_eq!(meta.scope, vec![0, 1]);
+        assert_eq!(meta.vars, ct.vars);
+        assert_eq!(*again.get("chain_0").unwrap(), ct);
+        assert_eq!(again.get("entity_2").unwrap().total(), 9);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn key_parse_roundtrip() {
+        for kind in [
+            TableKind::Entity(3),
+            TableKind::Positive(vec![0, 2, 5]),
+            TableKind::Chain(vec![1]),
+            TableKind::Joint,
+        ] {
+            assert_eq!(TableKind::parse(&kind.key()).unwrap(), kind);
+        }
+        assert!(TableKind::parse("weird").is_err());
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget_and_counts() {
+        let dir = tmpdir("lru");
+        let store = CtStore::create(&dir, "uwcse", 0.1, 7).unwrap();
+        for i in 0..4usize {
+            store.put(TableKind::Entity(i), &[i], &small_ct(i as u64)).unwrap();
+        }
+        let one = store.get("entity_0").unwrap().mem_bytes();
+        // Budget for ~2 tables.
+        store.set_mem_budget(Some(one * 2 + one / 2));
+        for i in 0..4usize {
+            store.get(&format!("entity_{i}")).unwrap();
+        }
+        let s = store.stats();
+        assert!(s.evictions > 0, "expected evictions under a 2-table budget: {s:?}");
+        assert_eq!(s.misses, 4, "{s:?}");
+        // Most recent table stays cached: an immediate re-read is a hit.
+        store.get("entity_3").unwrap();
+        assert_eq!(store.stats().hits, s.hits + 1);
+        // Answers survive eviction (reload from disk).
+        assert_eq!(*store.get("entity_1").unwrap(), small_ct(1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_table_and_missing_manifest_error() {
+        let dir = tmpdir("missing");
+        let store = CtStore::create(&dir, "uwcse", 0.1, 7).unwrap();
+        assert!(store.get("joint").is_err());
+        assert!(CtStore::open(dir.join("nope")).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

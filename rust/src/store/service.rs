@@ -1,0 +1,599 @@
+//! `CountServer` — answers conjunctive count queries from a [`CtStore`]
+//! with the database tables gone.
+//!
+//! A query is a conjunction `var=val, …` over the schema's random
+//! variables, mixing attribute values, `n/a`, and **positive and negative
+//! relationship conditions** (`R=T` / `R=F`). The answer is the number of
+//! instantiations of *all* the schema's first-order variables satisfying
+//! the conjunction — exactly the count the joint contingency table's
+//! selection would give (`joint.select(q).total()`), which is what the
+//! store-smoke CI job diffs against.
+//!
+//! ## Planning
+//!
+//! The full cross-product measure factorizes over first-order variables,
+//! so for any stored table `T` whose columns cover the queried variables:
+//!
+//! ```text
+//! count(Q) = adtree(T).count(Q) / Π pop(X) [X ∈ scope(T) \ fo(Q)]
+//!                               × Π pop(X) [X ∈ all fos \ fo(Q)]
+//! ```
+//!
+//! (the division is exact: a table's counts over FO variables the query
+//! does not constrain are uniform multiples of the population sizes). The
+//! planner therefore:
+//!
+//! 1. splits the query into independent groups (connected components of
+//!    the "shares an FO variable" relation) and multiplies their counts;
+//! 2. per group, answers from the **smallest** stored complete table
+//!    (entity / chain / joint) covering the group's variables, via a
+//!    cached [`AdTree`];
+//! 3. when no complete table covers the group — a *positives-only* store,
+//!    the paper's pre-counting regime — applies **Möbius subtraction**
+//!    (Proposition 1) to the negative relationship conditions:
+//!    `count(Q ∧ R=F) = count(Q) − count(Q ∧ R=T)`, recursing until the
+//!    all-positive base case, which the indicator-free `pos_*` tables
+//!    answer directly.
+//!
+//! Queries are normalized first: duplicate conditions collapse,
+//! contradictions (two values for one variable, a real 2Att value under
+//! `R=F`, `n/a` under `R=T`) short-circuit to zero, and a bare
+//! `2Att = n/a` condition rewrites to `R=F` (they are equivalent by the
+//! paper's §2.2 convention).
+
+use crate::bail;
+use crate::ct::{AdTree, AdTreeConfig};
+use crate::schema::{Attribute, FoVarId, RandomVar, RelId, Schema, VarId, NA};
+use crate::util::error::{Context, Result};
+use crate::util::fxhash::FxHashMap;
+use crate::util::Pcg64;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use super::repo::{CtStore, StoreStats, TableKind, TableMeta};
+
+/// Lazily-loading count-query service over one store.
+pub struct CountServer {
+    schema: Schema,
+    store: CtStore,
+    trees: Mutex<FxHashMap<String, Arc<AdTree>>>,
+    /// Manifest snapshot (immutable after open): spares the planner a
+    /// lock-and-clone of the full metadata map per group evaluation.
+    metas: Vec<TableMeta>,
+    /// Population size per FO variable (entity-table totals).
+    popsizes: Vec<u128>,
+}
+
+impl CountServer {
+    /// Open a store directory; the schema is regenerated from the
+    /// dataset name recorded in the manifest.
+    pub fn open(dir: impl AsRef<Path>) -> Result<CountServer> {
+        let store = CtStore::open(dir.as_ref())?;
+        let schema = crate::datagen::schema_of(&store.dataset)?;
+        CountServer::new(store, schema)
+    }
+
+    /// Serve from an already-open store.
+    pub fn new(store: CtStore, schema: Schema) -> Result<CountServer> {
+        let metas = store.tables();
+        let mut popsizes: Vec<Option<u128>> = vec![None; schema.fo_vars.len()];
+        for m in &metas {
+            if let TableKind::Entity(fo) = m.kind {
+                if fo < popsizes.len() {
+                    popsizes[fo] = Some(m.total);
+                }
+            }
+        }
+        let popsizes: Vec<u128> = popsizes
+            .into_iter()
+            .enumerate()
+            .map(|(fo, p)| {
+                p.with_context(|| {
+                    format!("store is missing the entity table for FO variable {fo}")
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok(CountServer {
+            schema,
+            store,
+            trees: Mutex::new(FxHashMap::default()),
+            metas,
+            popsizes,
+        })
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn store(&self) -> &CtStore {
+        &self.store
+    }
+
+    /// Cache/IO counters of the underlying store.
+    pub fn stats(&self) -> StoreStats {
+        self.store.stats()
+    }
+
+    /// Count of a conjunctive query over the full database scope.
+    pub fn count(&self, conds: &[(VarId, u16)]) -> Result<u128> {
+        let Some(conds) = normalize(&self.schema, conds) else { return Ok(0) };
+        let insts = self.insts(&conds)?;
+        let fo_q = self.fo_set(&conds);
+        let mut out = insts;
+        for (fo, &pop) in self.popsizes.iter().enumerate() {
+            if !fo_q.contains(&fo) {
+                out = out.checked_mul(pop).context("count overflows u128")?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse-and-count convenience for the CLI / serve loop.
+    pub fn count_query(&self, query: &str) -> Result<u128> {
+        self.count(&parse_query(&self.schema, query)?)
+    }
+
+    /// FO variables a set of conditions ranges over.
+    fn fo_set(&self, conds: &[(VarId, u16)]) -> BTreeSet<FoVarId> {
+        conds.iter().flat_map(|&(v, _)| fos_of_var(&self.schema, v)).collect()
+    }
+
+    /// Number of instantiations of `fo_set(conds)` satisfying `conds`
+    /// (normalized input).
+    fn insts(&self, conds: &[(VarId, u16)]) -> Result<u128> {
+        if conds.is_empty() {
+            return Ok(1);
+        }
+        let groups = split_groups(&self.schema, conds);
+        if groups.len() > 1 {
+            let mut out = 1u128;
+            for g in &groups {
+                out = out.checked_mul(self.insts(g)?).context("count overflows u128")?;
+            }
+            return Ok(out);
+        }
+        self.insts_group(conds)
+    }
+
+    /// One FO-connected group: direct cover, positive tables, or Möbius
+    /// subtraction.
+    fn insts_group(&self, conds: &[(VarId, u16)]) -> Result<u128> {
+        let cond_vars: Vec<VarId> = conds.iter().map(|&(v, _)| v).collect();
+        let fo_q = self.fo_set(conds);
+
+        // 1. Smallest complete stored table covering every queried var.
+        if let Some(meta) = self.best_cover(&cond_vars) {
+            let cnt = self.table_count(meta, conds)?;
+            return self.shrink_scope(cnt, &meta.scope, &fo_q);
+        }
+
+        let negs: Vec<usize> = conds
+            .iter()
+            .enumerate()
+            .filter(|&(_, &(v, code))| {
+                matches!(self.schema.random_vars[v], RandomVar::RelInd { .. }) && code == 0
+            })
+            .map(|(i, _)| i)
+            .collect();
+
+        // 2. All-positive base case: the chain's positive table has every
+        //    2Att/1Att column but no indicators — indicator conditions are
+        //    implied true and drop.
+        if negs.is_empty() {
+            let mut rels: Vec<RelId> =
+                conds.iter().filter_map(|&(v, _)| self.schema.random_vars[v].rel()).collect();
+            rels.sort_unstable();
+            rels.dedup();
+            if !rels.is_empty() {
+                let key = TableKind::Positive(rels).key();
+                if let Some(meta) = self.metas.iter().find(|m| m.key == key) {
+                    let att_conds: Vec<(VarId, u16)> = conds
+                        .iter()
+                        .copied()
+                        .filter(|&(v, _)| {
+                            !matches!(self.schema.random_vars[v], RandomVar::RelInd { .. })
+                        })
+                        .collect();
+                    if covers(&meta.vars, &att_conds) {
+                        let cnt = self.table_count(meta, &att_conds)?;
+                        return self.shrink_scope(cnt, &meta.scope, &fo_q);
+                    }
+                }
+            }
+            bail!(
+                "no stored table covers query variables [{}]",
+                cond_vars
+                    .iter()
+                    .map(|&v| self.schema.var_name(v))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+        }
+
+        // 3. Möbius subtraction: peel one negative indicator (Equation 1).
+        let (peel_var, _) = conds[negs[0]];
+        let rest: Vec<(VarId, u16)> =
+            conds.iter().copied().filter(|&(v, _)| v != peel_var).collect();
+        // count(rest) at the scope of the full group: unconstrained FO
+        // variables of the peeled relationship multiply in freely.
+        let fo_rest = self.fo_set(&rest);
+        let mut star = self.insts(&rest)?;
+        for &fo in &fo_q {
+            if !fo_rest.contains(&fo) {
+                star = star.checked_mul(self.popsizes[fo]).context("count overflows u128")?;
+            }
+        }
+        let mut pos = rest;
+        pos.push((peel_var, 1));
+        pos.sort_unstable_by_key(|c| c.0);
+        let truthy = self.insts(&pos)?;
+        star.checked_sub(truthy).with_context(|| {
+            format!(
+                "inconsistent store: ct({}=T) exceeds the unconditioned count",
+                self.schema.var_name(peel_var)
+            )
+        })
+    }
+
+    /// Rescale a table-scope count down to the query's FO scope. Exact by
+    /// the factorization of the cross-product measure.
+    fn shrink_scope(
+        &self,
+        cnt: u128,
+        scope: &[FoVarId],
+        fo_q: &BTreeSet<FoVarId>,
+    ) -> Result<u128> {
+        let mut extra = 1u128;
+        for &fo in scope {
+            if !fo_q.contains(&fo) {
+                extra = extra.checked_mul(self.popsizes[fo]).context("scope factor overflow")?;
+            }
+        }
+        if extra == 0 {
+            // An empty population in scope forces every count to zero.
+            return Ok(0);
+        }
+        if cnt % extra != 0 {
+            bail!("inconsistent store: count {cnt} not divisible by scope factor {extra}");
+        }
+        Ok(cnt / extra)
+    }
+
+    /// Smallest (by rows) complete stored table whose columns cover `vars`.
+    fn best_cover(&self, vars: &[VarId]) -> Option<&TableMeta> {
+        self.metas
+            .iter()
+            .filter(|m| !matches!(m.kind, TableKind::Positive(_)))
+            .filter(|m| vars.iter().all(|v| m.vars.binary_search(v).is_ok()))
+            .min_by_key(|m| m.rows)
+    }
+
+    /// Count lookup on one stored table. ADtree node counts are `u64`, so
+    /// the tree path is only sound while the table's grand total fits
+    /// `u64`; beyond that (huge population products) the lookup routes
+    /// through exact `u128` selection instead of silently wrapping.
+    fn table_count(&self, meta: &TableMeta, conds: &[(VarId, u16)]) -> Result<u128> {
+        if meta.total > u64::MAX as u128 {
+            let ct = self.store.get(&meta.key)?;
+            return Ok(ct.select(conds).total());
+        }
+        if let Some(tree) = self.trees.lock().unwrap().get(&meta.key) {
+            return Ok(tree.count(conds) as u128);
+        }
+        let ct = self.store.get(&meta.key)?;
+        let tree = Arc::new(AdTree::build(&ct, AdTreeConfig::default()));
+        let cnt = tree.count(conds);
+        self.trees.lock().unwrap().insert(meta.key.clone(), tree);
+        Ok(cnt as u128)
+    }
+}
+
+/// FO variables one random variable ranges over.
+fn fos_of_var(schema: &Schema, v: VarId) -> Vec<FoVarId> {
+    match schema.random_vars[v] {
+        RandomVar::EntityAttr { fo, .. } => vec![fo],
+        RandomVar::RelAttr { rel, .. } | RandomVar::RelInd { rel } => {
+            let mut fos = schema.relationships[rel].fo_vars.to_vec();
+            fos.dedup(); // self-relationships repeat the FO variable
+            fos
+        }
+    }
+}
+
+/// Whether `sorted_vars` covers every variable of `conds`.
+fn covers(sorted_vars: &[VarId], conds: &[(VarId, u16)]) -> bool {
+    conds.iter().all(|&(v, _)| sorted_vars.binary_search(&v).is_ok())
+}
+
+/// Split conditions into independent groups: connected components of the
+/// "shares an FO variable" relation. Groups factorize exactly because the
+/// underlying measure is the cross product of the populations.
+fn split_groups(schema: &Schema, conds: &[(VarId, u16)]) -> Vec<Vec<(VarId, u16)>> {
+    let n = conds.len();
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(p: &mut [usize], i: usize) -> usize {
+        if p[i] != i {
+            let r = find(p, p[i]);
+            p[i] = r;
+        }
+        p[i]
+    }
+    let mut by_fo: BTreeMap<FoVarId, usize> = BTreeMap::new();
+    for (i, &(v, _)) in conds.iter().enumerate() {
+        for fo in fos_of_var(schema, v) {
+            match by_fo.get(&fo).copied() {
+                Some(j) => {
+                    let (ri, rj) = (find(&mut parent, i), find(&mut parent, j));
+                    parent[ri] = rj;
+                }
+                None => {
+                    by_fo.insert(fo, i);
+                }
+            }
+        }
+    }
+    let mut groups: BTreeMap<usize, Vec<(VarId, u16)>> = BTreeMap::new();
+    for i in 0..n {
+        let r = find(&mut parent, i);
+        groups.entry(r).or_default().push(conds[i]);
+    }
+    groups.into_values().collect()
+}
+
+/// Normalize a conjunctive query. `None` means the count is provably zero
+/// (contradictory or unrepresentable conditions). Otherwise the result is
+/// deduplicated, sorted by `VarId`, with the 2Att/indicator coupling
+/// resolved: `2Att = n/a` becomes `R = F`, and conditions implied by an
+/// indicator condition are dropped.
+pub fn normalize(schema: &Schema, conds: &[(VarId, u16)]) -> Option<Vec<(VarId, u16)>> {
+    let mut m: BTreeMap<VarId, u16> = BTreeMap::new();
+    for &(v, code) in conds {
+        if v >= schema.random_vars.len() {
+            return None;
+        }
+        match m.get(&v).copied() {
+            Some(prev) if prev != code => return None,
+            _ => {
+                m.insert(v, code);
+            }
+        }
+    }
+    // Indicator conditions first: they decide how 2Atts are interpreted.
+    let mut ind: BTreeMap<RelId, u16> = BTreeMap::new();
+    for (&v, &code) in &m {
+        if let RandomVar::RelInd { rel } = schema.random_vars[v] {
+            if code > 1 {
+                return None;
+            }
+            ind.insert(rel, code);
+        }
+    }
+    let mut out: Vec<(VarId, u16)> = Vec::with_capacity(m.len());
+    let mut implied_negs: BTreeSet<RelId> = BTreeSet::new();
+    let mut real_atts: BTreeSet<RelId> = BTreeSet::new();
+    for (&v, &code) in &m {
+        match schema.random_vars[v] {
+            RandomVar::EntityAttr { .. } => {
+                if (code as usize) >= schema.var_arity(v) {
+                    return None;
+                }
+                out.push((v, code));
+            }
+            RandomVar::RelInd { .. } => out.push((v, code)),
+            RandomVar::RelAttr { rel, .. } => {
+                // var_arity counts the n/a slot; real codes are below it.
+                let real_arity = schema.var_arity(v) - 1;
+                match ind.get(&rel) {
+                    Some(0) => {
+                        // R=F: every 2Att is n/a. A real value contradicts.
+                        if code != NA {
+                            return None;
+                        }
+                    }
+                    Some(_) => {
+                        if code == NA || (code as usize) >= real_arity {
+                            return None;
+                        }
+                        real_atts.insert(rel);
+                        out.push((v, code));
+                    }
+                    None => {
+                        if code == NA {
+                            implied_negs.insert(rel);
+                        } else if (code as usize) >= real_arity {
+                            return None;
+                        } else {
+                            real_atts.insert(rel);
+                            out.push((v, code));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for rel in implied_negs {
+        // n/a and a real 2Att value on the same relationship contradict.
+        if real_atts.contains(&rel) {
+            return None;
+        }
+        out.push((schema.rel_ind_var(rel), 0));
+    }
+    out.sort_unstable_by_key(|c| c.0);
+    Some(out)
+}
+
+/// Parse a query string: whitespace-separated `name=value` terms
+/// (trailing commas tolerated), e.g.
+/// `RA(P,S)=F intelligence(S)=1 capability(P,S)=n/a`.
+pub fn parse_query(schema: &Schema, s: &str) -> Result<Vec<(VarId, u16)>> {
+    let mut out = Vec::new();
+    for tok in s.split_whitespace() {
+        let tok = tok.trim_matches(',');
+        if tok.is_empty() {
+            continue;
+        }
+        let (name, val) =
+            tok.split_once('=').with_context(|| format!("expected name=value, got `{tok}`"))?;
+        let v = schema
+            .var_by_name(name)
+            .with_context(|| format!("unknown variable `{name}` in schema {}", schema.name))?;
+        out.push((v, parse_value(schema, v, val)?));
+    }
+    Ok(out)
+}
+
+fn parse_value(schema: &Schema, v: VarId, val: &str) -> Result<u16> {
+    match schema.random_vars[v] {
+        RandomVar::RelInd { .. } => match val {
+            "T" | "t" | "true" | "1" => Ok(1),
+            "F" | "f" | "false" | "0" => Ok(0),
+            other => bail!("bad indicator value `{other}` (want T/F)"),
+        },
+        RandomVar::RelAttr { attr, .. } => {
+            if matches!(val, "n/a" | "na" | "NA" | "N/A") {
+                Ok(NA)
+            } else {
+                value_code(&schema.attributes[attr], val)
+            }
+        }
+        RandomVar::EntityAttr { attr, .. } => value_code(&schema.attributes[attr], val),
+    }
+}
+
+fn value_code(attr: &Attribute, val: &str) -> Result<u16> {
+    if let Some(i) = attr.values.iter().position(|x| x == val) {
+        return Ok(i as u16);
+    }
+    val.parse::<u16>()
+        .map_err(|_| crate::anyhow!("`{val}` is neither a value of {} nor a code", attr.name))
+}
+
+/// Deterministically generate `n` random query strings for a schema —
+/// feeds the store-smoke CI job and the two-phase integration test.
+/// Queries mix entity attributes, 2Atts (including `n/a`), and positive
+/// and negative indicator conditions; value codes may be unobserved (the
+/// count is then zero, which both paths must agree on).
+pub fn gen_queries(schema: &Schema, n: usize, seed: u64) -> Vec<String> {
+    let mut rng = Pcg64::seeded(seed);
+    let nvars = schema.random_vars.len();
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = 1 + rng.index(3usize.min(nvars));
+        let picks = rng.sample_indices(nvars, k);
+        let mut terms = Vec::with_capacity(k);
+        for v in picks {
+            let codes = schema.var_codes(v);
+            let code = codes[rng.index(codes.len())];
+            terms.push(format!("{}={}", schema.var_name(v), schema.value_name(v, code)));
+        }
+        out.push(terms.join(" "));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen;
+    use crate::mobius::MobiusJoin;
+    use crate::store::repo::{PersistConfig, StoreSink};
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("mrss_service_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// Persist a uwcse run and return (dir, schema, in-memory joint).
+    fn build_store(tag: &str, cfg: PersistConfig) -> (PathBuf, Schema, crate::ct::CtTable) {
+        let dir = tmpdir(tag);
+        let db = datagen::generate("uwcse", 0.2, 7).unwrap();
+        let store = CtStore::create(&dir, "uwcse", 0.2, 7).unwrap();
+        let sink = StoreSink::new(&store, &db.schema, cfg);
+        let res = MobiusJoin::new(&db).sink(&sink).run();
+        sink.take_error().unwrap();
+        let joint = res.joint_ct().clone();
+        (dir, (*db.schema).clone(), joint)
+    }
+
+    #[test]
+    fn normalize_handles_coupling_and_contradictions() {
+        let s = crate::schema::university_schema();
+        let ra = s.var_by_name("RA(P,S)").unwrap();
+        let cap = s.var_by_name("capability(P,S)").unwrap();
+        let intel = s.var_by_name("intelligence(S)").unwrap();
+
+        // n/a alone rewrites to R=F.
+        assert_eq!(normalize(&s, &[(cap, NA)]), Some(vec![(ra, 0)]));
+        // duplicate conds collapse; conflicting are zero.
+        assert_eq!(normalize(&s, &[(intel, 1), (intel, 1)]), Some(vec![(intel, 1)]));
+        assert_eq!(normalize(&s, &[(intel, 1), (intel, 0)]), None);
+        // real value under R=F is zero; n/a under R=T is zero.
+        assert_eq!(normalize(&s, &[(ra, 0), (cap, 1)]), None);
+        assert_eq!(normalize(&s, &[(ra, 1), (cap, NA)]), None);
+        // implied n/a drops under an explicit R=F.
+        assert_eq!(normalize(&s, &[(ra, 0), (cap, NA)]), Some(vec![(ra, 0)]));
+        // out-of-range codes are zero, not errors.
+        assert_eq!(normalize(&s, &[(intel, 200)]), None);
+    }
+
+    #[test]
+    fn parse_query_names_and_values() {
+        let s = crate::schema::university_schema();
+        let q = parse_query(&s, "RA(P,S)=F intelligence(S)=1, capability(P,S)=n/a").unwrap();
+        assert_eq!(q.len(), 3);
+        let ra = s.var_by_name("RA(P,S)").unwrap();
+        assert!(q.contains(&(ra, 0)));
+        assert!(parse_query(&s, "nope(X)=1").is_err());
+        assert!(parse_query(&s, "RA(P,S)=maybe").is_err());
+    }
+
+    #[test]
+    fn full_store_matches_joint_selection() {
+        let (dir, schema, joint) = build_store("full", PersistConfig::default());
+        let server = CountServer::open(&dir).unwrap();
+        for q in gen_queries(&schema, 40, 99) {
+            let conds = parse_query(&schema, &q).unwrap();
+            let expect = joint.select(&conds).total();
+            let got = server.count(&conds).unwrap();
+            assert_eq!(got, expect, "query `{q}`");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn positives_only_store_uses_mobius_subtraction() {
+        let (dir, schema, joint) = build_store("posonly", PersistConfig::positives_only());
+        let server = CountServer::open(&dir).unwrap();
+        // No complete chain tables or joint on disk: negative-relationship
+        // answers can only come from Möbius subtraction over pos_* tables.
+        assert!(!server.store().contains("joint"));
+        assert!(server.store().tables().iter().all(|m| !matches!(m.kind, TableKind::Chain(_))));
+        for q in gen_queries(&schema, 40, 123) {
+            let conds = parse_query(&schema, &q).unwrap();
+            let expect = joint.select(&conds).total();
+            let got = server.count(&conds).unwrap();
+            assert_eq!(got, expect, "query `{q}`");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_query_counts_the_whole_cross_product() {
+        let (dir, _schema, joint) = build_store("empty", PersistConfig::default());
+        let server = CountServer::open(&dir).unwrap();
+        assert_eq!(server.count(&[]).unwrap(), joint.total());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gen_queries_is_deterministic() {
+        let s = crate::schema::university_schema();
+        assert_eq!(gen_queries(&s, 5, 3), gen_queries(&s, 5, 3));
+        assert_ne!(gen_queries(&s, 5, 3), gen_queries(&s, 5, 4));
+    }
+}

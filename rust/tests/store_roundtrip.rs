@@ -1,0 +1,121 @@
+//! Two-phase store integration: phase 1 runs the Möbius Join on a datagen
+//! dataset and persists every table to a `CtStore`; phase 2 — with the
+//! database and the in-memory result dropped — answers a mixed
+//! positive/negative query batch from the cold store alone and must match
+//! the in-memory answers byte for byte, including under a tight LRU
+//! `mem_bytes` budget that forces evictions.
+
+use mrss::datagen;
+use mrss::mobius::MobiusJoin;
+use mrss::store::{
+    gen_queries, parse_query, CountServer, CtStore, PersistConfig, StoreSink,
+};
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mrss_itest_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Phase 1 for one dataset: run, persist, and compute the in-memory
+/// baseline answers for a generated query batch. Everything database-side
+/// is dropped before returning.
+fn phase1(
+    dir: &PathBuf,
+    dataset: &str,
+    scale: f64,
+    cfg: PersistConfig,
+    n_queries: usize,
+    qseed: u64,
+) -> Vec<(String, u128)> {
+    let db = datagen::generate(dataset, scale, 7).unwrap();
+    let store = CtStore::create(dir, dataset, scale, 7).unwrap();
+    let sink = StoreSink::new(&store, &db.schema, cfg);
+    let res = MobiusJoin::new(&db).sink(&sink).run();
+    sink.take_error().unwrap();
+    let joint = res.joint_ct();
+    gen_queries(&db.schema, n_queries, qseed)
+        .into_iter()
+        .map(|q| {
+            let conds = parse_query(&db.schema, &q).unwrap();
+            let expect = joint.select(&conds).total();
+            (q, expect)
+        })
+        .collect()
+    // db, res dropped here: phase 2 sees only the files.
+}
+
+#[test]
+fn two_phase_cold_store_answers_match_in_memory() {
+    let dir = tmpdir("two_phase");
+    let baseline = phase1(&dir, "uwcse", 0.3, PersistConfig::default(), 60, 2024);
+    assert!(baseline.iter().any(|(_, c)| *c > 0), "degenerate batch: all zero");
+
+    // Phase 2: cold open, database gone.
+    let server = CountServer::open(&dir).unwrap();
+    for (q, expect) in &baseline {
+        let got = server.count_query(q).unwrap();
+        assert_eq!(got, *expect, "cold-store mismatch on `{q}`");
+    }
+    let warm = server.stats();
+    assert!(warm.misses > 0, "cold store must read from disk: {warm:?}");
+
+    // Tight budget — smaller than any one table, so every second load must
+    // evict: answers must stay identical while evictions > 0.
+    let tight = CountServer::open(&dir).unwrap();
+    let budget = 256;
+    tight.store().set_mem_budget(Some(budget));
+    for (q, expect) in &baseline {
+        let got = tight.count_query(q).unwrap();
+        assert_eq!(got, *expect, "tight-budget mismatch on `{q}`");
+    }
+    let s = tight.stats();
+    assert!(
+        s.evictions > 0,
+        "a {budget}-byte budget should evict (stats {s:?})"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn two_phase_positives_only_store_serves_negative_queries() {
+    // The paper's pre-counting regime: persist only entity + all-true
+    // chain tables; every negative-relationship count must come from
+    // Möbius subtraction at query time.
+    let dir = tmpdir("posonly");
+    let baseline = phase1(&dir, "mutagenesis", 0.05, PersistConfig::positives_only(), 40, 31);
+
+    let server = CountServer::open(&dir).unwrap();
+    assert!(!server.store().contains("joint"), "positives-only store must omit the joint");
+    let mut negatives = 0usize;
+    for (q, expect) in &baseline {
+        let got = server.count_query(q).unwrap();
+        assert_eq!(got, *expect, "positives-only mismatch on `{q}`");
+        if q.contains("=F") || q.contains("=n/a") {
+            negatives += 1;
+        }
+    }
+    assert!(negatives > 0, "query batch never exercised the subtraction path");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn store_survives_reopen_with_identical_bytes() {
+    // Persist, then re-encode every decoded table and compare files:
+    // decode(encode(x)) == x implies encode(decode(f)) == f only when the
+    // codec is canonical — which it is (delta varints have one encoding).
+    let dir = tmpdir("canonical");
+    let _ = phase1(&dir, "uwcse", 0.15, PersistConfig::default(), 1, 1);
+    let store = CtStore::open(&dir).unwrap();
+    for meta in store.tables() {
+        let table = store.get(&meta.key).unwrap();
+        let reencoded = mrss::store::codec::encode(&table);
+        let on_disk = std::fs::read(dir.join(format!("{}.ct", meta.key))).unwrap();
+        assert_eq!(reencoded, on_disk, "non-canonical encoding for {}", meta.key);
+        assert_eq!(meta.rows, table.len() as u64);
+        assert_eq!(meta.total, table.total());
+        assert_eq!(meta.tier, table.tier());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
