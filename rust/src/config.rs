@@ -56,6 +56,26 @@ pub struct Config {
     pub fresh: bool,
     /// LRU cache budget in bytes for store reads.
     pub mem_budget: Option<usize>,
+    /// `serve --listen ADDR`: serve the wire protocol on a TCP socket
+    /// instead of the legacy stdin/stdout loop (`:0` = ephemeral port).
+    pub listen: Option<String>,
+    /// `bench-serve --addr ADDR`: target an already-running server
+    /// (without it, `--store` self-hosts one on an ephemeral port).
+    pub addr: Option<String>,
+    /// `bench-serve --clients N`: concurrent client connections.
+    pub clients: usize,
+    /// `serve --threads N`: worker thread pool size.
+    pub serve_threads: usize,
+    /// `serve --queue-depth N`: bounded accept-queue depth (full ⇒ BUSY).
+    pub queue_depth: usize,
+    /// `serve --max-requests N`: per-connection request cap (⇒ BUSY).
+    pub max_requests: usize,
+    /// `serve --wire text|json`: response rendering (JSON is the default).
+    pub wire_text: bool,
+    /// `bench-serve --bench-json FILE`: where the perf report lands.
+    pub bench_json: Option<String>,
+    /// `bench-serve --shutdown`: send SHUTDOWN after the run.
+    pub send_shutdown: bool,
     /// Extra free-form options (forward-compatible).
     pub extra: HashMap<String, String>,
 }
@@ -83,6 +103,15 @@ impl Default for Config {
             gen: None,
             fresh: false,
             mem_budget: None,
+            listen: None,
+            addr: None,
+            clients: 8,
+            serve_threads: 4,
+            queue_depth: 64,
+            max_requests: 100_000,
+            wire_text: false,
+            bench_json: None,
+            send_shutdown: false,
             extra: HashMap::new(),
         }
     }
@@ -141,6 +170,27 @@ impl Config {
                     "mem-budget" => {
                         cfg.mem_budget = Some(take(&mut it)?.parse().context("--mem-budget")?)
                     }
+                    "listen" => cfg.listen = Some(take(&mut it)?),
+                    "addr" => cfg.addr = Some(take(&mut it)?),
+                    "clients" => cfg.clients = take(&mut it)?.parse().context("--clients")?,
+                    "threads" => {
+                        cfg.serve_threads = take(&mut it)?.parse().context("--threads")?
+                    }
+                    "queue-depth" => {
+                        cfg.queue_depth = take(&mut it)?.parse().context("--queue-depth")?
+                    }
+                    "max-requests" => {
+                        cfg.max_requests = take(&mut it)?.parse().context("--max-requests")?
+                    }
+                    "wire" => {
+                        cfg.wire_text = match take(&mut it)?.as_str() {
+                            "text" => true,
+                            "json" => false,
+                            other => bail!("unknown wire mode `{other}` (text|json)"),
+                        }
+                    }
+                    "bench-json" => cfg.bench_json = Some(take(&mut it)?),
+                    "shutdown" => cfg.send_shutdown = true,
                     "config" => {
                         let path = take(&mut it)?;
                         cfg.apply_file(&path)?;
@@ -162,6 +212,9 @@ impl Config {
         }
         if cfg.workers == 0 {
             bail!("workers must be >= 1");
+        }
+        if cfg.clients == 0 || cfg.serve_threads == 0 || cfg.queue_depth == 0 {
+            bail!("--clients, --threads, and --queue-depth must be >= 1");
         }
         Ok(cfg)
     }
@@ -205,6 +258,9 @@ impl Config {
                 "max_chain_len" => self.max_chain_len = Some(v.parse().context("max_chain_len")?),
                 "store" => self.store = Some(v.to_string()),
                 "mem_budget" => self.mem_budget = Some(v.parse().context("mem_budget")?),
+                "listen" => self.listen = Some(v.to_string()),
+                "clients" => self.clients = v.parse().context("clients")?,
+                "threads" => self.serve_threads = v.parse().context("threads")?,
                 other => {
                     self.extra.insert(other.to_string(), v.to_string());
                 }
@@ -284,5 +340,33 @@ mod tests {
         let g = Config::from_args(&args("query --store /tmp/s --gen 50")).unwrap();
         assert_eq!(g.gen, Some(50));
         assert!(!g.fresh);
+    }
+
+    #[test]
+    fn serve_and_bench_serve_flags_parse() {
+        let c = Config::from_args(&args(
+            "serve --store /tmp/s --listen 127.0.0.1:7171 --threads 6 --queue-depth 32 \
+             --max-requests 500 --wire text",
+        ))
+        .unwrap();
+        assert_eq!(c.listen.as_deref(), Some("127.0.0.1:7171"));
+        assert_eq!(c.serve_threads, 6);
+        assert_eq!(c.queue_depth, 32);
+        assert_eq!(c.max_requests, 500);
+        assert!(c.wire_text);
+
+        let b = Config::from_args(&args(
+            "bench-serve --addr 127.0.0.1:7171 --clients 8 --queries 200 \
+             --bench-json BENCH_serve.json --shutdown",
+        ))
+        .unwrap();
+        assert_eq!(b.addr.as_deref(), Some("127.0.0.1:7171"));
+        assert_eq!(b.clients, 8);
+        assert_eq!(b.queries.as_deref(), Some("200"));
+        assert_eq!(b.bench_json.as_deref(), Some("BENCH_serve.json"));
+        assert!(b.send_shutdown);
+
+        assert!(Config::from_args(&args("serve --wire yaml")).is_err());
+        assert!(Config::from_args(&args("bench-serve --clients 0")).is_err());
     }
 }

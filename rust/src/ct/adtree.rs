@@ -219,6 +219,42 @@ impl AdTree {
     pub fn vars(&self) -> &[VarId] {
         &self.vars
     }
+
+    /// Exact heap footprint of the tree in bytes — what a cache must
+    /// charge against a shared `mem_bytes` budget (mirrors
+    /// [`CtTable::mem_bytes`](super::CtTable::mem_bytes)): struct size plus
+    /// every owned allocation, walked recursively.
+    pub fn mem_bytes(&self) -> usize {
+        let mut total = std::mem::size_of::<AdTree>();
+        total += self.vars.capacity() * std::mem::size_of::<VarId>();
+        total += self.codes.capacity() * std::mem::size_of::<Vec<u16>>();
+        for c in &self.codes {
+            total += c.capacity() * std::mem::size_of::<u16>();
+        }
+        total += node_bytes(&self.root);
+        total
+    }
+}
+
+/// Heap bytes of one node subtree, excluding the `Box` pointer that holds
+/// it (charged at the owning `children` slot).
+fn node_bytes(node: &Node) -> usize {
+    match node {
+        Node::Leaf { rows, counts, .. } => {
+            rows.capacity() * std::mem::size_of::<u16>()
+                + counts.capacity() * std::mem::size_of::<u64>()
+        }
+        Node::Ad { vary, .. } => {
+            let mut total = vary.capacity() * std::mem::size_of::<Vary>();
+            for v in vary {
+                total += v.children.capacity() * std::mem::size_of::<Option<Box<Node>>>();
+                for child in v.children.iter().flatten() {
+                    total += std::mem::size_of::<Node>() + node_bytes(child);
+                }
+            }
+            total
+        }
+    }
 }
 
 #[cfg(test)]
@@ -305,6 +341,17 @@ mod tests {
             q.dedup_by_key(|p| p.0);
             assert_eq!(tree.count(&q), oracle(&ct, &q), "query {q:?}");
         }
+    }
+
+    #[test]
+    fn mem_bytes_scales_with_tree_size() {
+        let small = AdTree::build(&random_ct(3, 20, &[2, 2]), AdTreeConfig::default());
+        let big = AdTree::build(&random_ct(3, 400, &[4, 4, 4, 3]), AdTreeConfig::default());
+        // Every tree owns at least its struct; a bigger tree charges more.
+        assert!(small.mem_bytes() >= std::mem::size_of::<AdTree>());
+        assert!(big.mem_bytes() > small.mem_bytes());
+        // More nodes ⇒ at least one Node-struct worth of bytes per extra node.
+        assert!(big.mem_bytes() >= big.num_nodes() * std::mem::size_of::<u64>());
     }
 
     #[test]

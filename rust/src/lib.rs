@@ -17,6 +17,8 @@
 //! * [`datagen`] — synthetic generators mirroring the seven benchmarks;
 //! * [`store`] — persisted statistics repository (binary ct codec,
 //!   directory store with LRU cache) + the count-query service;
+//! * [`serve`] — concurrent TCP count-serving front-end over the store
+//!   (wire protocol, worker pool, admission control, load generator);
 //! * [`apps`] — feature selection, association rules, Bayesian networks;
 //! * [`runtime`] — AOT-compiled XLA kernels via PJRT, with native fallback;
 //! * [`coordinator`] — pipeline orchestration, metrics, configs;
@@ -31,6 +33,7 @@ pub mod mobius;
 pub mod baseline;
 pub mod datagen;
 pub mod store;
+pub mod serve;
 pub mod runtime;
 pub mod apps;
 pub mod coordinator;

@@ -8,6 +8,8 @@
 //! mrss suite --scale 0.1 --workers 2          # all seven benchmarks
 //! mrss query --store ./stats --dataset uwcse --queries q.txt   # counts, JSON
 //! mrss serve --store ./stats --dataset uwcse  # stdin/stdout count service
+//! mrss serve --store ./stats --listen 127.0.0.1:7171 --threads 8  # TCP server
+//! mrss bench-serve --store ./stats --clients 8 --queries 200   # load generator
 //! mrss mine  --dataset financial --scale 0.2  # CFS + association rules
 //! mrss bn    --dataset financial --scale 0.2  # BN learning on vs off
 //! ```
@@ -28,10 +30,13 @@ use mrss::datagen;
 use mrss::mobius::{MjResult, MobiusJoin};
 use mrss::runtime::{XlaEngine, XlaRuntime};
 use mrss::schema::Schema;
+use mrss::serve::protocol::{json_escape, render_answers};
+use mrss::serve::{self, LoadgenConfig, ServeConfig};
 use mrss::store::{gen_queries, parse_query, CountServer, CtStore, PersistConfig, StoreSink};
 use mrss::util::format_duration;
 use mrss::util::table::{commas, TextTable};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -62,12 +67,20 @@ fn print_help() {
          \x20 suite  --scale S --workers N    run every benchmark\n\
          \x20 query  --store DIR --dataset D  answer count queries from a ct-store (JSON)\n\
          \x20 serve  --store DIR --dataset D  stdin/stdout count-query service\n\
+         \x20 serve  --store DIR --listen A   concurrent TCP count server (PING/BATCH/STATS/\n\
+         \x20                                 SHUTDOWN wire protocol)\n\
+         \x20 bench-serve --addr A|--store D  drive a count server with N concurrent clients,\n\
+         \x20                                 emit BENCH_serve.json\n\
          \x20 mine   --dataset D --scale S    feature selection + association rules\n\
          \x20 bn     --dataset D --scale S    Bayesian-network learning, link on vs off\n\n\
          common flags: --seed N --engine native|xla --excerpt N --max-chain-len L\n\
          \x20             --cp-budget-secs N --config FILE --store DIR\n\
          query flags:  --queries FILE --query STR --json FILE --gen N --fresh\n\
-         \x20             --mem-budget BYTES",
+         \x20             --mem-budget BYTES\n\
+         serve flags:  --listen HOST:PORT --threads N --queue-depth N --max-requests N\n\
+         \x20             --wire text|json\n\
+         bench flags:  --addr HOST:PORT --clients N --queries M --bench-json FILE\n\
+         \x20             --json FILE --shutdown",
         mrss::VERSION
     );
 }
@@ -89,6 +102,7 @@ fn run(cfg: Config) -> Result<()> {
         "suite" => cmd_suite(&cfg),
         "query" => cmd_query(&cfg),
         "serve" => cmd_serve(&cfg),
+        "bench-serve" => cmd_bench_serve(&cfg),
         "mine" => cmd_mine(&cfg),
         "bn" => cmd_bn(&cfg),
         other => bail!("unknown command `{other}` (try --help)"),
@@ -297,33 +311,6 @@ fn check_store_dataset(cfg: &Config, store: &CtStore) -> Result<()> {
     Ok(())
 }
 
-fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
-}
-
-fn render_json(answers: &[(String, u128)]) -> String {
-    let mut out = String::from("[\n");
-    for (i, (q, c)) in answers.iter().enumerate() {
-        out.push_str(&format!(
-            "  {{\"query\":\"{}\",\"count\":{}}}{}\n",
-            json_escape(q),
-            c,
-            if i + 1 == answers.len() { "" } else { "," }
-        ));
-    }
-    out.push_str("]\n");
-    out
-}
-
 fn cmd_query(cfg: &Config) -> Result<()> {
     let root = cfg.store.as_deref().context("query: --store DIR is required")?;
     let dir = resolve_store_dir(root, &cfg.dataset)?;
@@ -390,7 +377,7 @@ fn cmd_query(cfg: &Config) -> Result<()> {
         out
     };
 
-    let json = render_json(&answers);
+    let json = render_answers(&answers);
     match &cfg.json {
         Some(p) => std::fs::write(p, json).with_context(|| format!("writing {p}"))?,
         None => print!("{json}"),
@@ -406,6 +393,38 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     if let Some(b) = cfg.mem_budget {
         server.store().set_mem_budget(Some(b));
     }
+
+    // --listen ADDR: the concurrent TCP front-end. Blocks until SHUTDOWN
+    // arrives on the wire, then drains and reports.
+    if let Some(listen) = &cfg.listen {
+        let dataset = server.store().dataset.clone();
+        let tables = server.store().len();
+        let handle = serve::serve(
+            Arc::new(server),
+            ServeConfig {
+                addr: listen.clone(),
+                threads: cfg.serve_threads,
+                queue_depth: cfg.queue_depth,
+                max_requests: cfg.max_requests,
+                json: !cfg.wire_text,
+            },
+        )?;
+        eprintln!(
+            "serving counts for {dataset} on {} ({} tables, {} workers, wire={}) — \
+             send SHUTDOWN to stop",
+            handle.addr(),
+            tables,
+            cfg.serve_threads,
+            if cfg.wire_text { "text" } else { "json" }
+        );
+        let snap = handle.wait();
+        eprintln!("server drained: {}", snap.to_json());
+        let mut m = mrss::mobius::MjMetrics::default();
+        snap.merge_into(&mut m);
+        eprint!("{}", m.breakdown());
+        return Ok(());
+    }
+
     eprintln!(
         "serving counts for {} from {} ({} tables); one query per line, e.g. `RA(P,S)=F`",
         server.store().dataset,
@@ -432,6 +451,102 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         "store cache: {} hits / {} misses / {} evictions",
         s.hits, s.misses, s.evictions
     );
+    Ok(())
+}
+
+/// Drive a count server with concurrent clients and a deterministic query
+/// batch; emit `BENCH_serve.json` (and optionally the answers document for
+/// diffing against `query --fresh`).
+///
+/// Target resolution: `--addr` hits a running server (`--dataset` names
+/// the schema for query generation); without it, `--store` self-hosts a
+/// server on an ephemeral port for the duration of the run.
+fn cmd_bench_serve(cfg: &Config) -> Result<()> {
+    let n_queries: usize = match &cfg.queries {
+        Some(s) => s
+            .parse()
+            .with_context(|| format!("bench-serve: --queries wants a count, got `{s}`"))?,
+        None => 200,
+    };
+
+    // (addr, dataset, self-hosted handle to drain afterwards)
+    let (addr, dataset, hosted) = match (&cfg.addr, &cfg.store) {
+        (Some(addr), _) => (addr.clone(), cfg.dataset.clone(), None),
+        (None, Some(root)) => {
+            let dir = resolve_store_dir(root, &cfg.dataset)?;
+            let server = CountServer::open(&dir)?;
+            check_store_dataset(cfg, server.store())?;
+            if let Some(b) = cfg.mem_budget {
+                server.store().set_mem_budget(Some(b));
+            }
+            let dataset = server.store().dataset.clone();
+            let handle = serve::serve(
+                Arc::new(server),
+                ServeConfig {
+                    addr: "127.0.0.1:0".to_string(),
+                    threads: cfg.serve_threads,
+                    queue_depth: cfg.queue_depth,
+                    max_requests: cfg.max_requests,
+                    json: !cfg.wire_text,
+                },
+            )?;
+            eprintln!("self-hosted a server on {} from {}", handle.addr(), dir.display());
+            (handle.addr().to_string(), dataset, Some(handle))
+        }
+        (None, None) => bail!("bench-serve: pass --addr HOST:PORT or --store DIR"),
+    };
+    let schema = datagen::schema_of(&dataset)?;
+
+    let report = mrss::serve::loadgen::run(
+        &schema,
+        &LoadgenConfig {
+            addr,
+            clients: cfg.clients,
+            queries: n_queries,
+            seed: cfg.seed,
+            stats: true,
+            shutdown: cfg.send_shutdown,
+        },
+    )?;
+    if let Some(handle) = hosted {
+        // The run may have shut it down already (--shutdown); this is
+        // idempotent and guarantees the drain either way.
+        handle.request_shutdown();
+        handle.wait();
+    }
+
+    eprintln!(
+        "bench-serve {}: {} clients x {} queries in {} — {:.0} qps, p50 ≤ {} µs, p99 ≤ {} µs, \
+         {} errors",
+        dataset,
+        report.clients,
+        report.answers.len() + report.errors.len(),
+        format_duration(report.wall),
+        report.qps,
+        report.p50_us,
+        report.p99_us,
+        report.errors.len(),
+    );
+    if let Some(stats) = &report.server_stats {
+        eprintln!("server stats: {stats}");
+    }
+
+    let bench_path = cfg.bench_json.as_deref().unwrap_or("BENCH_serve.json");
+    std::fs::write(bench_path, report.bench_json(&dataset))
+        .with_context(|| format!("writing {bench_path}"))?;
+    eprintln!("wrote {bench_path}");
+
+    if let Some(p) = &cfg.json {
+        std::fs::write(p, report.answers_json()).with_context(|| format!("writing {p}"))?;
+    }
+    if !report.errors.is_empty() {
+        let (q, e) = &report.errors[0];
+        bail!(
+            "{} of {} queries answered with an error, first: `{q}` -> {e}",
+            report.errors.len(),
+            n_queries
+        );
+    }
     Ok(())
 }
 

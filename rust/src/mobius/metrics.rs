@@ -78,6 +78,15 @@ pub struct MjMetrics {
     pub store_misses: u64,
     /// Ct-store LRU evictions under the `mem_bytes` budget.
     pub store_evictions: u64,
+    /// ADtrees built by the count service over this run's store traffic
+    /// (at most one per table while cached — see
+    /// [`TreeStats`](crate::store::TreeStats)).
+    pub adtree_builds: u64,
+    /// Readers that coalesced onto an ADtree build already in progress
+    /// instead of duplicating it.
+    pub adtree_coalesced: u64,
+    /// ADtrees evicted under the shared `mem_bytes` budget.
+    pub adtree_evictions: u64,
     counts: [u64; 6],
     times: [Duration; 6],
 }
@@ -122,6 +131,9 @@ impl MjMetrics {
         self.store_hits += other.store_hits;
         self.store_misses += other.store_misses;
         self.store_evictions += other.store_evictions;
+        self.adtree_builds += other.adtree_builds;
+        self.adtree_coalesced += other.adtree_coalesced;
+        self.adtree_evictions += other.adtree_evictions;
         for i in 0..6 {
             self.counts[i] += other.counts[i];
             self.times[i] += other.times[i];
@@ -151,6 +163,10 @@ impl MjMetrics {
         s.push_str(&format!(
             "  ct-store cache: {} hits / {} misses / {} evictions\n",
             self.store_hits, self.store_misses, self.store_evictions
+        ));
+        s.push_str(&format!(
+            "  adtree cache: {} builds / {} coalesced waits / {} evictions\n",
+            self.adtree_builds, self.adtree_coalesced, self.adtree_evictions
         ));
         s
     }
@@ -190,10 +206,17 @@ mod tests {
         b.store_hits = 3;
         b.store_misses = 1;
         b.store_evictions = 4;
+        b.adtree_builds = 2;
+        b.adtree_coalesced = 6;
+        b.adtree_evictions = 1;
         a.merge(&b);
         assert_eq!(a.op_count(CtOp::Union), 2);
         assert_eq!(a.total, Duration::from_secs(1));
         assert_eq!((a.store_hits, a.store_misses, a.store_evictions), (5, 1, 4));
+        assert_eq!(
+            (a.adtree_builds, a.adtree_coalesced, a.adtree_evictions),
+            (2, 6, 1)
+        );
     }
 
     #[test]
@@ -201,9 +224,11 @@ mod tests {
         let mut m = MjMetrics::default();
         m.store_hits = 7;
         m.store_evictions = 2;
+        m.adtree_builds = 5;
         let s = m.breakdown();
         assert!(s.contains("ct-store cache: 7 hits"));
         assert!(s.contains("2 evictions"));
+        assert!(s.contains("adtree cache: 5 builds"));
     }
 
     #[test]

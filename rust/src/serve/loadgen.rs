@@ -1,0 +1,252 @@
+//! Concurrent load generator for the count server (`mrss bench-serve`).
+//!
+//! Drives one socket per client thread with a deterministic query batch
+//! ([`gen_queries`]), records client-side latency in the same fixed-bucket
+//! histogram the server uses, and emits `BENCH_serve.json` — the serving
+//! path's entry in the repo's measured perf trajectory. Answers come back
+//! tagged with their original batch index, so the report renders the
+//! canonical answers document byte-comparable with `mrss query --fresh`
+//! (what the `serve-smoke` CI job diffs).
+
+use crate::schema::Schema;
+use crate::store::gen_queries;
+use crate::util::error::{Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::metrics::LatencyHistogram;
+use super::protocol::{json_field, parse_count_response, render_answers};
+
+/// Load-generation parameters.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:7171`.
+    pub addr: String,
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Total queries across all clients.
+    pub queries: usize,
+    /// Seed for the deterministic query batch (matches `query --gen`).
+    pub seed: u64,
+    /// Fetch a final `STATS` snapshot after the run.
+    pub stats: bool,
+    /// Send `SHUTDOWN` after the run and require the `BYE` ack.
+    pub shutdown: bool,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: String::new(),
+            clients: 8,
+            queries: 200,
+            seed: 7,
+            stats: true,
+            shutdown: false,
+        }
+    }
+}
+
+/// Outcome of one load-generation run.
+#[derive(Debug)]
+pub struct LoadgenReport {
+    /// Successful `(query, count)` answers in original batch order.
+    pub answers: Vec<(String, u128)>,
+    /// `(query, error)` responses in original batch order.
+    pub errors: Vec<(String, String)>,
+    pub clients: usize,
+    pub wall: Duration,
+    /// Client-observed throughput (answers + errors per second).
+    pub qps: f64,
+    /// Client-side latency bucket upper bounds, µs.
+    pub p50_us: u64,
+    pub p99_us: u64,
+    /// The server's final `STATS` JSON object, when requested.
+    pub server_stats: Option<String>,
+}
+
+impl LoadgenReport {
+    /// The canonical answers document (`mrss query` shape) — only valid
+    /// for diffing when `errors` is empty, which the caller must check.
+    pub fn answers_json(&self) -> String {
+        render_answers(&self.answers)
+    }
+
+    /// Render `BENCH_serve.json`.
+    pub fn bench_json(&self, dataset: &str) -> String {
+        let server = self.server_stats.as_deref().unwrap_or("null");
+        format!(
+            "{{\n  \"bench\": \"serve\",\n  \"dataset\": \"{dataset}\",\n  \"clients\": {},\n  \
+             \"queries\": {},\n  \"errors\": {},\n  \"wall_secs\": {:.4},\n  \"qps\": {:.1},\n  \
+             \"client_p50_us\": {},\n  \"client_p99_us\": {},\n  \"server\": {server}\n}}\n",
+            self.clients,
+            self.answers.len() + self.errors.len(),
+            self.errors.len(),
+            self.wall.as_secs_f64(),
+            self.qps,
+            self.p50_us,
+            self.p99_us,
+        )
+    }
+
+    /// Did the server report zero duplicate ADtree builds? (Builds may at
+    /// most equal the number of distinct stored tables; coalesced waits
+    /// prove contention existed without duplicating work.) `None` when no
+    /// server stats were fetched.
+    pub fn zero_duplicate_builds(&self, stored_tables: u64) -> Option<bool> {
+        let stats = self.server_stats.as_deref()?;
+        let builds: u64 = json_field(stats, "builds")?.parse().ok()?;
+        Some(builds <= stored_tables)
+    }
+}
+
+/// One client's share of the batch: every `clients`-th query, interleaved
+/// so all connections stay busy for the whole run.
+fn shard(queries: &[String], client: usize, clients: usize) -> Vec<(usize, String)> {
+    queries
+        .iter()
+        .enumerate()
+        .skip(client)
+        .step_by(clients)
+        .map(|(i, q)| (i, q.clone()))
+        .collect()
+}
+
+/// Run the load: `clients` threads, `queries` total, against `addr`.
+/// Connection-level failures abort the run; per-query error responses are
+/// recorded and reported, not fatal.
+pub fn run(schema: &Schema, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    let clients = cfg.clients.max(1);
+    let queries = gen_queries(schema, cfg.queries, cfg.seed);
+    let hist = Arc::new(LatencyHistogram::default());
+
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(clients);
+    for c in 0..clients {
+        let mine = shard(&queries, c, clients);
+        let addr = cfg.addr.clone();
+        let hist = Arc::clone(&hist);
+        handles.push(std::thread::spawn(
+            move || -> Result<Vec<(usize, Result<u128, String>)>> {
+                let stream = TcpStream::connect(&addr)
+                    .with_context(|| format!("client {c}: connecting to {addr}"))?;
+                stream.set_nodelay(true).ok();
+                let mut w = BufWriter::new(stream.try_clone().context("cloning stream")?);
+                let mut r = BufReader::new(stream);
+                let mut out = Vec::with_capacity(mine.len());
+                let mut line = String::new();
+                for (idx, q) in mine {
+                    let t = Instant::now();
+                    writeln!(w, "{q}").with_context(|| format!("client {c}: send"))?;
+                    w.flush().with_context(|| format!("client {c}: flush"))?;
+                    line.clear();
+                    let n = r.read_line(&mut line).with_context(|| format!("client {c}: recv"))?;
+                    if n == 0 {
+                        crate::bail!("client {c}: server closed the connection mid-run");
+                    }
+                    hist.record(t.elapsed());
+                    out.push((idx, parse_count_response(&line)));
+                }
+                Ok(out)
+            },
+        ));
+    }
+
+    let mut tagged: Vec<(usize, Result<u128, String>)> = Vec::with_capacity(queries.len());
+    for h in handles {
+        tagged.extend(h.join().map_err(|_| crate::anyhow!("client thread panicked"))??);
+    }
+    let wall = t0.elapsed();
+    tagged.sort_by_key(|&(i, _)| i);
+
+    let mut answers = Vec::new();
+    let mut errors = Vec::new();
+    for (i, outcome) in tagged {
+        match outcome {
+            Ok(c) => answers.push((queries[i].clone(), c)),
+            Err(e) => errors.push((queries[i].clone(), e)),
+        }
+    }
+
+    let server_stats = if cfg.stats { Some(control(&cfg.addr, "STATS")?) } else { None };
+    if cfg.shutdown {
+        let bye = control(&cfg.addr, "SHUTDOWN")?;
+        if !(bye == "BYE" || bye.contains("\"bye\"")) {
+            crate::bail!("expected BYE ack to SHUTDOWN, got `{bye}`");
+        }
+    }
+
+    let n = queries.len();
+    Ok(LoadgenReport {
+        answers,
+        errors,
+        clients,
+        wall,
+        qps: n as f64 / wall.as_secs_f64().max(1e-9),
+        p50_us: hist.quantile_upper_us(0.50),
+        p99_us: hist.quantile_upper_us(0.99),
+        server_stats,
+    })
+}
+
+/// One request/response exchange on a fresh control connection.
+fn control(addr: &str, line: &str) -> Result<String> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("control: connecting to {addr}"))?;
+    let mut w = BufWriter::new(stream.try_clone().context("control: cloning stream")?);
+    let mut r = BufReader::new(stream);
+    writeln!(w, "{line}").context("control: send")?;
+    w.flush().context("control: flush")?;
+    let mut resp = String::new();
+    r.read_line(&mut resp).context("control: recv")?;
+    Ok(resp.trim().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_partitions_the_batch_exactly() {
+        let qs: Vec<String> = (0..10).map(|i| format!("q{i}")).collect();
+        let mut seen = vec![false; qs.len()];
+        for c in 0..3 {
+            for (i, q) in shard(&qs, c, 3) {
+                assert_eq!(q, format!("q{i}"));
+                assert!(!seen[i], "query {i} sharded twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every query must be assigned");
+    }
+
+    #[test]
+    fn bench_json_and_duplicate_build_check() {
+        let rep = LoadgenReport {
+            answers: vec![("a=1".into(), 5)],
+            errors: vec![],
+            clients: 8,
+            wall: Duration::from_millis(500),
+            qps: 2.0,
+            p50_us: 64,
+            p99_us: 512,
+            server_stats: Some(
+                "{\"queries\":1,\"adtree\":{\"hits\":9,\"builds\":3,\"coalesced_waits\":2,\
+                 \"evictions\":0,\"bytes\":10}}"
+                    .to_string(),
+            ),
+        };
+        let j = rep.bench_json("uwcse");
+        for key in ["\"bench\": \"serve\"", "\"clients\": 8", "\"client_p99_us\": 512"] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert_eq!(rep.zero_duplicate_builds(12), Some(true));
+        assert_eq!(rep.zero_duplicate_builds(2), Some(false));
+        assert_eq!(
+            LoadgenReport { server_stats: None, ..rep }.zero_duplicate_builds(12),
+            None
+        );
+    }
+}

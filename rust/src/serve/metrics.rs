@@ -1,0 +1,241 @@
+//! Live serving metrics: lock-free counters + a fixed-bucket latency
+//! histogram, snapshotted by the `STATS` wire command and folded into
+//! [`MjMetrics`](crate::mobius::MjMetrics) for the run reports.
+//!
+//! The histogram buckets latencies by `ceil(log2(micros))` — 40 buckets
+//! cover 1 µs to 2^38 µs (~3 days) with ≤2× relative error, far beyond
+//! any real latency, which is plenty for p50/p99 on a count service whose
+//! fast path is microseconds. All counters are relaxed atomics: recording
+//! must never contend with the queries it measures.
+
+use crate::mobius::MjMetrics;
+use crate::store::{StoreStats, TreeStats};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::{Duration, Instant};
+
+/// Number of power-of-two latency buckets: bucket `i` holds latencies in
+/// `(2^(i-1), 2^i]` µs, so buckets 0..=38 span 1 µs .. 2^38 µs (~3 days)
+/// and bucket 39 is the catch-all above.
+const BUCKETS: usize = 40;
+
+/// A fixed-bucket log-scale latency histogram (thread-safe, wait-free).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl LatencyHistogram {
+    fn bucket_of(micros: u128) -> usize {
+        // Bucket i holds latencies in (2^(i-1), 2^i] µs; bucket 0 is ≤1 µs.
+        (128 - micros.max(1).leading_zeros() as usize - 1
+            + usize::from(!micros.max(1).is_power_of_two()))
+        .min(BUCKETS - 1)
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.buckets[Self::bucket_of(d.as_micros())].fetch_add(1, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Relaxed)).sum()
+    }
+
+    /// Upper bound (µs) of the bucket containing quantile `q` (0..=1).
+    /// Zero when nothing was recorded.
+    pub fn quantile_upper_us(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((total as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return 1u64 << i;
+            }
+        }
+        1u64 << (BUCKETS - 1)
+    }
+}
+
+/// Shared live counters of one serving front-end.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    start: Instant,
+    /// Queries answered (errors included; each BATCH member counts).
+    pub queries: AtomicU64,
+    /// Queries that answered with an error line.
+    pub errors: AtomicU64,
+    /// Connections turned away or cut short by admission control.
+    pub busy_rejects: AtomicU64,
+    /// Connections accepted over the lifetime of the server.
+    pub connections: AtomicU64,
+    /// Connections currently being served.
+    pub active: AtomicU64,
+    pub latency: LatencyHistogram,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics {
+            start: Instant::now(),
+            queries: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            busy_rejects: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
+            active: AtomicU64::new(0),
+            latency: LatencyHistogram::default(),
+        }
+    }
+}
+
+impl ServeMetrics {
+    /// Point-in-time snapshot, joined with the store/tree cache counters.
+    pub fn snapshot(&self, store: StoreStats, trees: TreeStats) -> ServeSnapshot {
+        let uptime = self.start.elapsed();
+        let queries = self.queries.load(Relaxed);
+        ServeSnapshot {
+            uptime_secs: uptime.as_secs_f64(),
+            queries,
+            errors: self.errors.load(Relaxed),
+            busy_rejects: self.busy_rejects.load(Relaxed),
+            connections: self.connections.load(Relaxed),
+            active: self.active.load(Relaxed),
+            qps: queries as f64 / uptime.as_secs_f64().max(1e-9),
+            p50_us: self.latency.quantile_upper_us(0.50),
+            p99_us: self.latency.quantile_upper_us(0.99),
+            store,
+            trees,
+        }
+    }
+}
+
+/// What `STATS` returns: one consistent view of traffic, latency, and both
+/// caches.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeSnapshot {
+    pub uptime_secs: f64,
+    pub queries: u64,
+    pub errors: u64,
+    pub busy_rejects: u64,
+    pub connections: u64,
+    pub active: u64,
+    pub qps: f64,
+    /// Latency bucket upper bounds, µs (≤2× relative error by design).
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub store: StoreStats,
+    pub trees: TreeStats,
+}
+
+impl ServeSnapshot {
+    /// Render as a single-line JSON object (the `STATS` wire response).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"uptime_secs\":{:.3},\"queries\":{},\"errors\":{},\"busy_rejects\":{},\
+             \"connections\":{},\"active\":{},\"qps\":{:.1},\"p50_us\":{},\"p99_us\":{},\
+             \"store\":{{\"hits\":{},\"misses\":{},\"evictions\":{},\"bytes_read\":{}}},\
+             \"adtree\":{{\"hits\":{},\"builds\":{},\"coalesced_waits\":{},\"evictions\":{},\
+             \"bytes\":{}}}}}",
+            self.uptime_secs,
+            self.queries,
+            self.errors,
+            self.busy_rejects,
+            self.connections,
+            self.active,
+            self.qps,
+            self.p50_us,
+            self.p99_us,
+            self.store.hits,
+            self.store.misses,
+            self.store.evictions,
+            self.store.bytes_read,
+            self.trees.hits,
+            self.trees.builds,
+            self.trees.coalesced_waits,
+            self.trees.evictions,
+            self.trees.bytes,
+        )
+    }
+
+    /// Fold the serving counters into a run-level [`MjMetrics`] record —
+    /// how the serving path joins the same reports as the Möbius Join.
+    pub fn merge_into(&self, m: &mut MjMetrics) {
+        m.store_hits += self.store.hits;
+        m.store_misses += self.store.misses;
+        m.store_evictions += self.store.evictions;
+        m.adtree_builds += self.trees.builds;
+        m.adtree_coalesced += self.trees.coalesced_waits;
+        m.adtree_evictions += self.trees.evictions;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_by_log2_micros() {
+        assert_eq!(LatencyHistogram::bucket_of(0), 0);
+        assert_eq!(LatencyHistogram::bucket_of(1), 0);
+        assert_eq!(LatencyHistogram::bucket_of(2), 1);
+        assert_eq!(LatencyHistogram::bucket_of(3), 2);
+        assert_eq!(LatencyHistogram::bucket_of(4), 2);
+        assert_eq!(LatencyHistogram::bucket_of(1024), 10);
+        assert_eq!(LatencyHistogram::bucket_of(u128::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_bound_recorded_latencies() {
+        let h = LatencyHistogram::default();
+        // 98 fast (≤ 8 µs) + 2 slow (~1 ms): p50 stays in the fast bucket,
+        // p99 must reach the slow one.
+        for _ in 0..98 {
+            h.record(Duration::from_micros(7));
+        }
+        for _ in 0..2 {
+            h.record(Duration::from_micros(900));
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.quantile_upper_us(0.50), 8);
+        assert_eq!(h.quantile_upper_us(0.99), 1024);
+        assert_eq!(LatencyHistogram::default().quantile_upper_us(0.5), 0);
+    }
+
+    #[test]
+    fn snapshot_json_has_the_key_fields() {
+        let m = ServeMetrics::default();
+        m.queries.fetch_add(3, Relaxed);
+        m.latency.record(Duration::from_micros(5));
+        let snap = m.snapshot(StoreStats::default(), TreeStats::default());
+        let j = snap.to_json();
+        for key in ["\"queries\":3", "\"qps\":", "\"p99_us\":", "\"adtree\"", "\"store\""] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        // Round-trips through the flat-JSON field extractor.
+        assert_eq!(super::super::protocol::json_field(&j, "queries").as_deref(), Some("3"));
+    }
+
+    #[test]
+    fn snapshot_merges_into_mj_metrics() {
+        let store = StoreStats { hits: 2, misses: 1, ..Default::default() };
+        let trees =
+            TreeStats { builds: 4, coalesced_waits: 3, evictions: 1, ..Default::default() };
+        let snap = ServeMetrics::default().snapshot(store, trees);
+        let mut m = MjMetrics::default();
+        snap.merge_into(&mut m);
+        assert_eq!((m.store_hits, m.store_misses), (2, 1));
+        assert_eq!(
+            (m.adtree_builds, m.adtree_coalesced, m.adtree_evictions),
+            (4, 3, 1)
+        );
+    }
+}

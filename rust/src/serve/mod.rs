@@ -1,0 +1,36 @@
+//! `serve` — the concurrent network count-serving subsystem.
+//!
+//! The paper's thesis is that precomputed sufficient statistics make
+//! multi-relational counts *cheap to query*; this module is where that
+//! claim meets traffic. It turns the persisted ct-store
+//! ([`crate::store`]) into a network service:
+//!
+//! * [`protocol`] — a line-delimited wire protocol: the `query` CLI
+//!   grammar plus `BATCH` / `STATS` / `PING` / `SHUTDOWN`, with JSON or
+//!   text responses;
+//! * [`server`] — a dependency-free `std::net::TcpListener` front-end
+//!   with a fixed worker pool, a bounded accept queue (full ⇒ `BUSY`),
+//!   a per-connection request cap, and drain-clean shutdown — all workers
+//!   sharing one concurrency-safe [`CountServer`](crate::store::CountServer)
+//!   whose ADtree builds coalesce and whose tree bytes are charged to the
+//!   store's `mem_bytes` budget;
+//! * [`metrics`] — wait-free counters + a fixed-bucket latency histogram
+//!   behind the `STATS` snapshot (qps, p50/p99, cache hit/miss/eviction,
+//!   active connections), foldable into
+//!   [`MjMetrics`](crate::mobius::MjMetrics);
+//! * [`loadgen`] — the `bench-serve` client: N connections hammering the
+//!   socket with a deterministic batch, emitting `BENCH_serve.json` and
+//!   an answers document byte-comparable with `mrss query --fresh`.
+//!
+//! CLI: `mrss serve --store DIR --listen ADDR` starts the server;
+//! `mrss bench-serve` drives it (or self-hosts one on an ephemeral port).
+
+pub mod loadgen;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+
+pub use loadgen::{LoadgenConfig, LoadgenReport};
+pub use metrics::{LatencyHistogram, ServeMetrics, ServeSnapshot};
+pub use protocol::{parse_request, Request, Response};
+pub use server::{serve, ServeConfig, ServeHandle};

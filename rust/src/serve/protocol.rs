@@ -1,0 +1,287 @@
+//! Line-delimited wire protocol of the count server.
+//!
+//! Every request is exactly one `\n`-terminated line; every request line
+//! produces one or more response lines (a `BATCH` of *k* queries answers
+//! with exactly *k* lines, in order), so the protocol needs no framing
+//! beyond the newline and a plain `nc`/`telnet` session works as a client.
+//!
+//! ## Requests
+//!
+//! ```text
+//! <query>                      count a conjunctive query (the `query` CLI
+//!                              grammar: `RA(P,S)=F intelligence(S)=1 …`)
+//! COUNT <query>                explicit form of the same
+//! BATCH <q1> ; <q2> ; …        many queries on one line, `;`-separated
+//! STATS                        live metrics snapshot (always JSON)
+//! PING                         liveness probe
+//! SHUTDOWN                     stop the server after in-flight work drains
+//! ```
+//!
+//! Keywords are matched case-insensitively; anything that is not a keyword
+//! is a query. A query that *starts* with a keyword spelling can always be
+//! sent via the `COUNT` prefix.
+//!
+//! ## Responses
+//!
+//! Two renderings, chosen by the server's `--wire` flag (JSON is the
+//! default and matches the legacy stdin/stdout loop's output):
+//!
+//! | response   | text mode            | json mode                              |
+//! |------------|----------------------|----------------------------------------|
+//! | count      | `COUNT <n>`          | `{"query":"…","count":n}`              |
+//! | error      | `ERR <msg>`          | `{"query":"…","error":"…"}`            |
+//! | pong       | `PONG`               | `{"pong":true}`                        |
+//! | busy       | `BUSY <why>`         | `{"busy":true,"error":"…"}`            |
+//! | stats      | *(json object)*      | *(json object)*                        |
+//! | bye        | `BYE`                | `{"bye":true}`                         |
+//!
+//! `BUSY` is the admission-control answer (accept queue full, or the
+//! per-connection request cap reached) — clients back off and retry.
+
+/// Longest accepted request line, in bytes. A line past this is answered
+/// with an error and the connection is closed (it is either abuse or a
+/// framing bug; resynchronizing mid-line is not worth the ambiguity).
+pub const MAX_LINE: usize = 64 * 1024;
+
+/// One parsed request line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Count one conjunctive query (the `query` CLI grammar).
+    Count(String),
+    /// Count many queries from one line (`;`-separated).
+    Batch(Vec<String>),
+    Stats,
+    Ping,
+    Shutdown,
+}
+
+/// Parse one trimmed request line. Never fails: unknown text is a query
+/// (the count path reports its own parse errors with full context).
+pub fn parse_request(line: &str) -> Request {
+    let line = line.trim();
+    let keyword = line.split_whitespace().next().unwrap_or("");
+    match keyword.to_ascii_uppercase().as_str() {
+        "PING" if line.len() == keyword.len() => Request::Ping,
+        "STATS" if line.len() == keyword.len() => Request::Stats,
+        "SHUTDOWN" if line.len() == keyword.len() => Request::Shutdown,
+        "COUNT" => Request::Count(line[keyword.len()..].trim().to_string()),
+        "BATCH" => Request::Batch(
+            line[keyword.len()..]
+                .split(';')
+                .map(str::trim)
+                .filter(|q| !q.is_empty())
+                .map(str::to_string)
+                .collect(),
+        ),
+        _ => Request::Count(line.to_string()),
+    }
+}
+
+/// One response line (pre-render).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    Count { query: String, count: u128 },
+    Error { query: String, msg: String },
+    Pong,
+    Busy { msg: String },
+    /// Pre-rendered JSON object (the metrics snapshot).
+    Stats { json: String },
+    Bye,
+}
+
+impl Response {
+    /// Render as a single line (no trailing newline). `json` selects the
+    /// wire mode; `STATS` is a JSON object in both.
+    pub fn render(&self, json: bool) -> String {
+        match self {
+            Response::Count { query, count } => {
+                if json {
+                    format!("{{\"query\":\"{}\",\"count\":{count}}}", json_escape(query))
+                } else {
+                    format!("COUNT {count}")
+                }
+            }
+            Response::Error { query, msg } => {
+                if json {
+                    format!(
+                        "{{\"query\":\"{}\",\"error\":\"{}\"}}",
+                        json_escape(query),
+                        json_escape(msg)
+                    )
+                } else {
+                    format!("ERR {}", msg.replace('\n', " "))
+                }
+            }
+            Response::Pong => {
+                if json {
+                    "{\"pong\":true}".to_string()
+                } else {
+                    "PONG".to_string()
+                }
+            }
+            Response::Busy { msg } => {
+                if json {
+                    format!("{{\"busy\":true,\"error\":\"{}\"}}", json_escape(msg))
+                } else {
+                    format!("BUSY {}", msg.replace('\n', " "))
+                }
+            }
+            Response::Stats { json: obj } => obj.clone(),
+            Response::Bye => {
+                if json {
+                    "{\"bye\":true}".to_string()
+                } else {
+                    "BYE".to_string()
+                }
+            }
+        }
+    }
+}
+
+/// A client-side parse of one response line: `Ok(count)` or `Err(message)`.
+/// Understands both wire modes (detects JSON by the leading `{`), so the
+/// load generator works against a server in either.
+pub fn parse_count_response(line: &str) -> Result<u128, String> {
+    let line = line.trim();
+    if let Some(rest) = line.strip_prefix("COUNT ") {
+        return rest.trim().parse::<u128>().map_err(|e| format!("bad count `{rest}`: {e}"));
+    }
+    if let Some(rest) = line.strip_prefix("ERR ") {
+        return Err(rest.to_string());
+    }
+    if let Some(rest) = line.strip_prefix("BUSY") {
+        return Err(format!("busy{rest}"));
+    }
+    if line.starts_with('{') {
+        if let Some(v) = json_field(line, "count") {
+            return v.parse::<u128>().map_err(|e| format!("bad count `{v}`: {e}"));
+        }
+        if let Some(e) = json_field(line, "error") {
+            return Err(e);
+        }
+    }
+    Err(format!("unparseable response `{line}`"))
+}
+
+/// Extract one scalar field from a flat one-line JSON object — enough for
+/// the wire responses this module itself renders (no nesting, strings have
+/// no escaped quotes after `json_escape` other than `\"`).
+pub fn json_field(obj: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":");
+    let start = obj.find(&pat)? + pat.len();
+    let rest = &obj[start..];
+    if let Some(s) = rest.strip_prefix('"') {
+        // String value: scan to the closing unescaped quote.
+        let mut out = String::new();
+        let mut chars = s.chars();
+        while let Some(c) = chars.next() {
+            match c {
+                '\\' => {
+                    if let Some(n) = chars.next() {
+                        out.push(n);
+                    }
+                }
+                '"' => return Some(out),
+                c => out.push(c),
+            }
+        }
+        None
+    } else {
+        let end = rest.find(|c| c == ',' || c == '}').unwrap_or(rest.len());
+        Some(rest[..end].trim().to_string())
+    }
+}
+
+/// Escape a string for embedding in a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a `(query, count)` batch as the canonical JSON answer document —
+/// the format `mrss query` prints and the smoke jobs `diff`.
+pub fn render_answers(answers: &[(String, u128)]) -> String {
+    let mut out = String::from("[\n");
+    for (i, (q, c)) in answers.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"query\":\"{}\",\"count\":{}}}{}\n",
+            json_escape(q),
+            c,
+            if i + 1 == answers.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("]\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keywords_parse_case_insensitively() {
+        assert_eq!(parse_request(" ping "), Request::Ping);
+        assert_eq!(parse_request("STATS"), Request::Stats);
+        assert_eq!(parse_request("shutdown"), Request::Shutdown);
+        assert_eq!(parse_request("PONG x"), Request::Count("PONG x".into()));
+    }
+
+    #[test]
+    fn bare_and_prefixed_queries_parse() {
+        assert_eq!(parse_request("RA(P,S)=F"), Request::Count("RA(P,S)=F".into()));
+        assert_eq!(parse_request("COUNT RA(P,S)=F"), Request::Count("RA(P,S)=F".into()));
+        // COUNT lets a query spelled like a keyword through.
+        assert_eq!(parse_request("count stats"), Request::Count("stats".into()));
+    }
+
+    #[test]
+    fn batch_splits_on_semicolons() {
+        assert_eq!(
+            parse_request("BATCH a=1 ; b=2;; c=3 "),
+            Request::Batch(vec!["a=1".into(), "b=2".into(), "c=3".into()])
+        );
+        assert_eq!(parse_request("batch"), Request::Batch(vec![]));
+    }
+
+    #[test]
+    fn responses_roundtrip_through_client_parse() {
+        for json in [false, true] {
+            let ok = Response::Count { query: "a=1".into(), count: 42 }.render(json);
+            assert_eq!(parse_count_response(&ok), Ok(42));
+            let err = Response::Error { query: "a=1".into(), msg: "no \"table\"".into() }
+                .render(json);
+            let e = parse_count_response(&err).unwrap_err();
+            assert!(e.contains("table"), "{e}");
+            let busy = Response::Busy { msg: "queue full".into() }.render(json);
+            assert!(parse_count_response(&busy).is_err());
+        }
+        assert_eq!(Response::Pong.render(false), "PONG");
+        assert_eq!(Response::Pong.render(true), "{\"pong\":true}");
+        assert_eq!(Response::Bye.render(false), "BYE");
+    }
+
+    #[test]
+    fn json_field_extracts_numbers_and_strings() {
+        let obj = "{\"query\":\"a \\\"b\\\"\",\"count\":17,\"qps\":1.5}";
+        assert_eq!(json_field(obj, "count").as_deref(), Some("17"));
+        assert_eq!(json_field(obj, "qps").as_deref(), Some("1.5"));
+        assert_eq!(json_field(obj, "query").as_deref(), Some("a \"b\""));
+        assert_eq!(json_field(obj, "absent"), None);
+    }
+
+    #[test]
+    fn render_answers_matches_query_cli_shape() {
+        let doc = render_answers(&[("a=1".into(), 3), ("b=2".into(), 0)]);
+        assert!(doc.starts_with("[\n"));
+        assert!(doc.contains("{\"query\":\"a=1\",\"count\":3},"));
+        assert!(doc.ends_with("{\"query\":\"b=2\",\"count\":0}\n]\n"));
+    }
+}

@@ -1,0 +1,469 @@
+//! The TCP serving front-end: a dependency-free `std::net` server with a
+//! fixed worker thread pool, bounded admission, and clean shutdown.
+//!
+//! ## Architecture
+//!
+//! ```text
+//! acceptor thread ──try_send──▶ bounded queue ──recv──▶ N worker threads
+//!      │                            (full ⇒ BUSY + close)     │
+//!      └── woken by a self-connect on SHUTDOWN                └── shared
+//!                                                         Arc<CountServer>
+//! ```
+//!
+//! * One acceptor owns the listener; connections enter a bounded
+//!   `sync_channel` queue. A full queue answers `BUSY` immediately and
+//!   closes — load is shed at the door instead of growing an unbounded
+//!   backlog (the admission-control half of the ROADMAP item).
+//! * `threads` workers pop connections and speak the line protocol
+//!   ([`super::protocol`]). Each connection is capped at `max_requests`
+//!   queries, after which it gets `BUSY` and is closed — one chatty client
+//!   cannot monopolize a worker forever.
+//! * All workers share one [`CountServer`]: ADtree builds coalesce behind
+//!   its per-table latch and tree bytes are charged to the store's
+//!   `mem_bytes` budget, so concurrency never duplicates work or memory.
+//! * `SHUTDOWN` (or [`ServeHandle::request_shutdown`]) latches a flag,
+//!   wakes the acceptor with a self-connect, drops the queue sender, and
+//!   lets the workers drain: in-flight connections finish, the process
+//!   exits cleanly.
+//!
+//! Readers poll with a 100 ms read timeout so idle keep-alive connections
+//! notice the shutdown flag instead of pinning a worker forever.
+
+use crate::store::CountServer;
+use crate::util::error::{Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Read, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::metrics::{ServeMetrics, ServeSnapshot};
+use super::protocol::{parse_request, Request, Response, MAX_LINE};
+
+use std::sync::atomic::Ordering::Relaxed;
+
+/// Tuning knobs of one serving front-end.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:7171` (`:0` picks an ephemeral port,
+    /// reported by [`ServeHandle::addr`]).
+    pub addr: String,
+    /// Worker thread pool size.
+    pub threads: usize,
+    /// Bounded accept-queue depth; a connection arriving with the queue
+    /// full is answered `BUSY` and closed.
+    pub queue_depth: usize,
+    /// Per-connection request cap (each `BATCH` member counts).
+    pub max_requests: usize,
+    /// Wire mode: JSON object lines (default) or compact text.
+    pub json: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 4,
+            queue_depth: 64,
+            max_requests: 100_000,
+            json: true,
+        }
+    }
+}
+
+struct Shared {
+    count: Arc<CountServer>,
+    metrics: ServeMetrics,
+    cfg: ServeConfig,
+    addr: SocketAddr,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    fn snapshot(&self) -> ServeSnapshot {
+        self.metrics.snapshot(self.count.stats(), self.count.tree_stats())
+    }
+
+    /// Latch the shutdown flag and wake the acceptor out of `accept()`.
+    fn initiate_shutdown(&self) {
+        if !self.shutdown.swap(true, SeqCst) {
+            // The wake connection is consumed (and discarded) by the
+            // acceptor itself once it sees the flag. A wildcard bind
+            // (0.0.0.0 / [::]) is not a connectable destination — wake
+            // through loopback on the bound port instead.
+            let mut wake = self.addr;
+            if wake.ip().is_unspecified() {
+                wake.set_ip(match wake.ip() {
+                    IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                    IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+                });
+            }
+            let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
+        }
+    }
+}
+
+/// A running server. Dropping the handle does *not* stop the server; call
+/// [`ServeHandle::request_shutdown`] / send `SHUTDOWN`, then
+/// [`ServeHandle::wait`].
+pub struct ServeHandle {
+    shared: Arc<Shared>,
+    acceptor: JoinHandle<()>,
+}
+
+impl ServeHandle {
+    /// The actually-bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Live metrics snapshot (same data as the `STATS` wire command).
+    pub fn snapshot(&self) -> ServeSnapshot {
+        self.shared.snapshot()
+    }
+
+    /// Ask the server to stop; returns immediately. In-flight connections
+    /// drain before [`ServeHandle::wait`] returns.
+    pub fn request_shutdown(&self) {
+        self.shared.initiate_shutdown();
+    }
+
+    /// Block until the server has fully stopped (acceptor and all workers
+    /// joined); returns the final metrics snapshot.
+    pub fn wait(self) -> ServeSnapshot {
+        let _ = self.acceptor.join();
+        self.shared.snapshot()
+    }
+}
+
+/// Bind and start serving `count` on `cfg.addr`. Returns once the listener
+/// is bound and the worker pool is up — queries can be sent the moment
+/// this returns.
+pub fn serve(count: Arc<CountServer>, cfg: ServeConfig) -> Result<ServeHandle> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding count server to {}", cfg.addr))?;
+    let addr = listener.local_addr().context("resolving bound address")?;
+    let threads = cfg.threads.max(1);
+    let queue_depth = cfg.queue_depth.max(1);
+    let shared = Arc::new(Shared {
+        count,
+        metrics: ServeMetrics::default(),
+        cfg,
+        addr,
+        shutdown: AtomicBool::new(false),
+    });
+
+    let (tx, rx) = std::sync::mpsc::sync_channel::<TcpStream>(queue_depth);
+    let rx = Arc::new(Mutex::new(rx));
+    let mut workers = Vec::with_capacity(threads);
+    for i in 0..threads {
+        let shared = Arc::clone(&shared);
+        let rx = Arc::clone(&rx);
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("mrss-serve-{i}"))
+                .spawn(move || worker_loop(&shared, &rx))
+                .context("spawning worker thread")?,
+        );
+    }
+
+    let acceptor = {
+        let shared = Arc::clone(&shared);
+        std::thread::Builder::new()
+            .name("mrss-serve-accept".to_string())
+            .spawn(move || accept_loop(&shared, listener, tx, workers))
+            .context("spawning acceptor thread")?
+    };
+    Ok(ServeHandle { shared, acceptor })
+}
+
+fn accept_loop(
+    shared: &Shared,
+    listener: TcpListener,
+    tx: SyncSender<TcpStream>,
+    workers: Vec<JoinHandle<()>>,
+) {
+    for stream in listener.incoming() {
+        if shared.shutdown.load(SeqCst) {
+            // `stream` is (usually) the self-connect wake; discard it.
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        match tx.try_send(stream) {
+            Ok(()) => {}
+            Err(TrySendError::Full(stream)) => {
+                // Admission control: shed at the door with a clean answer.
+                // The write is bounded so a non-reading client can never
+                // stall the acceptor itself.
+                shared.metrics.busy_rejects.fetch_add(1, Relaxed);
+                let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+                let mut w = BufWriter::new(stream);
+                let busy = Response::Busy { msg: "accept queue full, retry later".to_string() };
+                let _ = writeln!(w, "{}", busy.render(shared.cfg.json));
+                let _ = w.flush();
+            }
+            Err(TrySendError::Disconnected(_)) => break,
+        }
+    }
+    // Close the queue: workers finish whatever is buffered, then exit.
+    drop(tx);
+    drop(listener);
+    for w in workers {
+        let _ = w.join();
+    }
+}
+
+fn worker_loop(shared: &Shared, rx: &Mutex<Receiver<TcpStream>>) {
+    loop {
+        // Hold the receiver lock only for the pop, not while serving.
+        let next = rx.lock().unwrap().recv();
+        let Ok(stream) = next else { return };
+        shared.metrics.connections.fetch_add(1, Relaxed);
+        shared.metrics.active.fetch_add(1, Relaxed);
+        serve_conn(shared, stream);
+        shared.metrics.active.fetch_sub(1, Relaxed);
+    }
+}
+
+/// Speak the line protocol on one connection until EOF, error, cap, or
+/// shutdown. All IO errors just end the connection — the client is gone.
+fn serve_conn(shared: &Shared, stream: TcpStream) {
+    let json = shared.cfg.json;
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    // A client that stops reading must not pin this worker forever: once
+    // the kernel send buffer fills, the blocked write errors out after the
+    // timeout and the connection is dropped (any write error ends it).
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_nodelay(true);
+    let Ok(write_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(stream);
+    let mut writer = BufWriter::new(write_half);
+    let mut line = String::new();
+    let mut served = 0usize;
+
+    loop {
+        line.clear();
+        // Poll-read so an idle connection notices shutdown: on timeout any
+        // partial bytes stay appended to `line` and the next pass resumes
+        // the same request. Every read is clamped by `take`, so the cap
+        // check runs even against a client streaming an endless
+        // unterminated line at full speed — `line` can never outgrow
+        // `MAX_LINE` by more than one clamp.
+        let eof = loop {
+            if line.len() > MAX_LINE {
+                let resp = Response::Error {
+                    query: String::new(),
+                    msg: format!("request line exceeds {MAX_LINE} bytes"),
+                };
+                let _ = writeln!(writer, "{}", resp.render(json));
+                let _ = writer.flush();
+                return;
+            }
+            let clamp = (MAX_LINE + 2 - line.len()) as u64;
+            match (&mut reader).take(clamp).read_line(&mut line) {
+                Ok(0) => break true, // EOF (clamp is ≥ 2 here, so not the limit)
+                Ok(_) if line.ends_with('\n') => break false,
+                Ok(_) => continue, // clamp hit mid-line; the cap check fires next
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e)
+                    if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+                        && !shared.shutdown.load(SeqCst) =>
+                {
+                    continue;
+                }
+                Err(_) => return,
+            }
+        };
+        if eof {
+            return;
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+
+        let responses: Vec<Response> = match parse_request(&line) {
+            Request::Ping => vec![Response::Pong],
+            Request::Stats => vec![Response::Stats { json: shared.snapshot().to_json() }],
+            Request::Shutdown => {
+                let _ = writeln!(writer, "{}", Response::Bye.render(json));
+                let _ = writer.flush();
+                shared.initiate_shutdown();
+                return;
+            }
+            Request::Count(q) => vec![answer_one(shared, &mut served, q)],
+            Request::Batch(qs) if qs.is_empty() => vec![Response::Error {
+                query: String::new(),
+                msg: "empty BATCH (want `BATCH q1 ; q2 ; …`)".to_string(),
+            }],
+            Request::Batch(qs) => {
+                qs.into_iter().map(|q| answer_one(shared, &mut served, q)).collect()
+            }
+        };
+        for resp in &responses {
+            if writeln!(writer, "{}", resp.render(json)).is_err() {
+                return;
+            }
+        }
+        if writer.flush().is_err() {
+            return;
+        }
+        if served >= shared.cfg.max_requests {
+            let busy = Response::Busy {
+                msg: format!(
+                    "per-connection request cap ({}) reached, reconnect",
+                    shared.cfg.max_requests
+                ),
+            };
+            let _ = writeln!(writer, "{}", busy.render(json));
+            let _ = writer.flush();
+            shared.metrics.busy_rejects.fetch_add(1, Relaxed);
+            return;
+        }
+    }
+}
+
+/// Answer one counted query, with latency recorded bucket-exact.
+fn answer_one(shared: &Shared, served: &mut usize, query: String) -> Response {
+    *served += 1;
+    shared.metrics.queries.fetch_add(1, Relaxed);
+    let t0 = Instant::now();
+    let out = shared.count.count_query(&query);
+    shared.metrics.latency.record(t0.elapsed());
+    match out {
+        Ok(count) => Response::Count { query, count },
+        Err(e) => {
+            shared.metrics.errors.fetch_add(1, Relaxed);
+            Response::Error { query, msg: e.to_string() }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen;
+    use crate::mobius::MobiusJoin;
+    use crate::store::{CtStore, PersistConfig, StoreSink};
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("mrss_serve_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn start_uwcse(tag: &str, cfg: ServeConfig) -> (PathBuf, ServeHandle) {
+        let dir = tmpdir(tag);
+        let db = datagen::generate("uwcse", 0.1, 7).unwrap();
+        let store = CtStore::create(&dir, "uwcse", 0.1, 7).unwrap();
+        {
+            let sink = StoreSink::new(&store, &db.schema, PersistConfig::default());
+            MobiusJoin::new(&db).sink(&sink).run();
+            sink.take_error().unwrap();
+        }
+        drop(store);
+        let count = Arc::new(crate::store::CountServer::open(&dir).unwrap());
+        let handle = serve(count, cfg).unwrap();
+        (dir, handle)
+    }
+
+    fn roundtrip(addr: SocketAddr, lines: &[&str]) -> Vec<String> {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        let mut r = BufReader::new(stream);
+        let mut out = Vec::new();
+        for l in lines {
+            writeln!(w, "{l}").unwrap();
+            w.flush().unwrap();
+            let mut resp = String::new();
+            r.read_line(&mut resp).unwrap();
+            out.push(resp.trim().to_string());
+        }
+        out
+    }
+
+    #[test]
+    fn ping_stats_count_and_shutdown_roundtrip() {
+        let (dir, handle) = start_uwcse("basic", ServeConfig::default());
+        let addr = handle.addr();
+        let out = roundtrip(addr, &["PING", "position(P1)=faculty", "STATS"]);
+        assert_eq!(out[0], "{\"pong\":true}");
+        assert!(out[1].contains("\"count\":"), "{}", out[1]);
+        assert!(out[2].contains("\"qps\":"), "{}", out[2]);
+        // Bad query answers an error line but keeps the connection usable.
+        let out = roundtrip(addr, &["nope(X)=1", "PING"]);
+        assert!(out[0].contains("\"error\":"), "{}", out[0]);
+        assert_eq!(out[1], "{\"pong\":true}");
+        let out = roundtrip(addr, &["SHUTDOWN"]);
+        assert_eq!(out[0], "{\"bye\":true}");
+        let snap = handle.wait();
+        assert!(snap.queries >= 2);
+        assert_eq!(snap.active, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn batch_answers_one_line_per_query_in_order() {
+        let (dir, handle) = start_uwcse("batch", ServeConfig::default());
+        let stream = TcpStream::connect(handle.addr()).unwrap();
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        let mut r = BufReader::new(stream);
+        writeln!(w, "BATCH position(P1)=faculty ; nope=1 ; student(P1)=yes").unwrap();
+        w.flush().unwrap();
+        let mut lines = Vec::new();
+        for _ in 0..3 {
+            let mut l = String::new();
+            r.read_line(&mut l).unwrap();
+            lines.push(l);
+        }
+        assert!(lines[0].contains("position(P1)=faculty"));
+        assert!(lines[0].contains("\"count\":"));
+        assert!(lines[1].contains("\"error\":"));
+        assert!(lines[2].contains("student(P1)=yes"));
+        handle.request_shutdown();
+        handle.wait();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn text_wire_mode_and_request_cap() {
+        let cfg = ServeConfig { json: false, max_requests: 2, ..Default::default() };
+        let (dir, handle) = start_uwcse("cap", cfg);
+        let stream = TcpStream::connect(handle.addr()).unwrap();
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        let mut r = BufReader::new(stream);
+        for _ in 0..2 {
+            writeln!(w, "position(P1)=faculty").unwrap();
+        }
+        w.flush().unwrap();
+        let mut lines = Vec::new();
+        // 2 answers, then the cap's BUSY, then EOF.
+        for _ in 0..3 {
+            let mut l = String::new();
+            r.read_line(&mut l).unwrap();
+            lines.push(l.trim().to_string());
+        }
+        assert!(lines[0].starts_with("COUNT "), "{lines:?}");
+        assert!(lines[1].starts_with("COUNT "), "{lines:?}");
+        assert!(lines[2].starts_with("BUSY "), "{lines:?}");
+        let mut l = String::new();
+        assert_eq!(r.read_line(&mut l).unwrap(), 0, "server must close after BUSY");
+        assert!(handle.snapshot().busy_rejects >= 1);
+        handle.request_shutdown();
+        handle.wait();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn request_shutdown_unblocks_an_idle_server() {
+        let (dir, handle) = start_uwcse("idle", ServeConfig::default());
+        // One idle connected client must not block the drain.
+        let _idle = TcpStream::connect(handle.addr()).unwrap();
+        handle.request_shutdown();
+        let snap = handle.wait(); // must return despite the idle client
+        assert_eq!(snap.active, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

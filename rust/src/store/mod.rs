@@ -34,4 +34,4 @@ mod repo;
 mod service;
 
 pub use repo::{CtStore, PersistConfig, StoreSink, StoreStats, TableKind, TableMeta, MANIFEST};
-pub use service::{gen_queries, normalize, parse_query, CountServer};
+pub use service::{gen_queries, needs_level, normalize, parse_query, CountServer, TreeStats};

@@ -133,6 +133,9 @@ struct Inner {
     tables: BTreeMap<String, TableMeta>,
     cache: FxHashMap<String, CacheEntry>,
     cached_bytes: usize,
+    /// Bytes charged by external caches sharing this budget (the
+    /// `CountServer` ADtree cache): the table LRU makes room for them.
+    external_bytes: usize,
     tick: u64,
     mem_budget: Option<usize>,
     stats: StoreStats,
@@ -257,6 +260,26 @@ impl CtStore {
     /// Current cache budget.
     pub fn mem_budget(&self) -> Option<usize> {
         self.inner.lock().unwrap().mem_budget
+    }
+
+    /// Charge (positive) or release (negative) bytes held by an external
+    /// cache against this store's `mem_bytes` budget. The table LRU evicts
+    /// to make room, so one budget truly bounds tables *and* whatever the
+    /// caller keeps alongside them (the `CountServer` ADtree cache).
+    pub fn charge_external(&self, delta: isize) {
+        let mut g = self.inner.lock().unwrap();
+        g.external_bytes = g.external_bytes.saturating_add_signed(delta);
+        evict_over_budget(&mut g);
+    }
+
+    /// Bytes currently charged by external caches.
+    pub fn external_bytes(&self) -> usize {
+        self.inner.lock().unwrap().external_bytes
+    }
+
+    /// Bytes currently held by the table LRU cache itself.
+    pub fn cached_bytes(&self) -> usize {
+        self.inner.lock().unwrap().cached_bytes
     }
 
     /// Snapshot of the cache/IO counters.
@@ -454,11 +477,12 @@ impl CtStore {
     }
 }
 
-/// Evict least-recently-used entries until the cache fits the budget,
-/// always keeping the most recently touched entry.
+/// Evict least-recently-used entries until the cache (plus any external
+/// charge sharing the budget) fits, always keeping the most recently
+/// touched entry.
 fn evict_over_budget(g: &mut Inner) {
     let Some(budget) = g.mem_budget else { return };
-    while g.cached_bytes > budget && g.cache.len() > 1 {
+    while g.cached_bytes.saturating_add(g.external_bytes) > budget && g.cache.len() > 1 {
         let newest = g.cache.values().map(|e| e.last_used).max().unwrap_or(0);
         let victim = g
             .cache
@@ -651,6 +675,33 @@ mod tests {
         store.get("entity_3").unwrap();
         assert_eq!(store.stats().hits, s.hits + 1);
         // Answers survive eviction (reload from disk).
+        assert_eq!(*store.get("entity_1").unwrap(), small_ct(1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn external_charge_shares_the_budget() {
+        let dir = tmpdir("external");
+        let store = CtStore::create(&dir, "uwcse", 0.1, 7).unwrap();
+        for i in 0..3usize {
+            store.put(TableKind::Entity(i), &[i], &small_ct(i as u64)).unwrap();
+        }
+        let one = store.get("entity_0").unwrap().mem_bytes();
+        store.set_mem_budget(Some(one * 3 + one / 2));
+        for i in 0..3usize {
+            store.get(&format!("entity_{i}")).unwrap();
+        }
+        assert_eq!(store.stats().evictions, 0, "3 tables fit a 3.5-table budget");
+        assert_eq!(store.cached_bytes(), one * 3);
+        // An external cache claiming ~2 tables' worth forces the table LRU
+        // down to what fits alongside it.
+        store.charge_external((one * 2) as isize);
+        assert_eq!(store.external_bytes(), one * 2);
+        assert!(store.stats().evictions >= 1, "external charge must evict tables");
+        assert!(store.cached_bytes() + store.external_bytes() <= one * 3 + one / 2);
+        // Releasing the charge stops further pressure; reads still work.
+        store.charge_external(-((one * 2) as isize));
+        assert_eq!(store.external_bytes(), 0);
         assert_eq!(*store.get("entity_1").unwrap(), small_ct(1));
         let _ = std::fs::remove_dir_all(&dir);
     }

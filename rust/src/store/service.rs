@@ -49,20 +49,74 @@ use crate::util::fxhash::FxHashMap;
 use crate::util::Pcg64;
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use super::repo::{CtStore, StoreStats, TableKind, TableMeta};
 
-/// Lazily-loading count-query service over one store.
+/// Counters of the shared ADtree cache ([`CountServer::tree_stats`]).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TreeStats {
+    /// Lookups answered by an already-built tree.
+    pub hits: u64,
+    /// Trees actually constructed. While a tree stays cached this is at
+    /// most one per table, however many threads race on it — the
+    /// no-duplicate-build guarantee the concurrency tests assert.
+    pub builds: u64,
+    /// Readers that found a build in progress and blocked on its latch
+    /// instead of constructing a duplicate (counted once per waiter).
+    pub coalesced_waits: u64,
+    /// Trees evicted under the shared `mem_bytes` budget.
+    pub evictions: u64,
+    /// Bytes currently charged against the store budget for live trees.
+    pub bytes: u64,
+}
+
+/// One slot of the ADtree cache.
+enum TreeSlot {
+    /// A builder thread is constructing this tree; readers wait on the
+    /// cache condvar (build coalescing) instead of duplicating the work.
+    Building,
+    Ready { tree: Arc<AdTree>, mem: usize, last_used: u64 },
+}
+
+#[derive(Default)]
+struct TreeSlots {
+    map: FxHashMap<String, TreeSlot>,
+    /// Bytes of all `Ready` trees (mirrored into the store's external
+    /// charge so tables and trees share one budget).
+    bytes: usize,
+    tick: u64,
+    hits: u64,
+    builds: u64,
+    coalesced_waits: u64,
+    evictions: u64,
+}
+
+/// Concurrency-safe lazily-built ADtree cache: per-table build coalescing
+/// via a `Building` latch + condvar, LRU eviction under the store's
+/// `mem_bytes` budget, bytes charged to the store as an external load.
+#[derive(Default)]
+struct TreeCache {
+    slots: Mutex<TreeSlots>,
+    cv: Condvar,
+}
+
+/// Lazily-loading count-query service over one store. All methods take
+/// `&self` and are safe to call from many threads at once — the serving
+/// front-end (`crate::serve`) shares one instance across its worker pool.
 pub struct CountServer {
     schema: Schema,
     store: CtStore,
-    trees: Mutex<FxHashMap<String, Arc<AdTree>>>,
+    trees: TreeCache,
     /// Manifest snapshot (immutable after open): spares the planner a
     /// lock-and-clone of the full metadata map per group evaluation.
     metas: Vec<TableMeta>,
     /// Population size per FO variable (entity-table totals).
     popsizes: Vec<u128>,
+    /// Longest relationship chain the store holds a table for (the joint
+    /// counts as full depth). Queries whose positive support is deeper
+    /// get the structured `needs level k` error instead of a generic one.
+    max_stored_chain: usize,
 }
 
 impl CountServer {
@@ -94,12 +148,22 @@ impl CountServer {
                 })
             })
             .collect::<Result<_>>()?;
+        let max_stored_chain = metas
+            .iter()
+            .map(|m| match &m.kind {
+                TableKind::Joint => schema.num_rel_vars(),
+                TableKind::Chain(rs) | TableKind::Positive(rs) => rs.len(),
+                TableKind::Entity(_) => 0,
+            })
+            .max()
+            .unwrap_or(0);
         Ok(CountServer {
             schema,
             store,
-            trees: Mutex::new(FxHashMap::default()),
+            trees: TreeCache::default(),
             metas,
             popsizes,
+            max_stored_chain,
         })
     }
 
@@ -114,6 +178,23 @@ impl CountServer {
     /// Cache/IO counters of the underlying store.
     pub fn stats(&self) -> StoreStats {
         self.store.stats()
+    }
+
+    /// Counters of the shared ADtree cache.
+    pub fn tree_stats(&self) -> TreeStats {
+        let g = self.trees.slots.lock().unwrap();
+        TreeStats {
+            hits: g.hits,
+            builds: g.builds,
+            coalesced_waits: g.coalesced_waits,
+            evictions: g.evictions,
+            bytes: g.bytes as u64,
+        }
+    }
+
+    /// Longest stored chain (the joint counts as full depth).
+    pub fn max_stored_chain(&self) -> usize {
+        self.max_stored_chain
     }
 
     /// Count of a conjunctive query over the full database scope.
@@ -187,7 +268,7 @@ impl CountServer {
             rels.sort_unstable();
             rels.dedup();
             if !rels.is_empty() {
-                let key = TableKind::Positive(rels).key();
+                let key = TableKind::Positive(rels.clone()).key();
                 if let Some(meta) = self.metas.iter().find(|m| m.key == key) {
                     let att_conds: Vec<(VarId, u16)> = conds
                         .iter()
@@ -200,6 +281,20 @@ impl CountServer {
                         let cnt = self.table_count(meta, &att_conds)?;
                         return self.shrink_scope(cnt, &meta.scope, &fo_q);
                     }
+                }
+                // Depth-capped store: the query's positive support spans a
+                // chain longer than anything persisted. Structured signal
+                // (`needs_level` parses it) instead of a generic failure.
+                if rels.len() > self.max_stored_chain {
+                    bail!(
+                        "needs level {}: the query's positive support spans {} relationships \
+                         but this store holds chains only up to length {} — re-persist with \
+                         --max-chain-len {} or more (or at full depth)",
+                        rels.len(),
+                        rels.len(),
+                        self.max_stored_chain,
+                        rels.len()
+                    );
                 }
             }
             bail!(
@@ -279,15 +374,145 @@ impl CountServer {
             let ct = self.store.get(&meta.key)?;
             return Ok(ct.select(conds).total());
         }
-        if let Some(tree) = self.trees.lock().unwrap().get(&meta.key) {
-            return Ok(tree.count(conds) as u128);
-        }
-        let ct = self.store.get(&meta.key)?;
-        let tree = Arc::new(AdTree::build(&ct, AdTreeConfig::default()));
-        let cnt = tree.count(conds);
-        self.trees.lock().unwrap().insert(meta.key.clone(), tree);
-        Ok(cnt as u128)
+        Ok(self.tree(&meta.key)?.count(conds) as u128)
     }
+
+    /// Get-or-build the cached ADtree of one stored table.
+    ///
+    /// Build coalescing: the first thread to miss installs a `Building`
+    /// latch and constructs the tree *outside* the lock; concurrent
+    /// readers of the same key block on the cache condvar and wake to the
+    /// finished tree, so no table's tree is ever built twice while cached.
+    /// The new tree's exact `mem_bytes` are charged to the store's shared
+    /// budget ([`CtStore::charge_external`]) and the tree cache itself
+    /// evicts least-recently-used trees beyond it — tables and trees
+    /// compete for the same memory, as one `--mem-budget` flag promises.
+    fn tree(&self, key: &str) -> Result<Arc<AdTree>> {
+        /// Owned view of one probe, so the map borrow ends before we act.
+        enum Probe {
+            Ready(Arc<AdTree>),
+            Building,
+            Missing,
+        }
+        let mut g = self.trees.slots.lock().unwrap();
+        let mut waited = false;
+        loop {
+            g.tick += 1;
+            let tick = g.tick;
+            let probe = match g.map.get_mut(key) {
+                Some(TreeSlot::Ready { tree, last_used, .. }) => {
+                    *last_used = tick;
+                    Probe::Ready(Arc::clone(tree))
+                }
+                Some(TreeSlot::Building) => Probe::Building,
+                None => Probe::Missing,
+            };
+            match probe {
+                Probe::Ready(tree) => {
+                    g.hits += 1;
+                    return Ok(tree);
+                }
+                Probe::Building => {
+                    if !waited {
+                        g.coalesced_waits += 1;
+                        waited = true;
+                    }
+                    g = self.trees.cv.wait(g).unwrap();
+                }
+                Probe::Missing => {
+                    g.map.insert(key.to_string(), TreeSlot::Building);
+                    g.builds += 1;
+                    break;
+                }
+            }
+        }
+        drop(g);
+
+        // This thread owns the build. The table load goes through the
+        // store's own LRU (and may itself evict); tree construction is the
+        // expensive part and runs with no lock held.
+        let built = self
+            .store
+            .get(key)
+            .map(|ct| AdTree::build(&ct, AdTreeConfig::default()));
+
+        let mut g = self.trees.slots.lock().unwrap();
+        let tree = match built {
+            Err(e) => {
+                // Clear the latch so waiters retry (one becomes the new
+                // builder) instead of hanging on a failed build.
+                g.map.remove(key);
+                self.trees.cv.notify_all();
+                return Err(e);
+            }
+            Ok(t) => Arc::new(t),
+        };
+        let mem = tree.mem_bytes();
+        g.tick += 1;
+        let tick = g.tick;
+        g.map.insert(
+            key.to_string(),
+            TreeSlot::Ready { tree: Arc::clone(&tree), mem, last_used: tick },
+        );
+        g.bytes += mem;
+        let freed = self.evict_trees(&mut g);
+        // Net charge against the shared store budget, applied while the
+        // tree lock is still held so the external charge can never drift
+        // from the live tree bytes under concurrent builds (the store
+        // lock nests inside the tree lock here; the store never takes the
+        // tree lock, so the trees → store order is acyclic).
+        self.store.charge_external(mem as isize - freed as isize);
+        drop(g);
+        self.trees.cv.notify_all();
+        Ok(tree)
+    }
+
+    /// Evict least-recently-used `Ready` trees until the tree bytes alone
+    /// fit the store's budget, keeping the most recently used. Returns the
+    /// bytes freed (to be released from the store's external charge).
+    fn evict_trees(&self, g: &mut TreeSlots) -> usize {
+        let Some(budget) = self.store.mem_budget() else { return 0 };
+        let mut freed = 0usize;
+        loop {
+            let ready: Vec<(&String, u64)> = g
+                .map
+                .iter()
+                .filter_map(|(k, s)| match s {
+                    TreeSlot::Ready { last_used, .. } => Some((k, *last_used)),
+                    TreeSlot::Building => None,
+                })
+                .collect();
+            if g.bytes <= budget || ready.len() <= 1 {
+                return freed;
+            }
+            let newest = ready.iter().map(|&(_, t)| t).max().unwrap_or(0);
+            let victim = ready
+                .iter()
+                .filter(|&&(_, t)| t != newest)
+                .min_by_key(|&&(_, t)| t)
+                .map(|&(k, _)| k.clone());
+            let Some(k) = victim else { return freed };
+            if let Some(TreeSlot::Ready { mem, .. }) = g.map.remove(&k) {
+                g.bytes -= mem;
+                freed += mem;
+                g.evictions += 1;
+            }
+        }
+    }
+}
+
+/// If `err` carries the structured depth-cap signal (`needs level k`),
+/// extract the chain-lattice level the store would have to hold to answer
+/// — what lets a front-end distinguish "re-persist deeper" from a plain
+/// bad query. Context wrapping is tolerated anywhere around it.
+pub fn needs_level(err: &crate::util::error::Error) -> Option<usize> {
+    let msg = err.to_string();
+    let idx = msg.find("needs level ")?;
+    let digits: String = msg[idx + "needs level ".len()..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect();
+    digits.parse().ok()
 }
 
 /// FO variables one random variable ranges over.
@@ -595,5 +820,106 @@ mod tests {
         let s = crate::schema::university_schema();
         assert_eq!(gen_queries(&s, 5, 3), gen_queries(&s, 5, 3));
         assert_ne!(gen_queries(&s, 5, 3), gen_queries(&s, 5, 4));
+    }
+
+    /// Two RelInd vars sharing an FO variable (uwcse's two self-rels over
+    /// Person) — the smallest query whose positive support needs level 2.
+    fn two_connected_rel_inds(schema: &Schema) -> (VarId, VarId) {
+        let inds: Vec<VarId> = (0..schema.random_vars.len())
+            .filter(|&v| matches!(schema.random_vars[v], RandomVar::RelInd { .. }))
+            .collect();
+        for (i, &a) in inds.iter().enumerate() {
+            for &b in &inds[i + 1..] {
+                let fa = fos_of_var(schema, a);
+                if fos_of_var(schema, b).iter().any(|f| fa.contains(f)) {
+                    return (a, b);
+                }
+            }
+        }
+        panic!("schema has no FO-connected relationship pair");
+    }
+
+    #[test]
+    fn depth_capped_store_returns_structured_needs_level_error() {
+        let dir = tmpdir("capped");
+        let db = datagen::generate("uwcse", 0.2, 7).unwrap();
+        let store = CtStore::create(&dir, "uwcse", 0.2, 7).unwrap();
+        let sink = StoreSink::new(&store, &db.schema, PersistConfig::default());
+        // Persist only level-1 chains: no level-2 tables, no joint.
+        let res = MobiusJoin::new(&db).max_chain_len(1).sink(&sink).run();
+        sink.take_error().unwrap();
+        assert!(res.joint.is_none());
+        drop(res);
+
+        let server = CountServer::open(&dir).unwrap();
+        assert_eq!(server.max_stored_chain(), 1);
+        let (a, b) = two_connected_rel_inds(server.schema());
+
+        // Level-1 queries still answer.
+        server.count(&[(a, 1)]).unwrap();
+        // A level-2 positive support is a structured error, not a generic
+        // one — both all-positive and Möbius-subtraction (negative) paths.
+        for codes in [(1u16, 1u16), (0, 0), (1, 0)] {
+            let err = server.count(&[(a, codes.0), (b, codes.1)]).unwrap_err();
+            assert_eq!(
+                needs_level(&err),
+                Some(2),
+                "expected `needs level 2` in: {err}"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn needs_level_parses_only_the_structured_signal() {
+        use crate::util::error::Error;
+        assert_eq!(needs_level(&Error::msg("ctx: needs level 3: deeper")), Some(3));
+        assert_eq!(needs_level(&Error::msg("no stored table covers [x]")), None);
+    }
+
+    #[test]
+    fn tree_cache_counts_builds_and_hits_once_per_table() {
+        let (dir, schema, _joint) = build_store("treestats", PersistConfig::default());
+        let server = CountServer::open(&dir).unwrap();
+        let q = gen_queries(&schema, 20, 77);
+        for s in &q {
+            server.count_query(s).unwrap();
+        }
+        let t1 = server.tree_stats();
+        assert!(t1.builds > 0);
+        assert!(t1.bytes > 0, "live trees must charge bytes");
+        // Re-running the same batch builds nothing new: every lookup hits.
+        for s in &q {
+            server.count_query(s).unwrap();
+        }
+        let t2 = server.tree_stats();
+        assert_eq!(t2.builds, t1.builds, "re-query must not rebuild trees");
+        assert!(t2.hits > t1.hits);
+        assert_eq!(t2.coalesced_waits, 0, "single-threaded: no build overlap");
+        // The external charge mirrors the live tree bytes.
+        assert_eq!(server.store().external_bytes() as u64, t2.bytes);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tight_budget_evicts_trees_and_answers_stay_correct() {
+        let (dir, schema, joint) = build_store("treelru", PersistConfig::default());
+        let server = CountServer::open(&dir).unwrap();
+        // Budget far below one table: every tree insert pushes the cache
+        // over, so older trees evict, yet answers must not change.
+        server.store().set_mem_budget(Some(4096));
+        for q in gen_queries(&schema, 40, 2025) {
+            let conds = parse_query(&schema, &q).unwrap();
+            assert_eq!(
+                server.count(&conds).unwrap(),
+                joint.select(&conds).total(),
+                "query `{q}`"
+            );
+        }
+        let t = server.tree_stats();
+        assert!(t.evictions > 0, "expected tree evictions under 4 KiB: {t:?}");
+        // Evicted trees released their charge: bytes only counts live ones.
+        assert_eq!(server.store().external_bytes() as u64, t.bytes);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,209 @@
+//! Concurrency integration for the `serve` subsystem: many client threads
+//! hammer one TCP server over a cold store and every answer must be
+//! byte-identical to fresh in-memory evaluation (`joint.select`), while
+//! the build-coalescing counters prove no ADtree was ever built twice.
+//! A second server under a tight `mem_bytes` budget must evict (tables
+//! and/or trees) without changing a single answer.
+
+use mrss::datagen;
+use mrss::mobius::MobiusJoin;
+use mrss::serve::protocol::{parse_count_response, render_answers};
+use mrss::serve::{serve, LoadgenConfig, ServeConfig};
+use mrss::store::{gen_queries, parse_query, CountServer, CtStore, PersistConfig, StoreSink};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mrss_serveit_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Persist a uwcse run and return the in-memory baseline for a generated
+/// batch: the `--fresh` answers the server must reproduce byte for byte.
+fn build_store(tag: &str, n_queries: usize, qseed: u64) -> (PathBuf, Vec<(String, u128)>) {
+    let dir = tmpdir(tag);
+    let db = datagen::generate("uwcse", 0.2, 7).unwrap();
+    let store = CtStore::create(&dir, "uwcse", 0.2, 7).unwrap();
+    let sink = StoreSink::new(&store, &db.schema, PersistConfig::default());
+    let res = MobiusJoin::new(&db).sink(&sink).run();
+    sink.take_error().unwrap();
+    let joint = res.joint_ct();
+    let baseline = gen_queries(&db.schema, n_queries, qseed)
+        .into_iter()
+        .map(|q| {
+            let expect = joint.select(&parse_query(&db.schema, &q).unwrap()).total();
+            (q, expect)
+        })
+        .collect();
+    (dir, baseline)
+}
+
+/// One client: send every query on one connection, return the answers in
+/// order. A PING is interleaved to exercise keyword traffic under load.
+fn client_run(addr: std::net::SocketAddr, queries: &[(String, u128)]) -> Vec<(String, u128)> {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = BufWriter::new(stream.try_clone().unwrap());
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    writeln!(w, "PING").unwrap();
+    w.flush().unwrap();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("pong"), "{line}");
+    let mut out = Vec::with_capacity(queries.len());
+    for (q, _) in queries {
+        writeln!(w, "{q}").unwrap();
+        w.flush().unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        let count = parse_count_response(&line)
+            .unwrap_or_else(|e| panic!("query `{q}` answered an error: {e}"));
+        out.push((q.clone(), count));
+    }
+    out
+}
+
+#[test]
+fn concurrent_clients_get_identical_answers_and_no_duplicate_builds() {
+    const CLIENTS: usize = 8;
+    let (dir, baseline) = build_store("hammer", 40, 2026);
+    let count = Arc::new(CountServer::open(&dir).unwrap());
+    let n_tables = count.store().len() as u64;
+    let handle = serve(count, ServeConfig { threads: 4, ..Default::default() }).unwrap();
+    let addr = handle.addr();
+
+    // Round 1: N threads, all sending the full batch concurrently — every
+    // thread races every other onto the same cold tables.
+    let expected = render_answers(&baseline);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|_| s.spawn(|| client_run(addr, &baseline)))
+            .collect();
+        for h in handles {
+            let got = h.join().unwrap();
+            assert_eq!(render_answers(&got), expected, "answers must be byte-identical");
+        }
+    });
+
+    // The coalescing proof: with no eviction pressure, each ADtree is
+    // built at most once however many threads raced on it.
+    let snap1 = handle.snapshot();
+    assert!(snap1.trees.builds > 0);
+    assert!(
+        snap1.trees.builds <= n_tables,
+        "{} builds for {} stored tables: some tree was built twice",
+        snap1.trees.builds,
+        n_tables
+    );
+    assert_eq!(snap1.queries, (CLIENTS * baseline.len()) as u64);
+    assert_eq!(snap1.errors, 0);
+
+    // Round 2: everything is warm — not a single additional build.
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|_| s.spawn(|| client_run(addr, &baseline)))
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    let snap2 = handle.snapshot();
+    assert_eq!(
+        snap2.trees.builds, snap1.trees.builds,
+        "warm re-run must not rebuild any tree"
+    );
+    assert!(snap2.trees.hits > snap1.trees.hits);
+
+    // Wire shutdown: BYE ack, then the whole pool drains cleanly.
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = BufWriter::new(stream.try_clone().unwrap());
+    let mut r = BufReader::new(stream);
+    writeln!(w, "SHUTDOWN").unwrap();
+    w.flush().unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("bye"), "{line}");
+    let fin = handle.wait();
+    assert_eq!(fin.active, 0, "drained server must have no active connections");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tight_budget_server_evicts_but_stays_correct_under_load() {
+    let (dir, baseline) = build_store("budget", 80, 909);
+    let count = Arc::new(CountServer::open(&dir).unwrap());
+    // Far below the working set: tables and trees fight for the one budget.
+    count.store().set_mem_budget(Some(16 * 1024));
+    let handle = serve(count, ServeConfig { threads: 4, ..Default::default() }).unwrap();
+    let addr = handle.addr().to_string();
+
+    // Drive it with the load generator (the bench-serve path), same
+    // deterministic batch as the baseline.
+    let schema = datagen::schema_of("uwcse").unwrap();
+    let report = mrss::serve::loadgen::run(
+        &schema,
+        &LoadgenConfig {
+            addr,
+            clients: 8,
+            queries: 80,
+            seed: 909,
+            stats: true,
+            shutdown: true,
+        },
+    )
+    .unwrap();
+    assert!(report.errors.is_empty(), "first error: {:?}", report.errors.first());
+    assert_eq!(
+        report.answers_json(),
+        render_answers(&baseline),
+        "answers under a tight budget must match in-memory evaluation"
+    );
+
+    let fin = handle.wait(); // loadgen sent SHUTDOWN; wait must return
+    assert!(
+        fin.store.evictions + fin.trees.evictions > 0,
+        "16 KiB budget must force evictions: {fin:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batch_and_stats_over_the_wire() {
+    let (dir, baseline) = build_store("batchwire", 6, 4242);
+    let count = Arc::new(CountServer::open(&dir).unwrap());
+    let handle = serve(count, ServeConfig::default()).unwrap();
+    let stream = TcpStream::connect(handle.addr()).unwrap();
+    let mut w = BufWriter::new(stream.try_clone().unwrap());
+    let mut r = BufReader::new(stream);
+
+    // One BATCH line answers one line per query, in order.
+    let joined: Vec<String> = baseline.iter().map(|(q, _)| q.clone()).collect();
+    writeln!(w, "BATCH {}", joined.join(" ; ")).unwrap();
+    w.flush().unwrap();
+    for (q, expect) in &baseline {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(
+            parse_count_response(&line).as_ref(),
+            Ok(expect),
+            "batch member `{q}`"
+        );
+    }
+
+    // STATS reflects the six batched queries.
+    writeln!(w, "STATS").unwrap();
+    w.flush().unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert_eq!(
+        mrss::serve::protocol::json_field(&line, "queries").as_deref(),
+        Some("6"),
+        "{line}"
+    );
+
+    handle.request_shutdown();
+    handle.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
