@@ -66,10 +66,21 @@ pub struct Config {
     pub clients: usize,
     /// `serve --threads N`: worker thread pool size.
     pub serve_threads: usize,
-    /// `serve --queue-depth N`: bounded accept-queue depth (full ⇒ BUSY).
+    /// `serve --shards N`: reactor (acceptor/event-loop) thread count.
+    pub shards: usize,
+    /// `serve --max-conns N`: connection limit (past it ⇒ BUSY at accept).
+    pub max_conns: usize,
+    /// `serve --poller poll|epoll`: readiness backend override (defaults
+    /// to the best the OS offers).
+    pub poller: Option<String>,
+    /// `serve --queue-depth N`: bounded execution-queue depth (full ⇒ BUSY).
     pub queue_depth: usize,
     /// `serve --max-requests N`: per-connection request cap (⇒ BUSY).
     pub max_requests: usize,
+    /// `bench-serve --mix uniform|zipf:<s>`: query selection skew.
+    pub mix: String,
+    /// `bench-serve --idle N`: idle connections held open during the run.
+    pub idle: usize,
     /// `serve --wire text|json`: response rendering (JSON is the default).
     pub wire_text: bool,
     /// `bench-serve --bench-json FILE`: where the perf report lands.
@@ -107,8 +118,13 @@ impl Default for Config {
             addr: None,
             clients: 8,
             serve_threads: 4,
+            shards: 2,
+            max_conns: 16_384,
+            poller: None,
             queue_depth: 64,
             max_requests: 100_000,
+            mix: "uniform".into(),
+            idle: 0,
             wire_text: false,
             bench_json: None,
             send_shutdown: false,
@@ -176,6 +192,13 @@ impl Config {
                     "threads" => {
                         cfg.serve_threads = take(&mut it)?.parse().context("--threads")?
                     }
+                    "shards" => cfg.shards = take(&mut it)?.parse().context("--shards")?,
+                    "max-conns" => {
+                        cfg.max_conns = take(&mut it)?.parse().context("--max-conns")?
+                    }
+                    "poller" => cfg.poller = Some(take(&mut it)?),
+                    "mix" => cfg.mix = take(&mut it)?,
+                    "idle" => cfg.idle = take(&mut it)?.parse().context("--idle")?,
                     "queue-depth" => {
                         cfg.queue_depth = take(&mut it)?.parse().context("--queue-depth")?
                     }
@@ -215,6 +238,9 @@ impl Config {
         }
         if cfg.clients == 0 || cfg.serve_threads == 0 || cfg.queue_depth == 0 {
             bail!("--clients, --threads, and --queue-depth must be >= 1");
+        }
+        if cfg.shards == 0 || cfg.max_conns == 0 {
+            bail!("--shards and --max-conns must be >= 1");
         }
         Ok(cfg)
     }
@@ -346,7 +372,7 @@ mod tests {
     fn serve_and_bench_serve_flags_parse() {
         let c = Config::from_args(&args(
             "serve --store /tmp/s --listen 127.0.0.1:7171 --threads 6 --queue-depth 32 \
-             --max-requests 500 --wire text",
+             --max-requests 500 --wire text --shards 4 --max-conns 20000 --poller poll",
         ))
         .unwrap();
         assert_eq!(c.listen.as_deref(), Some("127.0.0.1:7171"));
@@ -354,10 +380,13 @@ mod tests {
         assert_eq!(c.queue_depth, 32);
         assert_eq!(c.max_requests, 500);
         assert!(c.wire_text);
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.max_conns, 20_000);
+        assert_eq!(c.poller.as_deref(), Some("poll"));
 
         let b = Config::from_args(&args(
             "bench-serve --addr 127.0.0.1:7171 --clients 8 --queries 200 \
-             --bench-json BENCH_serve.json --shutdown",
+             --bench-json BENCH_serve.json --shutdown --mix zipf:1.1 --idle 1000",
         ))
         .unwrap();
         assert_eq!(b.addr.as_deref(), Some("127.0.0.1:7171"));
@@ -365,8 +394,19 @@ mod tests {
         assert_eq!(b.queries.as_deref(), Some("200"));
         assert_eq!(b.bench_json.as_deref(), Some("BENCH_serve.json"));
         assert!(b.send_shutdown);
+        assert_eq!(b.mix, "zipf:1.1");
+        assert_eq!(b.idle, 1000);
+
+        let d = Config::from_args(&args("serve")).unwrap();
+        assert_eq!(d.shards, 2);
+        assert_eq!(d.max_conns, 16_384);
+        assert_eq!(d.poller, None);
+        assert_eq!(d.mix, "uniform");
+        assert_eq!(d.idle, 0);
 
         assert!(Config::from_args(&args("serve --wire yaml")).is_err());
         assert!(Config::from_args(&args("bench-serve --clients 0")).is_err());
+        assert!(Config::from_args(&args("serve --shards 0")).is_err());
+        assert!(Config::from_args(&args("serve --max-conns 0")).is_err());
     }
 }

@@ -31,7 +31,7 @@ use mrss::mobius::{MjResult, MobiusJoin};
 use mrss::runtime::{XlaEngine, XlaRuntime};
 use mrss::schema::Schema;
 use mrss::serve::protocol::{json_escape, render_answers};
-use mrss::serve::{self, LoadgenConfig, ServeConfig};
+use mrss::serve::{self, LoadgenConfig, Mix, PollerKind, ServeConfig};
 use mrss::store::{gen_queries, parse_query, CountServer, CtStore, PersistConfig, StoreSink};
 use mrss::util::format_duration;
 use mrss::util::table::{commas, TextTable};
@@ -77,10 +77,11 @@ fn print_help() {
          \x20             --cp-budget-secs N --config FILE --store DIR\n\
          query flags:  --queries FILE --query STR --json FILE --gen N --fresh\n\
          \x20             --mem-budget BYTES\n\
-         serve flags:  --listen HOST:PORT --threads N --queue-depth N --max-requests N\n\
+         serve flags:  --listen HOST:PORT --threads N --shards N --max-conns N\n\
+         \x20             --poller poll|epoll --queue-depth N --max-requests N\n\
          \x20             --wire text|json\n\
-         bench flags:  --addr HOST:PORT --clients N --queries M --bench-json FILE\n\
-         \x20             --json FILE --shutdown",
+         bench flags:  --addr HOST:PORT --clients N --queries M --mix uniform|zipf:S\n\
+         \x20             --idle N --bench-json FILE --json FILE --shutdown",
         mrss::VERSION
     );
 }
@@ -385,6 +386,26 @@ fn cmd_query(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+/// Build the server tuning knobs shared by `serve --listen` and the
+/// self-hosted `bench-serve` path.
+fn serve_config(cfg: &Config, addr: String) -> Result<ServeConfig> {
+    let poller = match cfg.poller.as_deref() {
+        Some(s) => PollerKind::parse(s)?,
+        None => PollerKind::os_default(),
+    };
+    Ok(ServeConfig {
+        addr,
+        threads: cfg.serve_threads,
+        shards: cfg.shards,
+        queue_depth: cfg.queue_depth,
+        max_conns: cfg.max_conns,
+        max_requests: cfg.max_requests,
+        json: !cfg.wire_text,
+        poller,
+        ..Default::default()
+    })
+}
+
 fn cmd_serve(cfg: &Config) -> Result<()> {
     let root = cfg.store.as_deref().context("serve: --store DIR is required")?;
     let dir = resolve_store_dir(root, &cfg.dataset)?;
@@ -399,22 +420,16 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     if let Some(listen) = &cfg.listen {
         let dataset = server.store().dataset.clone();
         let tables = server.store().len();
-        let handle = serve::serve(
-            Arc::new(server),
-            ServeConfig {
-                addr: listen.clone(),
-                threads: cfg.serve_threads,
-                queue_depth: cfg.queue_depth,
-                max_requests: cfg.max_requests,
-                json: !cfg.wire_text,
-            },
-        )?;
+        let scfg = serve_config(cfg, listen.clone())?;
+        let poller_name = scfg.poller.name();
+        let handle = serve::serve(Arc::new(server), scfg)?;
         eprintln!(
-            "serving counts for {dataset} on {} ({} tables, {} workers, wire={}) — \
-             send SHUTDOWN to stop",
+            "serving counts for {dataset} on {} ({} tables, {} workers, {} shards, \
+             poller={poller_name}, wire={}) — send SHUTDOWN to stop",
             handle.addr(),
             tables,
             cfg.serve_threads,
+            cfg.shards,
             if cfg.wire_text { "text" } else { "json" }
         );
         let snap = handle.wait();
@@ -480,22 +495,15 @@ fn cmd_bench_serve(cfg: &Config) -> Result<()> {
                 server.store().set_mem_budget(Some(b));
             }
             let dataset = server.store().dataset.clone();
-            let handle = serve::serve(
-                Arc::new(server),
-                ServeConfig {
-                    addr: "127.0.0.1:0".to_string(),
-                    threads: cfg.serve_threads,
-                    queue_depth: cfg.queue_depth,
-                    max_requests: cfg.max_requests,
-                    json: !cfg.wire_text,
-                },
-            )?;
+            let handle =
+                serve::serve(Arc::new(server), serve_config(cfg, "127.0.0.1:0".to_string())?)?;
             eprintln!("self-hosted a server on {} from {}", handle.addr(), dir.display());
             (handle.addr().to_string(), dataset, Some(handle))
         }
         (None, None) => bail!("bench-serve: pass --addr HOST:PORT or --store DIR"),
     };
     let schema = datagen::schema_of(&dataset)?;
+    let mix = Mix::parse(&cfg.mix)?;
 
     let report = mrss::serve::loadgen::run(
         &schema,
@@ -504,6 +512,8 @@ fn cmd_bench_serve(cfg: &Config) -> Result<()> {
             clients: cfg.clients,
             queries: n_queries,
             seed: cfg.seed,
+            mix,
+            idle: cfg.idle,
             stats: true,
             shutdown: cfg.send_shutdown,
         },
@@ -516,11 +526,13 @@ fn cmd_bench_serve(cfg: &Config) -> Result<()> {
     }
 
     eprintln!(
-        "bench-serve {}: {} clients x {} queries in {} — {:.0} qps, p50 ≤ {} µs, p99 ≤ {} µs, \
-         {} errors",
+        "bench-serve {}: {} clients x {} queries (mix={}, idle={}) in {} — {:.0} qps, \
+         p50 ≤ {} µs, p99 ≤ {} µs, {} errors",
         dataset,
         report.clients,
         report.answers.len() + report.errors.len(),
+        report.mix,
+        report.idle_open,
         format_duration(report.wall),
         report.qps,
         report.p50_us,
@@ -537,7 +549,15 @@ fn cmd_bench_serve(cfg: &Config) -> Result<()> {
     eprintln!("wrote {bench_path}");
 
     if let Some(p) = &cfg.json {
-        std::fs::write(p, report.answers_json()).with_context(|| format!("writing {p}"))?;
+        if mix.is_uniform() {
+            std::fs::write(p, report.answers_json()).with_context(|| format!("writing {p}"))?;
+        } else {
+            eprintln!(
+                "skipping {p}: a {} mix repeats queries, so the answers document is not \
+                 diffable against `query --fresh`",
+                report.mix
+            );
+        }
     }
     if !report.errors.is_empty() {
         let (q, e) = &report.errors[0];

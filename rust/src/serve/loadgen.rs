@@ -11,6 +11,7 @@
 use crate::schema::Schema;
 use crate::store::gen_queries;
 use crate::util::error::{Context, Result};
+use crate::util::rng::Pcg64;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
@@ -18,6 +19,74 @@ use std::time::{Duration, Instant};
 
 use super::metrics::LatencyHistogram;
 use super::protocol::{json_field, parse_count_response, render_answers};
+use super::reactor::max_open_files;
+
+/// How the hot clients pick queries from the generated batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mix {
+    /// Every generated query exactly once, round-robin across clients —
+    /// answers stay byte-diffable against `mrss query --fresh`.
+    Uniform,
+    /// Zipf-skewed sampling with exponent `s`: hot queries repeat, the
+    /// tail is rare — the shape a structure-search workload actually has.
+    /// Repeats make the answers document non-diffable; the run reports
+    /// throughput/latency instead.
+    Zipf(f64),
+}
+
+impl Mix {
+    /// Parse a `--mix` flag value: `uniform` or `zipf:<s>`.
+    pub fn parse(s: &str) -> Result<Mix> {
+        if s == "uniform" {
+            return Ok(Mix::Uniform);
+        }
+        if let Some(rest) = s.strip_prefix("zipf:") {
+            let exp: f64 =
+                rest.parse().map_err(|_| crate::anyhow!("bad zipf exponent `{rest}`"))?;
+            if !(exp > 0.0 && exp.is_finite()) {
+                crate::bail!("zipf exponent must be finite and > 0, got {exp}");
+            }
+            return Ok(Mix::Zipf(exp));
+        }
+        crate::bail!("unknown mix `{s}` (uniform|zipf:<s>)")
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Mix::Uniform => "uniform".to_string(),
+            Mix::Zipf(s) => format!("zipf:{s}"),
+        }
+    }
+
+    pub fn is_uniform(&self) -> bool {
+        matches!(self, Mix::Uniform)
+    }
+}
+
+/// Zipf-distributed index sampler over `0..n`: `P(i) ∝ 1/(i+1)^s`.
+/// Cumulative weights are precomputed once; each draw is one uniform
+/// variate plus a binary search.
+struct ZipfSampler {
+    cum: Vec<f64>,
+    total: f64,
+}
+
+impl ZipfSampler {
+    fn new(n: usize, s: f64) -> ZipfSampler {
+        let mut cum = Vec::with_capacity(n);
+        let mut total = 0.0;
+        for i in 0..n {
+            total += 1.0 / ((i + 1) as f64).powf(s);
+            cum.push(total);
+        }
+        ZipfSampler { cum, total }
+    }
+
+    fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.f64() * self.total;
+        self.cum.partition_point(|&c| c < u).min(self.cum.len().saturating_sub(1))
+    }
+}
 
 /// Load-generation parameters.
 #[derive(Debug, Clone)]
@@ -30,6 +99,11 @@ pub struct LoadgenConfig {
     pub queries: usize,
     /// Seed for the deterministic query batch (matches `query --gen`).
     pub seed: u64,
+    /// Query selection: uniform round-robin or zipf-skewed.
+    pub mix: Mix,
+    /// Idle connections to open before the hot run and hold through the
+    /// final `STATS` — the 10k-connections claim, reproduced on demand.
+    pub idle: usize,
     /// Fetch a final `STATS` snapshot after the run.
     pub stats: bool,
     /// Send `SHUTDOWN` after the run and require the `BYE` ack.
@@ -43,6 +117,8 @@ impl Default for LoadgenConfig {
             clients: 8,
             queries: 200,
             seed: 7,
+            mix: Mix::Uniform,
+            idle: 0,
             stats: true,
             shutdown: false,
         }
@@ -63,6 +139,11 @@ pub struct LoadgenReport {
     /// Client-side latency bucket upper bounds, µs.
     pub p50_us: u64,
     pub p99_us: u64,
+    /// Query mix the run used (`uniform` / `zipf:<s>`).
+    pub mix: String,
+    /// Idle connections actually held open during the hot run (may be
+    /// below the requested `--idle` when the fd limit clamps the pool).
+    pub idle_open: usize,
     /// The server's final `STATS` JSON object, when requested.
     pub server_stats: Option<String>,
 }
@@ -79,9 +160,12 @@ impl LoadgenReport {
         let server = self.server_stats.as_deref().unwrap_or("null");
         format!(
             "{{\n  \"bench\": \"serve\",\n  \"dataset\": \"{dataset}\",\n  \"clients\": {},\n  \
+             \"mix\": \"{}\",\n  \"idle\": {},\n  \
              \"queries\": {},\n  \"errors\": {},\n  \"wall_secs\": {:.4},\n  \"qps\": {:.1},\n  \
              \"client_p50_us\": {},\n  \"client_p99_us\": {},\n  \"server\": {server}\n}}\n",
             self.clients,
+            self.mix,
+            self.idle_open,
             self.answers.len() + self.errors.len(),
             self.errors.len(),
             self.wall.as_secs_f64(),
@@ -114,7 +198,41 @@ fn shard(queries: &[String], client: usize, clients: usize) -> Vec<(usize, Strin
         .collect()
 }
 
-/// Run the load: `clients` threads, `queries` total, against `addr`.
+/// One client's zipf-skewed selection: the same index set as [`shard`]
+/// (so tags stay unique across clients), but each tag carries a query
+/// sampled from the skewed distribution instead of the round-robin one.
+fn skewed(queries: &[String], client: usize, clients: usize, s: f64, seed: u64) -> Vec<(usize, String)> {
+    let sampler = ZipfSampler::new(queries.len(), s);
+    let mut rng = Pcg64::new(seed, client as u64 + 1);
+    let n = queries.len();
+    let count = n / clients + usize::from(client < n % clients);
+    (0..count)
+        .map(|k| (client + k * clients, queries[sampler.sample(&mut rng)].clone()))
+        .collect()
+}
+
+/// Open up to `want` idle connections, clamped well below the process's
+/// open-file limit so the hot clients and control connections always fit.
+fn open_idle_pool(addr: &str, want: usize, clients: usize) -> Vec<TcpStream> {
+    if want == 0 {
+        return Vec::new();
+    }
+    let budget = max_open_files()
+        .map(|lim| (lim as usize).saturating_sub(clients + 64))
+        .unwrap_or(want);
+    let target = want.min(budget);
+    let mut pool = Vec::with_capacity(target);
+    for _ in 0..target {
+        match TcpStream::connect(addr) {
+            Ok(s) => pool.push(s),
+            Err(_) => break, // local fd limit or server shed: hold what we got
+        }
+    }
+    pool
+}
+
+/// Run the load: `clients` threads, `queries` total, against `addr`,
+/// with `cfg.idle` idle connections held open for the whole run.
 /// Connection-level failures abort the run; per-query error responses are
 /// recorded and reported, not fatal.
 pub fn run(schema: &Schema, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
@@ -122,14 +240,22 @@ pub fn run(schema: &Schema, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let queries = gen_queries(schema, cfg.queries, cfg.seed);
     let hist = Arc::new(LatencyHistogram::default());
 
+    // The idle pool goes up first so the hot run (and its p50/p99) is
+    // measured with every idle connection registered server-side.
+    let idle_pool = open_idle_pool(&cfg.addr, cfg.idle, clients);
+    let idle_open = idle_pool.len();
+
     let t0 = Instant::now();
     let mut handles = Vec::with_capacity(clients);
     for c in 0..clients {
-        let mine = shard(&queries, c, clients);
+        let mine = match cfg.mix {
+            Mix::Uniform => shard(&queries, c, clients),
+            Mix::Zipf(s) => skewed(&queries, c, clients, s, cfg.seed),
+        };
         let addr = cfg.addr.clone();
         let hist = Arc::clone(&hist);
         handles.push(std::thread::spawn(
-            move || -> Result<Vec<(usize, Result<u128, String>)>> {
+            move || -> Result<Vec<(usize, String, Result<u128, String>)>> {
                 let stream = TcpStream::connect(&addr)
                     .with_context(|| format!("client {c}: connecting to {addr}"))?;
                 stream.set_nodelay(true).ok();
@@ -147,30 +273,34 @@ pub fn run(schema: &Schema, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                         crate::bail!("client {c}: server closed the connection mid-run");
                     }
                     hist.record(t.elapsed());
-                    out.push((idx, parse_count_response(&line)));
+                    out.push((idx, q, parse_count_response(&line)));
                 }
                 Ok(out)
             },
         ));
     }
 
-    let mut tagged: Vec<(usize, Result<u128, String>)> = Vec::with_capacity(queries.len());
+    let mut tagged: Vec<(usize, String, Result<u128, String>)> =
+        Vec::with_capacity(queries.len());
     for h in handles {
         tagged.extend(h.join().map_err(|_| crate::anyhow!("client thread panicked"))??);
     }
     let wall = t0.elapsed();
-    tagged.sort_by_key(|&(i, _)| i);
+    tagged.sort_by(|a, b| a.0.cmp(&b.0));
 
     let mut answers = Vec::new();
     let mut errors = Vec::new();
-    for (i, outcome) in tagged {
+    for (_, q, outcome) in tagged {
         match outcome {
-            Ok(c) => answers.push((queries[i].clone(), c)),
-            Err(e) => errors.push((queries[i].clone(), e)),
+            Ok(c) => answers.push((q, c)),
+            Err(e) => errors.push((q, e)),
         }
     }
 
+    // STATS is fetched while the idle pool is still open, so the reported
+    // `active` / `conns` distribution reflects the loaded server.
     let server_stats = if cfg.stats { Some(control(&cfg.addr, "STATS")?) } else { None };
+    drop(idle_pool);
     if cfg.shutdown {
         let bye = control(&cfg.addr, "SHUTDOWN")?;
         if !(bye == "BYE" || bye.contains("\"bye\"")) {
@@ -187,6 +317,8 @@ pub fn run(schema: &Schema, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         qps: n as f64 / wall.as_secs_f64().max(1e-9),
         p50_us: hist.quantile_upper_us(0.50),
         p99_us: hist.quantile_upper_us(0.99),
+        mix: cfg.mix.name(),
+        idle_open,
         server_stats,
     })
 }
@@ -232,6 +364,8 @@ mod tests {
             qps: 2.0,
             p50_us: 64,
             p99_us: 512,
+            mix: "uniform".to_string(),
+            idle_open: 0,
             server_stats: Some(
                 "{\"queries\":1,\"adtree\":{\"hits\":9,\"builds\":3,\"coalesced_waits\":2,\
                  \"evictions\":0,\"bytes\":10}}"
@@ -239,7 +373,13 @@ mod tests {
             ),
         };
         let j = rep.bench_json("uwcse");
-        for key in ["\"bench\": \"serve\"", "\"clients\": 8", "\"client_p99_us\": 512"] {
+        for key in [
+            "\"bench\": \"serve\"",
+            "\"clients\": 8",
+            "\"client_p99_us\": 512",
+            "\"mix\": \"uniform\"",
+            "\"idle\": 0",
+        ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
         assert_eq!(rep.zero_duplicate_builds(12), Some(true));
@@ -248,5 +388,54 @@ mod tests {
             LoadgenReport { server_stats: None, ..rep }.zero_duplicate_builds(12),
             None
         );
+    }
+
+    #[test]
+    fn mix_parses_uniform_and_zipf() {
+        assert_eq!(Mix::parse("uniform").unwrap(), Mix::Uniform);
+        assert_eq!(Mix::parse("zipf:1.1").unwrap(), Mix::Zipf(1.1));
+        assert_eq!(Mix::parse("zipf:0.5").unwrap().name(), "zipf:0.5");
+        assert!(Mix::parse("zipf:").is_err());
+        assert!(Mix::parse("zipf:-1").is_err());
+        assert!(Mix::parse("zipf:nope").is_err());
+        assert!(Mix::parse("gauss").is_err());
+        assert!(Mix::Uniform.is_uniform());
+        assert!(!Mix::Zipf(1.0).is_uniform());
+    }
+
+    #[test]
+    fn zipf_sampler_is_skewed_and_deterministic() {
+        let sampler = ZipfSampler::new(100, 1.2);
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 1);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..10_000 {
+            let i = sampler.sample(&mut a);
+            assert_eq!(i, sampler.sample(&mut b), "same seed must sample identically");
+            assert!(i < 100);
+            counts[i] += 1;
+        }
+        // Head beats tail by a wide margin under s=1.2.
+        let head: usize = counts[..10].iter().sum();
+        let tail: usize = counts[90..].iter().sum();
+        assert!(head > 10 * tail.max(1), "zipf head {head} vs tail {tail} not skewed");
+        assert!(counts[0] > counts[50], "rank 0 must dominate rank 50");
+    }
+
+    #[test]
+    fn skewed_selection_keeps_tags_unique_and_total_constant() {
+        let qs: Vec<String> = (0..10).map(|i| format!("q{i}")).collect();
+        let mut seen = vec![false; qs.len()];
+        let mut total = 0;
+        for c in 0..3 {
+            for (tag, q) in skewed(&qs, c, 3, 1.0, 7) {
+                assert!(!seen[tag], "tag {tag} assigned twice");
+                seen[tag] = true;
+                assert!(qs.contains(&q));
+                total += 1;
+            }
+        }
+        assert_eq!(total, qs.len(), "skewed mix must issue the same total load");
+        assert!(seen.iter().all(|&s| s));
     }
 }

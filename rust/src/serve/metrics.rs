@@ -42,6 +42,13 @@ impl LatencyHistogram {
         self.buckets[Self::bucket_of(d.as_micros())].fetch_add(1, Relaxed);
     }
 
+    /// Record a raw value instead of a duration — the same log₂ buckets
+    /// serve any positive magnitude (e.g. concurrent-connection counts),
+    /// with `quantile_upper_us` then reading as a plain value bound.
+    pub fn record_value(&self, v: u64) {
+        self.buckets[Self::bucket_of(v as u128)].fetch_add(1, Relaxed);
+    }
+
     pub fn count(&self) -> u64 {
         self.buckets.iter().map(|b| b.load(Relaxed)).sum()
     }
@@ -81,6 +88,21 @@ pub struct ServeMetrics {
     /// Connections currently being served.
     pub active: AtomicU64,
     pub latency: LatencyHistogram,
+    /// Reactor wake-ups: poller waits that returned with ≥1 event.
+    pub wakeups: AtomicU64,
+    /// Fds currently registered across all reactor shards (gauge).
+    pub registered_fds: AtomicU64,
+    /// Deepest per-wakeup work batch any shard has processed (events +
+    /// drained completions) — the run-queue high-water mark.
+    pub run_queue_peak: AtomicU64,
+    /// BATCH members currently executing on the worker pool (gauge).
+    pub batch_inflight: AtomicU64,
+    /// Most BATCH members ever observed in flight at once: > 1 proves
+    /// fan-out executes members concurrently, not serially.
+    pub batch_peak: AtomicU64,
+    /// Distribution of `active + 1` sampled at every accept — how many
+    /// connections were open each time one more arrived.
+    pub conns: LatencyHistogram,
 }
 
 impl Default for ServeMetrics {
@@ -93,6 +115,12 @@ impl Default for ServeMetrics {
             connections: AtomicU64::new(0),
             active: AtomicU64::new(0),
             latency: LatencyHistogram::default(),
+            wakeups: AtomicU64::new(0),
+            registered_fds: AtomicU64::new(0),
+            run_queue_peak: AtomicU64::new(0),
+            batch_inflight: AtomicU64::new(0),
+            batch_peak: AtomicU64::new(0),
+            conns: LatencyHistogram::default(),
         }
     }
 }
@@ -102,6 +130,7 @@ impl ServeMetrics {
     pub fn snapshot(&self, store: StoreStats, trees: TreeStats) -> ServeSnapshot {
         let uptime = self.start.elapsed();
         let queries = self.queries.load(Relaxed);
+        let wakeups = self.wakeups.load(Relaxed);
         ServeSnapshot {
             uptime_secs: uptime.as_secs_f64(),
             queries,
@@ -112,6 +141,13 @@ impl ServeMetrics {
             qps: queries as f64 / uptime.as_secs_f64().max(1e-9),
             p50_us: self.latency.quantile_upper_us(0.50),
             p99_us: self.latency.quantile_upper_us(0.99),
+            wakeups,
+            wakeups_per_sec: wakeups as f64 / uptime.as_secs_f64().max(1e-9),
+            registered_fds: self.registered_fds.load(Relaxed),
+            run_queue_peak: self.run_queue_peak.load(Relaxed),
+            batch_peak: self.batch_peak.load(Relaxed),
+            conns_p50: self.conns.quantile_upper_us(0.50),
+            conns_p99: self.conns.quantile_upper_us(0.99),
             store,
             trees,
         }
@@ -132,6 +168,18 @@ pub struct ServeSnapshot {
     /// Latency bucket upper bounds, µs (≤2× relative error by design).
     pub p50_us: u64,
     pub p99_us: u64,
+    /// Reactor wake-ups with ≥1 event, total and per second.
+    pub wakeups: u64,
+    pub wakeups_per_sec: f64,
+    /// Fds registered across all reactor shards right now.
+    pub registered_fds: u64,
+    /// Deepest per-wakeup work batch any shard processed.
+    pub run_queue_peak: u64,
+    /// Most BATCH members in flight at once (> 1 ⇒ concurrent fan-out).
+    pub batch_peak: u64,
+    /// Connections-open distribution sampled at accept (bucket bounds).
+    pub conns_p50: u64,
+    pub conns_p99: u64,
     pub store: StoreStats,
     pub trees: TreeStats,
 }
@@ -142,9 +190,13 @@ impl ServeSnapshot {
         format!(
             "{{\"uptime_secs\":{:.3},\"queries\":{},\"errors\":{},\"busy_rejects\":{},\
              \"connections\":{},\"active\":{},\"qps\":{:.1},\"p50_us\":{},\"p99_us\":{},\
+             \"batch_peak\":{},\
+             \"reactor\":{{\"registered_fds\":{},\"run_queue_peak\":{},\"wakeups\":{},\
+             \"wakeups_per_sec\":{:.1}}},\
+             \"conns\":{{\"p50\":{},\"p99\":{}}},\
              \"store\":{{\"hits\":{},\"misses\":{},\"evictions\":{},\"bytes_read\":{}}},\
-             \"adtree\":{{\"hits\":{},\"builds\":{},\"coalesced_waits\":{},\"evictions\":{},\
-             \"bytes\":{}}}}}",
+             \"adtree\":{{\"hits\":{},\"builds\":{},\"building\":{},\"coalesced_waits\":{},\
+             \"evictions\":{},\"bytes\":{}}}}}",
             self.uptime_secs,
             self.queries,
             self.errors,
@@ -154,12 +206,20 @@ impl ServeSnapshot {
             self.qps,
             self.p50_us,
             self.p99_us,
+            self.batch_peak,
+            self.registered_fds,
+            self.run_queue_peak,
+            self.wakeups,
+            self.wakeups_per_sec,
+            self.conns_p50,
+            self.conns_p99,
             self.store.hits,
             self.store.misses,
             self.store.evictions,
             self.store.bytes_read,
             self.trees.hits,
             self.trees.builds,
+            self.trees.building,
             self.trees.coalesced_waits,
             self.trees.evictions,
             self.trees.bytes,
@@ -215,13 +275,47 @@ mod tests {
         let m = ServeMetrics::default();
         m.queries.fetch_add(3, Relaxed);
         m.latency.record(Duration::from_micros(5));
+        m.wakeups.fetch_add(10, Relaxed);
+        m.registered_fds.fetch_add(4, Relaxed);
+        m.run_queue_peak.fetch_max(9, Relaxed);
+        m.batch_peak.fetch_max(2, Relaxed);
+        m.conns.record_value(3);
         let snap = m.snapshot(StoreStats::default(), TreeStats::default());
         let j = snap.to_json();
-        for key in ["\"queries\":3", "\"qps\":", "\"p99_us\":", "\"adtree\"", "\"store\""] {
+        for key in [
+            "\"queries\":3",
+            "\"qps\":",
+            "\"p99_us\":",
+            "\"adtree\"",
+            "\"store\"",
+            "\"reactor\":{\"registered_fds\":4",
+            "\"run_queue_peak\":9",
+            "\"wakeups\":10",
+            "\"batch_peak\":2",
+            "\"conns\":{\"p50\":4,\"p99\":4}",
+            "\"building\":0",
+        ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
-        // Round-trips through the flat-JSON field extractor.
-        assert_eq!(super::super::protocol::json_field(&j, "queries").as_deref(), Some("3"));
+        // Round-trips through the flat-JSON field extractor; `builds`
+        // must keep resolving to the adtree counter, not `building`.
+        let f = |k| super::super::protocol::json_field(&j, k);
+        assert_eq!(f("queries").as_deref(), Some("3"));
+        assert_eq!(f("builds").as_deref(), Some("0"));
+        assert_eq!(f("registered_fds").as_deref(), Some("4"));
+        assert_eq!(f("batch_peak").as_deref(), Some("2"));
+    }
+
+    #[test]
+    fn record_value_buckets_connection_counts() {
+        let h = LatencyHistogram::default();
+        for _ in 0..9 {
+            h.record_value(100); // (64,128] bucket ⇒ upper bound 128
+        }
+        h.record_value(10_000);
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.quantile_upper_us(0.50), 128);
+        assert_eq!(h.quantile_upper_us(0.99), 16_384);
     }
 
     #[test]

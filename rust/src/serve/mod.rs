@@ -7,20 +7,30 @@
 //!
 //! * [`protocol`] — a line-delimited wire protocol: the `query` CLI
 //!   grammar plus `BATCH` / `STATS` / `PING` / `SHUTDOWN`, with JSON or
-//!   text responses;
-//! * [`server`] — a dependency-free `std::net::TcpListener` front-end
-//!   with a fixed worker pool, a bounded accept queue (full ⇒ `BUSY`),
-//!   a per-connection request cap, and drain-clean shutdown — all workers
-//!   sharing one concurrency-safe [`CountServer`](crate::store::CountServer)
-//!   whose ADtree builds coalesce and whose tree bytes are charged to the
-//!   store's `mem_bytes` budget;
-//! * [`metrics`] — wait-free counters + a fixed-bucket latency histogram
-//!   behind the `STATS` snapshot (qps, p50/p99, cache hit/miss/eviction,
-//!   active connections), foldable into
+//!   text responses, and the resumable [`LineBuffer`](protocol::LineBuffer)
+//!   the nonblocking server parses through;
+//! * [`reactor`] — dependency-free readiness polling: raw-syscall
+//!   `poll(2)` / `epoll(7)` backends, the `eventfd`/pipe wake primitive,
+//!   and the `RLIMIT_NOFILE` probe — no external crates, same discipline
+//!   as the rest of the tree;
+//! * [`server`] — sharded reactor threads each running an event loop of
+//!   nonblocking connection state machines (idle connections cost an fd,
+//!   not a thread), with CPU-bound query execution handed to a fixed
+//!   worker pool and `BATCH` members fanned out concurrently across it —
+//!   replies stitched back in order, byte-identical to serial execution.
+//!   All workers share one concurrency-safe
+//!   [`CountServer`](crate::store::CountServer) whose ADtree builds
+//!   coalesce and whose tree bytes are charged to the store's
+//!   `mem_bytes` budget;
+//! * [`metrics`] — wait-free counters + fixed-bucket histograms behind
+//!   the `STATS` snapshot (qps, p50/p99, reactor gauges, connection
+//!   distribution, batch fan-out peak), foldable into
 //!   [`MjMetrics`](crate::mobius::MjMetrics);
 //! * [`loadgen`] — the `bench-serve` client: N connections hammering the
-//!   socket with a deterministic batch, emitting `BENCH_serve.json` and
-//!   an answers document byte-comparable with `mrss query --fresh`.
+//!   socket with a deterministic batch (uniform or `zipf:<s>`-skewed),
+//!   an optional idle-connection pool (`--idle`), emitting
+//!   `BENCH_serve.json` and — in uniform mode — an answers document
+//!   byte-comparable with `mrss query --fresh`.
 //!
 //! CLI: `mrss serve --store DIR --listen ADDR` starts the server;
 //! `mrss bench-serve` drives it (or self-hosts one on an ephemeral port).
@@ -28,9 +38,11 @@
 pub mod loadgen;
 pub mod metrics;
 pub mod protocol;
+pub mod reactor;
 pub mod server;
 
-pub use loadgen::{LoadgenConfig, LoadgenReport};
+pub use loadgen::{LoadgenConfig, LoadgenReport, Mix};
 pub use metrics::{LatencyHistogram, ServeMetrics, ServeSnapshot};
-pub use protocol::{parse_request, Request, Response};
+pub use protocol::{parse_request, LineBuffer, Request, Response};
+pub use reactor::{max_open_files, Poller, PollerKind, WakeFd};
 pub use server::{serve, ServeConfig, ServeHandle};

@@ -206,6 +206,84 @@ pub fn json_escape(s: &str) -> String {
     out
 }
 
+/// A resumable per-connection line assembler for nonblocking reads: the
+/// reactor pushes whatever bytes arrived, then drains complete lines one
+/// at a time. The 64 KiB [`MAX_LINE`] cap is enforced *incrementally* —
+/// an endless unterminated stream errors out as soon as the buffer passes
+/// the cap, it never grows memory waiting for a `\n` that isn't coming.
+///
+/// `scanned` remembers how far the newline scan got, so feeding N bytes
+/// across many partial reads stays O(N) total, not O(N²).
+#[derive(Debug, Default)]
+pub struct LineBuffer {
+    buf: Vec<u8>,
+    scanned: usize,
+}
+
+impl LineBuffer {
+    pub fn new() -> LineBuffer {
+        LineBuffer::default()
+    }
+
+    /// Append freshly-read bytes.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes currently buffered (complete or partial).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Is a full `\n`-terminated line (or a cap overrun) ready to take?
+    /// Cheap to call repeatedly: only unscanned bytes are examined, and
+    /// `scanned` halts on the decision point so the state stays stable.
+    pub fn has_line(&mut self) -> bool {
+        while self.scanned < self.buf.len() {
+            if self.buf[self.scanned] == b'\n' {
+                return true;
+            }
+            if self.scanned >= MAX_LINE {
+                // MAX_LINE+1 bytes and no newline: the *current* line has
+                // overrun the cap (later pipelined lines don't matter).
+                return true;
+            }
+            self.scanned += 1;
+        }
+        false
+    }
+
+    /// Take the next complete line, with the terminator (`\n` or `\r\n`)
+    /// stripped. `Ok(None)` means "no full line yet — read more".
+    /// `Err` means the connection is unrecoverable (cap overrun or
+    /// non-UTF-8) and must be closed after the error is reported.
+    pub fn next_line(&mut self) -> Result<Option<String>, String> {
+        if !self.has_line() {
+            return Ok(None);
+        }
+        // has_line stopped `scanned` either on the newline or on the
+        // first byte past the cap.
+        if self.buf[self.scanned] != b'\n' {
+            return Err(format!("request line exceeds {MAX_LINE} bytes"));
+        }
+        let nl = self.scanned;
+        let mut line: Vec<u8> = self.buf.drain(..=nl).collect();
+        self.scanned = 0;
+        line.pop(); // the \n
+        if line.last() == Some(&b'\r') {
+            line.pop();
+        }
+        match String::from_utf8(line) {
+            Ok(s) => Ok(Some(s)),
+            Err(_) => Err("request line is not valid UTF-8".to_string()),
+        }
+    }
+}
+
 /// Render a `(query, count)` batch as the canonical JSON answer document —
 /// the format `mrss query` prints and the smoke jobs `diff`.
 pub fn render_answers(answers: &[(String, u128)]) -> String {
@@ -275,6 +353,81 @@ mod tests {
         assert_eq!(json_field(obj, "qps").as_deref(), Some("1.5"));
         assert_eq!(json_field(obj, "query").as_deref(), Some("a \"b\""));
         assert_eq!(json_field(obj, "absent"), None);
+    }
+
+    #[test]
+    fn line_buffer_reassembles_split_lines() {
+        let mut lb = LineBuffer::new();
+        lb.push(b"PI");
+        assert!(!lb.has_line());
+        assert_eq!(lb.next_line(), Ok(None));
+        lb.push(b"NG\nSTA");
+        assert_eq!(lb.next_line(), Ok(Some("PING".to_string())));
+        assert_eq!(lb.next_line(), Ok(None));
+        lb.push(b"TS\r\n");
+        assert_eq!(lb.next_line(), Ok(Some("STATS".to_string())));
+        assert!(lb.is_empty());
+    }
+
+    #[test]
+    fn line_buffer_drains_pipelined_lines_in_order() {
+        let mut lb = LineBuffer::new();
+        lb.push(b"a=1\nb=2\nc=3\n");
+        assert_eq!(lb.next_line(), Ok(Some("a=1".to_string())));
+        assert_eq!(lb.next_line(), Ok(Some("b=2".to_string())));
+        assert_eq!(lb.next_line(), Ok(Some("c=3".to_string())));
+        assert_eq!(lb.next_line(), Ok(None));
+        assert_eq!(lb.len(), 0);
+    }
+
+    #[test]
+    fn line_buffer_caps_unterminated_lines_incrementally() {
+        let mut lb = LineBuffer::new();
+        // Feed the overrun in chunks: the error fires once the cap is
+        // passed, long before any newline.
+        let chunk = vec![b'x'; 16 * 1024];
+        for _ in 0..4 {
+            lb.push(&chunk);
+            assert_eq!(lb.next_line(), Ok(None));
+        }
+        lb.push(b"x"); // MAX_LINE + 1 bytes, still no newline
+        assert!(lb.has_line());
+        let err = lb.next_line().unwrap_err();
+        assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn line_buffer_accepts_a_line_exactly_at_the_cap() {
+        let mut lb = LineBuffer::new();
+        let mut line = vec![b'y'; MAX_LINE];
+        line.push(b'\n');
+        lb.push(&line);
+        let got = lb.next_line().unwrap().unwrap();
+        assert_eq!(got.len(), MAX_LINE);
+    }
+
+    #[test]
+    fn line_buffer_total_may_exceed_cap_across_lines() {
+        // Many pipelined small lines whose total passes MAX_LINE must all
+        // parse: the cap is per line, not per buffer.
+        let mut lb = LineBuffer::new();
+        let n = MAX_LINE / 8 + 10;
+        for _ in 0..n {
+            lb.push(b"q=12345\n");
+        }
+        assert!(lb.len() > MAX_LINE);
+        for _ in 0..n {
+            assert_eq!(lb.next_line(), Ok(Some("q=12345".to_string())));
+        }
+        assert_eq!(lb.next_line(), Ok(None));
+    }
+
+    #[test]
+    fn line_buffer_rejects_invalid_utf8() {
+        let mut lb = LineBuffer::new();
+        lb.push(&[0xff, 0xfe, b'\n']);
+        let err = lb.next_line().unwrap_err();
+        assert!(err.contains("UTF-8"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,762 @@
+//! Dependency-free readiness polling: a thin raw-syscall wrapper over
+//! `poll(2)` (every unix) and `epoll(7)` (Linux), plus the wake primitive
+//! (`eventfd(2)` / nonblocking pipe) the reactor shards block on.
+//!
+//! The crate deliberately has no external dependencies, so the syscalls
+//! are declared directly against the libc that `std` already links — the
+//! same discipline as the hand-rolled `anyhow`/`rand` shims under
+//! `util/`. Only the level-triggered subset the server needs is wrapped:
+//! register / modify / deregister an fd with a `usize` token, and wait
+//! for readiness events with an optional timeout.
+//!
+//! Everything here is unix-only at runtime; on other platforms the
+//! constructors return a clean error so `serve --listen` fails with a
+//! message instead of a compile break.
+
+use crate::util::error::Result;
+use std::time::Duration;
+
+/// Raw file descriptor (mirrors `std::os::unix::io::RawFd`; aliased here
+/// so `server.rs` stays free of platform `cfg`s).
+pub type RawFd = i32;
+
+/// Extract the raw fd of a socket/listener without importing unix traits
+/// at the call site.
+#[cfg(unix)]
+pub fn fd_of<T: std::os::unix::io::AsRawFd>(t: &T) -> RawFd {
+    t.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+pub fn fd_of<T>(_t: &T) -> RawFd {
+    -1
+}
+
+/// What a registration wants to hear about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    pub read: bool,
+    pub write: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest { read: true, write: false };
+    pub const WRITE: Interest = Interest { read: false, write: true };
+    pub const BOTH: Interest = Interest { read: true, write: true };
+}
+
+/// One readiness event. `readable` includes hangup/error conditions so a
+/// dead peer always surfaces as a (zero-byte / errored) read.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Which readiness backend a [`Poller`] uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PollerKind {
+    /// `poll(2)` — portable across unix, O(registered fds) per wait.
+    Poll,
+    /// `epoll(7)` — Linux, O(ready fds) per wait.
+    #[cfg(target_os = "linux")]
+    Epoll,
+}
+
+impl PollerKind {
+    /// The best backend this OS offers (epoll on Linux, poll elsewhere).
+    pub fn os_default() -> PollerKind {
+        #[cfg(target_os = "linux")]
+        {
+            PollerKind::Epoll
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            PollerKind::Poll
+        }
+    }
+
+    /// Parse a `--poller` flag value.
+    pub fn parse(s: &str) -> Result<PollerKind> {
+        match s {
+            "poll" => Ok(PollerKind::Poll),
+            #[cfg(target_os = "linux")]
+            "epoll" => Ok(PollerKind::Epoll),
+            other => crate::bail!("unknown poller `{other}` (poll|epoll, epoll is Linux-only)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PollerKind::Poll => "poll",
+            #[cfg(target_os = "linux")]
+            PollerKind::Epoll => "epoll",
+        }
+    }
+}
+
+/// A level-triggered readiness poller over one backend.
+pub enum Poller {
+    Poll(PollPoller),
+    #[cfg(target_os = "linux")]
+    Epoll(EpollPoller),
+}
+
+impl Poller {
+    pub fn new(kind: PollerKind) -> Result<Poller> {
+        match kind {
+            PollerKind::Poll => Ok(Poller::Poll(PollPoller::new())),
+            #[cfg(target_os = "linux")]
+            PollerKind::Epoll => Ok(Poller::Epoll(EpollPoller::new()?)),
+        }
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: usize, interest: Interest) -> Result<()> {
+        match self {
+            Poller::Poll(p) => p.register(fd, token, interest),
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.register(fd, token, interest),
+        }
+    }
+
+    pub fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> Result<()> {
+        match self {
+            Poller::Poll(p) => p.modify(fd, token, interest),
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.modify(fd, token, interest),
+        }
+    }
+
+    pub fn deregister(&mut self, fd: RawFd) -> Result<()> {
+        match self {
+            Poller::Poll(p) => p.deregister(fd),
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.deregister(fd),
+        }
+    }
+
+    /// Block until at least one registered fd is ready or `timeout`
+    /// elapses (`None` = forever). Ready events are appended to `events`
+    /// (cleared first); returns how many were delivered.
+    pub fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> Result<usize> {
+        match self {
+            Poller::Poll(p) => p.wait(events, timeout),
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.wait(events, timeout),
+        }
+    }
+}
+
+/// Milliseconds for `poll`/`epoll_wait`: `None` ⇒ -1 (forever), rounded
+/// up so a 1 ns timeout never busy-spins as 0 ms.
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => d.as_millis().min(i32::MAX as u128).max(1) as i32,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// unix syscall layer
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_short, c_uint, c_void};
+
+    // `nfds_t` is `unsigned long` on Linux, `unsigned int` on the BSDs.
+    #[cfg(target_os = "linux")]
+    pub type NfdsT = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    pub type NfdsT = c_uint;
+
+    pub const POLLIN: c_short = 0x001;
+    pub const POLLOUT: c_short = 0x004;
+    pub const POLLERR: c_short = 0x008;
+    pub const POLLHUP: c_short = 0x010;
+    pub const POLLNVAL: c_short = 0x020;
+
+    /// `struct pollfd` — identical layout on every unix.
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: c_short,
+        pub revents: c_short,
+    }
+
+    /// `struct rlimit`: `rlim_t` is 64-bit on every 64-bit unix.
+    #[repr(C)]
+    pub struct RLimit {
+        pub cur: u64,
+        pub max: u64,
+    }
+
+    #[cfg(target_os = "linux")]
+    pub const RLIMIT_NOFILE: c_int = 7;
+    #[cfg(not(target_os = "linux"))]
+    pub const RLIMIT_NOFILE: c_int = 8;
+
+    pub const F_SETFL: c_int = 4;
+    pub const F_GETFL: c_int = 3;
+    #[cfg(target_os = "linux")]
+    pub const O_NONBLOCK: c_int = 0o4000;
+    #[cfg(not(target_os = "linux"))]
+    pub const O_NONBLOCK: c_int = 0x0004;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        pub fn close(fd: c_int) -> c_int;
+        pub fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+        pub fn getrlimit(resource: c_int, rlim: *mut RLimit) -> c_int;
+        #[cfg(not(target_os = "linux"))]
+        pub fn pipe(fds: *mut c_int) -> c_int;
+    }
+
+    #[cfg(target_os = "linux")]
+    pub mod epoll {
+        use std::os::raw::c_int;
+
+        pub const EPOLLIN: u32 = 0x001;
+        pub const EPOLLOUT: u32 = 0x004;
+        pub const EPOLLERR: u32 = 0x008;
+        pub const EPOLLHUP: u32 = 0x010;
+        pub const EPOLL_CTL_ADD: c_int = 1;
+        pub const EPOLL_CTL_DEL: c_int = 2;
+        pub const EPOLL_CTL_MOD: c_int = 3;
+        pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+
+        /// `struct epoll_event` — packed on x86-64 (kernel ABI), naturally
+        /// aligned everywhere else.
+        #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+        #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+        #[derive(Clone, Copy)]
+        pub struct EpollEvent {
+            pub events: u32,
+            pub data: u64,
+        }
+
+        extern "C" {
+            pub fn epoll_create1(flags: c_int) -> c_int;
+            pub fn epoll_ctl(
+                epfd: c_int,
+                op: c_int,
+                fd: c_int,
+                event: *mut EpollEvent,
+            ) -> c_int;
+            pub fn epoll_wait(
+                epfd: c_int,
+                events: *mut EpollEvent,
+                maxevents: c_int,
+                timeout: c_int,
+            ) -> c_int;
+        }
+
+        #[cfg(target_os = "linux")]
+        pub const EFD_CLOEXEC: c_int = 0o2000000;
+        #[cfg(target_os = "linux")]
+        pub const EFD_NONBLOCK: c_int = 0o4000;
+
+        extern "C" {
+            pub fn eventfd(initval: u32, flags: c_int) -> c_int;
+        }
+    }
+}
+
+/// Last OS error as the crate's error type, with context.
+#[cfg(unix)]
+fn os_err(what: &str) -> crate::util::error::Error {
+    crate::anyhow!("{what}: {}", std::io::Error::last_os_error())
+}
+
+#[cfg(unix)]
+fn last_kind() -> std::io::ErrorKind {
+    std::io::Error::last_os_error().kind()
+}
+
+// ---------------------------------------------------------------------------
+// poll(2) backend
+// ---------------------------------------------------------------------------
+
+/// The portable backend: one `pollfd` per registration, rebuilt revents
+/// every wait. Linear modify/deregister — fine for the per-shard fd
+/// counts this serves (thousands), and the fallback when epoll is absent.
+pub struct PollPoller {
+    #[cfg(unix)]
+    fds: Vec<sys::PollFd>,
+    tokens: Vec<usize>,
+}
+
+impl PollPoller {
+    pub fn new() -> PollPoller {
+        PollPoller {
+            #[cfg(unix)]
+            fds: Vec::new(),
+            tokens: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    #[cfg(unix)]
+    fn events_mask(interest: Interest) -> std::os::raw::c_short {
+        let mut m = 0;
+        if interest.read {
+            m |= sys::POLLIN;
+        }
+        if interest.write {
+            m |= sys::POLLOUT;
+        }
+        m
+    }
+
+    #[cfg(unix)]
+    fn position(&self, fd: RawFd) -> Result<usize> {
+        self.fds
+            .iter()
+            .position(|p| p.fd == fd)
+            .ok_or_else(|| crate::anyhow!("poll backend: fd {fd} is not registered"))
+    }
+
+    #[cfg(unix)]
+    pub fn register(&mut self, fd: RawFd, token: usize, interest: Interest) -> Result<()> {
+        if self.fds.iter().any(|p| p.fd == fd) {
+            crate::bail!("poll backend: fd {fd} registered twice");
+        }
+        self.fds.push(sys::PollFd { fd, events: Self::events_mask(interest), revents: 0 });
+        self.tokens.push(token);
+        Ok(())
+    }
+
+    #[cfg(unix)]
+    pub fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> Result<()> {
+        let i = self.position(fd)?;
+        self.fds[i].events = Self::events_mask(interest);
+        self.tokens[i] = token;
+        Ok(())
+    }
+
+    #[cfg(unix)]
+    pub fn deregister(&mut self, fd: RawFd) -> Result<()> {
+        let i = self.position(fd)?;
+        self.fds.swap_remove(i);
+        self.tokens.swap_remove(i);
+        Ok(())
+    }
+
+    #[cfg(unix)]
+    pub fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> Result<usize> {
+        events.clear();
+        if self.fds.is_empty() {
+            // Nothing registered: sleep out the timeout instead of asking
+            // the kernel to poll an empty set.
+            if let Some(d) = timeout {
+                std::thread::sleep(d);
+                return Ok(0);
+            }
+            crate::bail!("poll backend: wait forever on an empty fd set");
+        }
+        let n = loop {
+            let rc = unsafe {
+                sys::poll(
+                    self.fds.as_mut_ptr(),
+                    self.fds.len() as sys::NfdsT,
+                    timeout_ms(timeout),
+                )
+            };
+            if rc >= 0 {
+                break rc as usize;
+            }
+            if last_kind() == std::io::ErrorKind::Interrupted {
+                continue;
+            }
+            return Err(os_err("poll"));
+        };
+        if n > 0 {
+            for (p, &token) in self.fds.iter().zip(&self.tokens) {
+                let r = p.revents;
+                if r == 0 {
+                    continue;
+                }
+                events.push(Event {
+                    token,
+                    readable: r & (sys::POLLIN | sys::POLLHUP | sys::POLLERR | sys::POLLNVAL)
+                        != 0,
+                    writable: r & (sys::POLLOUT | sys::POLLERR) != 0,
+                });
+            }
+        }
+        Ok(events.len())
+    }
+
+    #[cfg(not(unix))]
+    pub fn register(&mut self, _fd: RawFd, _token: usize, _interest: Interest) -> Result<()> {
+        crate::bail!("readiness polling requires a unix platform")
+    }
+
+    #[cfg(not(unix))]
+    pub fn modify(&mut self, _fd: RawFd, _token: usize, _interest: Interest) -> Result<()> {
+        crate::bail!("readiness polling requires a unix platform")
+    }
+
+    #[cfg(not(unix))]
+    pub fn deregister(&mut self, _fd: RawFd) -> Result<()> {
+        crate::bail!("readiness polling requires a unix platform")
+    }
+
+    #[cfg(not(unix))]
+    pub fn wait(&mut self, _events: &mut Vec<Event>, _t: Option<Duration>) -> Result<usize> {
+        crate::bail!("readiness polling requires a unix platform")
+    }
+}
+
+impl Default for PollPoller {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// epoll(7) backend (Linux)
+// ---------------------------------------------------------------------------
+
+/// The Linux backend: O(ready) waits, kernel-held registration table.
+#[cfg(target_os = "linux")]
+pub struct EpollPoller {
+    epfd: RawFd,
+    buf: Vec<sys::epoll::EpollEvent>,
+}
+
+#[cfg(target_os = "linux")]
+impl EpollPoller {
+    /// How many events one `epoll_wait` can deliver; more simply arrive
+    /// on the next wait (level-triggered, nothing is lost).
+    const WAIT_BATCH: usize = 512;
+
+    pub fn new() -> Result<EpollPoller> {
+        let epfd = unsafe { sys::epoll::epoll_create1(sys::epoll::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(os_err("epoll_create1"));
+        }
+        Ok(EpollPoller {
+            epfd,
+            buf: vec![sys::epoll::EpollEvent { events: 0, data: 0 }; Self::WAIT_BATCH],
+        })
+    }
+
+    fn events_mask(interest: Interest) -> u32 {
+        let mut m = 0;
+        if interest.read {
+            m |= sys::epoll::EPOLLIN;
+        }
+        if interest.write {
+            m |= sys::epoll::EPOLLOUT;
+        }
+        m
+    }
+
+    fn ctl(&self, op: std::os::raw::c_int, fd: RawFd, token: usize, interest: Interest) -> Result<()> {
+        let mut ev = sys::epoll::EpollEvent {
+            events: Self::events_mask(interest),
+            data: token as u64,
+        };
+        let rc = unsafe { sys::epoll::epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(os_err("epoll_ctl"));
+        }
+        Ok(())
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: usize, interest: Interest) -> Result<()> {
+        self.ctl(sys::epoll::EPOLL_CTL_ADD, fd, token, interest)
+    }
+
+    pub fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> Result<()> {
+        self.ctl(sys::epoll::EPOLL_CTL_MOD, fd, token, interest)
+    }
+
+    pub fn deregister(&mut self, fd: RawFd) -> Result<()> {
+        // The event argument is ignored for DEL but must be non-null on
+        // pre-2.6.9 kernels; pass a dummy either way.
+        self.ctl(sys::epoll::EPOLL_CTL_DEL, fd, 0, Interest { read: false, write: false })
+    }
+
+    pub fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> Result<usize> {
+        events.clear();
+        let n = loop {
+            let rc = unsafe {
+                sys::epoll::epoll_wait(
+                    self.epfd,
+                    self.buf.as_mut_ptr(),
+                    self.buf.len() as std::os::raw::c_int,
+                    timeout_ms(timeout),
+                )
+            };
+            if rc >= 0 {
+                break rc as usize;
+            }
+            if last_kind() == std::io::ErrorKind::Interrupted {
+                continue;
+            }
+            return Err(os_err("epoll_wait"));
+        };
+        for ev in &self.buf[..n] {
+            // Copy out of the (possibly packed) struct before using.
+            let mask = ev.events;
+            let token = ev.data as usize;
+            events.push(Event {
+                token,
+                readable: mask
+                    & (sys::epoll::EPOLLIN | sys::epoll::EPOLLHUP | sys::epoll::EPOLLERR)
+                    != 0,
+                writable: mask & (sys::epoll::EPOLLOUT | sys::epoll::EPOLLERR) != 0,
+            });
+        }
+        Ok(events.len())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for EpollPoller {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.epfd);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// WakeFd: how another thread interrupts a blocked wait()
+// ---------------------------------------------------------------------------
+
+/// A self-wake primitive the reactor registers like any other fd: writing
+/// to it makes a blocked [`Poller::wait`] return. `eventfd(2)` on Linux
+/// (one fd, counter semantics), a nonblocking pipe elsewhere. This is
+/// what replaced the old SHUTDOWN self-connect hack: shutdown and
+/// completion delivery both wake the shard through here.
+pub struct WakeFd {
+    read_fd: RawFd,
+    write_fd: RawFd,
+}
+
+impl WakeFd {
+    #[cfg(target_os = "linux")]
+    pub fn new() -> Result<WakeFd> {
+        let fd = unsafe {
+            sys::epoll::eventfd(0, sys::epoll::EFD_CLOEXEC | sys::epoll::EFD_NONBLOCK)
+        };
+        if fd < 0 {
+            return Err(os_err("eventfd"));
+        }
+        Ok(WakeFd { read_fd: fd, write_fd: fd })
+    }
+
+    #[cfg(all(unix, not(target_os = "linux")))]
+    pub fn new() -> Result<WakeFd> {
+        let mut fds = [0 as std::os::raw::c_int; 2];
+        if unsafe { sys::pipe(fds.as_mut_ptr()) } < 0 {
+            return Err(os_err("pipe"));
+        }
+        for fd in fds {
+            let flags = unsafe { sys::fcntl(fd, sys::F_GETFL, 0) };
+            if flags < 0
+                || unsafe { sys::fcntl(fd, sys::F_SETFL, flags | sys::O_NONBLOCK) } < 0
+            {
+                let e = os_err("fcntl(O_NONBLOCK) on wake pipe");
+                unsafe {
+                    sys::close(fds[0]);
+                    sys::close(fds[1]);
+                }
+                return Err(e);
+            }
+        }
+        Ok(WakeFd { read_fd: fds[0], write_fd: fds[1] })
+    }
+
+    #[cfg(not(unix))]
+    pub fn new() -> Result<WakeFd> {
+        crate::bail!("wake fd requires a unix platform")
+    }
+
+    /// The fd to register for read interest.
+    pub fn fd(&self) -> RawFd {
+        self.read_fd
+    }
+
+    /// Wake the owning poller. Best-effort and signal-safe: a full pipe /
+    /// saturated counter means a wake is already pending, which is all
+    /// that matters.
+    pub fn wake(&self) {
+        #[cfg(unix)]
+        {
+            let one: u64 = 1;
+            unsafe {
+                sys::write(self.write_fd, (&one as *const u64).cast(), 8);
+            }
+        }
+    }
+
+    /// Consume all pending wakes so level-triggered polling goes quiet.
+    pub fn drain(&self) {
+        #[cfg(unix)]
+        {
+            let mut buf = [0u8; 64];
+            loop {
+                let n = unsafe { sys::read(self.read_fd, buf.as_mut_ptr().cast(), buf.len()) };
+                if n <= 0 {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+impl Drop for WakeFd {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        unsafe {
+            sys::close(self.read_fd);
+            if self.write_fd != self.read_fd {
+                sys::close(self.write_fd);
+            }
+        }
+    }
+}
+
+// WakeFd is written from other threads by design.
+unsafe impl Send for WakeFd {}
+unsafe impl Sync for WakeFd {}
+
+/// The process's open-file limit (`RLIMIT_NOFILE` soft limit), used to
+/// clamp idle-connection pools so tests and `loadgen --idle` never trip
+/// EMFILE. `None` when the platform can't say.
+pub fn max_open_files() -> Option<u64> {
+    #[cfg(unix)]
+    {
+        let mut lim = sys::RLimit { cur: 0, max: 0 };
+        if unsafe { sys::getrlimit(sys::RLIMIT_NOFILE, &mut lim) } == 0 {
+            return Some(lim.cur);
+        }
+        None
+    }
+    #[cfg(not(unix))]
+    {
+        None
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+
+    fn kinds() -> Vec<PollerKind> {
+        #[cfg(target_os = "linux")]
+        {
+            vec![PollerKind::Poll, PollerKind::Epoll]
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            vec![PollerKind::Poll]
+        }
+    }
+
+    #[test]
+    fn wake_fd_wakes_and_drains() {
+        for kind in kinds() {
+            let wake = WakeFd::new().unwrap();
+            let mut poller = Poller::new(kind).unwrap();
+            poller.register(wake.fd(), 7, Interest::READ).unwrap();
+            let mut events = Vec::new();
+            // Nothing pending: times out empty.
+            let n = poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert_eq!(n, 0, "{}: spurious event", kind.name());
+            wake.wake();
+            wake.wake(); // coalesces
+            let n = poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+            assert_eq!(n, 1, "{}", kind.name());
+            assert_eq!(events[0].token, 7);
+            assert!(events[0].readable);
+            wake.drain();
+            let n = poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert_eq!(n, 0, "{}: drain must clear readiness", kind.name());
+        }
+    }
+
+    #[test]
+    fn socket_readiness_and_modify_roundtrip() {
+        for kind in kinds() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let mut client = TcpStream::connect(addr).unwrap();
+            let (server_side, _) = listener.accept().unwrap();
+            server_side.set_nonblocking(true).unwrap();
+
+            let mut poller = Poller::new(kind).unwrap();
+            let fd = fd_of(&server_side);
+            poller.register(fd, 3, Interest::READ).unwrap();
+            let mut events = Vec::new();
+            // Idle socket: no events.
+            let n = poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert_eq!(n, 0, "{}", kind.name());
+            client.write_all(b"hi\n").unwrap();
+            client.flush().unwrap();
+            let n = poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+            assert_eq!(n, 1, "{}", kind.name());
+            assert!(events[0].readable && events[0].token == 3);
+            // Write interest on a socket with buffer space fires at once.
+            poller.modify(fd, 4, Interest::WRITE).unwrap();
+            let n = poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+            assert_eq!(n, 1, "{}", kind.name());
+            assert!(events[0].writable && events[0].token == 4);
+            poller.deregister(fd).unwrap();
+            drop(client);
+        }
+    }
+
+    #[test]
+    fn hangup_reports_readable() {
+        for kind in kinds() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let client = TcpStream::connect(addr).unwrap();
+            let (server_side, _) = listener.accept().unwrap();
+            server_side.set_nonblocking(true).unwrap();
+            let mut poller = Poller::new(kind).unwrap();
+            poller.register(fd_of(&server_side), 9, Interest::READ).unwrap();
+            drop(client); // peer goes away
+            let mut events = Vec::new();
+            let n = poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+            assert!(n >= 1, "{}", kind.name());
+            assert!(events[0].readable, "{}: hangup must surface as readable", kind.name());
+        }
+    }
+
+    #[test]
+    fn poller_kind_parses() {
+        assert_eq!(PollerKind::parse("poll").unwrap(), PollerKind::Poll);
+        assert!(PollerKind::parse("kqueue").is_err());
+        #[cfg(target_os = "linux")]
+        {
+            assert_eq!(PollerKind::parse("epoll").unwrap(), PollerKind::Epoll);
+            assert_eq!(PollerKind::os_default(), PollerKind::Epoll);
+        }
+        assert!(!PollerKind::os_default().name().is_empty());
+    }
+
+    #[test]
+    fn nofile_limit_is_sane() {
+        let lim = max_open_files().expect("unix must report RLIMIT_NOFILE");
+        assert!(lim >= 64, "soft nofile limit {lim} is implausibly low");
+    }
+}

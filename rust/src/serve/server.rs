@@ -1,48 +1,70 @@
-//! The TCP serving front-end: a dependency-free `std::net` server with a
-//! fixed worker thread pool, bounded admission, and clean shutdown.
+//! The TCP serving front-end: a dependency-free readiness event loop with
+//! sharded accept, nonblocking connection state machines, and CPU-bound
+//! query execution handed to a fixed worker pool.
 //!
 //! ## Architecture
 //!
 //! ```text
-//! acceptor thread ──try_send──▶ bounded queue ──recv──▶ N worker threads
-//!      │                            (full ⇒ BUSY + close)     │
-//!      └── woken by a self-connect on SHUTDOWN                └── shared
-//!                                                         Arc<CountServer>
+//!            ┌── shard 0: poller { listener, wake fd, conns… } ──┐
+//! listener ──┤                                                   ├─ jobs ─▶ bounded
+//!  (shared   └── shard S: poller { listener, wake fd, conns… } ──┘  queue ──▶ N workers
+//!   dup'd                ▲                                                      │
+//!   fds)                 └───────────── completions + wake ◀────────────────────┘
 //! ```
 //!
-//! * One acceptor owns the listener; connections enter a bounded
-//!   `sync_channel` queue. A full queue answers `BUSY` immediately and
-//!   closes — load is shed at the door instead of growing an unbounded
-//!   backlog (the admission-control half of the ROADMAP item).
-//! * `threads` workers pop connections and speak the line protocol
-//!   ([`super::protocol`]). Each connection is capped at `max_requests`
-//!   queries, after which it gets `BUSY` and is closed — one chatty client
-//!   cannot monopolize a worker forever.
-//! * All workers share one [`CountServer`]: ADtree builds coalesce behind
-//!   its per-table latch and tree bytes are charged to the store's
-//!   `mem_bytes` budget, so concurrency never duplicates work or memory.
-//! * `SHUTDOWN` (or [`ServeHandle::request_shutdown`]) latches a flag,
-//!   wakes the acceptor with a self-connect, drops the queue sender, and
-//!   lets the workers drain: in-flight connections finish, the process
-//!   exits cleanly.
-//!
-//! Readers poll with a 100 ms read timeout so idle keep-alive connections
-//! notice the shutdown flag instead of pinning a worker forever.
+//! * `shards` reactor threads each own a [`Poller`] (`epoll` on Linux,
+//!   `poll` elsewhere — see [`super::reactor`]), a clone of the listener
+//!   (the kernel load-balances `accept` across them), and the state
+//!   machines of the connections they accepted. Idle connections cost one
+//!   registered fd, not a parked thread — connections ≫ threads.
+//! * Each connection is a small state machine: nonblocking reads append to
+//!   a resumable [`LineBuffer`] (64 KiB per-line cap enforced
+//!   incrementally), parsed requests dispatch to the worker pool, replies
+//!   queue into an output buffer flushed under write-readiness. While a
+//!   request executes the connection's read interest is dropped, so a
+//!   pipelining client is backpressured by TCP instead of a server buffer.
+//! * `BATCH` fans out: every member becomes its own pool job, executing
+//!   concurrently across workers; replies are stitched back **in member
+//!   order** before a byte is written, so answers stay byte-identical to
+//!   serial execution.
+//! * Workers push completions onto the owning shard's mailbox and wake its
+//!   poller through an `eventfd`/pipe ([`WakeFd`]) — the same primitive
+//!   that replaced the old SHUTDOWN self-connect hack.
+//! * Admission control is two-tier: `max_conns` sheds at accept time
+//!   (`BUSY` + close), a full execution queue sheds at read time (`BUSY`,
+//!   connection stays open). `max_requests` caps one connection's lifetime
+//!   queries (`BUSY` + close), so a chatty client cannot monopolize the
+//!   pool forever.
+//! * Shutdown latches a flag and wakes every shard: listeners deregister,
+//!   idle connections close, in-flight queries drain (bounded by a grace
+//!   period), and [`ServeHandle::wait`] asserts the drain left
+//!   `active == 0`.
 
 use crate::store::CountServer;
 use crate::util::error::{Context, Result};
-use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Read, Write};
-use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
-use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering::{Relaxed, SeqCst};
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::metrics::{ServeMetrics, ServeSnapshot};
-use super::protocol::{parse_request, Request, Response, MAX_LINE};
+use super::protocol::{parse_request, LineBuffer, Request, Response};
+use super::reactor::{fd_of, Event, Interest, Poller, PollerKind, WakeFd};
 
-use std::sync::atomic::Ordering::Relaxed;
+/// Poller token of the shard's listener clone.
+const TOKEN_LISTENER: usize = usize::MAX;
+/// Poller token of the shard's wake fd.
+const TOKEN_WAKE: usize = usize::MAX - 1;
+/// How many connections one readiness event will accept before yielding
+/// back to the event loop (fairness under an accept storm).
+const ACCEPT_BURST: usize = 64;
+/// How long shutdown waits for in-flight queries / unflushed replies
+/// before force-closing what remains.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(5);
 
 /// Tuning knobs of one serving front-end.
 #[derive(Debug, Clone)]
@@ -50,15 +72,26 @@ pub struct ServeConfig {
     /// Bind address, e.g. `127.0.0.1:7171` (`:0` picks an ephemeral port,
     /// reported by [`ServeHandle::addr`]).
     pub addr: String,
-    /// Worker thread pool size.
+    /// Worker thread pool size (CPU-bound query execution).
     pub threads: usize,
-    /// Bounded accept-queue depth; a connection arriving with the queue
-    /// full is answered `BUSY` and closed.
+    /// Reactor shard count (acceptor/event-loop threads).
+    pub shards: usize,
+    /// Bounded execution-queue depth; a request arriving with the queue
+    /// full is answered `BUSY` (the connection stays open).
     pub queue_depth: usize,
+    /// Connection limit across all shards; past it, new connections are
+    /// answered `BUSY` at accept time and closed.
+    pub max_conns: usize,
     /// Per-connection request cap (each `BATCH` member counts).
     pub max_requests: usize,
     /// Wire mode: JSON object lines (default) or compact text.
     pub json: bool,
+    /// Readiness backend (`epoll` on Linux by default, `poll` elsewhere).
+    pub poller: PollerKind,
+    /// Test hook: workers sleep this long before executing each query so
+    /// fan-out concurrency is observable deterministically. Zero (and
+    /// meant to stay zero) in production.
+    pub exec_delay: Duration,
 }
 
 impl Default for ServeConfig {
@@ -66,11 +99,108 @@ impl Default for ServeConfig {
         ServeConfig {
             addr: "127.0.0.1:0".to_string(),
             threads: 4,
+            shards: 2,
             queue_depth: 64,
+            max_conns: 16_384,
             max_requests: 100_000,
             json: true,
+            poller: PollerKind::os_default(),
+            exec_delay: Duration::ZERO,
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// execution handoff: shard → worker pool → shard
+// ---------------------------------------------------------------------------
+
+/// One query headed for the worker pool, tagged with enough provenance to
+/// route its completion back to the right connection.
+struct Job {
+    shard: usize,
+    slot: usize,
+    conn_id: u64,
+    member: usize,
+    batch: usize,
+    query: String,
+}
+
+/// A finished query on its way back to the owning shard.
+struct Completion {
+    slot: usize,
+    conn_id: u64,
+    member: usize,
+    resp: Response,
+}
+
+struct ExecState {
+    q: VecDeque<Job>,
+    closed: bool,
+}
+
+/// The bounded work queue between reactors and the worker pool.
+///
+/// Submission is all-or-nothing per request: a `BATCH` either gets every
+/// member enqueued or none, so the queue can overshoot `threshold` by at
+/// most one batch — but a large batch can never be half-started or
+/// starved by the depth limit.
+struct Executor {
+    st: Mutex<ExecState>,
+    cv: Condvar,
+    threshold: usize,
+}
+
+impl Executor {
+    fn new(threshold: usize) -> Executor {
+        Executor {
+            st: Mutex::new(ExecState { q: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            threshold,
+        }
+    }
+
+    /// Enqueue all `jobs`, or none if the queue is at depth (or closed).
+    fn try_submit(&self, jobs: Vec<Job>) -> bool {
+        let n = jobs.len();
+        {
+            let mut st = self.st.lock().unwrap();
+            if st.closed || st.q.len() >= self.threshold {
+                return false;
+            }
+            st.q.extend(jobs);
+        }
+        if n == 1 {
+            self.cv.notify_one();
+        } else {
+            self.cv.notify_all();
+        }
+        true
+    }
+
+    /// Block for the next job; `None` once closed and drained.
+    fn pop(&self) -> Option<Job> {
+        let mut st = self.st.lock().unwrap();
+        loop {
+            if let Some(j) = st.q.pop_front() {
+                return Some(j);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.st.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Per-shard mailbox: workers push completions here and wake the poller.
+struct ShardShared {
+    completions: Mutex<Vec<Completion>>,
+    wake: WakeFd,
 }
 
 struct Shared {
@@ -79,6 +209,8 @@ struct Shared {
     cfg: ServeConfig,
     addr: SocketAddr,
     shutdown: AtomicBool,
+    exec: Executor,
+    shards: Vec<Arc<ShardShared>>,
 }
 
 impl Shared {
@@ -86,21 +218,12 @@ impl Shared {
         self.metrics.snapshot(self.count.stats(), self.count.tree_stats())
     }
 
-    /// Latch the shutdown flag and wake the acceptor out of `accept()`.
+    /// Latch the shutdown flag and wake every shard out of its wait.
     fn initiate_shutdown(&self) {
         if !self.shutdown.swap(true, SeqCst) {
-            // The wake connection is consumed (and discarded) by the
-            // acceptor itself once it sees the flag. A wildcard bind
-            // (0.0.0.0 / [::]) is not a connectable destination — wake
-            // through loopback on the bound port instead.
-            let mut wake = self.addr;
-            if wake.ip().is_unspecified() {
-                wake.set_ip(match wake.ip() {
-                    IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
-                    IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
-                });
+            for s in &self.shards {
+                s.wake.wake();
             }
-            let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
         }
     }
 }
@@ -110,7 +233,8 @@ impl Shared {
 /// [`ServeHandle::wait`].
 pub struct ServeHandle {
     shared: Arc<Shared>,
-    acceptor: JoinHandle<()>,
+    shards: Vec<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl ServeHandle {
@@ -130,212 +254,656 @@ impl ServeHandle {
         self.shared.initiate_shutdown();
     }
 
-    /// Block until the server has fully stopped (acceptor and all workers
+    /// Block until the server has fully stopped (shards and workers
     /// joined); returns the final metrics snapshot.
+    ///
+    /// Shards only exit after every connection they own is closed, so the
+    /// drain-clean invariant is asserted here rather than hoped for.
     pub fn wait(self) -> ServeSnapshot {
-        let _ = self.acceptor.join();
-        self.shared.snapshot()
+        for s in self.shards {
+            let _ = s.join();
+        }
+        // Shards are gone, nothing can submit: release the worker pool.
+        self.shared.exec.close();
+        for w in self.workers {
+            let _ = w.join();
+        }
+        let snap = self.shared.snapshot();
+        assert_eq!(snap.active, 0, "shutdown drain must close every connection");
+        snap
     }
 }
 
 /// Bind and start serving `count` on `cfg.addr`. Returns once the listener
-/// is bound and the worker pool is up — queries can be sent the moment
-/// this returns.
+/// is bound and all shard/worker threads are up — queries can be sent the
+/// moment this returns.
 pub fn serve(count: Arc<CountServer>, cfg: ServeConfig) -> Result<ServeHandle> {
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("binding count server to {}", cfg.addr))?;
+    // One nonblocking flag covers every shard clone: `try_clone` dups the
+    // fd, and O_NONBLOCK lives on the shared open file description.
+    listener.set_nonblocking(true).context("setting listener nonblocking")?;
     let addr = listener.local_addr().context("resolving bound address")?;
     let threads = cfg.threads.max(1);
+    let n_shards = cfg.shards.max(1);
     let queue_depth = cfg.queue_depth.max(1);
+    let kind = cfg.poller;
+
+    // Build every shard's poller before spawning anything, so setup
+    // errors (no epoll, fd limits) surface as a clean `Err` from here.
+    let mut mailboxes = Vec::with_capacity(n_shards);
+    let mut parts = Vec::with_capacity(n_shards);
+    for _ in 0..n_shards {
+        let ss = Arc::new(ShardShared {
+            completions: Mutex::new(Vec::new()),
+            wake: WakeFd::new()?,
+        });
+        let lst = listener.try_clone().context("cloning listener for shard")?;
+        let mut poller = Poller::new(kind)?;
+        poller.register(fd_of(&lst), TOKEN_LISTENER, Interest::READ)?;
+        poller.register(ss.wake.fd(), TOKEN_WAKE, Interest::READ)?;
+        mailboxes.push(Arc::clone(&ss));
+        parts.push((poller, ss, lst));
+    }
+    drop(listener); // shards own their clones
+
     let shared = Arc::new(Shared {
         count,
         metrics: ServeMetrics::default(),
         cfg,
         addr,
         shutdown: AtomicBool::new(false),
+        exec: Executor::new(queue_depth),
+        shards: mailboxes,
     });
 
-    let (tx, rx) = std::sync::mpsc::sync_channel::<TcpStream>(queue_depth);
-    let rx = Arc::new(Mutex::new(rx));
     let mut workers = Vec::with_capacity(threads);
     for i in 0..threads {
         let shared = Arc::clone(&shared);
-        let rx = Arc::clone(&rx);
         workers.push(
             std::thread::Builder::new()
-                .name(format!("mrss-serve-{i}"))
-                .spawn(move || worker_loop(&shared, &rx))
+                .name(format!("mrss-serve-worker-{i}"))
+                .spawn(move || worker_loop(&shared))
                 .context("spawning worker thread")?,
         );
     }
-
-    let acceptor = {
+    let mut shards = Vec::with_capacity(n_shards);
+    for (idx, (poller, ss, lst)) in parts.into_iter().enumerate() {
         let shared = Arc::clone(&shared);
-        std::thread::Builder::new()
-            .name("mrss-serve-accept".to_string())
-            .spawn(move || accept_loop(&shared, listener, tx, workers))
-            .context("spawning acceptor thread")?
-    };
-    Ok(ServeHandle { shared, acceptor })
+        shards.push(
+            std::thread::Builder::new()
+                .name(format!("mrss-serve-shard-{idx}"))
+                .spawn(move || ShardCtx::new(shared, ss, idx, poller).run(lst))
+                .context("spawning shard thread")?,
+        );
+    }
+    Ok(ServeHandle { shared, shards, workers })
 }
 
-fn accept_loop(
-    shared: &Shared,
-    listener: TcpListener,
-    tx: SyncSender<TcpStream>,
-    workers: Vec<JoinHandle<()>>,
-) {
-    for stream in listener.incoming() {
-        if shared.shutdown.load(SeqCst) {
-            // `stream` is (usually) the self-connect wake; discard it.
-            break;
+/// One worker: pop jobs, count, push the completion back to the owning
+/// shard and wake it. `BATCH` members arrive as independent jobs, so a
+/// multi-member batch really does execute concurrently across the pool —
+/// `batch_peak` in STATS records the high-water mark.
+fn worker_loop(shared: &Shared) {
+    while let Some(job) = shared.exec.pop() {
+        let Job { shard, slot, conn_id, member, batch, query } = job;
+        let fanout = batch > 1;
+        if fanout {
+            let cur = shared.metrics.batch_inflight.fetch_add(1, Relaxed) + 1;
+            shared.metrics.batch_peak.fetch_max(cur, Relaxed);
         }
-        let Ok(stream) = stream else { continue };
-        match tx.try_send(stream) {
-            Ok(()) => {}
-            Err(TrySendError::Full(stream)) => {
-                // Admission control: shed at the door with a clean answer.
-                // The write is bounded so a non-reading client can never
-                // stall the acceptor itself.
-                shared.metrics.busy_rejects.fetch_add(1, Relaxed);
-                let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
-                let mut w = BufWriter::new(stream);
-                let busy = Response::Busy { msg: "accept queue full, retry later".to_string() };
-                let _ = writeln!(w, "{}", busy.render(shared.cfg.json));
-                let _ = w.flush();
+        if !shared.cfg.exec_delay.is_zero() {
+            std::thread::sleep(shared.cfg.exec_delay);
+        }
+        shared.metrics.queries.fetch_add(1, Relaxed);
+        let t0 = Instant::now();
+        let out = shared.count.count_query(&query);
+        shared.metrics.latency.record(t0.elapsed());
+        if fanout {
+            shared.metrics.batch_inflight.fetch_sub(1, Relaxed);
+        }
+        let resp = match out {
+            Ok(count) => Response::Count { query, count },
+            Err(e) => {
+                shared.metrics.errors.fetch_add(1, Relaxed);
+                Response::Error { query, msg: e.to_string() }
             }
-            Err(TrySendError::Disconnected(_)) => break,
+        };
+        let ss = &shared.shards[shard];
+        ss.completions.lock().unwrap().push(Completion { slot, conn_id, member, resp });
+        ss.wake.wake();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// connection state machine
+// ---------------------------------------------------------------------------
+
+enum ConnState {
+    /// Reading/parsing; the next complete line may dispatch.
+    Idle,
+    /// One request (possibly a fanned-out `BATCH`) is in the pool.
+    /// Replies accumulate by member index; nothing is written until all
+    /// members land, so reply bytes and order match serial execution.
+    Executing { pending: Vec<Option<Response>>, remaining: usize },
+}
+
+struct Conn {
+    /// Monotonic per-shard id; completions carry it so a late result can
+    /// never be attributed to a recycled slot.
+    id: u64,
+    /// `None` after close while completions are still draining.
+    stream: Option<TcpStream>,
+    buf: LineBuffer,
+    out: Vec<u8>,
+    out_pos: usize,
+    served: usize,
+    state: ConnState,
+    interest: Interest,
+    /// Flush what is queued, then close (cap hit, SHUTDOWN ack, protocol
+    /// error).
+    close_after_flush: bool,
+    /// The request cap fired at dispatch; append `BUSY` + close once the
+    /// in-flight request's replies render.
+    cap_pending: bool,
+    eof: bool,
+    dead: bool,
+}
+
+/// Append one rendered response line to the connection's output buffer.
+fn queue(conn: &mut Conn, json: bool, resp: &Response) {
+    conn.out.extend_from_slice(resp.render(json).as_bytes());
+    conn.out.push(b'\n');
+}
+
+struct ShardCtx {
+    shared: Arc<Shared>,
+    me: Arc<ShardShared>,
+    idx: usize,
+    poller: Poller,
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    /// Slots still owned (stream open, or completions outstanding).
+    live: usize,
+    next_id: u64,
+}
+
+impl ShardCtx {
+    fn new(shared: Arc<Shared>, me: Arc<ShardShared>, idx: usize, poller: Poller) -> ShardCtx {
+        ShardCtx {
+            shared,
+            me,
+            idx,
+            poller,
+            conns: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            next_id: 0,
         }
     }
-    // Close the queue: workers finish whatever is buffered, then exit.
-    drop(tx);
-    drop(listener);
-    for w in workers {
-        let _ = w.join();
-    }
-}
 
-fn worker_loop(shared: &Shared, rx: &Mutex<Receiver<TcpStream>>) {
-    loop {
-        // Hold the receiver lock only for the pop, not while serving.
-        let next = rx.lock().unwrap().recv();
-        let Ok(stream) = next else { return };
-        shared.metrics.connections.fetch_add(1, Relaxed);
-        shared.metrics.active.fetch_add(1, Relaxed);
-        serve_conn(shared, stream);
-        shared.metrics.active.fetch_sub(1, Relaxed);
-    }
-}
-
-/// Speak the line protocol on one connection until EOF, error, cap, or
-/// shutdown. All IO errors just end the connection — the client is gone.
-fn serve_conn(shared: &Shared, stream: TcpStream) {
-    let json = shared.cfg.json;
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
-    // A client that stops reading must not pin this worker forever: once
-    // the kernel send buffer fills, the blocked write errors out after the
-    // timeout and the connection is dropped (any write error ends it).
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
-    let _ = stream.set_nodelay(true);
-    let Ok(write_half) = stream.try_clone() else { return };
-    let mut reader = BufReader::new(stream);
-    let mut writer = BufWriter::new(write_half);
-    let mut line = String::new();
-    let mut served = 0usize;
-
-    loop {
-        line.clear();
-        // Poll-read so an idle connection notices shutdown: on timeout any
-        // partial bytes stay appended to `line` and the next pass resumes
-        // the same request. Every read is clamped by `take`, so the cap
-        // check runs even against a client streaming an endless
-        // unterminated line at full speed — `line` can never outgrow
-        // `MAX_LINE` by more than one clamp.
-        let eof = loop {
-            if line.len() > MAX_LINE {
-                let resp = Response::Error {
-                    query: String::new(),
-                    msg: format!("request line exceeds {MAX_LINE} bytes"),
-                };
-                let _ = writeln!(writer, "{}", resp.render(json));
-                let _ = writer.flush();
-                return;
-            }
-            let clamp = (MAX_LINE + 2 - line.len()) as u64;
-            match (&mut reader).take(clamp).read_line(&mut line) {
-                Ok(0) => break true, // EOF (clamp is ≥ 2 here, so not the limit)
-                Ok(_) if line.ends_with('\n') => break false,
-                Ok(_) => continue, // clamp hit mid-line; the cap check fires next
-                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-                Err(e)
-                    if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
-                        && !shared.shutdown.load(SeqCst) =>
-                {
-                    continue;
+    fn run(mut self, listener: TcpListener) {
+        let mut events: Vec<Event> = Vec::new();
+        let mut listener_open = true;
+        let mut grace: Option<Instant> = None;
+        loop {
+            let shutting = self.shared.shutdown.load(SeqCst);
+            let timeout = if shutting { Some(Duration::from_millis(100)) } else { None };
+            let n = match self.poller.wait(&mut events, timeout) {
+                Ok(n) => n,
+                Err(_) => {
+                    // Poller is broken: close everything so `active`
+                    // still drains to zero, then bail.
+                    self.force_close_all();
+                    break;
                 }
-                Err(_) => return,
-            }
-        };
-        if eof {
-            return;
-        }
-        if line.trim().is_empty() {
-            continue;
-        }
-
-        let responses: Vec<Response> = match parse_request(&line) {
-            Request::Ping => vec![Response::Pong],
-            Request::Stats => vec![Response::Stats { json: shared.snapshot().to_json() }],
-            Request::Shutdown => {
-                let _ = writeln!(writer, "{}", Response::Bye.render(json));
-                let _ = writer.flush();
-                shared.initiate_shutdown();
-                return;
-            }
-            Request::Count(q) => vec![answer_one(shared, &mut served, q)],
-            Request::Batch(qs) if qs.is_empty() => vec![Response::Error {
-                query: String::new(),
-                msg: "empty BATCH (want `BATCH q1 ; q2 ; …`)".to_string(),
-            }],
-            Request::Batch(qs) => {
-                qs.into_iter().map(|q| answer_one(shared, &mut served, q)).collect()
-            }
-        };
-        for resp in &responses {
-            if writeln!(writer, "{}", resp.render(json)).is_err() {
-                return;
-            }
-        }
-        if writer.flush().is_err() {
-            return;
-        }
-        if served >= shared.cfg.max_requests {
-            let busy = Response::Busy {
-                msg: format!(
-                    "per-connection request cap ({}) reached, reconnect",
-                    shared.cfg.max_requests
-                ),
             };
-            let _ = writeln!(writer, "{}", busy.render(json));
-            let _ = writer.flush();
-            shared.metrics.busy_rejects.fetch_add(1, Relaxed);
-            return;
+            if n > 0 {
+                self.shared.metrics.wakeups.fetch_add(1, Relaxed);
+            }
+            for ev in &events {
+                match ev.token {
+                    TOKEN_WAKE => self.me.wake.drain(),
+                    TOKEN_LISTENER => {
+                        if listener_open && !self.shared.shutdown.load(SeqCst) {
+                            self.accept_burst(&listener);
+                        }
+                    }
+                    slot => self.on_event(slot, ev.readable, ev.writable),
+                }
+            }
+            // Reap completions strictly AFTER draining the wake fd: a
+            // completion pushed before its wake write is then always
+            // visible to this take, so none can be stranded behind a
+            // consumed wake.
+            let completions = std::mem::take(&mut *self.me.completions.lock().unwrap());
+            let depth = (n + completions.len()) as u64;
+            if depth > 0 {
+                self.shared.metrics.run_queue_peak.fetch_max(depth, Relaxed);
+            }
+            for c in completions {
+                self.on_completion(c);
+            }
+            if self.shared.shutdown.load(SeqCst) {
+                if listener_open {
+                    let _ = self.poller.deregister(fd_of(&listener));
+                    listener_open = false;
+                }
+                let deadline = *grace.get_or_insert_with(|| Instant::now() + SHUTDOWN_GRACE);
+                self.drain_idle();
+                if self.live == 0 {
+                    break;
+                }
+                if Instant::now() >= deadline {
+                    // Streams close now; Executing slots stay live until
+                    // their completions arrive, which frees them above.
+                    self.force_close_all();
+                }
+            }
         }
     }
-}
 
-/// Answer one counted query, with latency recorded bucket-exact.
-fn answer_one(shared: &Shared, served: &mut usize, query: String) -> Response {
-    *served += 1;
-    shared.metrics.queries.fetch_add(1, Relaxed);
-    let t0 = Instant::now();
-    let out = shared.count.count_query(&query);
-    shared.metrics.latency.record(t0.elapsed());
-    match out {
-        Ok(count) => Response::Count { query, count },
-        Err(e) => {
-            shared.metrics.errors.fetch_add(1, Relaxed);
-            Response::Error { query, msg: e.to_string() }
+    fn accept_burst(&mut self, listener: &TcpListener) {
+        for _ in 0..ACCEPT_BURST {
+            match listener.accept() {
+                Ok((stream, _)) => self.admit(stream),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    // EMFILE and friends: back off briefly instead of
+                    // spinning on a level-triggered listener we cannot
+                    // drain.
+                    std::thread::sleep(Duration::from_millis(5));
+                    break;
+                }
+            }
+        }
+    }
+
+    fn admit(&mut self, stream: TcpStream) {
+        let m = &self.shared.metrics;
+        if m.active.load(Relaxed) as usize >= self.shared.cfg.max_conns {
+            // Accept-time shedding: a clean bounded answer, then close.
+            m.busy_rejects.fetch_add(1, Relaxed);
+            let _ = stream.set_nonblocking(false);
+            let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+            let busy = Response::Busy { msg: "connection limit reached, retry later".to_string() };
+            let mut s = stream;
+            let _ = writeln!(s, "{}", busy.render(self.shared.cfg.json));
+            return;
+        }
+        // Accepted sockets do not inherit the listener's O_NONBLOCK.
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        m.connections.fetch_add(1, Relaxed);
+        let newly = m.active.fetch_add(1, Relaxed) + 1;
+        m.conns.record_value(newly);
+        let fd = fd_of(&stream);
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.conns.push(None);
+                self.conns.len() - 1
+            }
+        };
+        if self.poller.register(fd, slot, Interest::READ).is_err() {
+            m.active.fetch_sub(1, Relaxed);
+            self.free.push(slot);
+            return;
+        }
+        m.registered_fds.fetch_add(1, Relaxed);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.conns[slot] = Some(Conn {
+            id,
+            stream: Some(stream),
+            buf: LineBuffer::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            served: 0,
+            state: ConnState::Idle,
+            interest: Interest::READ,
+            close_after_flush: false,
+            cap_pending: false,
+            eof: false,
+            dead: false,
+        });
+        self.live += 1;
+    }
+
+    fn on_event(&mut self, slot: usize, readable: bool, writable: bool) {
+        match self.conns.get(slot) {
+            Some(Some(_)) => {}
+            _ => return,
+        }
+        if writable {
+            self.flush(slot);
+        }
+        if readable {
+            self.on_readable(slot);
+        }
+        self.finish(slot);
+    }
+
+    /// Pull bytes until the buffer holds a complete line, the socket runs
+    /// dry, or the peer goes away. Stopping at the first complete line
+    /// means a pipelining firehose is processed a request at a time —
+    /// TCP's receive window is the backpressure.
+    fn on_readable(&mut self, slot: usize) {
+        let Some(Some(conn)) = self.conns.get_mut(slot) else { return };
+        if conn.dead || conn.eof || !matches!(conn.state, ConnState::Idle) {
+            return;
+        }
+        let Some(stream) = conn.stream.as_mut() else { return };
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            if conn.buf.has_line() {
+                break;
+            }
+            match stream.read(&mut chunk) {
+                Ok(0) => {
+                    conn.eof = true;
+                    break;
+                }
+                Ok(n) => conn.buf.push(&chunk[..n]),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => {
+                    conn.dead = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    /// The common tail of every stimulus: parse/dispatch what is buffered,
+    /// flush what is queued, retune poller interest, close if terminal.
+    fn finish(&mut self, slot: usize) {
+        self.pump(slot);
+        self.flush(slot);
+        self.update_interest(slot);
+        self.maybe_close(slot);
+    }
+
+    /// Parse and act on buffered lines until the buffer runs dry or the
+    /// connection enters `Executing` (one request in flight at a time).
+    fn pump(&mut self, slot: usize) {
+        let json = self.shared.cfg.json;
+        loop {
+            let line = {
+                let Some(Some(conn)) = self.conns.get_mut(slot) else { return };
+                if conn.dead || conn.close_after_flush || conn.stream.is_none() {
+                    return;
+                }
+                if !matches!(conn.state, ConnState::Idle) {
+                    return;
+                }
+                match conn.buf.next_line() {
+                    Err(msg) => {
+                        queue(conn, json, &Response::Error { query: String::new(), msg });
+                        conn.close_after_flush = true;
+                        return;
+                    }
+                    Ok(None) => return,
+                    Ok(Some(l)) => l,
+                }
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            match parse_request(&line) {
+                Request::Ping => self.queue_to(slot, &Response::Pong),
+                Request::Stats => {
+                    let s = self.shared.snapshot().to_json();
+                    self.queue_to(slot, &Response::Stats { json: s });
+                }
+                Request::Shutdown => {
+                    self.queue_to(slot, &Response::Bye);
+                    if let Some(Some(conn)) = self.conns.get_mut(slot) {
+                        conn.close_after_flush = true;
+                    }
+                    self.shared.initiate_shutdown();
+                    return;
+                }
+                Request::Batch(qs) if qs.is_empty() => self.queue_to(
+                    slot,
+                    &Response::Error {
+                        query: String::new(),
+                        msg: "empty BATCH (want `BATCH q1 ; q2 ; …`)".to_string(),
+                    },
+                ),
+                Request::Count(q) => self.dispatch(slot, vec![q]),
+                Request::Batch(qs) => self.dispatch(slot, qs),
+            }
+        }
+    }
+
+    fn queue_to(&mut self, slot: usize, resp: &Response) {
+        let json = self.shared.cfg.json;
+        if let Some(Some(conn)) = self.conns.get_mut(slot) {
+            queue(conn, json, resp);
+        }
+    }
+
+    /// Hand one request (1 query, or a BATCH's k members) to the pool.
+    fn dispatch(&mut self, slot: usize, qs: Vec<String>) {
+        let k = qs.len();
+        let conn_id = match self.conns.get(slot) {
+            Some(Some(c)) => c.id,
+            _ => return,
+        };
+        let jobs: Vec<Job> = qs
+            .into_iter()
+            .enumerate()
+            .map(|(member, query)| Job { shard: self.idx, slot, conn_id, member, batch: k, query })
+            .collect();
+        if self.shared.exec.try_submit(jobs) {
+            if let Some(Some(conn)) = self.conns.get_mut(slot) {
+                conn.state = ConnState::Executing { pending: vec![None; k], remaining: k };
+                conn.served += k;
+                if conn.served >= self.shared.cfg.max_requests {
+                    conn.cap_pending = true;
+                }
+            }
+        } else {
+            // Read-time shedding: the queue is full but the connection is
+            // healthy — answer BUSY and keep it open for a retry.
+            self.shared.metrics.busy_rejects.fetch_add(1, Relaxed);
+            self.queue_to(
+                slot,
+                &Response::Busy { msg: "execution queue full, retry later".to_string() },
+            );
+        }
+    }
+
+    /// A worker finished one member. Stitch it in; when the whole request
+    /// has landed, render every reply in member order.
+    fn on_completion(&mut self, c: Completion) {
+        let json = self.shared.cfg.json;
+        let max_requests = self.shared.cfg.max_requests;
+        let mut busy_inc = false;
+        {
+            let Some(Some(conn)) = self.conns.get_mut(c.slot) else { return };
+            if conn.id != c.conn_id {
+                return; // stale completion for a recycled slot
+            }
+            let ConnState::Executing { pending, remaining } = &mut conn.state else { return };
+            if pending[c.member].is_none() {
+                *remaining -= 1;
+            }
+            pending[c.member] = Some(c.resp);
+            if *remaining != 0 {
+                return;
+            }
+            let ConnState::Executing { pending, .. } =
+                std::mem::replace(&mut conn.state, ConnState::Idle)
+            else {
+                unreachable!()
+            };
+            for resp in pending.into_iter().flatten() {
+                queue(conn, json, &resp);
+            }
+            if conn.cap_pending {
+                conn.cap_pending = false;
+                conn.close_after_flush = true;
+                queue(
+                    conn,
+                    json,
+                    &Response::Busy {
+                        msg: format!(
+                            "per-connection request cap ({max_requests}) reached, reconnect"
+                        ),
+                    },
+                );
+                busy_inc = true;
+            }
+        }
+        if busy_inc {
+            self.shared.metrics.busy_rejects.fetch_add(1, Relaxed);
+        }
+        self.finish(c.slot);
+    }
+
+    /// Nonblocking write of whatever is queued; leftover bytes wait for
+    /// write readiness.
+    fn flush(&mut self, slot: usize) {
+        let Some(Some(conn)) = self.conns.get_mut(slot) else { return };
+        let Some(stream) = conn.stream.as_mut() else {
+            // Stream already force-closed: drop the buffered bytes.
+            conn.out.clear();
+            conn.out_pos = 0;
+            return;
+        };
+        while conn.out_pos < conn.out.len() {
+            match stream.write(&conn.out[conn.out_pos..]) {
+                Ok(0) => {
+                    conn.dead = true;
+                    break;
+                }
+                Ok(n) => conn.out_pos += n,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => {
+                    conn.dead = true;
+                    break;
+                }
+            }
+        }
+        if conn.out_pos >= conn.out.len() {
+            conn.out.clear();
+            conn.out_pos = 0;
+        }
+    }
+
+    /// Keep the poller's view in sync with the state machine: read only
+    /// when Idle (drops read interest during execution = backpressure),
+    /// write only while output is queued.
+    fn update_interest(&mut self, slot: usize) {
+        let Some(Some(conn)) = self.conns.get_mut(slot) else { return };
+        let Some(stream) = conn.stream.as_ref() else { return };
+        let want = Interest {
+            read: matches!(conn.state, ConnState::Idle)
+                && !conn.close_after_flush
+                && !conn.eof
+                && !conn.dead,
+            write: conn.out_pos < conn.out.len(),
+        };
+        if want != conn.interest {
+            let fd = fd_of(stream);
+            if self.poller.modify(fd, slot, want).is_ok() {
+                conn.interest = want;
+            }
+        }
+    }
+
+    fn maybe_close(&mut self, slot: usize) {
+        enum Act {
+            Nothing,
+            Free,
+            Close,
+        }
+        let act = {
+            let Some(Some(conn)) = self.conns.get_mut(slot) else { return };
+            let idle = matches!(conn.state, ConnState::Idle);
+            let drained = conn.out_pos >= conn.out.len();
+            if conn.stream.is_none() {
+                // Force-closed earlier; free once completions drained.
+                if idle {
+                    Act::Free
+                } else {
+                    Act::Nothing
+                }
+            } else if conn.dead
+                || (conn.close_after_flush && idle && drained)
+                || (conn.eof && idle && drained && !conn.buf.has_line())
+            {
+                Act::Close
+            } else {
+                Act::Nothing
+            }
+        };
+        match act {
+            Act::Nothing => {}
+            Act::Free => self.free_slot(slot),
+            Act::Close => self.close(slot),
+        }
+    }
+
+    /// Close the socket (deregister + drop). The slot itself is freed only
+    /// once no completions are outstanding for it.
+    fn close(&mut self, slot: usize) {
+        let stream = match self.conns.get_mut(slot) {
+            Some(Some(conn)) => conn.stream.take(),
+            _ => return,
+        };
+        if let Some(stream) = stream {
+            let _ = self.poller.deregister(fd_of(&stream));
+            self.shared.metrics.registered_fds.fetch_sub(1, Relaxed);
+            self.shared.metrics.active.fetch_sub(1, Relaxed);
+            drop(stream);
+        }
+        let idle = match self.conns.get(slot) {
+            Some(Some(conn)) => matches!(conn.state, ConnState::Idle),
+            _ => return,
+        };
+        if idle {
+            self.free_slot(slot);
+        }
+    }
+
+    fn free_slot(&mut self, slot: usize) {
+        if let Some(entry) = self.conns.get_mut(slot) {
+            if entry.take().is_some() {
+                self.free.push(slot);
+                self.live -= 1;
+            }
+        }
+    }
+
+    /// Shutdown sweep: close every connection with nothing in flight and
+    /// nothing left to flush.
+    fn drain_idle(&mut self) {
+        for slot in 0..self.conns.len() {
+            let close = match &self.conns[slot] {
+                Some(conn) => {
+                    conn.stream.is_some()
+                        && matches!(conn.state, ConnState::Idle)
+                        && conn.out_pos >= conn.out.len()
+                }
+                None => false,
+            };
+            if close {
+                self.close(slot);
+            }
+        }
+    }
+
+    /// Grace expired (or the poller died): close every stream now.
+    fn force_close_all(&mut self) {
+        for slot in 0..self.conns.len() {
+            self.close(slot);
         }
     }
 }
@@ -346,6 +914,7 @@ mod tests {
     use crate::datagen;
     use crate::mobius::MobiusJoin;
     use crate::store::{CtStore, PersistConfig, StoreSink};
+    use std::io::{BufRead, BufReader, BufWriter};
     use std::path::PathBuf;
 
     fn tmpdir(tag: &str) -> PathBuf {

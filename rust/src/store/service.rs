@@ -69,6 +69,10 @@ pub struct TreeStats {
     pub evictions: u64,
     /// Bytes currently charged against the store budget for live trees.
     pub bytes: u64,
+    /// Builds in progress right now (latched `Building` slots) — a gauge
+    /// the serving layer exposes so a reactor stall can be told apart
+    /// from a long ADtree construction on the worker pool.
+    pub building: u64,
 }
 
 /// One slot of the ADtree cache.
@@ -189,6 +193,7 @@ impl CountServer {
             coalesced_waits: g.coalesced_waits,
             evictions: g.evictions,
             bytes: g.bytes as u64,
+            building: g.map.values().filter(|s| matches!(s, TreeSlot::Building)).count() as u64,
         }
     }
 

@@ -151,6 +151,7 @@ fn tight_budget_server_evicts_but_stays_correct_under_load() {
             seed: 909,
             stats: true,
             shutdown: true,
+            ..Default::default()
         },
     )
     .unwrap();
