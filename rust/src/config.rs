@@ -81,6 +81,15 @@ pub struct Config {
     pub mix: String,
     /// `bench-serve --idle N`: idle connections held open during the run.
     pub idle: usize,
+    /// `serve --idle-timeout MS`: close connections idle past this long
+    /// (no complete request line arriving — slow-loris defense).
+    pub idle_timeout_ms: Option<u64>,
+    /// `serve --request-timeout MS`: answer `ERR deadline exceeded` when a
+    /// query executes past this long; the connection survives.
+    pub request_timeout_ms: Option<u64>,
+    /// `serve --failpoints SPEC`: arm fault-injection points (builds with
+    /// `--features failpoints` only; errors out otherwise).
+    pub failpoints: Option<String>,
     /// `serve --wire text|json`: response rendering (JSON is the default).
     pub wire_text: bool,
     /// `bench-serve --bench-json FILE`: where the perf report lands.
@@ -125,6 +134,9 @@ impl Default for Config {
             max_requests: 100_000,
             mix: "uniform".into(),
             idle: 0,
+            idle_timeout_ms: None,
+            request_timeout_ms: None,
+            failpoints: None,
             wire_text: false,
             bench_json: None,
             send_shutdown: false,
@@ -205,6 +217,15 @@ impl Config {
                     "max-requests" => {
                         cfg.max_requests = take(&mut it)?.parse().context("--max-requests")?
                     }
+                    "idle-timeout" => {
+                        cfg.idle_timeout_ms =
+                            Some(take(&mut it)?.parse().context("--idle-timeout")?)
+                    }
+                    "request-timeout" => {
+                        cfg.request_timeout_ms =
+                            Some(take(&mut it)?.parse().context("--request-timeout")?)
+                    }
+                    "failpoints" => cfg.failpoints = Some(take(&mut it)?),
                     "wire" => {
                         cfg.wire_text = match take(&mut it)?.as_str() {
                             "text" => true,
@@ -241,6 +262,9 @@ impl Config {
         }
         if cfg.shards == 0 || cfg.max_conns == 0 {
             bail!("--shards and --max-conns must be >= 1");
+        }
+        if cfg.idle_timeout_ms == Some(0) || cfg.request_timeout_ms == Some(0) {
+            bail!("--idle-timeout and --request-timeout must be >= 1 ms (omit to disable)");
         }
         Ok(cfg)
     }
@@ -372,7 +396,9 @@ mod tests {
     fn serve_and_bench_serve_flags_parse() {
         let c = Config::from_args(&args(
             "serve --store /tmp/s --listen 127.0.0.1:7171 --threads 6 --queue-depth 32 \
-             --max-requests 500 --wire text --shards 4 --max-conns 20000 --poller poll",
+             --max-requests 500 --wire text --shards 4 --max-conns 20000 --poller poll \
+             --idle-timeout 30000 --request-timeout 2000 \
+             --failpoints worker.exec.panic=hit:2",
         ))
         .unwrap();
         assert_eq!(c.listen.as_deref(), Some("127.0.0.1:7171"));
@@ -383,6 +409,9 @@ mod tests {
         assert_eq!(c.shards, 4);
         assert_eq!(c.max_conns, 20_000);
         assert_eq!(c.poller.as_deref(), Some("poll"));
+        assert_eq!(c.idle_timeout_ms, Some(30_000));
+        assert_eq!(c.request_timeout_ms, Some(2_000));
+        assert_eq!(c.failpoints.as_deref(), Some("worker.exec.panic=hit:2"));
 
         let b = Config::from_args(&args(
             "bench-serve --addr 127.0.0.1:7171 --clients 8 --queries 200 \
@@ -403,10 +432,15 @@ mod tests {
         assert_eq!(d.poller, None);
         assert_eq!(d.mix, "uniform");
         assert_eq!(d.idle, 0);
+        assert_eq!(d.idle_timeout_ms, None);
+        assert_eq!(d.request_timeout_ms, None);
+        assert_eq!(d.failpoints, None);
 
         assert!(Config::from_args(&args("serve --wire yaml")).is_err());
         assert!(Config::from_args(&args("bench-serve --clients 0")).is_err());
         assert!(Config::from_args(&args("serve --shards 0")).is_err());
         assert!(Config::from_args(&args("serve --max-conns 0")).is_err());
+        assert!(Config::from_args(&args("serve --idle-timeout 0")).is_err());
+        assert!(Config::from_args(&args("serve --request-timeout 0")).is_err());
     }
 }

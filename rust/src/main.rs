@@ -37,6 +37,7 @@ use mrss::util::format_duration;
 use mrss::util::table::{commas, TextTable};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -79,7 +80,8 @@ fn print_help() {
          \x20             --mem-budget BYTES\n\
          serve flags:  --listen HOST:PORT --threads N --shards N --max-conns N\n\
          \x20             --poller poll|epoll --queue-depth N --max-requests N\n\
-         \x20             --wire text|json\n\
+         \x20             --wire text|json --idle-timeout MS --request-timeout MS\n\
+         \x20             --failpoints SPEC (needs --features failpoints)\n\
          bench flags:  --addr HOST:PORT --clients N --queries M --mix uniform|zipf:S\n\
          \x20             --idle N --bench-json FILE --json FILE --shutdown",
         mrss::VERSION
@@ -393,6 +395,12 @@ fn serve_config(cfg: &Config, addr: String) -> Result<ServeConfig> {
         Some(s) => PollerKind::parse(s)?,
         None => PollerKind::os_default(),
     };
+    if let Some(spec) = &cfg.failpoints {
+        // Errors out on a production build: failpoints only exist behind
+        // `--features failpoints`, and silently ignoring an armed spec
+        // would make a chaos run look like a clean one.
+        mrss::util::failpoint::arm(spec).context("--failpoints")?;
+    }
     Ok(ServeConfig {
         addr,
         threads: cfg.serve_threads,
@@ -402,6 +410,8 @@ fn serve_config(cfg: &Config, addr: String) -> Result<ServeConfig> {
         max_requests: cfg.max_requests,
         json: !cfg.wire_text,
         poller,
+        idle_timeout: cfg.idle_timeout_ms.map(Duration::from_millis),
+        request_timeout: cfg.request_timeout_ms.map(Duration::from_millis),
         ..Default::default()
     })
 }

@@ -14,11 +14,12 @@ use crate::util::error::{Context, Result};
 use crate::util::rng::Pcg64;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::metrics::LatencyHistogram;
-use super::protocol::{json_field, parse_count_response, render_answers};
+use super::protocol::{is_busy_response, json_field, parse_count_response, render_answers};
 use super::reactor::max_open_files;
 
 /// How the hot clients pick queries from the generated batch.
@@ -144,6 +145,10 @@ pub struct LoadgenReport {
     /// Idle connections actually held open during the hot run (may be
     /// below the requested `--idle` when the fd limit clamps the pool).
     pub idle_open: usize,
+    /// `BUSY` responses the clients absorbed by backing off and resending
+    /// instead of recording an error — admission-control pressure made
+    /// visible without failing the run.
+    pub busy_retries: u64,
     /// The server's final `STATS` JSON object, when requested.
     pub server_stats: Option<String>,
 }
@@ -161,13 +166,15 @@ impl LoadgenReport {
         format!(
             "{{\n  \"bench\": \"serve\",\n  \"dataset\": \"{dataset}\",\n  \"clients\": {},\n  \
              \"mix\": \"{}\",\n  \"idle\": {},\n  \
-             \"queries\": {},\n  \"errors\": {},\n  \"wall_secs\": {:.4},\n  \"qps\": {:.1},\n  \
+             \"queries\": {},\n  \"errors\": {},\n  \"busy_retries\": {},\n  \
+             \"wall_secs\": {:.4},\n  \"qps\": {:.1},\n  \
              \"client_p50_us\": {},\n  \"client_p99_us\": {},\n  \"server\": {server}\n}}\n",
             self.clients,
             self.mix,
             self.idle_open,
             self.answers.len() + self.errors.len(),
             self.errors.len(),
+            self.busy_retries,
             self.wall.as_secs_f64(),
             self.qps,
             self.p50_us,
@@ -184,6 +191,19 @@ impl LoadgenReport {
         let builds: u64 = json_field(stats, "builds")?.parse().ok()?;
         Some(builds <= stored_tables)
     }
+}
+
+/// Give up on a query after this many consecutive `BUSY` replies: the last
+/// one is recorded as the query's error, so a saturated server still
+/// terminates the run with an honest report instead of spinning.
+const MAX_BUSY_RETRIES: u32 = 8;
+
+/// Backoff before the `attempt`-th resend of a shed query: exponential
+/// from 2 ms, capped at 200 ms, plus up-to-one-step seeded jitter so the
+/// shed clients don't resynchronize into another thundering herd.
+fn busy_backoff(attempt: u32, rng: &mut Pcg64) -> Duration {
+    let base_ms = (2u64 << attempt.min(16)).min(200);
+    Duration::from_millis(base_ms + rng.below(base_ms))
 }
 
 /// One client's share of the batch: every `clients`-th query, interleaved
@@ -239,6 +259,7 @@ pub fn run(schema: &Schema, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let clients = cfg.clients.max(1);
     let queries = gen_queries(schema, cfg.queries, cfg.seed);
     let hist = Arc::new(LatencyHistogram::default());
+    let busy_retries = Arc::new(AtomicU64::new(0));
 
     // The idle pool goes up first so the hot run (and its p50/p99) is
     // measured with every idle connection registered server-side.
@@ -254,6 +275,8 @@ pub fn run(schema: &Schema, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         };
         let addr = cfg.addr.clone();
         let hist = Arc::clone(&hist);
+        let retries = Arc::clone(&busy_retries);
+        let seed = cfg.seed;
         handles.push(std::thread::spawn(
             move || -> Result<Vec<(usize, String, Result<u128, String>)>> {
                 let stream = TcpStream::connect(&addr)
@@ -263,15 +286,32 @@ pub fn run(schema: &Schema, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                 let mut r = BufReader::new(stream);
                 let mut out = Vec::with_capacity(mine.len());
                 let mut line = String::new();
+                // Jitter stream for BUSY backoff: seeded per client so a
+                // contended run replays identically.
+                let mut rng = Pcg64::new(seed, 0x6u64 << 32 | c as u64);
                 for (idx, q) in mine {
                     let t = Instant::now();
-                    writeln!(w, "{q}").with_context(|| format!("client {c}: send"))?;
-                    w.flush().with_context(|| format!("client {c}: flush"))?;
-                    line.clear();
-                    let n = r.read_line(&mut line).with_context(|| format!("client {c}: recv"))?;
-                    if n == 0 {
-                        crate::bail!("client {c}: server closed the connection mid-run");
+                    let mut attempt = 0u32;
+                    loop {
+                        writeln!(w, "{q}").with_context(|| format!("client {c}: send"))?;
+                        w.flush().with_context(|| format!("client {c}: flush"))?;
+                        line.clear();
+                        let n = r
+                            .read_line(&mut line)
+                            .with_context(|| format!("client {c}: recv"))?;
+                        if n == 0 {
+                            crate::bail!("client {c}: server closed the connection mid-run");
+                        }
+                        if is_busy_response(&line) && attempt < MAX_BUSY_RETRIES {
+                            retries.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(busy_backoff(attempt, &mut rng));
+                            attempt += 1;
+                            continue;
+                        }
+                        break;
                     }
+                    // Latency includes the retries: that is what this
+                    // client actually waited for the answer.
                     hist.record(t.elapsed());
                     out.push((idx, q, parse_count_response(&line)));
                 }
@@ -319,6 +359,7 @@ pub fn run(schema: &Schema, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         p99_us: hist.quantile_upper_us(0.99),
         mix: cfg.mix.name(),
         idle_open,
+        busy_retries: busy_retries.load(Ordering::Relaxed),
         server_stats,
     })
 }
@@ -366,6 +407,7 @@ mod tests {
             p99_us: 512,
             mix: "uniform".to_string(),
             idle_open: 0,
+            busy_retries: 3,
             server_stats: Some(
                 "{\"queries\":1,\"adtree\":{\"hits\":9,\"builds\":3,\"coalesced_waits\":2,\
                  \"evictions\":0,\"bytes\":10}}"
@@ -379,6 +421,7 @@ mod tests {
             "\"client_p99_us\": 512",
             "\"mix\": \"uniform\"",
             "\"idle\": 0",
+            "\"busy_retries\": 3",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
@@ -388,6 +431,25 @@ mod tests {
             LoadgenReport { server_stats: None, ..rep }.zero_duplicate_builds(12),
             None
         );
+    }
+
+    #[test]
+    fn busy_backoff_grows_caps_and_jitters_deterministically() {
+        let mut a = Pcg64::new(7, 1);
+        let mut b = Pcg64::new(7, 1);
+        let mut prev_base = 0;
+        for attempt in 0..MAX_BUSY_RETRIES {
+            let da = busy_backoff(attempt, &mut a);
+            let db = busy_backoff(attempt, &mut b);
+            assert_eq!(da, db, "same seed must jitter identically");
+            let base_ms = (2u64 << attempt).min(200);
+            assert!(da >= Duration::from_millis(base_ms), "below base at {attempt}");
+            assert!(da < Duration::from_millis(2 * base_ms), "over 2x base at {attempt}");
+            assert!(base_ms >= prev_base, "backoff must be monotone");
+            prev_base = base_ms;
+        }
+        // Far past the cap: stays bounded, no shift overflow.
+        assert!(busy_backoff(60, &mut a) < Duration::from_millis(400));
     }
 
     #[test]

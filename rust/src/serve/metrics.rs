@@ -103,6 +103,15 @@ pub struct ServeMetrics {
     /// Distribution of `active + 1` sampled at every accept — how many
     /// connections were open each time one more arrived.
     pub conns: LatencyHistogram,
+    /// Worker jobs that panicked and were converted to `ERR` replies (the
+    /// worker thread survives; the connection returns to `Idle`).
+    pub worker_panics: AtomicU64,
+    /// Connections closed for sitting idle (or parked mid-line) past
+    /// `--idle-timeout`.
+    pub conn_timeouts: AtomicU64,
+    /// In-flight requests answered `ERR deadline exceeded` after
+    /// `--request-timeout`; their late completions are discarded.
+    pub request_timeouts: AtomicU64,
 }
 
 impl Default for ServeMetrics {
@@ -121,6 +130,9 @@ impl Default for ServeMetrics {
             batch_inflight: AtomicU64::new(0),
             batch_peak: AtomicU64::new(0),
             conns: LatencyHistogram::default(),
+            worker_panics: AtomicU64::new(0),
+            conn_timeouts: AtomicU64::new(0),
+            request_timeouts: AtomicU64::new(0),
         }
     }
 }
@@ -148,6 +160,9 @@ impl ServeMetrics {
             batch_peak: self.batch_peak.load(Relaxed),
             conns_p50: self.conns.quantile_upper_us(0.50),
             conns_p99: self.conns.quantile_upper_us(0.99),
+            worker_panics: self.worker_panics.load(Relaxed),
+            conn_timeouts: self.conn_timeouts.load(Relaxed),
+            request_timeouts: self.request_timeouts.load(Relaxed),
             store,
             trees,
         }
@@ -180,6 +195,12 @@ pub struct ServeSnapshot {
     /// Connections-open distribution sampled at accept (bucket bounds).
     pub conns_p50: u64,
     pub conns_p99: u64,
+    /// Panicked worker jobs converted to `ERR` replies.
+    pub worker_panics: u64,
+    /// Connections closed by `--idle-timeout`.
+    pub conn_timeouts: u64,
+    /// Requests answered `ERR deadline exceeded` by `--request-timeout`.
+    pub request_timeouts: u64,
     pub store: StoreStats,
     pub trees: TreeStats,
 }
@@ -191,10 +212,12 @@ impl ServeSnapshot {
             "{{\"uptime_secs\":{:.3},\"queries\":{},\"errors\":{},\"busy_rejects\":{},\
              \"connections\":{},\"active\":{},\"qps\":{:.1},\"p50_us\":{},\"p99_us\":{},\
              \"batch_peak\":{},\
+             \"worker_panics\":{},\"conn_timeouts\":{},\"request_timeouts\":{},\
              \"reactor\":{{\"registered_fds\":{},\"run_queue_peak\":{},\"wakeups\":{},\
              \"wakeups_per_sec\":{:.1}}},\
              \"conns\":{{\"p50\":{},\"p99\":{}}},\
-             \"store\":{{\"hits\":{},\"misses\":{},\"evictions\":{},\"bytes_read\":{}}},\
+             \"store\":{{\"hits\":{},\"misses\":{},\"evictions\":{},\"bytes_read\":{},\
+             \"quarantined_tables\":{}}},\
              \"adtree\":{{\"hits\":{},\"builds\":{},\"building\":{},\"coalesced_waits\":{},\
              \"evictions\":{},\"bytes\":{}}}}}",
             self.uptime_secs,
@@ -207,6 +230,9 @@ impl ServeSnapshot {
             self.p50_us,
             self.p99_us,
             self.batch_peak,
+            self.worker_panics,
+            self.conn_timeouts,
+            self.request_timeouts,
             self.registered_fds,
             self.run_queue_peak,
             self.wakeups,
@@ -217,6 +243,7 @@ impl ServeSnapshot {
             self.store.misses,
             self.store.evictions,
             self.store.bytes_read,
+            self.store.quarantined_tables,
             self.trees.hits,
             self.trees.builds,
             self.trees.building,
@@ -280,7 +307,11 @@ mod tests {
         m.run_queue_peak.fetch_max(9, Relaxed);
         m.batch_peak.fetch_max(2, Relaxed);
         m.conns.record_value(3);
-        let snap = m.snapshot(StoreStats::default(), TreeStats::default());
+        m.worker_panics.fetch_add(1, Relaxed);
+        m.conn_timeouts.fetch_add(5, Relaxed);
+        m.request_timeouts.fetch_add(6, Relaxed);
+        let store = StoreStats { quarantined_tables: 7, ..Default::default() };
+        let snap = m.snapshot(store, TreeStats::default());
         let j = snap.to_json();
         for key in [
             "\"queries\":3",
@@ -294,6 +325,10 @@ mod tests {
             "\"batch_peak\":2",
             "\"conns\":{\"p50\":4,\"p99\":4}",
             "\"building\":0",
+            "\"worker_panics\":1",
+            "\"conn_timeouts\":5",
+            "\"request_timeouts\":6",
+            "\"quarantined_tables\":7",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
@@ -304,6 +339,10 @@ mod tests {
         assert_eq!(f("builds").as_deref(), Some("0"));
         assert_eq!(f("registered_fds").as_deref(), Some("4"));
         assert_eq!(f("batch_peak").as_deref(), Some("2"));
+        assert_eq!(f("worker_panics").as_deref(), Some("1"));
+        assert_eq!(f("conn_timeouts").as_deref(), Some("5"));
+        assert_eq!(f("request_timeouts").as_deref(), Some("6"));
+        assert_eq!(f("quarantined_tables").as_deref(), Some("7"));
     }
 
     #[test]

@@ -28,9 +28,18 @@
 //!   [`MjMetrics`](crate::mobius::MjMetrics);
 //! * [`loadgen`] — the `bench-serve` client: N connections hammering the
 //!   socket with a deterministic batch (uniform or `zipf:<s>`-skewed),
-//!   an optional idle-connection pool (`--idle`), emitting
-//!   `BENCH_serve.json` and — in uniform mode — an answers document
-//!   byte-comparable with `mrss query --fresh`.
+//!   an optional idle-connection pool (`--idle`), `BUSY`-aware retries
+//!   with capped seeded backoff, emitting `BENCH_serve.json` and — in
+//!   uniform mode — an answers document byte-comparable with
+//!   `mrss query --fresh`.
+//!
+//! The serving stack is built to stay up under faults: worker panics are
+//! caught and answered as terminal errors (the pool survives),
+//! `--idle-timeout` / `--request-timeout` arm per-shard deadline heaps
+//! that expire slow-loris connections and over-budget queries, and the
+//! store underneath quarantines damaged tables and degrades via Möbius
+//! derivation (see [`crate::store`]). All of it is driven in tests by the
+//! [`crate::util::failpoint`] harness (`--features failpoints`).
 //!
 //! CLI: `mrss serve --store DIR --listen ADDR` starts the server;
 //! `mrss bench-serve` drives it (or self-hosts one on an ephemeral port).

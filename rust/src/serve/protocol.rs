@@ -163,6 +163,16 @@ pub fn parse_count_response(line: &str) -> Result<u128, String> {
     Err(format!("unparseable response `{line}`"))
 }
 
+/// Is this response line the admission-control `BUSY` answer (either wire
+/// mode)? A busy reply is retryable — the server shed the request before
+/// doing any work — unlike a terminal `ERR`, which reports a real failure
+/// for the query itself. The load generator backs off and resends on busy.
+pub fn is_busy_response(line: &str) -> bool {
+    let line = line.trim();
+    line.starts_with("BUSY")
+        || (line.starts_with('{') && json_field(line, "busy").as_deref() == Some("true"))
+}
+
 /// Extract one scalar field from a flat one-line JSON object — enough for
 /// the wire responses this module itself renders (no nesting, strings have
 /// no escaped quotes after `json_escape` other than `\"`).
@@ -344,6 +354,21 @@ mod tests {
         assert_eq!(Response::Pong.render(false), "PONG");
         assert_eq!(Response::Pong.render(true), "{\"pong\":true}");
         assert_eq!(Response::Bye.render(false), "BYE");
+    }
+
+    #[test]
+    fn busy_detection_covers_both_wire_modes_and_nothing_else() {
+        for json in [false, true] {
+            let busy = Response::Busy { msg: "queue full".into() }.render(json);
+            assert!(is_busy_response(&busy), "{busy}");
+            let err = Response::Error { query: "a=1".into(), msg: "busy:true".into() }
+                .render(json);
+            assert!(!is_busy_response(&err), "{err}");
+            let ok = Response::Count { query: "a=1".into(), count: 1 }.render(json);
+            assert!(!is_busy_response(&ok), "{ok}");
+        }
+        assert!(is_busy_response("  BUSY shed\n"));
+        assert!(!is_busy_response("{\"pong\":true}"));
     }
 
     #[test]

@@ -42,7 +42,8 @@
 
 use crate::store::CountServer;
 use crate::util::error::{Context, Result};
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::Ordering::{Relaxed, SeqCst};
@@ -88,6 +89,14 @@ pub struct ServeConfig {
     pub json: bool,
     /// Readiness backend (`epoll` on Linux by default, `poll` elsewhere).
     pub poller: PollerKind,
+    /// Close connections that have not completed a request (or sit parked
+    /// on a partial line) for this long. `None` = never. Counted in
+    /// `conn_timeouts`.
+    pub idle_timeout: Option<Duration>,
+    /// Abandon in-flight requests executing longer than this: the client
+    /// gets `ERR deadline exceeded`, the late completion is discarded by
+    /// the conn-id guard. `None` = never. Counted in `request_timeouts`.
+    pub request_timeout: Option<Duration>,
     /// Test hook: workers sleep this long before executing each query so
     /// fan-out concurrency is observable deterministically. Zero (and
     /// meant to stay zero) in production.
@@ -105,6 +114,8 @@ impl Default for ServeConfig {
             max_requests: 100_000,
             json: true,
             poller: PollerKind::os_default(),
+            idle_timeout: None,
+            request_timeout: None,
             exec_delay: Duration::ZERO,
         }
     }
@@ -355,23 +366,55 @@ fn worker_loop(shared: &Shared) {
         if !shared.cfg.exec_delay.is_zero() {
             std::thread::sleep(shared.cfg.exec_delay);
         }
+        if let Some(ms) = crate::util::failpoint::fire_arg("worker.exec.delay") {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
         shared.metrics.queries.fetch_add(1, Relaxed);
         let t0 = Instant::now();
-        let out = shared.count.count_query(&query);
+        // Panic isolation: a panicking count (bug or the armed
+        // `worker.exec.panic` failpoint) must neither kill this worker nor
+        // strand the connection in `Executing` — it becomes an ERR
+        // completion like any other failed query.
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if crate::util::failpoint::fire("worker.exec.panic") {
+                panic!("injected panic (failpoint worker.exec.panic)");
+            }
+            shared.count.count_query(&query)
+        }));
         shared.metrics.latency.record(t0.elapsed());
         if fanout {
             shared.metrics.batch_inflight.fetch_sub(1, Relaxed);
         }
         let resp = match out {
-            Ok(count) => Response::Count { query, count },
-            Err(e) => {
+            Ok(Ok(count)) => Response::Count { query, count },
+            Ok(Err(e)) => {
                 shared.metrics.errors.fetch_add(1, Relaxed);
                 Response::Error { query, msg: e.to_string() }
+            }
+            Err(payload) => {
+                shared.metrics.errors.fetch_add(1, Relaxed);
+                shared.metrics.worker_panics.fetch_add(1, Relaxed);
+                Response::Error {
+                    query,
+                    msg: format!("worker panicked: {}", panic_message(payload.as_ref())),
+                }
             }
         };
         let ss = &shared.shards[shard];
         ss.completions.lock().unwrap().push(Completion { slot, conn_id, member, resp });
         ss.wake.wake();
+    }
+}
+
+/// Best-effort text of a panic payload (panics carry `&str` or `String`
+/// in practice; anything else gets a placeholder).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
     }
 }
 
@@ -408,6 +451,13 @@ struct Conn {
     cap_pending: bool,
     eof: bool,
     dead: bool,
+    /// Idle-timeout clock: when the connection last completed a line
+    /// (accept, parsed request, or a request finishing). Deliberately NOT
+    /// advanced by raw bytes, so a slow-loris drip-feeding a partial line
+    /// still expires.
+    last_activity: Instant,
+    /// Request-timeout clock: when the in-flight request was dispatched.
+    exec_start: Option<Instant>,
 }
 
 /// Append one rendered response line to the connection's output buffer.
@@ -426,6 +476,12 @@ struct ShardCtx {
     /// Slots still owned (stream open, or completions outstanding).
     live: usize,
     next_id: u64,
+    /// Min-heap of `(deadline, slot, conn_id)` feeding the poller timeout.
+    /// Entries are lazily validated at expiry: a stale one (recycled slot,
+    /// bumped id, state change, clock pushed forward by activity) is
+    /// dropped or re-pushed at the connection's *actual* deadline — so
+    /// activity never has to rebuild the heap on the hot path.
+    timers: BinaryHeap<Reverse<(Instant, usize, u64)>>,
 }
 
 impl ShardCtx {
@@ -439,6 +495,7 @@ impl ShardCtx {
             free: Vec::new(),
             live: 0,
             next_id: 0,
+            timers: BinaryHeap::new(),
         }
     }
 
@@ -448,7 +505,17 @@ impl ShardCtx {
         let mut grace: Option<Instant> = None;
         loop {
             let shutting = self.shared.shutdown.load(SeqCst);
-            let timeout = if shutting { Some(Duration::from_millis(100)) } else { None };
+            let mut timeout = if shutting { Some(Duration::from_millis(100)) } else { None };
+            // The earliest armed deadline bounds the wait, so timeouts
+            // fire without any event traffic. A stale heap head only costs
+            // one early wake-up; the expiry sweep re-files it.
+            if let Some(Reverse((d, _, _))) = self.timers.peek() {
+                let until = d.saturating_duration_since(Instant::now());
+                timeout = Some(match timeout {
+                    Some(t) => t.min(until),
+                    None => until,
+                });
+            }
             let n = match self.poller.wait(&mut events, timeout) {
                 Ok(n) => n,
                 Err(_) => {
@@ -484,6 +551,7 @@ impl ShardCtx {
             for c in completions {
                 self.on_completion(c);
             }
+            self.expire_timers();
             if self.shared.shutdown.load(SeqCst) {
                 if listener_open {
                     let _ = self.poller.deregister(fd_of(&listener));
@@ -505,6 +573,12 @@ impl ShardCtx {
 
     fn accept_burst(&mut self, listener: &TcpListener) {
         for _ in 0..ACCEPT_BURST {
+            // `net.accept.err` simulates a transient accept failure
+            // (EMFILE and friends): same back-off as the real Err arm.
+            if crate::util::failpoint::fire("net.accept.err") {
+                std::thread::sleep(Duration::from_millis(1));
+                break;
+            }
             match listener.accept() {
                 Ok((stream, _)) => self.admit(stream),
                 Err(e) if e.kind() == ErrorKind::WouldBlock => break,
@@ -523,13 +597,17 @@ impl ShardCtx {
     fn admit(&mut self, stream: TcpStream) {
         let m = &self.shared.metrics;
         if m.active.load(Relaxed) as usize >= self.shared.cfg.max_conns {
-            // Accept-time shedding: a clean bounded answer, then close.
+            // Accept-time shedding: best-effort nonblocking reject. The
+            // reactor thread must never block on a victim socket — if the
+            // single write doesn't fit (unwritable peer), the close alone
+            // is the answer.
             m.busy_rejects.fetch_add(1, Relaxed);
-            let _ = stream.set_nonblocking(false);
-            let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+            let _ = stream.set_nonblocking(true);
             let busy = Response::Busy { msg: "connection limit reached, retry later".to_string() };
+            let mut line = busy.render(self.shared.cfg.json);
+            line.push('\n');
             let mut s = stream;
-            let _ = writeln!(s, "{}", busy.render(self.shared.cfg.json));
+            let _ = s.write(line.as_bytes());
             return;
         }
         // Accepted sockets do not inherit the listener's O_NONBLOCK.
@@ -569,8 +647,119 @@ impl ShardCtx {
             cap_pending: false,
             eof: false,
             dead: false,
+            last_activity: Instant::now(),
+            exec_start: None,
         });
         self.live += 1;
+        self.arm_timer(slot);
+    }
+
+    /// The connection's current deadline under the configured timeouts,
+    /// if any applies to its state.
+    fn conn_deadline(&self, conn: &Conn) -> Option<Instant> {
+        if conn.stream.is_none() {
+            return None;
+        }
+        match conn.state {
+            ConnState::Executing { .. } => self
+                .shared
+                .cfg
+                .request_timeout
+                .and_then(|t| conn.exec_start.map(|s| s + t)),
+            ConnState::Idle => self.shared.cfg.idle_timeout.map(|t| conn.last_activity + t),
+        }
+    }
+
+    /// File the connection's current deadline (if any) in the heap.
+    fn arm_timer(&mut self, slot: usize) {
+        let entry = match self.conns.get(slot) {
+            Some(Some(conn)) => self.conn_deadline(conn).map(|d| (d, conn.id)),
+            _ => None,
+        };
+        if let Some((d, id)) = entry {
+            self.timers.push(Reverse((d, slot, id)));
+        }
+    }
+
+    /// Pop every due heap entry: stale ones are dropped or re-filed at the
+    /// connection's actual deadline; genuinely expired ones fire.
+    fn expire_timers(&mut self) {
+        let now = Instant::now();
+        loop {
+            match self.timers.peek() {
+                Some(Reverse((d, _, _))) if *d <= now => {}
+                _ => break,
+            }
+            let Some(Reverse((_, slot, id))) = self.timers.pop() else { break };
+            let actual = match self.conns.get(slot) {
+                Some(Some(conn)) if conn.id == id => self.conn_deadline(conn),
+                _ => continue, // slot freed or recycled since filing
+            };
+            match actual {
+                // Activity (or a state change) pushed the deadline out.
+                Some(d) if d > now => self.timers.push(Reverse((d, slot, id))),
+                Some(_) => self.fire_timeout(slot, now),
+                // No timeout applies to the connection's current state.
+                None => {}
+            }
+        }
+    }
+
+    /// One connection blew its deadline. Idle: close it (`conn_timeouts`).
+    /// Executing: abandon the in-flight request — reply `ERR deadline
+    /// exceeded`, bump the conn id so the guard in [`ShardCtx::on_completion`]
+    /// discards the late result, and return the connection to `Idle`
+    /// (`request_timeouts`).
+    fn fire_timeout(&mut self, slot: usize, now: Instant) {
+        let json = self.shared.cfg.json;
+        let max_requests = self.shared.cfg.max_requests;
+        let executing = match self.conns.get(slot) {
+            Some(Some(conn)) => matches!(conn.state, ConnState::Executing { .. }),
+            _ => return,
+        };
+        if !executing {
+            self.shared.metrics.conn_timeouts.fetch_add(1, Relaxed);
+            self.close(slot);
+            return;
+        }
+        self.shared.metrics.request_timeouts.fetch_add(1, Relaxed);
+        self.shared.metrics.errors.fetch_add(1, Relaxed);
+        let new_id = self.next_id;
+        self.next_id += 1;
+        let mut cap_busy = false;
+        {
+            let Some(Some(conn)) = self.conns.get_mut(slot) else { return };
+            conn.id = new_id;
+            conn.state = ConnState::Idle;
+            conn.exec_start = None;
+            conn.last_activity = now;
+            queue(
+                conn,
+                json,
+                &Response::Error { query: String::new(), msg: "deadline exceeded".to_string() },
+            );
+            // The request cap would have closed on completion; the timeout
+            // replaces that completion, so it honors the cap itself.
+            if conn.cap_pending {
+                conn.cap_pending = false;
+                conn.close_after_flush = true;
+                queue(
+                    conn,
+                    json,
+                    &Response::Busy {
+                        msg: format!(
+                            "per-connection request cap ({max_requests}) reached, reconnect"
+                        ),
+                    },
+                );
+                cap_busy = true;
+            }
+        }
+        if cap_busy {
+            self.shared.metrics.busy_rejects.fetch_add(1, Relaxed);
+        }
+        self.arm_timer(slot);
+        self.finish(slot);
     }
 
     fn on_event(&mut self, slot: usize, readable: bool, writable: bool) {
@@ -647,7 +836,13 @@ impl ShardCtx {
                         return;
                     }
                     Ok(None) => return,
-                    Ok(Some(l)) => l,
+                    Ok(Some(l)) => {
+                        // Only a *complete* line resets the idle clock —
+                        // raw bytes don't, so drip-fed partial lines
+                        // (slow-loris) still expire.
+                        conn.last_activity = Instant::now();
+                        l
+                    }
                 }
             };
             if line.trim().is_empty() {
@@ -702,11 +897,13 @@ impl ShardCtx {
         if self.shared.exec.try_submit(jobs) {
             if let Some(Some(conn)) = self.conns.get_mut(slot) {
                 conn.state = ConnState::Executing { pending: vec![None; k], remaining: k };
+                conn.exec_start = Some(Instant::now());
                 conn.served += k;
                 if conn.served >= self.shared.cfg.max_requests {
                     conn.cap_pending = true;
                 }
             }
+            self.arm_timer(slot);
         } else {
             // Read-time shedding: the queue is full but the connection is
             // healthy — answer BUSY and keep it open for a retry.
@@ -742,6 +939,8 @@ impl ShardCtx {
             else {
                 unreachable!()
             };
+            conn.exec_start = None;
+            conn.last_activity = Instant::now();
             for resp in pending.into_iter().flatten() {
                 queue(conn, json, &resp);
             }
@@ -763,6 +962,7 @@ impl ShardCtx {
         if busy_inc {
             self.shared.metrics.busy_rejects.fetch_add(1, Relaxed);
         }
+        self.arm_timer(c.slot);
         self.finish(c.slot);
     }
 
@@ -1022,6 +1222,72 @@ mod tests {
         assert!(handle.snapshot().busy_rejects >= 1);
         handle.request_shutdown();
         handle.wait();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn idle_timeout_closes_parked_connections() {
+        let cfg = ServeConfig {
+            idle_timeout: Some(Duration::from_millis(150)),
+            ..Default::default()
+        };
+        let (dir, handle) = start_uwcse("idletimeout", cfg);
+        // One fully idle client, one parked mid-line (slow-loris shape):
+        // both must be closed by the reactor, no reads required.
+        let idle = TcpStream::connect(handle.addr()).unwrap();
+        let mut loris = TcpStream::connect(handle.addr()).unwrap();
+        loris.write_all(b"PIN").unwrap(); // no newline, never completes
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let snap = handle.snapshot();
+            if snap.conn_timeouts >= 2 && snap.active == 0 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "idle timeout never fired: {snap:?}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        // The sockets are really closed: reads see EOF.
+        let mut buf = [0u8; 16];
+        let mut r = idle.try_clone().unwrap();
+        r.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        assert_eq!(r.read(&mut buf).unwrap(), 0, "idle socket must be closed");
+        handle.request_shutdown();
+        handle.wait();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn request_timeout_answers_deadline_exceeded_and_conn_survives() {
+        let cfg = ServeConfig {
+            // Workers sleep 400 ms per query; the deadline fires at 50 ms.
+            exec_delay: Duration::from_millis(400),
+            request_timeout: Some(Duration::from_millis(50)),
+            ..Default::default()
+        };
+        let (dir, handle) = start_uwcse("reqtimeout", cfg);
+        let stream = TcpStream::connect(handle.addr()).unwrap();
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        let mut r = BufReader::new(stream);
+        writeln!(w, "position(P1)=faculty").unwrap();
+        w.flush().unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("deadline exceeded"), "{line}");
+        // The connection is back to Idle and usable; the late completion
+        // (arriving ~350 ms later) must be discarded by the conn-id guard,
+        // not written to us.
+        writeln!(w, "PING").unwrap();
+        w.flush().unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "{\"pong\":true}");
+        std::thread::sleep(Duration::from_millis(500));
+        let snap = handle.snapshot();
+        assert_eq!(snap.request_timeouts, 1, "{snap:?}");
+        // Nothing extra may have been written after the late completion.
+        handle.request_shutdown();
+        let snap = handle.wait();
+        assert_eq!(snap.active, 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -34,4 +34,6 @@ mod repo;
 mod service;
 
 pub use repo::{CtStore, PersistConfig, StoreSink, StoreStats, TableKind, TableMeta, MANIFEST};
-pub use service::{gen_queries, needs_level, normalize, parse_query, CountServer, TreeStats};
+pub use service::{
+    gen_queries, needs_level, needs_table, normalize, parse_query, CountServer, TreeStats,
+};

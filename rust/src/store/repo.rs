@@ -120,6 +120,9 @@ pub struct StoreStats {
     pub evictions: u64,
     /// Bytes read from disk (encoded size, before decode).
     pub bytes_read: u64,
+    /// Tables renamed to `.ct.bad` and dropped from the manifest — by the
+    /// open-time scrub or after a decode failure on read.
+    pub quarantined_tables: u64,
 }
 
 struct CacheEntry {
@@ -189,7 +192,13 @@ impl CtStore {
         Ok(store)
     }
 
-    /// Open an existing store directory (reads the manifest).
+    /// Open an existing store directory: reads the manifest, then scrubs —
+    /// stale `*.tmp` litter from a crashed writer is removed, and every
+    /// manifest entry is verified against its `.ct` file (existence, size,
+    /// full checksummed decode). Damaged tables are quarantined: renamed to
+    /// `<key>.ct.bad`, dropped from the manifest, and counted in
+    /// [`StoreStats::quarantined_tables`], so the query layer degrades to
+    /// the surviving tables instead of tripping over bad bytes later.
     pub fn open(dir: impl Into<PathBuf>) -> Result<CtStore> {
         let dir = dir.into();
         let path = dir.join(MANIFEST);
@@ -234,13 +243,63 @@ impl CtStore {
         if dataset.is_empty() {
             bail!("{}: manifest has no dataset line", path.display());
         }
-        Ok(CtStore {
+        let store = CtStore {
             dir,
             dataset,
             scale,
             seed,
             inner: Mutex::new(Inner { tables, ..Inner::default() }),
-        })
+        };
+        store.scrub()?;
+        Ok(store)
+    }
+
+    /// Reconcile the manifest against the directory (see [`CtStore::open`]).
+    /// Cost is one full read+decode per table — O(store bytes) — paid once
+    /// per open in exchange for never serving from a damaged file.
+    fn scrub(&self) -> Result<()> {
+        for entry in std::fs::read_dir(&self.dir)
+            .with_context(|| format!("listing {}", self.dir.display()))?
+        {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name.ends_with(".tmp") {
+                std::fs::remove_file(&path)
+                    .with_context(|| format!("removing stale {}", path.display()))?;
+            }
+        }
+        let keys: Vec<String> = {
+            let g = self.inner.lock().unwrap();
+            g.tables.keys().cloned().collect()
+        };
+        let mut bad = Vec::new();
+        for key in keys {
+            let (expect_bytes, path) = {
+                let g = self.inner.lock().unwrap();
+                let meta = match g.tables.get(&key) {
+                    Some(m) => m,
+                    None => continue,
+                };
+                (meta.bytes, self.dir.join(format!("{key}.ct")))
+            };
+            let healthy = match std::fs::read(&path) {
+                Ok(bytes) => {
+                    bytes.len() as u64 == expect_bytes && codec::decode(&bytes).is_ok()
+                }
+                Err(_) => false,
+            };
+            if !healthy {
+                bad.push(key);
+            }
+        }
+        if !bad.is_empty() {
+            let mut g = self.inner.lock().unwrap();
+            for key in &bad {
+                quarantine_locked(&self.dir, &mut g, key);
+            }
+            self.write_manifest(&g)?;
+        }
+        Ok(())
     }
 
     /// The store directory.
@@ -331,8 +390,15 @@ impl CtStore {
         let bytes = codec::encode(ct);
         let path = self.dir.join(format!("{key}.ct"));
         let tmp = self.dir.join(format!("{key}.ct.tmp"));
-        std::fs::write(&tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))?;
-        std::fs::rename(&tmp, &path).with_context(|| format!("renaming to {}", path.display()))?;
+        // `store.write.torn` simulates a crash mid-write that still managed
+        // to rename: the table lands truncated behind a manifest entry, the
+        // exact damage the open-time scrub must catch.
+        let written: &[u8] = if crate::util::failpoint::fire("store.write.torn") {
+            &bytes[..bytes.len() / 2]
+        } else {
+            &bytes
+        };
+        write_atomic(&self.dir, &tmp, &path, written)?;
         let meta = TableMeta {
             key: key.clone(),
             kind,
@@ -372,11 +438,13 @@ impl CtStore {
             }
         }
         let path = self.dir.join(format!("{key}.ct"));
-        let bytes =
+        let mut bytes =
             std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
-        let table = Arc::new(
-            codec::decode(&bytes).with_context(|| format!("decoding {}", path.display()))?,
-        );
+        corrupt_failpoint(&mut bytes);
+        let table = match codec::decode(&bytes) {
+            Ok(t) => Arc::new(t),
+            Err(e) => return Err(self.quarantine_on_decode_error(key, &path, e)),
+        };
         let mut guard = self.inner.lock().unwrap();
         let g = &mut *guard;
         g.stats.misses += 1;
@@ -405,13 +473,38 @@ impl CtStore {
             bail!("store has no table `{key}` (dataset {})", self.dataset);
         }
         let path = self.dir.join(format!("{key}.ct"));
-        let bytes = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
-        let table =
-            codec::decode(&bytes).with_context(|| format!("decoding {}", path.display()))?;
+        let mut bytes =
+            std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        corrupt_failpoint(&mut bytes);
+        let table = match codec::decode(&bytes) {
+            Ok(t) => t,
+            Err(e) => return Err(self.quarantine_on_decode_error(key, &path, e)),
+        };
         let mut g = self.inner.lock().unwrap();
         g.stats.misses += 1;
         g.stats.bytes_read += bytes.len() as u64;
         Ok(table)
+    }
+
+    /// A read produced undecodable bytes: the on-disk file is damaged, so
+    /// quarantine it (rename to `.ct.bad`, drop the manifest entry) rather
+    /// than fail the same way on every future query. The caller's query
+    /// still errors; later queries see a consistent "no table" miss, which
+    /// the query layer can answer by Möbius derivation from survivors.
+    fn quarantine_on_decode_error(
+        &self,
+        key: &str,
+        path: &Path,
+        e: crate::util::error::Error,
+    ) -> crate::util::error::Error {
+        let mut g = self.inner.lock().unwrap();
+        if g.tables.contains_key(key) {
+            quarantine_locked(&self.dir, &mut g, key);
+            // Manifest rewrite is best-effort: the in-memory drop already
+            // protects readers; a failed rewrite is re-scrubbed at next open.
+            let _ = self.write_manifest(&g);
+        }
+        e.context(format!("decoding {} (table quarantined)", path.display()))
     }
 
     /// Reassemble an [`MjResult`] from the stored entity/chain/joint tables
@@ -472,9 +565,53 @@ impl CtStore {
         }
         let path = self.dir.join(MANIFEST);
         let tmp = self.dir.join(format!("{MANIFEST}.tmp"));
-        std::fs::write(&tmp, out).with_context(|| format!("writing {}", tmp.display()))?;
-        std::fs::rename(&tmp, &path).with_context(|| format!("renaming to {}", path.display()))
+        write_atomic(&self.dir, &tmp, &path, out.as_bytes())
     }
+}
+
+/// Durable temp+rename: write, `sync_all` the data file (so the rename can
+/// never promote unflushed bytes), rename, then `sync_all` the directory so
+/// the rename itself survives a power cut. The directory fsync is
+/// best-effort — some filesystems reject opening a directory for sync, and
+/// the fallback (a post-crash scrub catching the missing file) is exactly
+/// what [`CtStore::open`] does anyway.
+fn write_atomic(dir: &Path, tmp: &Path, path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
+    let mut f =
+        std::fs::File::create(tmp).with_context(|| format!("creating {}", tmp.display()))?;
+    f.write_all(bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+    drop(f);
+    std::fs::rename(tmp, path).with_context(|| format!("renaming to {}", path.display()))?;
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// `store.read.corrupt`: flip one mid-file byte after a successful read, so
+/// the checksummed decode fails exactly as it would on real bit rot.
+fn corrupt_failpoint(bytes: &mut [u8]) {
+    if crate::util::failpoint::fire("store.read.corrupt") && !bytes.is_empty() {
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+    }
+}
+
+/// Quarantine one table under the store lock: rename its file to
+/// `<key>.ct.bad` (kept for post-mortem, never re-read), drop it from the
+/// manifest map and the LRU cache, and bump the counter. The caller decides
+/// when to rewrite the manifest file.
+fn quarantine_locked(dir: &Path, g: &mut Inner, key: &str) {
+    if g.tables.remove(key).is_none() {
+        return;
+    }
+    if let Some(e) = g.cache.remove(key) {
+        g.cached_bytes -= e.mem;
+    }
+    g.stats.quarantined_tables += 1;
+    let path = dir.join(format!("{key}.ct"));
+    let _ = std::fs::rename(&path, dir.join(format!("{key}.ct.bad")));
 }
 
 /// Evict least-recently-used entries until the cache (plus any external
@@ -703,6 +840,59 @@ mod tests {
         store.charge_external(-((one * 2) as isize));
         assert_eq!(store.external_bytes(), 0);
         assert_eq!(*store.get("entity_1").unwrap(), small_ct(1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_scrubs_truncated_tables_and_tmp_litter() {
+        let dir = tmpdir("scrub");
+        let store = CtStore::create(&dir, "uwcse", 0.1, 7).unwrap();
+        store.put(TableKind::Entity(0), &[0], &small_ct(0)).unwrap();
+        store.put(TableKind::Entity(1), &[1], &small_ct(1)).unwrap();
+        drop(store);
+        // Simulate a crash mid-run: one table truncated behind its manifest
+        // entry, plus temp-file litter.
+        let victim = dir.join("entity_0.ct");
+        let bytes = std::fs::read(&victim).unwrap();
+        std::fs::write(&victim, &bytes[..bytes.len() / 2]).unwrap();
+        std::fs::write(dir.join("entity_9.ct.tmp"), b"junk").unwrap();
+
+        let again = CtStore::open(&dir).unwrap();
+        assert!(!again.contains("entity_0"), "damaged table must leave the manifest");
+        assert_eq!(again.stats().quarantined_tables, 1);
+        assert!(dir.join("entity_0.ct.bad").exists());
+        assert!(!dir.join("entity_0.ct").exists());
+        assert!(!dir.join("entity_9.ct.tmp").exists());
+        assert_eq!(*again.get("entity_1").unwrap(), small_ct(1));
+        // A second open finds nothing further to quarantine.
+        drop(again);
+        let third = CtStore::open(&dir).unwrap();
+        assert_eq!(third.stats().quarantined_tables, 0);
+        assert!(third.contains("entity_1"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn decode_failure_on_read_quarantines() {
+        let dir = tmpdir("readquarantine");
+        let store = CtStore::create(&dir, "uwcse", 0.1, 7).unwrap();
+        store.put(TableKind::Entity(0), &[0], &small_ct(0)).unwrap();
+        // Flip a mid-file byte on disk; the next read must fail decode,
+        // quarantine the table, and keep failing consistently afterwards.
+        let victim = dir.join("entity_0.ct");
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&victim, &bytes).unwrap();
+
+        let err = store.get("entity_0").unwrap_err();
+        assert!(err.to_string().contains("quarantined"), "{err}");
+        assert_eq!(store.stats().quarantined_tables, 1);
+        assert!(!store.contains("entity_0"));
+        assert!(dir.join("entity_0.ct.bad").exists());
+        // Now a consistent "no table" miss, not a decode error.
+        let err2 = store.get("entity_0").unwrap_err();
+        assert!(err2.to_string().contains("no table"), "{err2}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

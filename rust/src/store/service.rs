@@ -121,6 +121,11 @@ pub struct CountServer {
     /// counts as full depth). Queries whose positive support is deeper
     /// get the structured `needs level k` error instead of a generic one.
     max_stored_chain: usize,
+    /// Key stems of `.ct.bad` files in the store directory — tables the
+    /// scrub quarantined. Queries that only such a table could have
+    /// answered get the structured `needs table <key>` error
+    /// ([`needs_table`] parses it) instead of a generic miss.
+    quarantined: Vec<String>,
 }
 
 impl CountServer {
@@ -148,7 +153,14 @@ impl CountServer {
             .enumerate()
             .map(|(fo, p)| {
                 p.with_context(|| {
-                    format!("store is missing the entity table for FO variable {fo}")
+                    // Structured (`needs_table` parses it): entity tables
+                    // are tiny but load-bearing — every rescale needs the
+                    // popsize — so a quarantined/missing one is fatal and
+                    // names exactly what to restore.
+                    format!(
+                        "needs table entity_{fo}: store is missing the entity table \
+                         for FO variable {fo}"
+                    )
                 })
             })
             .collect::<Result<_>>()?;
@@ -161,6 +173,16 @@ impl CountServer {
             })
             .max()
             .unwrap_or(0);
+        let mut quarantined: Vec<String> = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(store.dir()) {
+            for e in rd.flatten() {
+                let name = e.file_name();
+                if let Some(stem) = name.to_string_lossy().strip_suffix(".ct.bad") {
+                    quarantined.push(stem.to_string());
+                }
+            }
+        }
+        quarantined.sort();
         Ok(CountServer {
             schema,
             store,
@@ -168,7 +190,13 @@ impl CountServer {
             metas,
             popsizes,
             max_stored_chain,
+            quarantined,
         })
+    }
+
+    /// Keys of tables the open-time scrub quarantined (`.ct.bad` stems).
+    pub fn quarantined(&self) -> &[String] {
+        &self.quarantined
     }
 
     pub fn schema(&self) -> &Schema {
@@ -299,6 +327,26 @@ impl CountServer {
                         rels.len(),
                         self.max_stored_chain,
                         rels.len()
+                    );
+                }
+            }
+            // No derivation exists. If the exact table that would have
+            // answered sits quarantined on disk, say so by name —
+            // structured (`needs_table` parses it), so a front-end can
+            // distinguish "restore/re-persist this table" from a plain
+            // bad query.
+            let mut candidates = Vec::new();
+            if !rels.is_empty() {
+                candidates.push(TableKind::Positive(rels.clone()).key());
+                candidates.push(TableKind::Chain(rels.clone()).key());
+            }
+            candidates.push(TableKind::Joint.key());
+            for key in candidates {
+                if self.quarantined.binary_search(&key).is_ok() {
+                    bail!(
+                        "needs table {key}: it was quarantined as {key}.ct.bad and no \
+                         surviving table derives this count — restore the file or \
+                         re-persist the run"
                     );
                 }
             }
@@ -518,6 +566,23 @@ pub fn needs_level(err: &crate::util::error::Error) -> Option<usize> {
         .take_while(|c| c.is_ascii_digit())
         .collect();
     digits.parse().ok()
+}
+
+/// If `err` carries the structured quarantine signal (`needs table <key>`),
+/// extract the store key that would have to be restored or re-persisted.
+/// Context wrapping is tolerated anywhere around it.
+pub fn needs_table(err: &crate::util::error::Error) -> Option<String> {
+    let msg = err.to_string();
+    let idx = msg.find("needs table ")?;
+    let key: String = msg[idx + "needs table ".len()..]
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    if key.is_empty() {
+        None
+    } else {
+        Some(key)
+    }
 }
 
 /// FO variables one random variable ranges over.
@@ -880,6 +945,77 @@ mod tests {
         use crate::util::error::Error;
         assert_eq!(needs_level(&Error::msg("ctx: needs level 3: deeper")), Some(3));
         assert_eq!(needs_level(&Error::msg("no stored table covers [x]")), None);
+    }
+
+    #[test]
+    fn needs_table_parses_only_the_structured_signal() {
+        use crate::util::error::Error;
+        assert_eq!(
+            needs_table(&Error::msg("ctx: needs table pos_0_2: gone")),
+            Some("pos_0_2".to_string())
+        );
+        assert_eq!(needs_table(&Error::msg("no stored table covers [x]")), None);
+        assert_eq!(needs_table(&Error::msg("needs table ")), None);
+    }
+
+    /// Truncate a table file in place, as a torn write would leave it.
+    fn corrupt_file(path: &std::path::Path) {
+        let bytes = std::fs::read(path).unwrap();
+        std::fs::write(path, &bytes[..bytes.len() / 2]).unwrap();
+    }
+
+    #[test]
+    fn scrubbed_store_degrades_to_surviving_tables() {
+        let (dir, schema, joint) = build_store("quarantine", PersistConfig::default());
+        let victim = {
+            let store = CtStore::open(&dir).unwrap();
+            let t = store.tables();
+            t.iter().find(|m| matches!(m.kind, TableKind::Chain(_))).unwrap().key.clone()
+        };
+        corrupt_file(&dir.join(format!("{victim}.ct")));
+
+        // Open quarantines the damaged chain table; every query must still
+        // answer — and byte-identical to the clean joint — from survivors.
+        let server = CountServer::open(&dir).unwrap();
+        assert_eq!(server.quarantined().to_vec(), vec![victim.clone()]);
+        assert_eq!(server.store().stats().quarantined_tables, 1);
+        assert!(!server.store().contains(&victim));
+        for q in gen_queries(&schema, 40, 99) {
+            let conds = parse_query(&schema, &q).unwrap();
+            let expect = joint.select(&conds).total();
+            assert_eq!(server.count(&conds).unwrap(), expect, "query `{q}`");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn quarantined_positive_table_yields_structured_needs_table_error() {
+        let (dir, schema, _joint) = build_store("needstable", PersistConfig::positives_only());
+        let (a, _) = two_connected_rel_inds(&schema);
+        let rel = schema.random_vars[a].rel().unwrap();
+        let key = TableKind::Positive(vec![rel]).key();
+        corrupt_file(&dir.join(format!("{key}.ct")));
+
+        // Positives-only store with its only cover for `rel` quarantined:
+        // no derivation exists, so the miss must name the table.
+        let server = CountServer::open(&dir).unwrap();
+        let err = server.count(&[(a, 1)]).unwrap_err();
+        assert_eq!(needs_table(&err), Some(key.clone()), "expected `needs table {key}`: {err}");
+        // The negative query peels through the same missing positive table.
+        let err = server.count(&[(a, 0)]).unwrap_err();
+        assert_eq!(needs_table(&err), Some(key), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn quarantined_entity_table_fails_open_with_needs_table() {
+        let (dir, _schema, _joint) = build_store("entgone", PersistConfig::default());
+        corrupt_file(&dir.join("entity_0.ct"));
+        // Entity tables carry the popsizes every rescale needs: opening
+        // without one is a structured failure naming the table.
+        let err = CountServer::open(&dir).unwrap_err();
+        assert_eq!(needs_table(&err), Some("entity_0".to_string()), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

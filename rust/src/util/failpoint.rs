@@ -1,0 +1,304 @@
+//! Deterministic, dependency-free fault-injection harness.
+//!
+//! A *failpoint* is a named site in the code (`worker.exec.panic`,
+//! `store.write.torn`, …) that asks the registry "should I fire?" every time
+//! execution passes through it. Failpoints are armed from a spec string:
+//!
+//! ```text
+//! spec    := point ( ',' point )*
+//! point   := name '=' trigger ( '@' arg )?
+//! trigger := 'always'
+//!          | 'hit:' count            # fire on the first `count` evaluations
+//!          | 'prob:' p ':' seed      # fire with probability p (seeded Pcg64)
+//! arg     := u64                     # site-specific payload (e.g. delay ms)
+//! ```
+//!
+//! e.g. `MRSS_FAILPOINTS='worker.exec.panic=hit:1,store.read.corrupt=prob:0.5:42'`
+//! or `mrss serve --failpoints 'worker.exec.delay=always@50'`.
+//!
+//! Arming happens either programmatically (`arm`, used by tests and the
+//! `--failpoints` flag) or lazily from the `MRSS_FAILPOINTS` environment
+//! variable on the first evaluation. Both triggers are deterministic:
+//! hit-counts fire on exact evaluation ordinals and probability triggers draw
+//! from a [`Pcg64`] seeded by the spec, so a failing chaos run reproduces
+//! exactly from its spec string.
+//!
+//! Unless the crate is compiled with `cfg(any(test, feature = "failpoints"))`
+//! the evaluation functions are `#[inline(always)]` constants — release
+//! builds pay nothing for the instrumented sites.
+
+#[cfg(any(test, feature = "failpoints"))]
+use crate::util::rng::Pcg64;
+use crate::util::error::Result;
+#[cfg(any(test, feature = "failpoints"))]
+use crate::bail;
+#[cfg(any(test, feature = "failpoints"))]
+use std::collections::HashMap;
+#[cfg(any(test, feature = "failpoints"))]
+use std::sync::Mutex;
+
+#[cfg(any(test, feature = "failpoints"))]
+enum Trigger {
+    Always,
+    /// Fire on the first `n` evaluations, then stay off.
+    Hits(u64),
+    /// Fire each evaluation with probability `p`, drawn from a seeded Pcg64.
+    Prob(f64, Pcg64),
+}
+
+#[cfg(any(test, feature = "failpoints"))]
+struct Point {
+    trigger: Trigger,
+    arg: Option<u64>,
+    evals: u64,
+    fired: u64,
+}
+
+#[cfg(any(test, feature = "failpoints"))]
+struct Registry {
+    points: HashMap<String, Point>,
+    env_loaded: bool,
+}
+
+#[cfg(any(test, feature = "failpoints"))]
+static REGISTRY: Mutex<Option<Registry>> = Mutex::new(None);
+
+/// Environment variable consulted on the first failpoint evaluation.
+pub const ENV_VAR: &str = "MRSS_FAILPOINTS";
+
+#[cfg(any(test, feature = "failpoints"))]
+fn parse_point(item: &str) -> Result<(String, Point)> {
+    let (name, rest) = match item.split_once('=') {
+        Some(x) => x,
+        None => bail!("failpoint spec '{item}' is missing '=trigger'"),
+    };
+    let (trig, arg) = match rest.split_once('@') {
+        Some((t, a)) => {
+            let a: u64 = match a.parse() {
+                Ok(v) => v,
+                Err(_) => bail!("failpoint '{name}': bad arg '{a}' (want u64)"),
+            };
+            (t, Some(a))
+        }
+        None => (rest, None),
+    };
+    let trigger = if trig == "always" {
+        Trigger::Always
+    } else if let Some(n) = trig.strip_prefix("hit:") {
+        match n.parse::<u64>() {
+            Ok(n) => Trigger::Hits(n),
+            Err(_) => bail!("failpoint '{name}': bad hit count '{n}'"),
+        }
+    } else if let Some(ps) = trig.strip_prefix("prob:") {
+        let (p, seed) = match ps.split_once(':') {
+            Some(x) => x,
+            None => bail!("failpoint '{name}': prob trigger wants 'prob:<p>:<seed>'"),
+        };
+        let p: f64 = match p.parse() {
+            Ok(v) if (0.0..=1.0).contains(&v) => v,
+            _ => bail!("failpoint '{name}': bad probability '{p}'"),
+        };
+        let seed: u64 = match seed.parse() {
+            Ok(v) => v,
+            Err(_) => bail!("failpoint '{name}': bad seed '{seed}'"),
+        };
+        Trigger::Prob(p, Pcg64::seeded(seed))
+    } else {
+        bail!("failpoint '{name}': unknown trigger '{trig}' (want always | hit:<n> | prob:<p>:<seed>)");
+    };
+    Ok((
+        name.trim().to_string(),
+        Point { trigger, arg, evals: 0, fired: 0 },
+    ))
+}
+
+#[cfg(any(test, feature = "failpoints"))]
+fn with_registry<T>(f: impl FnOnce(&mut Registry) -> T) -> T {
+    let mut guard = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    let reg = guard.get_or_insert_with(|| Registry { points: HashMap::new(), env_loaded: false });
+    if !reg.env_loaded {
+        reg.env_loaded = true;
+        if let Ok(spec) = std::env::var(ENV_VAR) {
+            if !spec.trim().is_empty() {
+                // Env arming is best-effort: a malformed spec is ignored
+                // rather than panicking deep inside an arbitrary call site.
+                for item in spec.split(',') {
+                    if let Ok((name, point)) = parse_point(item.trim()) {
+                        reg.points.insert(name, point);
+                    }
+                }
+            }
+        }
+    }
+    f(reg)
+}
+
+/// Arm failpoints from a spec string (see module docs for the grammar).
+/// Re-arming a name replaces its trigger and resets its counters.
+#[cfg(any(test, feature = "failpoints"))]
+pub fn arm(spec: &str) -> Result<()> {
+    let mut parsed = Vec::new();
+    for item in spec.split(',') {
+        let item = item.trim();
+        if item.is_empty() {
+            continue;
+        }
+        parsed.push(parse_point(item)?);
+    }
+    with_registry(|reg| {
+        for (name, point) in parsed {
+            reg.points.insert(name, point);
+        }
+    });
+    Ok(())
+}
+
+/// No-op when failpoints are compiled out; errors so `--failpoints` on a
+/// production binary is an explicit failure, not a silent ignore.
+#[cfg(not(any(test, feature = "failpoints")))]
+pub fn arm(_spec: &str) -> Result<()> {
+    Err(crate::util::error::Error::msg(
+        "failpoints are compiled out; rebuild with --features failpoints",
+    ))
+}
+
+/// Disarm every failpoint (tests use this between scenarios).
+#[cfg(any(test, feature = "failpoints"))]
+pub fn disarm_all() {
+    with_registry(|reg| reg.points.clear());
+}
+
+#[cfg(not(any(test, feature = "failpoints")))]
+pub fn disarm_all() {}
+
+/// Evaluate the named failpoint: returns `true` if it is armed and its
+/// trigger fires for this evaluation.
+#[cfg(any(test, feature = "failpoints"))]
+pub fn fire(name: &str) -> bool {
+    with_registry(|reg| {
+        let point = match reg.points.get_mut(name) {
+            Some(p) => p,
+            None => return false,
+        };
+        point.evals += 1;
+        let hit = match &mut point.trigger {
+            Trigger::Always => true,
+            Trigger::Hits(n) => point.fired < *n,
+            Trigger::Prob(p, rng) => rng.chance(*p),
+        };
+        if hit {
+            point.fired += 1;
+        }
+        hit
+    })
+}
+
+#[cfg(not(any(test, feature = "failpoints")))]
+#[inline(always)]
+pub fn fire(_name: &str) -> bool {
+    false
+}
+
+/// Evaluate the named failpoint and, when it fires, return its `@arg`
+/// payload (defaulting to 0). Sites like `worker.exec.delay` read the arg
+/// as milliseconds.
+#[cfg(any(test, feature = "failpoints"))]
+pub fn fire_arg(name: &str) -> Option<u64> {
+    with_registry(|reg| {
+        let point = reg.points.get_mut(name)?;
+        point.evals += 1;
+        let hit = match &mut point.trigger {
+            Trigger::Always => true,
+            Trigger::Hits(n) => point.fired < *n,
+            Trigger::Prob(p, rng) => rng.chance(*p),
+        };
+        if hit {
+            point.fired += 1;
+            Some(point.arg.unwrap_or(0))
+        } else {
+            None
+        }
+    })
+}
+
+#[cfg(not(any(test, feature = "failpoints")))]
+#[inline(always)]
+pub fn fire_arg(_name: &str) -> Option<u64> {
+    None
+}
+
+/// How many times the named failpoint has fired (0 if unknown). Tests use
+/// this to assert a fault was actually injected.
+#[cfg(any(test, feature = "failpoints"))]
+pub fn fired_count(name: &str) -> u64 {
+    with_registry(|reg| reg.points.get(name).map_or(0, |p| p.fired))
+}
+
+#[cfg(not(any(test, feature = "failpoints")))]
+#[inline(always)]
+pub fn fired_count(_name: &str) -> u64 {
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global, so each test uses unique point names
+    // and the suite stays order-independent.
+
+    #[test]
+    fn hit_count_fires_exactly_n_times() {
+        arm("t.hit.point=hit:2").unwrap();
+        assert!(fire("t.hit.point"));
+        assert!(fire("t.hit.point"));
+        assert!(!fire("t.hit.point"));
+        assert!(!fire("t.hit.point"));
+        assert_eq!(fired_count("t.hit.point"), 2);
+    }
+
+    #[test]
+    fn always_fires_and_carries_arg() {
+        arm("t.always.point=always@37").unwrap();
+        for _ in 0..5 {
+            assert_eq!(fire_arg("t.always.point"), Some(37));
+        }
+    }
+
+    #[test]
+    fn unarmed_points_never_fire() {
+        assert!(!fire("t.never.armed"));
+        assert_eq!(fire_arg("t.never.armed"), None);
+    }
+
+    #[test]
+    fn prob_trigger_is_seeded_and_in_range() {
+        arm("t.prob.point=prob:0.5:42").unwrap();
+        let fired: u32 = (0..1000).map(|_| fire("t.prob.point") as u32).sum();
+        // Deterministic given the seed; sanity-check it is neither 0 nor 1000.
+        assert!(fired > 300 && fired < 700, "fired {fired}/1000 at p=0.5");
+        // Re-arming resets and reproduces the same draw sequence.
+        arm("t.prob.point=prob:0.5:42").unwrap();
+        let fired2: u32 = (0..1000).map(|_| fire("t.prob.point") as u32).sum();
+        assert_eq!(fired, fired2);
+    }
+
+    #[test]
+    fn re_arming_resets_counters() {
+        arm("t.rearm.point=hit:1").unwrap();
+        assert!(fire("t.rearm.point"));
+        assert!(!fire("t.rearm.point"));
+        arm("t.rearm.point=hit:1").unwrap();
+        assert!(fire("t.rearm.point"));
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        assert!(arm("no-equals-sign").is_err());
+        assert!(arm("p=hit:notanumber").is_err());
+        assert!(arm("p=prob:1.5:7").is_err());
+        assert!(arm("p=prob:0.5").is_err());
+        assert!(arm("p=whatever").is_err());
+        assert!(arm("p=always@notanumber").is_err());
+    }
+}

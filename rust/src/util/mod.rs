@@ -6,6 +6,7 @@
 //! re-implemented here at the scale this project needs.
 
 pub mod error;
+pub mod failpoint;
 pub mod fxhash;
 pub mod proptest;
 pub mod rng;

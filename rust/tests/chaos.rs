@@ -1,0 +1,256 @@
+//! Fault-injection integration: the serve/store stack driven through its
+//! armed failpoints (`--features failpoints`, which the Cargo manifest
+//! requires for this target). Each scenario arms a spec, injects the
+//! fault, and asserts the self-healing contract: the server stays up,
+//! every in-flight request gets a terminal reply, damaged tables are
+//! quarantined rather than trusted, and unaffected answers match a clean
+//! store byte for byte.
+//!
+//! The failpoint registry is process-global, so scenarios serialize on
+//! one mutex and disarm on entry — a panicking test leaves the registry
+//! armed, and the next scenario must not inherit its faults.
+
+use mrss::datagen;
+use mrss::mobius::MobiusJoin;
+use mrss::serve::protocol::{json_field, parse_count_response};
+use mrss::serve::{serve, ServeConfig, ServeHandle};
+use mrss::store::{
+    gen_queries, needs_table, CountServer, CtStore, PersistConfig, StoreSink, TableKind,
+};
+use mrss::util::failpoint;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+static FP_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize scenarios and start each from a disarmed registry.
+fn fp_guard() -> MutexGuard<'static, ()> {
+    let g = FP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    failpoint::disarm_all();
+    g
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mrss_chaos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Persist uwcse and return the in-memory baseline answers for a
+/// generated query batch — the byte-identity reference for every
+/// degraded-store assertion.
+fn build_store(dir: &PathBuf, n_queries: usize, qseed: u64) -> Vec<(String, u128)> {
+    let db = datagen::generate("uwcse", 0.1, 7).unwrap();
+    let store = CtStore::create(dir, "uwcse", 0.1, 7).unwrap();
+    {
+        let sink = StoreSink::new(&store, &db.schema, PersistConfig::default());
+        MobiusJoin::new(&db).sink(&sink).run();
+        sink.take_error().unwrap();
+    }
+    drop(store);
+    let server = CountServer::open(dir).unwrap();
+    gen_queries(&db.schema, n_queries, qseed)
+        .into_iter()
+        .map(|q| {
+            let c = server.count_query(&q).unwrap();
+            (q, c)
+        })
+        .collect()
+}
+
+fn start_server(dir: &PathBuf, cfg: ServeConfig) -> ServeHandle {
+    let count = Arc::new(CountServer::open(dir).unwrap());
+    serve(count, cfg).unwrap()
+}
+
+/// Connect with a read timeout so an injected fault that swallows a reply
+/// fails the test instead of hanging it.
+fn connect(addr: SocketAddr) -> (BufWriter<TcpStream>, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    (BufWriter::new(stream.try_clone().unwrap()), BufReader::new(stream))
+}
+
+fn roundtrip_on(
+    w: &mut BufWriter<TcpStream>,
+    r: &mut BufReader<TcpStream>,
+    line: &str,
+) -> String {
+    writeln!(w, "{line}").unwrap();
+    w.flush().unwrap();
+    let mut resp = String::new();
+    r.read_line(&mut resp).unwrap();
+    assert!(!resp.is_empty(), "connection closed instead of replying to `{line}`");
+    resp.trim().to_string()
+}
+
+#[test]
+fn worker_panic_is_isolated_and_the_server_keeps_serving() {
+    let _g = fp_guard();
+    let dir = tmpdir("panic");
+    let baseline = build_store(&dir, 4, 11);
+    failpoint::arm("worker.exec.panic=hit:2").unwrap();
+    let handle = start_server(&dir, ServeConfig { threads: 2, ..Default::default() });
+
+    // Sequential queries on one connection: the first two hit the armed
+    // panic and must come back as terminal ERR replies — the worker, the
+    // connection, and the process all survive.
+    let (mut w, mut r) = connect(handle.addr());
+    for (i, (q, expect)) in baseline.iter().enumerate() {
+        let resp = roundtrip_on(&mut w, &mut r, q);
+        if i < 2 {
+            let e = parse_count_response(&resp).unwrap_err();
+            assert!(e.contains("worker panicked"), "query {i}: {resp}");
+        } else {
+            assert_eq!(parse_count_response(&resp), Ok(*expect), "query {i}: {resp}");
+        }
+    }
+
+    let stats = roundtrip_on(&mut w, &mut r, "STATS");
+    assert_eq!(json_field(&stats, "worker_panics").as_deref(), Some("2"), "{stats}");
+
+    drop((w, r));
+    handle.request_shutdown();
+    let snap = handle.wait();
+    assert_eq!(snap.active, 0, "a connection was stranded: {snap:?}");
+    assert_eq!(snap.worker_panics, 2);
+    failpoint::disarm_all();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_write_is_quarantined_on_reopen_and_surviving_answers_match_clean() {
+    let _g = fp_guard();
+    let dir = tmpdir("torn");
+    let baseline = build_store(&dir, 30, 22);
+
+    // Re-persist one complete-chain table with the torn-write failpoint
+    // armed: the file lands truncated behind a valid manifest entry — the
+    // exact damage a crash between write and sync leaves behind.
+    let victim = {
+        let store = CtStore::open(&dir).unwrap();
+        let meta = store
+            .tables()
+            .into_iter()
+            .find(|m| matches!(m.kind, TableKind::Chain(_)))
+            .expect("default store must hold a chain table");
+        let table = store.get(&meta.key).unwrap();
+        failpoint::arm("store.write.torn=hit:1").unwrap();
+        store.put(meta.kind.clone(), &meta.scope, &table).unwrap();
+        meta.key
+    };
+    assert_eq!(failpoint::fired_count("store.write.torn"), 1);
+
+    // Reopen: the scrub must catch the damage, quarantine the file, and
+    // keep serving — every baseline answer still byte-identical via the
+    // surviving tables (the joint covers any one lost chain).
+    let server = CountServer::open(&dir).unwrap();
+    assert_eq!(server.quarantined(), &[victim.clone()]);
+    assert_eq!(server.store().stats().quarantined_tables, 1);
+    assert!(dir.join(format!("{victim}.ct.bad")).exists(), "evidence file missing");
+    assert!(!dir.join(format!("{victim}.ct")).exists(), "damaged file still live");
+    for (q, expect) in &baseline {
+        let got = server.count_query(q).unwrap();
+        assert_eq!(got, *expect, "degraded store diverged on `{q}`");
+    }
+
+    failpoint::disarm_all();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn read_corruption_quarantines_the_table_and_the_retry_self_heals() {
+    let _g = fp_guard();
+    let dir = tmpdir("corrupt");
+    let baseline = build_store(&dir, 24, 33);
+    // A relationship-indicator query must read a chain/positive/joint
+    // table from disk (the open reads only the manifest), so the armed
+    // corruption deterministically lands on this query's first read.
+    let (q, expect) = baseline
+        .iter()
+        .find(|(q, _)| q.contains("=T") || q.contains("=F") || q.contains("=n/a"))
+        .expect("batch of 24 must contain a relationship indicator query");
+
+    let server = CountServer::open(&dir).unwrap();
+    failpoint::arm("store.read.corrupt=hit:1").unwrap();
+
+    let err = server.count_query(q).unwrap_err();
+    assert!(err.to_string().contains("quarantined"), "{err}");
+    assert_eq!(server.store().stats().quarantined_tables, 1);
+
+    // Same query again: the quarantined table is out of the manifest, so
+    // the service derives the count from the survivors — exactly.
+    match server.count_query(q) {
+        Ok(got) => assert_eq!(got, *expect, "self-healed answer diverged on `{q}`"),
+        Err(e) => panic!(
+            "full store must derive around one lost table, got {e} (needs: {:?})",
+            needs_table(&e)
+        ),
+    }
+
+    failpoint::disarm_all();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn accept_errors_delay_but_do_not_lose_connections() {
+    let _g = fp_guard();
+    let dir = tmpdir("accept");
+    let _ = build_store(&dir, 1, 44);
+    failpoint::arm("net.accept.err=hit:1").unwrap();
+    let handle = start_server(&dir, ServeConfig::default());
+
+    // The first readiness event eats the injected error; the second
+    // connection re-arms readiness and both get accepted and served.
+    let (mut w1, mut r1) = connect(handle.addr());
+    let (mut w2, mut r2) = connect(handle.addr());
+    assert!(roundtrip_on(&mut w2, &mut r2, "PING").contains("pong"));
+    assert!(roundtrip_on(&mut w1, &mut r1, "PING").contains("pong"));
+    assert_eq!(failpoint::fired_count("net.accept.err"), 1);
+
+    drop((w1, r1, w2, r2));
+    handle.request_shutdown();
+    assert_eq!(handle.wait().active, 0);
+    failpoint::disarm_all();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn injected_slow_worker_trips_the_request_deadline_and_stats_show_it() {
+    let _g = fp_guard();
+    let dir = tmpdir("deadline");
+    let baseline = build_store(&dir, 1, 55);
+    failpoint::arm("worker.exec.delay=always@300").unwrap();
+    let handle = start_server(
+        &dir,
+        ServeConfig { request_timeout: Some(Duration::from_millis(50)), ..Default::default() },
+    );
+
+    // The injected 300 ms stall blows the 50 ms budget: the client gets a
+    // terminal deadline error, and the connection survives to PING.
+    let (mut w, mut r) = connect(handle.addr());
+    let resp = roundtrip_on(&mut w, &mut r, &baseline[0].0);
+    assert!(resp.contains("deadline exceeded"), "{resp}");
+    assert!(roundtrip_on(&mut w, &mut r, "PING").contains("pong"));
+
+    // All four robustness counters ride the same STATS document.
+    failpoint::disarm_all();
+    let stats = roundtrip_on(&mut w, &mut r, "STATS");
+    for key in ["worker_panics", "conn_timeouts", "request_timeouts", "quarantined_tables"] {
+        assert!(json_field(&stats, key).is_some(), "STATS missing {key}: {stats}");
+    }
+    assert_eq!(json_field(&stats, "request_timeouts").as_deref(), Some("1"), "{stats}");
+
+    drop((w, r));
+    handle.request_shutdown();
+    // The stalled worker finishes after the deadline fired; the late
+    // completion must be discarded, not strand the connection.
+    let snap = handle.wait();
+    assert_eq!(snap.active, 0, "{snap:?}");
+    assert_eq!(snap.request_timeouts, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
