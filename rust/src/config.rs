@@ -90,6 +90,15 @@ pub struct Config {
     /// `serve --failpoints SPEC`: arm fault-injection points (builds with
     /// `--features failpoints` only; errors out otherwise).
     pub failpoints: Option<String>,
+    /// `serve --trace-sample N` (or `1/N`): trace every Nth request
+    /// (1 = all, 0 = off).
+    pub trace_sample: u64,
+    /// `serve --access-log FILE`: append one JSON line per sampled
+    /// request.
+    pub access_log: Option<String>,
+    /// `validate-metrics --file FILE`: Prometheus exposition document to
+    /// check (stdin when omitted).
+    pub file: Option<String>,
     /// `serve --wire text|json`: response rendering (JSON is the default).
     pub wire_text: bool,
     /// `bench-serve --bench-json FILE`: where the perf report lands.
@@ -137,6 +146,9 @@ impl Default for Config {
             idle_timeout_ms: None,
             request_timeout_ms: None,
             failpoints: None,
+            trace_sample: 0,
+            access_log: None,
+            file: None,
             wire_text: false,
             bench_json: None,
             send_shutdown: false,
@@ -226,6 +238,14 @@ impl Config {
                             Some(take(&mut it)?.parse().context("--request-timeout")?)
                     }
                     "failpoints" => cfg.failpoints = Some(take(&mut it)?),
+                    "trace-sample" => {
+                        // Accept both `N` and the scrape-config idiom `1/N`.
+                        let v = take(&mut it)?;
+                        let n = v.strip_prefix("1/").unwrap_or(&v);
+                        cfg.trace_sample = n.parse().context("--trace-sample")?;
+                    }
+                    "access-log" => cfg.access_log = Some(take(&mut it)?),
+                    "file" => cfg.file = Some(take(&mut it)?),
                     "wire" => {
                         cfg.wire_text = match take(&mut it)?.as_str() {
                             "text" => true,
@@ -265,6 +285,9 @@ impl Config {
         }
         if cfg.idle_timeout_ms == Some(0) || cfg.request_timeout_ms == Some(0) {
             bail!("--idle-timeout and --request-timeout must be >= 1 ms (omit to disable)");
+        }
+        if cfg.access_log.is_some() && cfg.trace_sample == 0 {
+            bail!("--access-log needs --trace-sample N (only sampled requests are logged)");
         }
         Ok(cfg)
     }
@@ -412,6 +435,21 @@ mod tests {
         assert_eq!(c.idle_timeout_ms, Some(30_000));
         assert_eq!(c.request_timeout_ms, Some(2_000));
         assert_eq!(c.failpoints.as_deref(), Some("worker.exec.panic=hit:2"));
+
+        let t = Config::from_args(&args(
+            "serve --store /tmp/s --trace-sample 1/16 --access-log /tmp/access.log",
+        ))
+        .unwrap();
+        assert_eq!(t.trace_sample, 16);
+        assert_eq!(t.access_log.as_deref(), Some("/tmp/access.log"));
+        let t = Config::from_args(&args("serve --trace-sample 4")).unwrap();
+        assert_eq!(t.trace_sample, 4);
+        let v = Config::from_args(&args("validate-metrics --file /tmp/m.prom")).unwrap();
+        assert_eq!(v.command, "validate-metrics");
+        assert_eq!(v.file.as_deref(), Some("/tmp/m.prom"));
+        // An access log without sampling would silently log nothing.
+        assert!(Config::from_args(&args("serve --access-log /tmp/a.log")).is_err());
+        assert!(Config::from_args(&args("serve --trace-sample nope")).is_err());
 
         let b = Config::from_args(&args(
             "bench-serve --addr 127.0.0.1:7171 --clients 8 --queries 200 \

@@ -15,6 +15,7 @@
 //! prefixes, falling back to scanning the rows of the sub-table.
 
 use super::CtTable;
+use crate::obs::trace;
 use crate::schema::VarId;
 
 /// Configuration for ADtree construction.
@@ -62,6 +63,7 @@ impl AdTree {
     /// table is decoded to a row-major code matrix once up front — tree
     /// construction indexes rows many times per node.
     pub fn build(ct: &CtTable, cfg: AdTreeConfig) -> AdTree {
+        let _sp = trace::span_detailed("adtree.build", || format!("rows={}", ct.len()));
         let width = ct.width();
         let matrix = ct.decode_rows();
         // Observed codes per column with counts, MCV first.
@@ -143,6 +145,7 @@ impl AdTree {
     /// Count of a conjunctive query `(var, code)*` — the same semantics as
     /// filtering the source ct-table (vars must belong to the tree).
     pub fn count(&self, query: &[(VarId, u16)]) -> u64 {
+        let _sp = trace::span("adtree.probe");
         // Normalize to (column, code), sorted by column.
         let mut q: Vec<(usize, u16)> = query
             .iter()

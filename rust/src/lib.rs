@@ -19,6 +19,8 @@
 //!   directory store with LRU cache) + the count-query service;
 //! * [`serve`] — concurrent TCP count-serving front-end over the store
 //!   (wire protocol, worker pool, admission control, load generator);
+//! * [`obs`] — observability: structured span tracing, the flight
+//!   recorder behind `DUMP`, Prometheus text exposition for `METRICS`;
 //! * [`apps`] — feature selection, association rules, Bayesian networks;
 //! * [`runtime`] — AOT-compiled XLA kernels via PJRT, with native fallback;
 //! * [`coordinator`] — pipeline orchestration, metrics, configs;
@@ -34,6 +36,7 @@ pub mod baseline;
 pub mod datagen;
 pub mod store;
 pub mod serve;
+pub mod obs;
 pub mod runtime;
 pub mod apps;
 pub mod coordinator;

@@ -72,6 +72,8 @@ fn print_help() {
          \x20                                 SHUTDOWN wire protocol)\n\
          \x20 bench-serve --addr A|--store D  drive a count server with N concurrent clients,\n\
          \x20                                 emit BENCH_serve.json\n\
+         \x20 validate-metrics --file F       check a Prometheus scrape of METRICS (stdin\n\
+         \x20                                 without --file); exit 1 on format errors\n\
          \x20 mine   --dataset D --scale S    feature selection + association rules\n\
          \x20 bn     --dataset D --scale S    Bayesian-network learning, link on vs off\n\n\
          common flags: --seed N --engine native|xla --excerpt N --max-chain-len L\n\
@@ -82,6 +84,7 @@ fn print_help() {
          \x20             --poller poll|epoll --queue-depth N --max-requests N\n\
          \x20             --wire text|json --idle-timeout MS --request-timeout MS\n\
          \x20             --failpoints SPEC (needs --features failpoints)\n\
+         \x20             --trace-sample N|1/N --access-log FILE\n\
          bench flags:  --addr HOST:PORT --clients N --queries M --mix uniform|zipf:S\n\
          \x20             --idle N --bench-json FILE --json FILE --shutdown",
         mrss::VERSION
@@ -106,6 +109,7 @@ fn run(cfg: Config) -> Result<()> {
         "query" => cmd_query(&cfg),
         "serve" => cmd_serve(&cfg),
         "bench-serve" => cmd_bench_serve(&cfg),
+        "validate-metrics" => cmd_validate_metrics(&cfg),
         "mine" => cmd_mine(&cfg),
         "bn" => cmd_bn(&cfg),
         other => bail!("unknown command `{other}` (try --help)"),
@@ -412,8 +416,35 @@ fn serve_config(cfg: &Config, addr: String) -> Result<ServeConfig> {
         poller,
         idle_timeout: cfg.idle_timeout_ms.map(Duration::from_millis),
         request_timeout: cfg.request_timeout_ms.map(Duration::from_millis),
+        trace_sample: cfg.trace_sample,
+        access_log: cfg.access_log.clone(),
         ..Default::default()
     })
+}
+
+/// Check a Prometheus text-exposition document (a `METRICS` scrape) with
+/// the same validator the unit tests run — CI's guard that the wire
+/// output stays scrapeable.
+fn cmd_validate_metrics(cfg: &Config) -> Result<()> {
+    let (text, source) = match &cfg.file {
+        Some(p) => (
+            std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?,
+            p.clone(),
+        ),
+        None => {
+            let mut s = String::new();
+            std::io::Read::read_to_string(&mut std::io::stdin(), &mut s)
+                .context("reading exposition from stdin")?;
+            (s, "<stdin>".to_string())
+        }
+    };
+    mrss::obs::prom::validate(&text).map_err(|e| anyhow!("{source}: {e}"))?;
+    let samples = text
+        .lines()
+        .filter(|l| !l.trim().is_empty() && !l.starts_with('#'))
+        .count();
+    eprintln!("{source}: valid exposition ({samples} samples)");
+    Ok(())
 }
 
 fn cmd_serve(cfg: &Config) -> Result<()> {

@@ -141,6 +141,14 @@ impl MjMetrics {
     }
 
     /// Render the Figure-8-style breakdown.
+    ///
+    /// These are *run-level aggregates* — one record for the whole join
+    /// or serving session. For per-query phase attribution (which
+    /// FO-groups factorized, table load vs. cache hit, whether Möbius
+    /// subtraction answered), use the serving stack's `EXPLAIN <query>`
+    /// wire verb, which returns the span tree recorded by
+    /// [`crate::obs::trace`]; `METRICS` exposes these same counters in
+    /// Prometheus text format ([`crate::obs::prom`]).
     pub fn breakdown(&self) -> String {
         use crate::util::format_duration as fd;
         let mut s = format!(

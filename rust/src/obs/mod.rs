@@ -1,0 +1,36 @@
+//! `obs` — dependency-free observability for the serving stack.
+//!
+//! The paper's claim is about *where time goes* — the Möbius Virtual
+//! Join answers negative-relationship counts without materializing
+//! joins — yet aggregate counters (`STATS`, `MjMetrics::breakdown`)
+//! cannot show, for one slow query, which FO-groups factorized, which
+//! ct-tables were loaded vs. cache-hit, or whether Möbius subtraction
+//! or a joint derivation produced the answer. This module makes each
+//! request explain itself:
+//!
+//! * [`trace`] — structured span tracing: a per-thread trace of named,
+//!   nested spans (`parse`, `plan.*`, `table.*`, `adtree.*`,
+//!   `mobius.subtract`, `render`) recorded without locks. A span site
+//!   costs one relaxed atomic load when no trace is active anywhere in
+//!   the process, so instrumentation can stay in the hot planning and
+//!   store paths permanently.
+//! * [`recorder`] — an always-on flight recorder holding the last-N
+//!   finished traces plus a slowest-K ring, dumped over the wire via
+//!   the `DUMP` verb and automatically (throttled, to stderr) on a
+//!   worker panic or a blown request deadline.
+//! * [`prom`] — Prometheus text-format exposition (`# TYPE`/`# HELP`,
+//!   counters, gauges, cumulative-bucket histograms) for the `METRICS`
+//!   verb, plus the format validator CI runs against a live scrape.
+//!
+//! The wire surface lives in [`crate::serve::protocol`] (`EXPLAIN`,
+//! `METRICS`, `DUMP`) and the sampling policy (`--trace-sample 1/N`,
+//! `--access-log PATH`) in [`crate::serve::server`]; this module owns
+//! only the mechanisms.
+
+pub mod prom;
+pub mod recorder;
+pub mod trace;
+
+pub use prom::PromText;
+pub use recorder::dump_json;
+pub use trace::{SpanGuard, SpanRec, Trace};

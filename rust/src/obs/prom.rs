@@ -1,0 +1,325 @@
+//! Prometheus text-format exposition — the `METRICS` wire verb.
+//!
+//! Renders every ServeMetrics / StoreStats / TreeStats / MjMetrics
+//! counter, gauge, and histogram in the text exposition format
+//! (`# HELP` + `# TYPE` per family, cumulative `le` buckets with
+//! `_sum`/`_count` for histograms), so a standard scraper pointed at
+//! ctserve works without any client library on either side. The body
+//! ends with a `# EOF` line: the wire protocol is line-delimited and
+//! `METRICS` is its only multi-line response, so clients read until
+//! that terminator.
+//!
+//! [`validate`] is the ~40-line format checker CI runs against a live
+//! scrape: every sample line must belong to a declared `# TYPE`
+//! family, every value must parse, and every histogram's `+Inf`
+//! bucket must equal its `_count`.
+
+use crate::mobius::metrics::ALL_OPS;
+use crate::mobius::MjMetrics;
+use crate::serve::metrics::{ServeMetrics, ServeSnapshot};
+use std::collections::HashMap;
+
+/// Terminator line for the `METRICS` wire response.
+pub const EOF_LINE: &str = "# EOF";
+
+/// Incremental builder for one exposition document.
+#[derive(Debug, Default)]
+pub struct PromText {
+    out: String,
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+impl PromText {
+    pub fn new() -> PromText {
+        PromText::default()
+    }
+
+    fn family(&mut self, name: &str, kind: &str, help: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, v: u64) {
+        self.family(name, "counter", help);
+        self.out.push_str(&format!("{name} {v}\n"));
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, v: f64) {
+        self.family(name, "gauge", help);
+        self.out.push_str(&format!("{name} {}\n", fmt_f64(v)));
+    }
+
+    /// One family, one sample per `(label_value, value)` pair.
+    pub fn labeled_counter(&mut self, name: &str, help: &str, label: &str, samples: &[(&str, f64)]) {
+        self.family(name, "counter", help);
+        for (lv, v) in samples {
+            self.out.push_str(&format!("{name}{{{label}=\"{lv}\"}} {}\n", fmt_f64(*v)));
+        }
+    }
+
+    /// A histogram from `(upper_bound, per-bucket count)` pairs — the
+    /// shape [`LatencyHistogram::buckets`](crate::serve::metrics::LatencyHistogram::buckets)
+    /// returns. Bucket counts are cumulated here; `sum` is the exact
+    /// recorded total (the histogram tracks it alongside the buckets).
+    pub fn histogram(&mut self, name: &str, help: &str, buckets: &[(u64, u64)], sum: u64) {
+        self.family(name, "histogram", help);
+        let mut cum = 0u64;
+        for (upper, count) in buckets {
+            cum += count;
+            self.out.push_str(&format!("{name}_bucket{{le=\"{upper}\"}} {cum}\n"));
+        }
+        self.out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+        self.out.push_str(&format!("{name}_sum {sum}\n{name}_count {cum}\n"));
+    }
+
+    /// Finish the document with the `# EOF` terminator.
+    pub fn finish(mut self) -> String {
+        self.out.push_str(EOF_LINE);
+        self.out.push('\n');
+        self.out
+    }
+}
+
+/// Render the full serving exposition: live histograms from `m`, the
+/// consistent counter view from `snap`, and the Möbius ct-op counters
+/// from `mj` (zero at serve time unless a join ran in-process — the
+/// families exist either way so dashboards need no conditionals).
+pub fn render(m: &ServeMetrics, snap: &ServeSnapshot, mj: &MjMetrics) -> String {
+    let mut p = PromText::new();
+    p.gauge("mrss_uptime_seconds", "Seconds since the server started.", snap.uptime_secs);
+    p.counter("mrss_queries_total", "Queries answered (errors included).", snap.queries);
+    p.counter("mrss_errors_total", "Queries answered with an error line.", snap.errors);
+    p.counter("mrss_busy_rejects_total", "Connections shed by admission control.", snap.busy_rejects);
+    p.counter("mrss_connections_total", "Connections accepted since start.", snap.connections);
+    p.gauge("mrss_active_connections", "Connections currently open.", snap.active as f64);
+    p.counter("mrss_worker_panics_total", "Worker panics converted to ERR replies.", snap.worker_panics);
+    p.counter("mrss_conn_timeouts_total", "Connections closed by --idle-timeout.", snap.conn_timeouts);
+    p.counter(
+        "mrss_request_timeouts_total",
+        "Requests answered ERR deadline exceeded.",
+        snap.request_timeouts,
+    );
+    p.counter("mrss_reactor_wakeups_total", "Poller waits that returned events.", snap.wakeups);
+    p.gauge("mrss_registered_fds", "Fds registered across reactor shards.", snap.registered_fds as f64);
+    p.gauge("mrss_run_queue_peak", "Deepest per-wakeup work batch.", snap.run_queue_peak as f64);
+    p.gauge("mrss_batch_peak", "Most BATCH members in flight at once.", snap.batch_peak as f64);
+    p.histogram(
+        "mrss_exec_latency_us",
+        "Query execution time on the worker pool, microseconds.",
+        &m.latency.buckets(),
+        m.latency.sum(),
+    );
+    p.histogram(
+        "mrss_queue_wait_us",
+        "Dispatch-to-execution queue wait, microseconds.",
+        &m.queue_wait.buckets(),
+        m.queue_wait.sum(),
+    );
+    p.histogram(
+        "mrss_conns_at_accept",
+        "Connections open when one more arrived.",
+        &m.conns.buckets(),
+        m.conns.sum(),
+    );
+    p.counter("mrss_store_hits_total", "Ct-table cache hits.", snap.store.hits);
+    p.counter("mrss_store_misses_total", "Ct-table cache misses (disk loads).", snap.store.misses);
+    p.counter("mrss_store_evictions_total", "Ct-tables evicted by the LRU budget.", snap.store.evictions);
+    p.counter("mrss_store_bytes_read_total", "Bytes read from .ct files.", snap.store.bytes_read);
+    p.gauge(
+        "mrss_store_quarantined_tables",
+        "Damaged tables quarantined to .ct.bad.",
+        snap.store.quarantined_tables as f64,
+    );
+    p.counter("mrss_adtree_hits_total", "ADtree cache hits.", snap.trees.hits);
+    p.counter("mrss_adtree_builds_total", "ADtrees built.", snap.trees.builds);
+    p.gauge("mrss_adtree_building", "ADtree builds in progress.", snap.trees.building as f64);
+    p.counter(
+        "mrss_adtree_coalesced_waits_total",
+        "Readers that waited on another thread's build.",
+        snap.trees.coalesced_waits,
+    );
+    p.counter("mrss_adtree_evictions_total", "ADtrees evicted by the shared budget.", snap.trees.evictions);
+    p.gauge("mrss_adtree_bytes", "Bytes charged by cached ADtrees.", snap.trees.bytes as f64);
+    let ops: Vec<(&str, f64)> =
+        ALL_OPS.iter().map(|op| (op.name(), mj.op_count(*op) as f64)).collect();
+    p.labeled_counter("mrss_mj_ct_ops_total", "Ct-algebra operator invocations.", "op", &ops);
+    let op_secs: Vec<(&str, f64)> =
+        ALL_OPS.iter().map(|op| (op.name(), mj.op_time(*op).as_secs_f64())).collect();
+    p.labeled_counter("mrss_mj_ct_op_seconds_total", "Seconds spent per ct-algebra operator.", "op", &op_secs);
+    p.counter(
+        "mrss_mj_reference_fallbacks_total",
+        "Packed-kernel operations that fell back to the row-major reference.",
+        mj.reference_fallbacks,
+    );
+    p.counter(
+        "mrss_traces_started_total",
+        "Request traces started (sampled + EXPLAIN).",
+        crate::obs::trace::TRACES_STARTED.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    p.counter(
+        "mrss_trace_spans_dropped_total",
+        "Spans lost to the per-trace cap.",
+        crate::obs::trace::SPANS_DROPPED.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    p.counter(
+        "mrss_traces_recorded_total",
+        "Traces kept by the flight recorder.",
+        crate::obs::recorder::recorded_count(),
+    );
+    p.counter(
+        "mrss_flight_dumps_suppressed_total",
+        "Auto-dumps suppressed by the 1/sec throttle.",
+        crate::obs::recorder::DUMPS_SUPPRESSED.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    p.finish()
+}
+
+/// Validate one exposition document: every sample line must belong to
+/// a declared `# TYPE` family (histogram series via their
+/// `_bucket`/`_sum`/`_count` suffixes), every value must parse as a
+/// number, histogram buckets must be cumulative, and each histogram's
+/// `+Inf` bucket must equal its `_count`.
+pub fn validate(text: &str) -> Result<(), String> {
+    let mut types: HashMap<String, String> = HashMap::new();
+    let mut inf: HashMap<String, f64> = HashMap::new();
+    let mut counts: HashMap<String, f64> = HashMap::new();
+    let mut prev_bucket: HashMap<String, f64> = HashMap::new();
+    for (ln, line) in text.lines().enumerate() {
+        let ln = ln + 1;
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let (name, kind) = (it.next().unwrap_or(""), it.next().unwrap_or(""));
+            if name.is_empty() || !matches!(kind, "counter" | "gauge" | "histogram") {
+                return Err(format!("line {ln}: malformed TYPE declaration: {line}"));
+            }
+            types.insert(name.to_string(), kind.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP, EOF, free comments
+        }
+        let (series, value) = match line.find('{') {
+            Some(b) => {
+                let close = line.rfind('}').ok_or(format!("line {ln}: unclosed label set"))?;
+                (&line[..b], line[close + 1..].trim())
+            }
+            None => {
+                let sp = line.find(' ').ok_or(format!("line {ln}: no value: {line}"))?;
+                (&line[..sp], line[sp + 1..].trim())
+            }
+        };
+        let v: f64 =
+            value.parse().map_err(|_| format!("line {ln}: bad value `{value}` for {series}"))?;
+        let base = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| {
+                let b = series.strip_suffix(suf)?;
+                (types.get(b).map(String::as_str) == Some("histogram")).then_some(b)
+            })
+            .unwrap_or(series);
+        match types.get(base).map(String::as_str) {
+            None => return Err(format!("line {ln}: sample `{series}` has no # TYPE declaration")),
+            Some("histogram") if base == series => {
+                return Err(format!("line {ln}: bare sample for histogram `{series}`"))
+            }
+            _ => {}
+        }
+        if series.ends_with("_bucket") && types.get(base).map(String::as_str) == Some("histogram") {
+            let prev = prev_bucket.insert(base.to_string(), v).unwrap_or(0.0);
+            if v < prev {
+                return Err(format!("line {ln}: histogram `{base}` buckets not cumulative"));
+            }
+            if line.contains("le=\"+Inf\"") {
+                inf.insert(base.to_string(), v);
+            }
+        } else if series.ends_with("_count") && base != series {
+            counts.insert(base.to_string(), v);
+        }
+    }
+    for (name, kind) in &types {
+        if kind == "histogram" {
+            match (inf.get(name), counts.get(name)) {
+                (Some(i), Some(c)) if i == c => {}
+                (Some(i), Some(c)) => {
+                    return Err(format!("histogram `{name}`: +Inf bucket {i} != _count {c}"))
+                }
+                _ => return Err(format!("histogram `{name}`: missing +Inf bucket or _count")),
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{StoreStats, TreeStats};
+    use std::time::Duration;
+
+    fn sample_doc() -> String {
+        let m = ServeMetrics::default();
+        m.queries.fetch_add(5, std::sync::atomic::Ordering::Relaxed);
+        m.latency.record(Duration::from_micros(7));
+        m.latency.record(Duration::from_micros(900));
+        m.queue_wait.record(Duration::from_micros(2));
+        m.conns.record_value(3);
+        let snap = m.snapshot(
+            StoreStats { hits: 2, ..Default::default() },
+            TreeStats::default(),
+            "uwcse",
+        );
+        render(&m, &snap, &MjMetrics::default())
+    }
+
+    #[test]
+    fn rendered_exposition_passes_the_validator() {
+        let doc = sample_doc();
+        validate(&doc).unwrap_or_else(|e| panic!("{e}\n---\n{doc}"));
+        assert!(doc.ends_with("# EOF\n"), "missing terminator");
+        assert!(doc.contains("mrss_queries_total 5"), "{doc}");
+        assert!(doc.contains("mrss_mj_ct_ops_total{op=\"project\"} 0"), "{doc}");
+        assert!(doc.contains("mrss_exec_latency_us_count 2"), "{doc}");
+    }
+
+    #[test]
+    fn validator_rejects_undeclared_samples_and_bad_values() {
+        assert!(validate("orphan_metric 3\n").unwrap_err().contains("no # TYPE"));
+        let bad = "# TYPE x counter\nx notanumber\n";
+        assert!(validate(bad).unwrap_err().contains("bad value"));
+    }
+
+    #[test]
+    fn validator_rejects_histogram_inconsistencies() {
+        let doc = "# TYPE h histogram\n\
+                   h_bucket{le=\"1\"} 2\nh_bucket{le=\"+Inf\"} 2\nh_sum 3\nh_count 5\n";
+        assert!(validate(doc).unwrap_err().contains("!= _count"));
+        let non_cum = "# TYPE h histogram\n\
+                       h_bucket{le=\"1\"} 5\nh_bucket{le=\"+Inf\"} 2\nh_sum 3\nh_count 2\n";
+        assert!(validate(non_cum).unwrap_err().contains("not cumulative"));
+        let missing = "# TYPE h histogram\nh_sum 3\n";
+        assert!(validate(missing).unwrap_err().contains("missing"));
+    }
+
+    #[test]
+    fn histogram_buckets_cumulate_and_close_with_inf() {
+        let mut p = PromText::new();
+        p.histogram("t_us", "test", &[(1, 3), (2, 0), (4, 2)], 11);
+        let doc = p.finish();
+        assert!(doc.contains("t_us_bucket{le=\"1\"} 3"), "{doc}");
+        assert!(doc.contains("t_us_bucket{le=\"4\"} 5"), "{doc}");
+        assert!(doc.contains("t_us_bucket{le=\"+Inf\"} 5"), "{doc}");
+        assert!(doc.contains("t_us_sum 11"), "{doc}");
+        assert!(doc.contains("t_us_count 5"), "{doc}");
+        validate(&doc).unwrap();
+    }
+}

@@ -1,0 +1,200 @@
+//! The flight recorder: always-on retention of recent request traces.
+//!
+//! Two rings, both tiny and bounded: the **last-N** ring keeps the
+//! most recent finished traces in arrival order, and the **slowest-K**
+//! ring keeps the worst total times seen since startup — so a latency
+//! cliff that happened an hour ago is still on record even after the
+//! last-N ring has cycled past it.
+//!
+//! The recorder is process-global behind one mutex, touched only when
+//! a trace actually finishes (the sampled path, plus every panic and
+//! blown deadline) — never on the per-span hot path. [`dump_json`]
+//! backs the `DUMP` wire verb; [`auto_dump`] writes the same document
+//! to stderr when a worker panics or a request blows its deadline,
+//! throttled to at most one dump per second so a panic storm cannot
+//! flood the log.
+
+use crate::obs::trace::Trace;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Depth of the most-recent ring.
+pub const LAST_N: usize = 32;
+/// Depth of the slowest-ever ring.
+pub const SLOWEST_K: usize = 8;
+
+/// Auto-dumps suppressed by the 1/sec throttle, for `METRICS`.
+pub static DUMPS_SUPPRESSED: AtomicU64 = AtomicU64::new(0);
+
+struct Inner {
+    last: Vec<Trace>,
+    /// Next insertion slot once `last` is full.
+    next: usize,
+    /// Sorted descending by `total_us`, at most [`SLOWEST_K`] long.
+    slowest: Vec<Trace>,
+    recorded: u64,
+    last_dump: Option<Instant>,
+}
+
+static GLOBAL: Mutex<Inner> =
+    Mutex::new(Inner { last: Vec::new(), next: 0, slowest: Vec::new(), recorded: 0, last_dump: None });
+
+fn lock() -> std::sync::MutexGuard<'static, Inner> {
+    GLOBAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Publish a finished trace into both rings.
+pub fn record(t: Trace) {
+    let mut g = lock();
+    g.recorded += 1;
+    let tail_us = g.slowest.last().map_or(0, |s| s.total_us);
+    if g.slowest.len() < SLOWEST_K || t.total_us > tail_us {
+        g.slowest.push(t.clone());
+        g.slowest.sort_by(|a, b| b.total_us.cmp(&a.total_us));
+        g.slowest.truncate(SLOWEST_K);
+    }
+    if g.last.len() < LAST_N {
+        g.last.push(t);
+    } else {
+        let i = g.next;
+        g.last[i] = t;
+    }
+    g.next = (g.next + 1) % LAST_N;
+}
+
+/// Traces recorded since startup (or [`reset`]).
+pub fn recorded_count() -> u64 {
+    lock().recorded
+}
+
+fn dump_locked(g: &Inner) -> String {
+    let mut out = String::with_capacity(1024);
+    out.push_str(&format!("{{\"recorded\":{},\"last\":[", g.recorded));
+    // Oldest-to-newest: the ring's insertion point splits the order.
+    let (a, b) = if g.last.len() < LAST_N {
+        (&g.last[..], &g.last[..0])
+    } else {
+        (&g.last[g.next..], &g.last[..g.next])
+    };
+    for (i, t) in a.iter().chain(b.iter()).enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&t.to_json());
+    }
+    out.push_str("],\"slowest\":[");
+    for (i, t) in g.slowest.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&t.to_json());
+    }
+    out.push_str("]}");
+    out
+}
+
+/// The full recorder state as one JSON line — the `DUMP` verb's body.
+pub fn dump_json() -> String {
+    dump_locked(&lock())
+}
+
+/// Dump to stderr on an abnormal outcome (panic, blown deadline),
+/// throttled to one per second; suppressed dumps are counted, not lost
+/// silently.
+pub fn auto_dump(reason: &str) {
+    let doc = {
+        let mut g = lock();
+        let now = Instant::now();
+        if g.last_dump.is_some_and(|t| now.duration_since(t) < Duration::from_secs(1)) {
+            DUMPS_SUPPRESSED.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        g.last_dump = Some(now);
+        dump_locked(&g)
+    };
+    eprintln!("mrss: flight recorder dump ({reason}): {doc}");
+}
+
+/// Clear all recorder state. Test-only seam: the recorder is
+/// process-global, so tests sharing a binary must start clean.
+#[doc(hidden)]
+pub fn reset() {
+    let mut g = lock();
+    g.last.clear();
+    g.next = 0;
+    g.slowest.clear();
+    g.recorded = 0;
+    g.last_dump = None;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::MutexGuard;
+
+    // The recorder is process-global; serialize tests that mutate it.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn guard() -> MutexGuard<'static, ()> {
+        let g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        reset();
+        g
+    }
+
+    fn mk(query: &str, total_us: u64) -> Trace {
+        Trace::minimal(query, "ok", total_us)
+    }
+
+    #[test]
+    fn last_ring_keeps_the_newest_n_in_order() {
+        let _g = guard();
+        for i in 0..(LAST_N + 3) {
+            record(mk(&format!("q{i}"), 10));
+        }
+        let dump = dump_json();
+        assert!(dump.contains(&format!("\"recorded\":{}", LAST_N + 3)), "{dump}");
+        // The three oldest have been overwritten...
+        for i in 0..3 {
+            assert!(!dump.contains(&format!("\"query\":\"q{i}\"")), "q{i} survived: {dump}");
+        }
+        // ...and the survivors appear oldest-first.
+        let p3 = dump.find("\"query\":\"q3\"").expect("q3 present");
+        let p_last = dump.find(&format!("\"query\":\"q{}\"", LAST_N + 2)).expect("newest present");
+        assert!(p3 < p_last, "ring not in arrival order: {dump}");
+    }
+
+    #[test]
+    fn slowest_ring_keeps_the_worst_k_ever() {
+        let _g = guard();
+        // Slow traces first, then enough fast ones to cycle the last-N
+        // ring completely: the slow ones must survive in `slowest`.
+        for i in 0..SLOWEST_K {
+            record(mk(&format!("slow{i}"), 1_000_000 + i as u64));
+        }
+        for i in 0..LAST_N {
+            record(mk(&format!("fast{i}"), 5));
+        }
+        let dump = dump_json();
+        let slowest_at = dump.find("\"slowest\":[").unwrap();
+        for i in 0..SLOWEST_K {
+            assert!(dump[slowest_at..].contains(&format!("\"query\":\"slow{i}\"")), "{dump}");
+        }
+    }
+
+    #[test]
+    fn auto_dump_throttles_and_counts_suppressions() {
+        let _g = guard();
+        record(mk("q", 10));
+        let before = DUMPS_SUPPRESSED.load(Ordering::Relaxed);
+        auto_dump("test");
+        auto_dump("test"); // within the 1s window: suppressed
+        assert_eq!(DUMPS_SUPPRESSED.load(Ordering::Relaxed), before + 1);
+    }
+
+    #[test]
+    fn empty_recorder_dumps_a_valid_skeleton() {
+        let _g = guard();
+        assert_eq!(dump_json(), "{\"recorded\":0,\"last\":[],\"slowest\":[]}");
+    }
+}

@@ -1,0 +1,391 @@
+//! Structured span tracing with per-thread, lock-free recording.
+//!
+//! A *trace* is the tree of named spans one request passes through:
+//! protocol parse, query planning, FO-group factorization, table
+//! loads vs. cache hits, ADtree builds and probes, Möbius subtraction,
+//! response render. The worker that executes a request [`begin`]s a
+//! trace on its own thread; every instrumented site between `begin`
+//! and [`end`] records into that thread-local trace — no locks, no
+//! channels, no allocation unless a span actually records.
+//!
+//! Cost discipline (the overhead gate in CI holds the serving stack to
+//! this): when **no** trace is active anywhere in the process, a span
+//! site costs exactly one relaxed atomic load ([`enabled`]) and
+//! returns a disarmed guard. Detail strings are built behind
+//! closures ([`span_detailed`], [`event`]) so formatting work happens
+//! only on the sampled path. Traces cap at [`MAX_SPANS`] spans;
+//! overflow increments `dropped` instead of growing without bound.
+//!
+//! Spans are recorded when their guard drops (post-order); [`end`]
+//! sorts by the entry sequence stamped at span open so consumers see
+//! the tree in execution order, with nesting carried by `depth`.
+
+use crate::serve::protocol::json_escape;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Hard cap on spans recorded per trace; past it, `Trace::dropped`
+/// counts what was lost (a deep Möbius recursion over a big batch can
+/// emit hundreds of table probes).
+pub const MAX_SPANS: usize = 256;
+
+/// Traces ever started (sampled + EXPLAIN-forced), for `METRICS`.
+pub static TRACES_STARTED: AtomicU64 = AtomicU64::new(0);
+/// Spans discarded by the [`MAX_SPANS`] cap, process-wide.
+pub static SPANS_DROPPED: AtomicU64 = AtomicU64::new(0);
+
+/// Number of traces currently active across all threads. The single
+/// relaxed load every disarmed span site pays.
+static ACTIVE_TRACES: AtomicU64 = AtomicU64::new(0);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// One recorded span: a named interval relative to the trace start.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanRec {
+    /// Instrumentation-site name, e.g. `plan.fo_groups`.
+    pub name: &'static str,
+    /// Site-specific payload (table key, group count, …); empty when
+    /// the site had nothing to add.
+    pub detail: String,
+    /// Nesting depth at entry (0 = top level).
+    pub depth: u16,
+    /// Microseconds from trace start to span entry.
+    pub start_us: u64,
+    /// Span duration in microseconds (0 for point events).
+    pub dur_us: u64,
+    /// Entry order within the trace. Spans record on guard *drop*
+    /// (post-order) and `start_us` has only µs resolution, so this is
+    /// what [`end`] sorts by to present execution order.
+    seq: u64,
+}
+
+impl SpanRec {
+    fn to_json(&self, out: &mut String) {
+        out.push_str("{\"name\":\"");
+        out.push_str(self.name);
+        out.push('"');
+        if !self.detail.is_empty() {
+            out.push_str(",\"detail\":\"");
+            out.push_str(&json_escape(&self.detail));
+            out.push('"');
+        }
+        out.push_str(&format!(
+            ",\"depth\":{},\"start_us\":{},\"dur_us\":{}}}",
+            self.depth, self.start_us, self.dur_us
+        ));
+    }
+}
+
+/// A finished request trace, as published to the flight recorder and
+/// rendered by `EXPLAIN` / `DUMP`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Trace {
+    /// Process-unique trace id (monotonic).
+    pub id: u64,
+    /// The query text the trace covers.
+    pub query: String,
+    /// `ok`, `error`, `panic`, or `deadline_exceeded`.
+    pub outcome: &'static str,
+    /// Wall microseconds from [`begin`] to [`end`].
+    pub total_us: u64,
+    /// Recorded spans, in entry (execution) order.
+    pub spans: Vec<SpanRec>,
+    /// Spans lost to the [`MAX_SPANS`] cap.
+    pub dropped: u32,
+}
+
+impl Trace {
+    /// A span-less trace for requests that were *not* sampled but hit
+    /// an outcome the flight recorder must keep anyway (panic,
+    /// deadline): the shape is on record even when the phases are not.
+    pub fn minimal(query: &str, outcome: &'static str, total_us: u64) -> Trace {
+        Trace {
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            query: query.to_string(),
+            outcome,
+            total_us,
+            spans: Vec::new(),
+            dropped: 0,
+        }
+    }
+
+    /// One JSON object, every string routed through
+    /// [`json_escape`](crate::serve::protocol::json_escape).
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(96 + self.spans.len() * 72);
+        out.push_str(&format!(
+            "{{\"id\":{},\"query\":\"{}\",\"outcome\":\"{}\",\"total_us\":{},\"dropped\":{},\"spans\":[",
+            self.id,
+            json_escape(&self.query),
+            json_escape(self.outcome),
+            self.total_us,
+            self.dropped
+        ));
+        for (i, sp) in self.spans.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            sp.to_json(&mut out);
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+struct Active {
+    trace: Trace,
+    t0: Instant,
+    depth: u16,
+    next_seq: u64,
+}
+
+impl Active {
+    fn take_seq(&mut self) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<Active>> = const { RefCell::new(None) };
+}
+
+/// True when at least one thread has an active trace. The only cost a
+/// span site pays on the untraced path.
+#[inline]
+pub fn enabled() -> bool {
+    ACTIVE_TRACES.load(Ordering::Relaxed) > 0
+}
+
+/// Start a trace on the calling thread. A prior unfinished trace on
+/// this thread (a bug upstream, not a supported nesting) is discarded.
+pub fn begin(query: &str) {
+    TRACES_STARTED.fetch_add(1, Ordering::Relaxed);
+    let act = Active {
+        trace: Trace {
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            query: query.to_string(),
+            outcome: "ok",
+            total_us: 0,
+            spans: Vec::new(),
+            dropped: 0,
+        },
+        t0: Instant::now(),
+        depth: 0,
+        next_seq: 0,
+    };
+    let prev = ACTIVE.with(|a| a.borrow_mut().replace(act));
+    if prev.is_none() {
+        ACTIVE_TRACES.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Finish the calling thread's trace, stamping the outcome and total
+/// wall time. Returns `None` when no trace was active.
+pub fn end(outcome: &'static str) -> Option<Trace> {
+    let act = ACTIVE.with(|a| a.borrow_mut().take())?;
+    ACTIVE_TRACES.fetch_sub(1, Ordering::Relaxed);
+    let mut trace = act.trace;
+    trace.outcome = outcome;
+    trace.total_us = act.t0.elapsed().as_micros() as u64;
+    // Guards record on drop (post-order); the entry sequence stamped
+    // at span open restores execution order — `start_us` alone cannot,
+    // since a parent and its children often share a microsecond.
+    trace.spans.sort_by_key(|s| s.seq);
+    Some(trace)
+}
+
+/// RAII span: created at site entry, records its interval into the
+/// thread's active trace when dropped. Disarmed (free) when the thread
+/// has no active trace.
+pub struct SpanGuard {
+    name: &'static str,
+    detail: String,
+    depth: u16,
+    start_us: u64,
+    seq: u64,
+    armed: bool,
+}
+
+impl SpanGuard {
+    fn disarmed(name: &'static str) -> SpanGuard {
+        SpanGuard { name, detail: String::new(), depth: 0, start_us: 0, seq: 0, armed: false }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        ACTIVE.with(|a| {
+            if let Some(act) = a.borrow_mut().as_mut() {
+                act.depth = act.depth.saturating_sub(1);
+                let end_us = act.t0.elapsed().as_micros() as u64;
+                push_span(
+                    act,
+                    SpanRec {
+                        name: self.name,
+                        detail: std::mem::take(&mut self.detail),
+                        depth: self.depth,
+                        start_us: self.start_us,
+                        dur_us: end_us.saturating_sub(self.start_us),
+                        seq: self.seq,
+                    },
+                );
+            }
+        });
+    }
+}
+
+fn push_span(act: &mut Active, rec: SpanRec) {
+    if act.trace.spans.len() < MAX_SPANS {
+        act.trace.spans.push(rec);
+    } else {
+        act.trace.dropped += 1;
+        SPANS_DROPPED.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Open a span with no detail payload.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::disarmed(name);
+    }
+    span_armed(name, String::new)
+}
+
+/// Open a span whose detail is built only if the calling thread is
+/// actually tracing — the closure never runs on the untraced path.
+#[inline]
+pub fn span_detailed<F: FnOnce() -> String>(name: &'static str, detail: F) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::disarmed(name);
+    }
+    span_armed(name, detail)
+}
+
+fn span_armed<F: FnOnce() -> String>(name: &'static str, detail: F) -> SpanGuard {
+    ACTIVE.with(|a| {
+        let mut b = a.borrow_mut();
+        match b.as_mut() {
+            Some(act) => {
+                let depth = act.depth;
+                act.depth += 1;
+                SpanGuard {
+                    name,
+                    detail: detail(),
+                    depth,
+                    start_us: act.t0.elapsed().as_micros() as u64,
+                    seq: act.take_seq(),
+                    armed: true,
+                }
+            }
+            None => SpanGuard::disarmed(name),
+        }
+    })
+}
+
+/// Record a zero-duration point event (cache hit, coalesced wait) at
+/// the current offset. The detail closure runs only when tracing.
+#[inline]
+pub fn event<F: FnOnce() -> String>(name: &'static str, detail: F) {
+    if !enabled() {
+        return;
+    }
+    ACTIVE.with(|a| {
+        if let Some(act) = a.borrow_mut().as_mut() {
+            let at = act.t0.elapsed().as_micros() as u64;
+            let depth = act.depth;
+            let seq = act.take_seq();
+            push_span(act, SpanRec { name, detail: detail(), depth, start_us: at, dur_us: 0, seq });
+        }
+    });
+}
+
+/// Inject a span that happened *before* the trace began (the reactor
+/// parses the request line before the worker starts the trace). It is
+/// pinned at offset 0 with the externally measured duration.
+pub fn event_us(name: &'static str, dur_us: u64) {
+    ACTIVE.with(|a| {
+        if let Some(act) = a.borrow_mut().as_mut() {
+            let depth = act.depth;
+            let seq = act.take_seq();
+            push_span(act, SpanRec { name, detail: String::new(), depth, start_us: 0, dur_us, seq });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_nest_and_sort_in_execution_order() {
+        begin("q1");
+        event_us("parse", 7);
+        {
+            let _plan = span("plan");
+            {
+                let _t = span_detailed("table.count", || "chain_0".to_string());
+            }
+            event("adtree.hit", || "chain_0".to_string());
+        }
+        let t = end("ok").expect("trace was active");
+        assert_eq!(t.query, "q1");
+        assert_eq!(t.outcome, "ok");
+        let names: Vec<&str> = t.spans.iter().map(|s| s.name).collect();
+        assert_eq!(names, ["parse", "plan", "table.count", "adtree.hit"]);
+        let depths: Vec<u16> = t.spans.iter().map(|s| s.depth).collect();
+        assert_eq!(depths, [0, 0, 1, 1]);
+        assert_eq!(t.spans[0].dur_us, 7);
+        assert_eq!(t.spans[2].detail, "chain_0");
+        assert_eq!(t.dropped, 0);
+        assert!(!enabled(), "end() must release the active-trace gate");
+    }
+
+    #[test]
+    fn untraced_thread_records_nothing_and_detail_closure_never_runs() {
+        assert!(end("ok").is_none());
+        {
+            let _s = span("plan");
+            let _d = span_detailed("table.count", || panic!("detail built while disarmed"));
+            event("adtree.hit", || panic!("event detail built while disarmed"));
+        }
+        assert!(end("ok").is_none());
+    }
+
+    #[test]
+    fn span_cap_counts_dropped_instead_of_growing() {
+        begin("deep");
+        for _ in 0..(MAX_SPANS + 5) {
+            let _s = span("probe");
+        }
+        let t = end("ok").unwrap();
+        assert_eq!(t.spans.len(), MAX_SPANS);
+        assert_eq!(t.dropped, 5);
+    }
+
+    #[test]
+    fn trace_json_escapes_query_and_detail() {
+        begin("q=\"x\"");
+        event("note", || "a\\b\"c".to_string());
+        let t = end("error").unwrap();
+        let j = t.to_json();
+        assert!(j.contains("\"query\":\"q=\\\"x\\\"\""), "{j}");
+        assert!(j.contains("\"detail\":\"a\\\\b\\\"c\""), "{j}");
+        assert!(j.contains("\"outcome\":\"error\""), "{j}");
+    }
+
+    #[test]
+    fn minimal_trace_has_shape_but_no_spans() {
+        let t = Trace::minimal("boom", "panic", 1234);
+        assert_eq!(t.outcome, "panic");
+        assert_eq!(t.total_us, 1234);
+        assert!(t.spans.is_empty());
+        assert!(t.to_json().contains("\"spans\":[]"));
+    }
+}

@@ -9,6 +9,7 @@
 //! must never contend with the queries it measures.
 
 use crate::mobius::MjMetrics;
+use crate::serve::protocol::json_escape;
 use crate::store::{StoreStats, TreeStats};
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::time::{Duration, Instant};
@@ -22,11 +23,17 @@ const BUCKETS: usize = 40;
 #[derive(Debug)]
 pub struct LatencyHistogram {
     buckets: [AtomicU64; BUCKETS],
+    /// Exact sum of recorded values — the buckets alone only bound it,
+    /// and Prometheus exposition wants a true `_sum`.
+    sum: AtomicU64,
 }
 
 impl Default for LatencyHistogram {
     fn default() -> Self {
-        LatencyHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+        }
     }
 }
 
@@ -39,7 +46,7 @@ impl LatencyHistogram {
     }
 
     pub fn record(&self, d: Duration) {
-        self.buckets[Self::bucket_of(d.as_micros())].fetch_add(1, Relaxed);
+        self.record_value(u64::try_from(d.as_micros()).unwrap_or(u64::MAX));
     }
 
     /// Record a raw value instead of a duration — the same log₂ buckets
@@ -47,10 +54,22 @@ impl LatencyHistogram {
     /// with `quantile_upper_us` then reading as a plain value bound.
     pub fn record_value(&self, v: u64) {
         self.buckets[Self::bucket_of(v as u128)].fetch_add(1, Relaxed);
+        self.sum.fetch_add(v, Relaxed);
     }
 
     pub fn count(&self) -> u64 {
         self.buckets.iter().map(|b| b.load(Relaxed)).sum()
+    }
+
+    /// Exact sum of every recorded value (µs for durations).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Relaxed)
+    }
+
+    /// `(upper_bound, count)` per bucket, in ascending bound order —
+    /// the raw material for Prometheus cumulative-`le` rendering.
+    pub fn buckets(&self) -> Vec<(u64, u64)> {
+        (0..BUCKETS).map(|i| (1u64 << i, self.buckets[i].load(Relaxed))).collect()
     }
 
     /// Upper bound (µs) of the bucket containing quantile `q` (0..=1).
@@ -87,7 +106,12 @@ pub struct ServeMetrics {
     pub connections: AtomicU64,
     /// Connections currently being served.
     pub active: AtomicU64,
+    /// Worker-pool execution time per query (dispatch excluded).
     pub latency: LatencyHistogram,
+    /// Time a job sat in the worker queue before a thread picked it
+    /// up — split from `latency` so `STATS` shows *where* latency
+    /// lives: a saturated pool grows this, slow planning grows that.
+    pub queue_wait: LatencyHistogram,
     /// Reactor wake-ups: poller waits that returned with ≥1 event.
     pub wakeups: AtomicU64,
     /// Fds currently registered across all reactor shards (gauge).
@@ -124,6 +148,7 @@ impl Default for ServeMetrics {
             connections: AtomicU64::new(0),
             active: AtomicU64::new(0),
             latency: LatencyHistogram::default(),
+            queue_wait: LatencyHistogram::default(),
             wakeups: AtomicU64::new(0),
             registered_fds: AtomicU64::new(0),
             run_queue_peak: AtomicU64::new(0),
@@ -138,12 +163,15 @@ impl Default for ServeMetrics {
 }
 
 impl ServeMetrics {
-    /// Point-in-time snapshot, joined with the store/tree cache counters.
-    pub fn snapshot(&self, store: StoreStats, trees: TreeStats) -> ServeSnapshot {
+    /// Point-in-time snapshot, joined with the store/tree cache counters
+    /// and the serving dataset's name (an arbitrary string on the wire —
+    /// `to_json` escapes it like every other string field).
+    pub fn snapshot(&self, store: StoreStats, trees: TreeStats, dataset: &str) -> ServeSnapshot {
         let uptime = self.start.elapsed();
         let queries = self.queries.load(Relaxed);
         let wakeups = self.wakeups.load(Relaxed);
         ServeSnapshot {
+            dataset: dataset.to_string(),
             uptime_secs: uptime.as_secs_f64(),
             queries,
             errors: self.errors.load(Relaxed),
@@ -153,6 +181,8 @@ impl ServeMetrics {
             qps: queries as f64 / uptime.as_secs_f64().max(1e-9),
             p50_us: self.latency.quantile_upper_us(0.50),
             p99_us: self.latency.quantile_upper_us(0.99),
+            queue_p50_us: self.queue_wait.quantile_upper_us(0.50),
+            queue_p99_us: self.queue_wait.quantile_upper_us(0.99),
             wakeups,
             wakeups_per_sec: wakeups as f64 / uptime.as_secs_f64().max(1e-9),
             registered_fds: self.registered_fds.load(Relaxed),
@@ -171,8 +201,10 @@ impl ServeMetrics {
 
 /// What `STATS` returns: one consistent view of traffic, latency, and both
 /// caches.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServeSnapshot {
+    /// Dataset the store serves (manifest string, escaped on render).
+    pub dataset: String,
     pub uptime_secs: f64,
     pub queries: u64,
     pub errors: u64,
@@ -180,9 +212,13 @@ pub struct ServeSnapshot {
     pub connections: u64,
     pub active: u64,
     pub qps: f64,
-    /// Latency bucket upper bounds, µs (≤2× relative error by design).
+    /// Execution-latency bucket upper bounds, µs (≤2× relative error
+    /// by design).
     pub p50_us: u64,
     pub p99_us: u64,
+    /// Queue-wait bucket upper bounds, µs — dispatch to pickup.
+    pub queue_p50_us: u64,
+    pub queue_p99_us: u64,
     /// Reactor wake-ups with ≥1 event, total and per second.
     pub wakeups: u64,
     pub wakeups_per_sec: f64,
@@ -207,10 +243,14 @@ pub struct ServeSnapshot {
 
 impl ServeSnapshot {
     /// Render as a single-line JSON object (the `STATS` wire response).
+    /// Every string field — here the dataset name — goes through
+    /// [`json_escape`]; numbers render bare.
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"uptime_secs\":{:.3},\"queries\":{},\"errors\":{},\"busy_rejects\":{},\
+            "{{\"dataset\":\"{}\",\
+             \"uptime_secs\":{:.3},\"queries\":{},\"errors\":{},\"busy_rejects\":{},\
              \"connections\":{},\"active\":{},\"qps\":{:.1},\"p50_us\":{},\"p99_us\":{},\
+             \"queue\":{{\"p50_us\":{},\"p99_us\":{}}},\
              \"batch_peak\":{},\
              \"worker_panics\":{},\"conn_timeouts\":{},\"request_timeouts\":{},\
              \"reactor\":{{\"registered_fds\":{},\"run_queue_peak\":{},\"wakeups\":{},\
@@ -220,6 +260,7 @@ impl ServeSnapshot {
              \"quarantined_tables\":{}}},\
              \"adtree\":{{\"hits\":{},\"builds\":{},\"building\":{},\"coalesced_waits\":{},\
              \"evictions\":{},\"bytes\":{}}}}}",
+            json_escape(&self.dataset),
             self.uptime_secs,
             self.queries,
             self.errors,
@@ -229,6 +270,8 @@ impl ServeSnapshot {
             self.qps,
             self.p50_us,
             self.p99_us,
+            self.queue_p50_us,
+            self.queue_p99_us,
             self.batch_peak,
             self.worker_panics,
             self.conn_timeouts,
@@ -294,7 +337,42 @@ mod tests {
         assert_eq!(h.count(), 100);
         assert_eq!(h.quantile_upper_us(0.50), 8);
         assert_eq!(h.quantile_upper_us(0.99), 1024);
+        assert_eq!(h.sum(), 98 * 7 + 2 * 900);
         assert_eq!(LatencyHistogram::default().quantile_upper_us(0.5), 0);
+    }
+
+    #[test]
+    fn quantile_edge_cases_stay_in_bounds() {
+        // Empty histogram: every quantile reports 0, not the top bound.
+        let empty = LatencyHistogram::default();
+        for q in [0.0, 0.5, 1.0, 2.0, -1.0] {
+            assert_eq!(empty.quantile_upper_us(q), 0, "q={q}");
+        }
+        // q = 1.0 (and out-of-range q, clamped) must land on the last
+        // *occupied* bucket, never index past the array.
+        let h = LatencyHistogram::default();
+        h.record(Duration::from_micros(7));
+        h.record(Duration::from_micros(900));
+        assert_eq!(h.quantile_upper_us(1.0), 1024);
+        assert_eq!(h.quantile_upper_us(5.0), 1024);
+        assert_eq!(h.quantile_upper_us(0.0), 8);
+        assert_eq!(h.quantile_upper_us(-3.0), 8);
+        // A value in the catch-all bucket resolves to its bound.
+        let top = LatencyHistogram::default();
+        top.record_value(u64::MAX);
+        assert_eq!(top.quantile_upper_us(1.0), 1u64 << (BUCKETS - 1));
+    }
+
+    #[test]
+    fn buckets_accessor_matches_recorded_counts() {
+        let h = LatencyHistogram::default();
+        h.record(Duration::from_micros(3)); // (2,4] ⇒ bucket 2
+        h.record(Duration::from_micros(4));
+        let buckets = h.buckets();
+        assert_eq!(buckets.len(), BUCKETS);
+        assert_eq!(buckets[2], (4, 2));
+        assert_eq!(buckets.iter().map(|(_, c)| c).sum::<u64>(), h.count());
+        assert!(buckets.windows(2).all(|w| w[0].0 < w[1].0), "bounds not ascending");
     }
 
     #[test]
@@ -310,10 +388,15 @@ mod tests {
         m.worker_panics.fetch_add(1, Relaxed);
         m.conn_timeouts.fetch_add(5, Relaxed);
         m.request_timeouts.fetch_add(6, Relaxed);
+        m.queue_wait.record(Duration::from_micros(3));
         let store = StoreStats { quarantined_tables: 7, ..Default::default() };
-        let snap = m.snapshot(store, TreeStats::default());
+        // A dataset name with JSON metacharacters must come out escaped —
+        // the audit that every string field routes through json_escape.
+        let snap = m.snapshot(store, TreeStats::default(), "uw\"cse\\");
         let j = snap.to_json();
         for key in [
+            "\"dataset\":\"uw\\\"cse\\\\\"",
+            "\"queue\":{\"p50_us\":4,\"p99_us\":4}",
             "\"queries\":3",
             "\"qps\":",
             "\"p99_us\":",
@@ -362,7 +445,7 @@ mod tests {
         let store = StoreStats { hits: 2, misses: 1, ..Default::default() };
         let trees =
             TreeStats { builds: 4, coalesced_waits: 3, evictions: 1, ..Default::default() };
-        let snap = ServeMetrics::default().snapshot(store, trees);
+        let snap = ServeMetrics::default().snapshot(store, trees, "uwcse");
         let mut m = MjMetrics::default();
         snap.merge_into(&mut m);
         assert_eq!((m.store_hits, m.store_misses), (2, 1));

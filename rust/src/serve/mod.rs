@@ -6,7 +6,8 @@
 //! ([`crate::store`]) into a network service:
 //!
 //! * [`protocol`] — a line-delimited wire protocol: the `query` CLI
-//!   grammar plus `BATCH` / `STATS` / `PING` / `SHUTDOWN`, with JSON or
+//!   grammar plus `BATCH` / `STATS` / `PING` / `SHUTDOWN` and the
+//!   observability verbs `EXPLAIN` / `METRICS` / `DUMP`, with JSON or
 //!   text responses, and the resumable [`LineBuffer`](protocol::LineBuffer)
 //!   the nonblocking server parses through;
 //! * [`reactor`] — dependency-free readiness polling: raw-syscall
@@ -40,6 +41,11 @@
 //! store underneath quarantines damaged tables and degrades via Möbius
 //! derivation (see [`crate::store`]). All of it is driven in tests by the
 //! [`crate::util::failpoint`] harness (`--features failpoints`).
+//!
+//! Observability lives in [`crate::obs`]: `--trace-sample N` span-traces
+//! every Nth request (flight recorder + optional `--access-log`),
+//! `EXPLAIN <query>` traces one query on demand, and `METRICS` exposes
+//! every counter here in Prometheus text format.
 //!
 //! CLI: `mrss serve --store DIR --listen ADDR` starts the server;
 //! `mrss bench-serve` drives it (or self-hosts one on an ephemeral port).

@@ -12,7 +12,12 @@
 //!                              grammar: `RA(P,S)=F intelligence(S)=1 …`)
 //! COUNT <query>                explicit form of the same
 //! BATCH <q1> ; <q2> ; …        many queries on one line, `;`-separated
+//! EXPLAIN <query>              execute with tracing forced; answer is the
+//!                              count plus the span tree (always JSON)
 //! STATS                        live metrics snapshot (always JSON)
+//! METRICS                      Prometheus text exposition — the one
+//!                              multi-line response, read until `# EOF`
+//! DUMP                         flight-recorder contents (always JSON)
 //! PING                         liveness probe
 //! SHUTDOWN                     stop the server after in-flight work drains
 //! ```
@@ -33,6 +38,9 @@
 //! | pong       | `PONG`               | `{"pong":true}`                        |
 //! | busy       | `BUSY <why>`         | `{"busy":true,"error":"…"}`            |
 //! | stats      | *(json object)*      | *(json object)*                        |
+//! | explain    | *(json object)*      | *(json object)*                        |
+//! | dump       | *(json object)*      | *(json object)*                        |
+//! | metrics    | *(text exposition)*  | *(text exposition)*                    |
 //! | bye        | `BYE`                | `{"bye":true}`                         |
 //!
 //! `BUSY` is the admission-control answer (accept queue full, or the
@@ -50,7 +58,13 @@ pub enum Request {
     Count(String),
     /// Count many queries from one line (`;`-separated).
     Batch(Vec<String>),
+    /// Count one query with tracing forced on, answering the span tree.
+    Explain(String),
     Stats,
+    /// Prometheus text exposition of every counter and histogram.
+    Metrics,
+    /// Flight-recorder dump: last-N + slowest-K request traces.
+    Dump,
     Ping,
     Shutdown,
 }
@@ -63,8 +77,11 @@ pub fn parse_request(line: &str) -> Request {
     match keyword.to_ascii_uppercase().as_str() {
         "PING" if line.len() == keyword.len() => Request::Ping,
         "STATS" if line.len() == keyword.len() => Request::Stats,
+        "METRICS" if line.len() == keyword.len() => Request::Metrics,
+        "DUMP" if line.len() == keyword.len() => Request::Dump,
         "SHUTDOWN" if line.len() == keyword.len() => Request::Shutdown,
         "COUNT" => Request::Count(line[keyword.len()..].trim().to_string()),
+        "EXPLAIN" => Request::Explain(line[keyword.len()..].trim().to_string()),
         "BATCH" => Request::Batch(
             line[keyword.len()..]
                 .split(';')
@@ -86,6 +103,14 @@ pub enum Response {
     Busy { msg: String },
     /// Pre-rendered JSON object (the metrics snapshot).
     Stats { json: String },
+    /// Pre-rendered JSON object: count + span tree for `EXPLAIN`.
+    Explain { json: String },
+    /// Pre-rendered JSON object: the flight-recorder dump.
+    Dump { json: String },
+    /// Prometheus text exposition. The protocol's only multi-line
+    /// response; the body already ends with its `# EOF` terminator
+    /// line, so clients read until that marker.
+    Metrics { text: String },
     Bye,
 }
 
@@ -127,6 +152,12 @@ impl Response {
                 }
             }
             Response::Stats { json: obj } => obj.clone(),
+            Response::Explain { json: obj } => obj.clone(),
+            Response::Dump { json: obj } => obj.clone(),
+            // Multi-line body ending in the `# EOF` line; the trailing
+            // newline is stripped here because the server appends one
+            // newline per rendered response.
+            Response::Metrics { text } => text.trim_end().to_string(),
             Response::Bye => {
                 if json {
                     "{\"bye\":true}".to_string()
@@ -328,6 +359,38 @@ mod tests {
         assert_eq!(parse_request("COUNT RA(P,S)=F"), Request::Count("RA(P,S)=F".into()));
         // COUNT lets a query spelled like a keyword through.
         assert_eq!(parse_request("count stats"), Request::Count("stats".into()));
+    }
+
+    #[test]
+    fn observability_verbs_parse() {
+        assert_eq!(parse_request("METRICS"), Request::Metrics);
+        assert_eq!(parse_request(" metrics "), Request::Metrics);
+        assert_eq!(parse_request("DUMP"), Request::Dump);
+        assert_eq!(parse_request("dump"), Request::Dump);
+        assert_eq!(
+            parse_request("EXPLAIN RA(P,S)=F a=1"),
+            Request::Explain("RA(P,S)=F a=1".into())
+        );
+        assert_eq!(parse_request("explain"), Request::Explain(String::new()));
+        // A keyword with trailing text is a query, same as PING/STATS.
+        assert_eq!(parse_request("METRICS x"), Request::Count("METRICS x".into()));
+        assert_eq!(parse_request("DUMP x"), Request::Count("DUMP x".into()));
+        // COUNT still escapes a query spelled like the new keywords.
+        assert_eq!(parse_request("COUNT metrics"), Request::Count("metrics".into()));
+    }
+
+    #[test]
+    fn observability_responses_render_verbatim_in_both_modes() {
+        for json in [false, true] {
+            let e = Response::Explain { json: "{\"count\":1,\"trace\":{}}".into() };
+            assert_eq!(e.render(json), "{\"count\":1,\"trace\":{}}");
+            let d = Response::Dump { json: "{\"last\":[]}".into() };
+            assert_eq!(d.render(json), "{\"last\":[]}");
+            let m = Response::Metrics { text: "# TYPE a counter\na 1\n# EOF\n".into() };
+            let body = m.render(json);
+            assert!(body.ends_with("# EOF"), "terminator must be the last line: {body:?}");
+            assert!(!body.ends_with('\n'), "server appends the final newline");
+        }
     }
 
     #[test]

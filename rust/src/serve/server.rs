@@ -39,7 +39,13 @@
 //!   idle connections close, in-flight queries drain (bounded by a grace
 //!   period), and [`ServeHandle::wait`] asserts the drain left
 //!   `active == 0`.
+//! * Observability rides the same paths: the reactor stamps parse and
+//!   enqueue times on each job; workers trace sampled requests
+//!   ([`crate::obs::trace`]), publish finished traces to the flight
+//!   recorder behind `DUMP`, and answer `EXPLAIN` with the span tree.
+//!   `METRICS` renders every counter here in Prometheus text format.
 
+use crate::obs::{recorder, trace};
 use crate::store::CountServer;
 use crate::util::error::{Context, Result};
 use std::cmp::Reverse;
@@ -47,13 +53,13 @@ use std::collections::{BinaryHeap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::Ordering::{Relaxed, SeqCst};
-use std::sync::atomic::AtomicBool;
+use std::sync::atomic::{AtomicBool, AtomicU64};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::metrics::{ServeMetrics, ServeSnapshot};
-use super::protocol::{parse_request, LineBuffer, Request, Response};
+use super::protocol::{json_escape, parse_request, LineBuffer, Request, Response};
 use super::reactor::{fd_of, Event, Interest, Poller, PollerKind, WakeFd};
 
 /// Poller token of the shard's listener clone.
@@ -101,6 +107,16 @@ pub struct ServeConfig {
     /// fan-out concurrency is observable deterministically. Zero (and
     /// meant to stay zero) in production.
     pub exec_delay: Duration,
+    /// Trace every `N`th request (1 = all, 0 = off). Sampled requests
+    /// record a full span trace — flight recorder, access log — while
+    /// unsampled ones pay one relaxed counter bump and a relaxed load
+    /// per span site (the overhead gate in CI holds this). `EXPLAIN`
+    /// always traces its own query regardless of this setting.
+    pub trace_sample: u64,
+    /// Append one JSON line per *sampled* request to this file (wide
+    /// events: conn id, query, queue-wait vs exec split, bytes,
+    /// outcome). `None` = off; needs `trace_sample > 0` to emit.
+    pub access_log: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -117,6 +133,8 @@ impl Default for ServeConfig {
             idle_timeout: None,
             request_timeout: None,
             exec_delay: Duration::ZERO,
+            trace_sample: 0,
+            access_log: None,
         }
     }
 }
@@ -134,6 +152,14 @@ struct Job {
     member: usize,
     batch: usize,
     query: String,
+    /// `EXPLAIN`: answer with the span trace instead of a bare count.
+    explain: bool,
+    /// When the reactor submitted the job — queue wait is measured from
+    /// here to worker pickup, split from exec time in STATS/METRICS.
+    enqueued: Instant,
+    /// Wire-parse time measured reactor-side (0 unless sampling is on),
+    /// injected into the trace as the `parse` span.
+    parse_us: u64,
 }
 
 /// A finished query on its way back to the owning shard.
@@ -222,11 +248,30 @@ struct Shared {
     shutdown: AtomicBool,
     exec: Executor,
     shards: Vec<Arc<ShardShared>>,
+    /// Round-robin counter behind `--trace-sample N`: job `i` is traced
+    /// when `i % N == 0`.
+    trace_tick: AtomicU64,
+    /// Open `--access-log` file; workers append whole lines under the
+    /// lock so concurrent sampled requests never interleave bytes.
+    access_log: Option<Mutex<std::fs::File>>,
 }
 
 impl Shared {
     fn snapshot(&self) -> ServeSnapshot {
-        self.metrics.snapshot(self.count.stats(), self.count.tree_stats())
+        self.metrics.snapshot(
+            self.count.stats(),
+            self.count.tree_stats(),
+            &self.count.store().dataset,
+        )
+    }
+
+    /// The `METRICS` response body: every serving/store/tree/mj counter
+    /// in Prometheus text exposition format.
+    fn metrics_text(&self) -> String {
+        let snap = self.snapshot();
+        let mut mj = crate::mobius::MjMetrics::default();
+        snap.merge_into(&mut mj);
+        crate::obs::prom::render(&self.metrics, &snap, &mj)
     }
 
     /// Latch the shutdown flag and wake every shard out of its wait.
@@ -299,6 +344,18 @@ pub fn serve(count: Arc<CountServer>, cfg: ServeConfig) -> Result<ServeHandle> {
     let n_shards = cfg.shards.max(1);
     let queue_depth = cfg.queue_depth.max(1);
     let kind = cfg.poller;
+    // Open the access log up front so a bad path fails `serve()` rather
+    // than the first sampled request.
+    let access_log = match &cfg.access_log {
+        Some(p) => Some(Mutex::new(
+            std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(p)
+                .with_context(|| format!("opening access log {p}"))?,
+        )),
+        None => None,
+    };
 
     // Build every shard's poller before spawning anything, so setup
     // errors (no epoll, fd limits) surface as a clean `Err` from here.
@@ -326,6 +383,8 @@ pub fn serve(count: Arc<CountServer>, cfg: ServeConfig) -> Result<ServeHandle> {
         shutdown: AtomicBool::new(false),
         exec: Executor::new(queue_depth),
         shards: mailboxes,
+        trace_tick: AtomicU64::new(0),
+        access_log,
     });
 
     let mut workers = Vec::with_capacity(threads);
@@ -357,7 +416,9 @@ pub fn serve(count: Arc<CountServer>, cfg: ServeConfig) -> Result<ServeHandle> {
 /// `batch_peak` in STATS records the high-water mark.
 fn worker_loop(shared: &Shared) {
     while let Some(job) = shared.exec.pop() {
-        let Job { shard, slot, conn_id, member, batch, query } = job;
+        let Job { shard, slot, conn_id, member, batch, query, explain, enqueued, parse_us } = job;
+        let queue_wait = enqueued.elapsed();
+        shared.metrics.queue_wait.record(queue_wait);
         let fanout = batch > 1;
         if fanout {
             let cur = shared.metrics.batch_inflight.fetch_add(1, Relaxed) + 1;
@@ -368,6 +429,17 @@ fn worker_loop(shared: &Shared) {
         }
         if let Some(ms) = crate::util::failpoint::fire_arg("worker.exec.delay") {
             std::thread::sleep(Duration::from_millis(ms));
+        }
+        // Sampling decision: `EXPLAIN` always traces its own query; with
+        // `--trace-sample N` every Nth job across the pool does too. An
+        // unsampled request pays this one relaxed fetch_add here and a
+        // relaxed load per span site — the overhead the CI gate holds.
+        let sample = shared.cfg.trace_sample;
+        let traced =
+            explain || (sample > 0 && shared.trace_tick.fetch_add(1, Relaxed) % sample == 0);
+        if traced {
+            trace::begin(&query);
+            trace::event_us("parse", parse_us);
         }
         shared.metrics.queries.fetch_add(1, Relaxed);
         let t0 = Instant::now();
@@ -381,10 +453,26 @@ fn worker_loop(shared: &Shared) {
             }
             shared.count.count_query(&query)
         }));
-        shared.metrics.latency.record(t0.elapsed());
+        let exec = t0.elapsed();
+        shared.metrics.latency.record(exec);
         if fanout {
             shared.metrics.batch_inflight.fetch_sub(1, Relaxed);
         }
+        // Outcome for the trace/recorder/access log. The reactor arms the
+        // request deadline at dispatch (`enqueued`), so that is the clock
+        // to compare — queue wait and injected stalls count, exactly as
+        // the client experienced them. A completion that outlived the
+        // deadline was already answered `ERR deadline exceeded` by the
+        // reactor and will be discarded by the conn-id guard — the flight
+        // recorder is the only place it shows up.
+        let outcome = match &out {
+            Err(_) => "panic",
+            _ if shared.cfg.request_timeout.is_some_and(|t| enqueued.elapsed() > t) => {
+                "deadline_exceeded"
+            }
+            Ok(Ok(_)) => "ok",
+            Ok(Err(_)) => "error",
+        };
         let resp = match out {
             Ok(Ok(count)) => Response::Count { query, count },
             Ok(Err(e)) => {
@@ -400,10 +488,109 @@ fn worker_loop(shared: &Shared) {
                 }
             }
         };
+        let resp = finish_trace(shared, resp, Obs {
+            traced,
+            explain,
+            outcome,
+            conn_id,
+            batch,
+            member,
+            queue_wait,
+            exec,
+        });
         let ss = &shared.shards[shard];
         ss.completions.lock().unwrap().push(Completion { slot, conn_id, member, resp });
         ss.wake.wake();
     }
+}
+
+/// Per-job observability context handed from the hot loop to
+/// [`finish_trace`].
+struct Obs {
+    traced: bool,
+    explain: bool,
+    outcome: &'static str,
+    conn_id: u64,
+    batch: usize,
+    member: usize,
+    queue_wait: Duration,
+    exec: Duration,
+}
+
+/// Close out one job's trace: record the render span, publish to the
+/// flight recorder (sampled traces always; panics and blown deadlines
+/// even unsampled, as span-less shapes), append the access-log line, and
+/// swap in the `EXPLAIN` response when asked. Untraced, healthy requests
+/// take the first early return and touch nothing.
+fn finish_trace(shared: &Shared, resp: Response, obs: Obs) -> Response {
+    let notable = matches!(obs.outcome, "panic" | "deadline_exceeded");
+    if !obs.traced && !notable {
+        return resp;
+    }
+    let query_of = |r: &Response| -> String {
+        match r {
+            Response::Count { query, .. } | Response::Error { query, .. } => query.clone(),
+            _ => String::new(),
+        }
+    };
+    let mut bytes = 0u64;
+    let finished = if obs.traced {
+        if !obs.explain {
+            // Render once worker-side so the trace carries reply size and
+            // render cost; the reactor's own render is the one written.
+            let _sp = trace::span("render");
+            bytes = resp.render(shared.cfg.json).len() as u64 + 1;
+        }
+        trace::end(obs.outcome)
+    } else {
+        // Unsampled, but the recorder keeps abnormal outcomes anyway.
+        Some(trace::Trace::minimal(
+            &query_of(&resp),
+            obs.outcome,
+            obs.exec.as_micros() as u64,
+        ))
+    };
+    let Some(t) = finished else { return resp };
+    if obs.traced {
+        if let Some(log) = &shared.access_log {
+            let line = format!(
+                "{{\"conn\":{},\"query\":\"{}\",\"outcome\":\"{}\",\"queue_us\":{},\
+                 \"exec_us\":{},\"bytes\":{},\"batch\":{},\"member\":{}}}\n",
+                obs.conn_id,
+                json_escape(&t.query),
+                t.outcome,
+                obs.queue_wait.as_micros(),
+                obs.exec.as_micros(),
+                bytes,
+                obs.batch,
+                obs.member,
+            );
+            if let Ok(mut f) = log.lock() {
+                let _ = f.write_all(line.as_bytes());
+            }
+        }
+    }
+    let resp = if obs.explain {
+        let body = match &resp {
+            Response::Count { count, .. } => format!("\"count\":{count}"),
+            Response::Error { msg, .. } => format!("\"error\":\"{}\"", json_escape(msg)),
+            _ => String::from("\"error\":\"unexpected response\""),
+        };
+        Response::Explain {
+            json: format!(
+                "{{\"query\":\"{}\",{body},\"trace\":{}}}",
+                json_escape(&t.query),
+                t.to_json()
+            ),
+        }
+    } else {
+        resp
+    };
+    recorder::record(t);
+    if notable {
+        recorder::auto_dump(obs.outcome);
+    }
+    resp
 }
 
 /// Best-effort text of a panic payload (panics carry `&str` or `String`
@@ -848,11 +1035,24 @@ impl ShardCtx {
             if line.trim().is_empty() {
                 continue;
             }
-            match parse_request(&line) {
+            // Parse time rides the job into the worker-side trace as the
+            // `parse` span; the clock is touched only when sampling is on.
+            let parse_t0 =
+                if self.shared.cfg.trace_sample > 0 { Some(Instant::now()) } else { None };
+            let req = parse_request(&line);
+            let parse_us = parse_t0.map_or(0, |t| t.elapsed().as_micros() as u64);
+            match req {
                 Request::Ping => self.queue_to(slot, &Response::Pong),
                 Request::Stats => {
                     let s = self.shared.snapshot().to_json();
                     self.queue_to(slot, &Response::Stats { json: s });
+                }
+                Request::Metrics => {
+                    let text = self.shared.metrics_text();
+                    self.queue_to(slot, &Response::Metrics { text });
+                }
+                Request::Dump => {
+                    self.queue_to(slot, &Response::Dump { json: recorder::dump_json() });
                 }
                 Request::Shutdown => {
                     self.queue_to(slot, &Response::Bye);
@@ -869,8 +1069,16 @@ impl ShardCtx {
                         msg: "empty BATCH (want `BATCH q1 ; q2 ; …`)".to_string(),
                     },
                 ),
-                Request::Count(q) => self.dispatch(slot, vec![q]),
-                Request::Batch(qs) => self.dispatch(slot, qs),
+                Request::Explain(q) if q.is_empty() => self.queue_to(
+                    slot,
+                    &Response::Error {
+                        query: String::new(),
+                        msg: "EXPLAIN wants a query (`EXPLAIN <query>`)".to_string(),
+                    },
+                ),
+                Request::Count(q) => self.dispatch(slot, vec![q], false, parse_us),
+                Request::Explain(q) => self.dispatch(slot, vec![q], true, parse_us),
+                Request::Batch(qs) => self.dispatch(slot, qs, false, parse_us),
             }
         }
     }
@@ -883,16 +1091,27 @@ impl ShardCtx {
     }
 
     /// Hand one request (1 query, or a BATCH's k members) to the pool.
-    fn dispatch(&mut self, slot: usize, qs: Vec<String>) {
+    fn dispatch(&mut self, slot: usize, qs: Vec<String>, explain: bool, parse_us: u64) {
         let k = qs.len();
         let conn_id = match self.conns.get(slot) {
             Some(Some(c)) => c.id,
             _ => return,
         };
+        let enqueued = Instant::now();
         let jobs: Vec<Job> = qs
             .into_iter()
             .enumerate()
-            .map(|(member, query)| Job { shard: self.idx, slot, conn_id, member, batch: k, query })
+            .map(|(member, query)| Job {
+                shard: self.idx,
+                slot,
+                conn_id,
+                member,
+                batch: k,
+                query,
+                explain,
+                enqueued,
+                parse_us,
+            })
             .collect();
         if self.shared.exec.try_submit(jobs) {
             if let Some(Some(conn)) = self.conns.get_mut(slot) {

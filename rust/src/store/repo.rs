@@ -26,6 +26,7 @@
 use crate::anyhow;
 use crate::bail;
 use crate::ct::CtTable;
+use crate::obs::trace;
 use crate::mobius::{CtSink, MjResult};
 use crate::schema::{FoVarId, RelId, Schema, VarId};
 use crate::util::error::{Context, Result};
@@ -431,12 +432,14 @@ impl CtStore {
             if let Some(e) = g.cache.get_mut(key) {
                 e.last_used = tick;
                 g.stats.hits += 1;
+                trace::event("table.cache_hit", || key.to_string());
                 return Ok(Arc::clone(&e.table));
             }
             if !g.tables.contains_key(key) {
                 bail!("store has no table `{key}` (dataset {})", self.dataset);
             }
         }
+        let _sp = trace::span_detailed("table.load", || key.to_string());
         let path = self.dir.join(format!("{key}.ct"));
         let mut bytes =
             std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;

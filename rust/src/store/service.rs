@@ -43,6 +43,7 @@
 
 use crate::bail;
 use crate::ct::{AdTree, AdTreeConfig};
+use crate::obs::trace;
 use crate::schema::{Attribute, FoVarId, RandomVar, RelId, Schema, VarId, NA};
 use crate::util::error::{Context, Result};
 use crate::util::fxhash::FxHashMap;
@@ -232,7 +233,11 @@ impl CountServer {
 
     /// Count of a conjunctive query over the full database scope.
     pub fn count(&self, conds: &[(VarId, u16)]) -> Result<u128> {
-        let Some(conds) = normalize(&self.schema, conds) else { return Ok(0) };
+        let norm = {
+            let _sp = trace::span("plan.normalize");
+            normalize(&self.schema, conds)
+        };
+        let Some(conds) = norm else { return Ok(0) };
         let insts = self.insts(&conds)?;
         let fo_q = self.fo_set(&conds);
         let mut out = insts;
@@ -246,7 +251,11 @@ impl CountServer {
 
     /// Parse-and-count convenience for the CLI / serve loop.
     pub fn count_query(&self, query: &str) -> Result<u128> {
-        self.count(&parse_query(&self.schema, query)?)
+        let conds = {
+            let _sp = trace::span("plan.parse");
+            parse_query(&self.schema, query)?
+        };
+        self.count(&conds)
     }
 
     /// FO variables a set of conditions ranges over.
@@ -261,6 +270,7 @@ impl CountServer {
             return Ok(1);
         }
         let groups = split_groups(&self.schema, conds);
+        trace::event("plan.fo_groups", || format!("groups={}", groups.len()));
         if groups.len() > 1 {
             let mut out = 1u128;
             for g in &groups {
@@ -362,6 +372,8 @@ impl CountServer {
 
         // 3. Möbius subtraction: peel one negative indicator (Equation 1).
         let (peel_var, _) = conds[negs[0]];
+        let _sp =
+            trace::span_detailed("mobius.subtract", || self.schema.var_name(peel_var).to_string());
         let rest: Vec<(VarId, u16)> =
             conds.iter().copied().filter(|&(v, _)| v != peel_var).collect();
         // count(rest) at the scope of the full group: unconstrained FO
@@ -423,6 +435,7 @@ impl CountServer {
     /// `u64`; beyond that (huge population products) the lookup routes
     /// through exact `u128` selection instead of silently wrapping.
     fn table_count(&self, meta: &TableMeta, conds: &[(VarId, u16)]) -> Result<u128> {
+        let _sp = trace::span_detailed("table.count", || meta.key.clone());
         if meta.total > u64::MAX as u128 {
             let ct = self.store.get(&meta.key)?;
             return Ok(ct.select(conds).total());
@@ -463,12 +476,14 @@ impl CountServer {
             match probe {
                 Probe::Ready(tree) => {
                     g.hits += 1;
+                    trace::event("adtree.hit", || key.to_string());
                     return Ok(tree);
                 }
                 Probe::Building => {
                     if !waited {
                         g.coalesced_waits += 1;
                         waited = true;
+                        trace::event("adtree.coalesced_wait", || key.to_string());
                     }
                     g = self.trees.cv.wait(g).unwrap();
                 }

@@ -26,10 +26,12 @@ use std::time::Duration;
 
 static FP_LOCK: Mutex<()> = Mutex::new(());
 
-/// Serialize scenarios and start each from a disarmed registry.
+/// Serialize scenarios and start each from a disarmed registry — and an
+/// empty flight recorder, which is process-global for the same reason.
 fn fp_guard() -> MutexGuard<'static, ()> {
     let g = FP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     failpoint::disarm_all();
+    mrss::obs::recorder::reset();
     g
 }
 
@@ -118,6 +120,38 @@ fn worker_panic_is_isolated_and_the_server_keeps_serving() {
     let snap = handle.wait();
     assert_eq!(snap.active, 0, "a connection was stranded: {snap:?}");
     assert_eq!(snap.worker_panics, 2);
+    failpoint::disarm_all();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flight_recorder_captures_the_panicking_query_even_unsampled() {
+    let _g = fp_guard();
+    let dir = tmpdir("fr_panic");
+    let baseline = build_store(&dir, 1, 66);
+    failpoint::arm("worker.exec.panic=hit:1").unwrap();
+    // Default config: trace_sample is 0, so nothing about this request
+    // is sampled — the abnormal outcome alone must put it on record.
+    let handle = start_server(&dir, ServeConfig::default());
+
+    let (mut w, mut r) = connect(handle.addr());
+    let q = &baseline[0].0;
+    let resp = roundtrip_on(&mut w, &mut r, q);
+    assert!(resp.contains("worker panicked"), "{resp}");
+
+    let dump = roundtrip_on(&mut w, &mut r, "DUMP");
+    assert!(dump.contains(&format!("\"query\":\"{q}\"")), "{dump}");
+    assert!(dump.contains("\"outcome\":\"panic\""), "{dump}");
+
+    // The follow-up healthy query stays off the record.
+    let resp = roundtrip_on(&mut w, &mut r, q);
+    assert!(parse_count_response(&resp).is_ok(), "{resp}");
+    let dump = roundtrip_on(&mut w, &mut r, "DUMP");
+    assert!(dump.contains("\"recorded\":1,"), "{dump}");
+
+    drop((w, r));
+    handle.request_shutdown();
+    handle.wait();
     failpoint::disarm_all();
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -244,6 +278,20 @@ fn injected_slow_worker_trips_the_request_deadline_and_stats_show_it() {
         assert!(json_field(&stats, key).is_some(), "STATS missing {key}: {stats}");
     }
     assert_eq!(json_field(&stats, "request_timeouts").as_deref(), Some("1"), "{stats}");
+
+    // The blown deadline is only classified when the stalled worker
+    // finally finishes, ~250 ms after the reactor already answered —
+    // poll DUMP until the flight recorder shows it.
+    let mut dump = String::new();
+    for _ in 0..100 {
+        dump = roundtrip_on(&mut w, &mut r, "DUMP");
+        if dump.contains("\"outcome\":\"deadline_exceeded\"") {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(dump.contains("\"outcome\":\"deadline_exceeded\""), "{dump}");
+    assert!(dump.contains(&format!("\"query\":\"{}\"", baseline[0].0)), "{dump}");
 
     drop((w, r));
     handle.request_shutdown();

@@ -1,0 +1,227 @@
+//! Observability over the wire: `EXPLAIN` span trees (Möbius subtraction
+//! visible on a positives-only store), `METRICS` through the Prometheus
+//! validator, `DUMP` flight-recorder contents, and the sampled access
+//! log — all exercised against a live TCP server.
+//!
+//! These tests live in their own binary and serialize on a lock: the
+//! flight recorder is process-global, and the dump assertions need to
+//! know whose traces are in it.
+
+use mrss::datagen;
+use mrss::mobius::MobiusJoin;
+use mrss::obs;
+use mrss::schema::{RandomVar, Schema};
+use mrss::serve::{serve, ServeConfig, ServeHandle};
+use mrss::store::{CountServer, CtStore, PersistConfig, StoreSink};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+static SEQ: Mutex<()> = Mutex::new(());
+
+fn seq() -> MutexGuard<'static, ()> {
+    let g = SEQ.lock().unwrap_or_else(|e| e.into_inner());
+    obs::recorder::reset();
+    g
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mrss_obs_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn build_store(tag: &str, cfg: PersistConfig) -> (PathBuf, Schema) {
+    let dir = tmpdir(tag);
+    let db = datagen::generate("uwcse", 0.1, 7).unwrap();
+    let store = CtStore::create(&dir, "uwcse", 0.1, 7).unwrap();
+    {
+        let sink = StoreSink::new(&store, &db.schema, cfg);
+        MobiusJoin::new(&db).sink(&sink).run();
+        sink.take_error().unwrap();
+    }
+    (dir, (*db.schema).clone())
+}
+
+fn start(dir: &Path, cfg: ServeConfig) -> ServeHandle {
+    let count = Arc::new(CountServer::open(dir).unwrap());
+    serve(count, cfg).unwrap()
+}
+
+struct Client {
+    w: BufWriter<TcpStream>,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        Client { w: BufWriter::new(s.try_clone().unwrap()), r: BufReader::new(s) }
+    }
+
+    fn send(&mut self, line: &str) -> String {
+        writeln!(self.w, "{line}").unwrap();
+        self.w.flush().unwrap();
+        let mut out = String::new();
+        self.r.read_line(&mut out).unwrap();
+        out.trim_end().to_string()
+    }
+
+    /// `METRICS` is the protocol's one multi-line response: read until
+    /// the `# EOF` terminator, keeping it (the validator skips comments).
+    fn scrape(&mut self) -> String {
+        writeln!(self.w, "METRICS").unwrap();
+        self.w.flush().unwrap();
+        let mut doc = String::new();
+        loop {
+            let mut l = String::new();
+            assert_ne!(self.r.read_line(&mut l).unwrap(), 0, "EOF before `# EOF`:\n{doc}");
+            let done = l.trim_end() == "# EOF";
+            doc.push_str(&l);
+            if done {
+                return doc;
+            }
+        }
+    }
+}
+
+/// A query with a negative relationship condition — the shape that can
+/// only be answered by Möbius subtraction when no indicator-bearing
+/// table exists.
+fn negative_query(schema: &Schema) -> String {
+    let v = (0..schema.random_vars.len())
+        .find(|&v| matches!(schema.random_vars[v], RandomVar::RelInd { .. }))
+        .expect("uwcse has relationship variables");
+    format!("{}=F", schema.var_name(v))
+}
+
+#[test]
+fn explain_on_a_negative_query_names_the_mobius_subtraction_span() {
+    let _g = seq();
+    // Positives-only store: no chain/joint tables, so the negative
+    // condition forces the Möbius peel — and the trace must say so.
+    let (dir, schema) = build_store("explain", PersistConfig::positives_only());
+    let handle = start(&dir, ServeConfig::default());
+    let mut c = Client::connect(handle.addr());
+    let q = negative_query(&schema);
+
+    let line = c.send(&format!("EXPLAIN {q}"));
+    assert!(line.starts_with("{\"query\":"), "{line}");
+    assert!(line.contains("\"count\":"), "{line}");
+    assert!(line.contains("\"trace\":{"), "{line}");
+    assert!(line.contains("\"outcome\":\"ok\""), "{line}");
+    for span in ["plan.parse", "plan.normalize", "plan.fo_groups", "mobius.subtract", "table.count"]
+    {
+        assert!(line.contains(&format!("\"name\":\"{span}\"")), "missing span {span}: {line}");
+    }
+
+    // EXPLAIN of a broken query still answers, with the error inline.
+    let line = c.send("EXPLAIN nope(X)=1");
+    assert!(line.contains("\"error\":"), "{line}");
+    assert!(line.contains("\"outcome\":\"error\""), "{line}");
+
+    // A plain COUNT of the same query is unaffected by EXPLAIN traffic.
+    let line = c.send(&q);
+    assert!(line.contains("\"count\":"), "{line}");
+
+    handle.request_shutdown();
+    handle.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn metrics_scrape_passes_the_validator() {
+    let _g = seq();
+    let (dir, schema) = build_store("metrics", PersistConfig::default());
+    let handle = start(&dir, ServeConfig::default());
+    let mut c = Client::connect(handle.addr());
+    // Some traffic first so the counters and histograms are non-trivial.
+    for q in mrss::store::gen_queries(&schema, 5, 42) {
+        c.send(&q);
+    }
+    let doc = c.scrape();
+    obs::prom::validate(&doc).unwrap_or_else(|e| panic!("{e}\n---\n{doc}"));
+    for family in [
+        "mrss_queries_total",
+        "mrss_exec_latency_us_bucket",
+        "mrss_queue_wait_us_count",
+        "mrss_store_hits_total",
+        "mrss_adtree_builds_total",
+        "mrss_mj_ct_ops_total{op=\"subtract\"}",
+        "mrss_traces_started_total",
+    ] {
+        assert!(doc.contains(family), "missing {family} in\n{doc}");
+    }
+    assert!(doc.ends_with("# EOF\n"), "unterminated scrape");
+    assert!(doc.contains("mrss_queries_total 5"), "{doc}");
+    handle.request_shutdown();
+    handle.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sampled_requests_land_in_dump_access_log_and_queue_stats() {
+    let _g = seq();
+    let (dir, schema) = build_store("dump", PersistConfig::default());
+    let log_path = dir.join("access.log");
+    let cfg = ServeConfig {
+        trace_sample: 1,
+        access_log: Some(log_path.to_string_lossy().into_owned()),
+        ..Default::default()
+    };
+    let handle = start(&dir, cfg);
+    let mut c = Client::connect(handle.addr());
+
+    let q = negative_query(&schema);
+    assert!(c.send(&q).contains("\"count\":"));
+    assert!(c.send("nope(X)=1").contains("\"error\":"));
+
+    // Both requests were sampled (1/1): the flight recorder holds full
+    // traces for them, queryable over the wire.
+    let dump = c.send("DUMP");
+    assert!(dump.starts_with("{\"recorded\":"), "{dump}");
+    assert!(dump.contains(&format!("\"query\":\"{q}\"")), "{dump}");
+    assert!(dump.contains("\"query\":\"nope(X)=1\""), "{dump}");
+    assert!(dump.contains("\"outcome\":\"error\""), "{dump}");
+    assert!(dump.contains("\"name\":\"parse\""), "{dump}");
+    assert!(dump.contains("\"name\":\"render\""), "{dump}");
+    assert!(dump.contains("\"slowest\":["), "{dump}");
+
+    // STATS splits queue wait from exec latency.
+    let stats = c.send("STATS");
+    assert!(stats.contains("\"queue\":{\"p50_us\":"), "{stats}");
+    assert!(stats.contains("\"dataset\":\"uwcse\""), "{stats}");
+
+    // The access log has one wide-event line per sampled request.
+    let log = std::fs::read_to_string(&log_path).unwrap();
+    let lines: Vec<&str> = log.lines().collect();
+    assert_eq!(lines.len(), 2, "{log}");
+    assert!(lines[0].contains(&format!("\"query\":\"{q}\"")), "{log}");
+    assert!(lines[0].contains("\"outcome\":\"ok\""), "{log}");
+    assert!(lines[1].contains("\"outcome\":\"error\""), "{log}");
+    for key in ["\"conn\":", "\"queue_us\":", "\"exec_us\":", "\"bytes\":", "\"batch\":1"] {
+        assert!(lines[0].contains(key), "missing {key}: {log}");
+    }
+
+    handle.request_shutdown();
+    handle.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn untraced_server_answers_dump_with_an_empty_recorder() {
+    let _g = seq();
+    let (dir, _schema) = build_store("cold", PersistConfig::default());
+    let handle = start(&dir, ServeConfig::default());
+    let mut c = Client::connect(handle.addr());
+    // trace_sample = 0 and no EXPLAIN: healthy requests leave no trace.
+    assert!(c.send("position(P1)=faculty").contains("\"count\":"));
+    let dump = c.send("DUMP");
+    assert_eq!(dump, "{\"recorded\":0,\"last\":[],\"slowest\":[]}");
+    handle.request_shutdown();
+    handle.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
