@@ -99,6 +99,13 @@ pub struct Config {
     /// `validate-metrics --file FILE`: Prometheus exposition document to
     /// check (stdin when omitted).
     pub file: Option<String>,
+    /// `validate-metrics --prev FILE`: an earlier scrape of the same
+    /// server; counters in it must be ≤ their values in `--file`
+    /// (monotonicity — catches silent counter resets between scrapes).
+    pub prev: Option<String>,
+    /// `ct`/`suite --progress`: print live per-level Möbius build
+    /// progress lines to stderr.
+    pub progress: bool,
     /// `serve --wire text|json`: response rendering (JSON is the default).
     pub wire_text: bool,
     /// `bench-serve --bench-json FILE`: where the perf report lands.
@@ -149,6 +156,8 @@ impl Default for Config {
             trace_sample: 0,
             access_log: None,
             file: None,
+            prev: None,
+            progress: false,
             wire_text: false,
             bench_json: None,
             send_shutdown: false,
@@ -246,6 +255,8 @@ impl Config {
                     }
                     "access-log" => cfg.access_log = Some(take(&mut it)?),
                     "file" => cfg.file = Some(take(&mut it)?),
+                    "prev" => cfg.prev = Some(take(&mut it)?),
+                    "progress" => cfg.progress = true,
                     "wire" => {
                         cfg.wire_text = match take(&mut it)?.as_str() {
                             "text" => true,
@@ -444,9 +455,18 @@ mod tests {
         assert_eq!(t.access_log.as_deref(), Some("/tmp/access.log"));
         let t = Config::from_args(&args("serve --trace-sample 4")).unwrap();
         assert_eq!(t.trace_sample, 4);
-        let v = Config::from_args(&args("validate-metrics --file /tmp/m.prom")).unwrap();
+        let v = Config::from_args(&args(
+            "validate-metrics --file /tmp/m.prom --prev /tmp/m0.prom",
+        ))
+        .unwrap();
         assert_eq!(v.command, "validate-metrics");
         assert_eq!(v.file.as_deref(), Some("/tmp/m.prom"));
+        assert_eq!(v.prev.as_deref(), Some("/tmp/m0.prom"));
+        // --progress is a bare boolean flag: it must not eat a value.
+        let p = Config::from_args(&args("suite --progress --workers 3")).unwrap();
+        assert!(p.progress);
+        assert_eq!(p.workers, 3);
+        assert!(!Config::from_args(&args("ct")).unwrap().progress);
         // An access log without sampling would silently log nothing.
         assert!(Config::from_args(&args("serve --access-log /tmp/a.log")).is_err());
         assert!(Config::from_args(&args("serve --trace-sample nope")).is_err());

@@ -41,6 +41,8 @@ pub struct SuiteJob {
     /// Persist every computed table to `<store_dir>/<dataset>` and verify
     /// the stored joint by reading it back (`None` = no persistence).
     pub store_dir: Option<String>,
+    /// Stream per-level Möbius-build progress lines to stderr.
+    pub progress: bool,
 }
 
 impl SuiteJob {
@@ -54,6 +56,7 @@ impl SuiteJob {
             max_chain_len: None,
             mj_workers: 1,
             store_dir: None,
+            progress: false,
         }
     }
 
@@ -71,6 +74,12 @@ impl SuiteJob {
     /// Persist this job's tables under `dir/<dataset>`.
     pub fn with_store(mut self, dir: &str) -> Self {
         self.store_dir = Some(dir.to_string());
+        self
+    }
+
+    /// Stream per-level build-progress lines while the join runs.
+    pub fn with_progress(mut self, on: bool) -> Self {
+        self.progress = on;
         self
     }
 }
@@ -114,7 +123,7 @@ pub fn run_job(job: &SuiteJob) -> Result<SuiteReport> {
     };
     let sink = store.as_ref().map(|s| StoreSink::new(s, &db.schema, PersistConfig::default()));
 
-    let mut mj = MobiusJoin::new(&db).workers(job.mj_workers);
+    let mut mj = MobiusJoin::new(&db).workers(job.mj_workers).progress(job.progress);
     if let Some(l) = job.max_chain_len {
         mj = mj.max_chain_len(l);
     }

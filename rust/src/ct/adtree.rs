@@ -15,7 +15,7 @@
 //! prefixes, falling back to scanning the rows of the sub-table.
 
 use super::CtTable;
-use crate::obs::trace;
+use crate::obs::{cost, trace};
 use crate::schema::VarId;
 
 /// Configuration for ADtree construction.
@@ -154,10 +154,20 @@ impl AdTree {
             })
             .collect();
         q.sort_unstable();
-        self.count_node(&self.root, 0, &q)
+        let mut probed = 0u64;
+        let total = self.count_node(&self.root, 0, &q, &mut probed);
+        cost::add_nodes_probed(probed);
+        total
     }
 
-    fn count_node(&self, node: &Node, depth: usize, query: &[(usize, u16)]) -> u64 {
+    fn count_node(
+        &self,
+        node: &Node,
+        depth: usize,
+        query: &[(usize, u16)],
+        probed: &mut u64,
+    ) -> u64 {
+        *probed += 1;
         match node {
             Node::Leaf { rows, counts, width } => {
                 let mut total = 0;
@@ -181,20 +191,20 @@ impl AdTree {
                     // MCV elision: count(mcv) = count(node) − Σ others,
                     // each conditioned on the rest of the query.
                     let rest = &query[1..];
-                    let all = self.count_node_skip(node, depth, col, rest);
+                    let all = self.count_node_skip(node, depth, col, rest, probed);
                     let mut others = 0;
                     for (s, child) in v.children.iter().enumerate() {
                         if s == v.mcv {
                             continue;
                         }
                         if let Some(ch) = child {
-                            others += self.count_node(ch, col + 1, rest);
+                            others += self.count_node(ch, col + 1, rest, probed);
                         }
                     }
                     all - others
                 } else {
                     match &v.children[slot] {
-                        Some(ch) => self.count_node(ch, col + 1, &query[1..]),
+                        Some(ch) => self.count_node(ch, col + 1, &query[1..], probed),
                         None => 0,
                     }
                 }
@@ -210,8 +220,9 @@ impl AdTree {
         depth: usize,
         _skip_col: usize,
         query: &[(usize, u16)],
+        probed: &mut u64,
     ) -> u64 {
-        self.count_node(node, depth, query)
+        self.count_node(node, depth, query, probed)
     }
 
     /// Number of tree nodes (the memory-efficiency metric vs ct rows).
@@ -344,6 +355,23 @@ mod tests {
             q.dedup_by_key(|p| p.0);
             assert_eq!(tree.count(&q), oracle(&ct, &q), "query {q:?}");
         }
+    }
+
+    #[test]
+    fn probe_charges_nodes_to_the_active_query_cost() {
+        let ct = random_ct(3, 200, &[3, 2, 4, 3]);
+        let tree = AdTree::build(&ct, AdTreeConfig::default());
+        cost::begin();
+        let n = tree.count(&[(0, 1), (2, 2)]);
+        assert_eq!(n, oracle(&ct, &[(0, 1), (2, 2)]));
+        let c = cost::take().expect("cost accounting was begun");
+        assert!(c.adtree_nodes_probed >= 1, "{c:?}");
+        // A broader probe (empty query hits only the root) charges less.
+        cost::begin();
+        tree.count(&[]);
+        let root_only = cost::take().unwrap();
+        assert_eq!(root_only.adtree_nodes_probed, 1);
+        assert!(c.adtree_nodes_probed >= root_only.adtree_nodes_probed);
     }
 
     #[test]

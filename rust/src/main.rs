@@ -69,15 +69,16 @@ fn print_help() {
          \x20 query  --store DIR --dataset D  answer count queries from a ct-store (JSON)\n\
          \x20 serve  --store DIR --dataset D  stdin/stdout count-query service\n\
          \x20 serve  --store DIR --listen A   concurrent TCP count server (PING/BATCH/STATS/\n\
-         \x20                                 SHUTDOWN wire protocol)\n\
+         \x20                                 TOP/HISTORY/SHUTDOWN wire protocol)\n\
          \x20 bench-serve --addr A|--store D  drive a count server with N concurrent clients,\n\
          \x20                                 emit BENCH_serve.json\n\
          \x20 validate-metrics --file F       check a Prometheus scrape of METRICS (stdin\n\
-         \x20                                 without --file); exit 1 on format errors\n\
+         \x20                                 without --file); exit 1 on format errors;\n\
+         \x20                                 --prev EARLIER asserts counter monotonicity\n\
          \x20 mine   --dataset D --scale S    feature selection + association rules\n\
          \x20 bn     --dataset D --scale S    Bayesian-network learning, link on vs off\n\n\
          common flags: --seed N --engine native|xla --excerpt N --max-chain-len L\n\
-         \x20             --cp-budget-secs N --config FILE --store DIR\n\
+         \x20             --cp-budget-secs N --config FILE --store DIR --progress\n\
          query flags:  --queries FILE --query STR --json FILE --gen N --fresh\n\
          \x20             --mem-budget BYTES\n\
          serve flags:  --listen HOST:PORT --threads N --shards N --max-conns N\n\
@@ -164,7 +165,8 @@ fn cmd_ct(cfg: &Config) -> Result<()> {
     let res = match &rt {
         Some(rt) => {
             let engine = XlaEngine::new(rt);
-            let mut mj = MobiusJoin::with_engine(&db, &engine).workers(cfg.workers);
+            let mut mj =
+                MobiusJoin::with_engine(&db, &engine).workers(cfg.workers).progress(cfg.progress);
             if let Some(l) = cfg.max_chain_len {
                 mj = mj.max_chain_len(l);
             }
@@ -174,7 +176,7 @@ fn cmd_ct(cfg: &Config) -> Result<()> {
             mj.run()
         }
         None => {
-            let mut mj = MobiusJoin::new(&db).workers(cfg.workers);
+            let mut mj = MobiusJoin::new(&db).workers(cfg.workers).progress(cfg.progress);
             if let Some(l) = cfg.max_chain_len {
                 mj = mj.max_chain_len(l);
             }
@@ -245,7 +247,7 @@ fn cmd_suite(cfg: &Config) -> Result<()> {
     let jobs: Vec<SuiteJob> = datagen::BENCHMARKS
         .iter()
         .map(|b| {
-            let mut job = SuiteJob::new(b.name, cfg.scale, cfg.seed);
+            let mut job = SuiteJob::new(b.name, cfg.scale, cfg.seed).with_progress(cfg.progress);
             if let Some(dir) = &cfg.store {
                 job = job.with_store(dir);
             }
@@ -444,6 +446,17 @@ fn cmd_validate_metrics(cfg: &Config) -> Result<()> {
         .filter(|l| !l.trim().is_empty() && !l.starts_with('#'))
         .count();
     eprintln!("{source}: valid exposition ({samples} samples)");
+    // --prev EARLIER_SCRAPE: additionally require every counter series in
+    // the earlier scrape to be present and non-decreasing in this one —
+    // the monotonicity contract a restarting or double-registering server
+    // would silently break.
+    if let Some(p) = &cfg.prev {
+        let prev = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+        mrss::obs::prom::validate(&prev).map_err(|e| anyhow!("{p}: {e}"))?;
+        mrss::obs::prom::validate_monotonic(&prev, &text)
+            .map_err(|e| anyhow!("{p} -> {source}: {e}"))?;
+        eprintln!("{p} -> {source}: counters monotone");
+    }
     Ok(())
 }
 

@@ -58,6 +58,11 @@ pub trait CtSink: Sync {
     /// A chain's complete table (indicators + n/a rows) is final.
     fn on_chain(&self, _chain: &[RelId], _ct: &CtTable) {}
 
+    /// A whole lattice level finished: its aggregated build telemetry is
+    /// final (chains, rows, bytes, wall time). Fires from the driving
+    /// thread after every level, before the next level starts.
+    fn on_level(&self, _stats: &super::metrics::LevelStats) {}
+
     /// The joint table over the whole database is final.
     fn on_joint(&self, _ct: &CtTable) {}
 }

@@ -45,6 +45,25 @@ impl CtOp {
     }
 }
 
+/// One lattice level's build telemetry: how many chains it held and what
+/// they emitted. Pushed by [`MobiusJoin::run`](crate::mobius::MobiusJoin)
+/// after each level completes (always — `--progress` only controls the
+/// live stderr lines, not this record).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LevelStats {
+    /// Lattice level (chain length), 1-based.
+    pub level: usize,
+    /// Chains completed at this level.
+    pub chains: u64,
+    /// Total rows across the level's finished tables.
+    pub rows: u64,
+    /// Total `mem_bytes` across the level's finished tables.
+    pub bytes: u64,
+    /// Wall time from the level's first chain starting to its last
+    /// finishing.
+    pub elapsed: Duration,
+}
+
 /// Möbius Join run metrics.
 ///
 /// With `MobiusJoin::workers(n > 1)`, per-phase durations (`positive`,
@@ -87,6 +106,9 @@ pub struct MjMetrics {
     pub adtree_coalesced: u64,
     /// ADtrees evicted under the shared `mem_bytes` budget.
     pub adtree_evictions: u64,
+    /// Per-lattice-level build telemetry, in level order. Empty for
+    /// assembled (not run) results and for serving-only records.
+    pub levels: Vec<LevelStats>,
     counts: [u64; 6],
     times: [Duration; 6],
 }
@@ -134,6 +156,7 @@ impl MjMetrics {
         self.adtree_builds += other.adtree_builds;
         self.adtree_coalesced += other.adtree_coalesced;
         self.adtree_evictions += other.adtree_evictions;
+        self.levels.extend(other.levels.iter().copied());
         for i in 0..6 {
             self.counts[i] += other.counts[i];
             self.times[i] += other.times[i];
@@ -176,6 +199,16 @@ impl MjMetrics {
             "  adtree cache: {} builds / {} coalesced waits / {} evictions\n",
             self.adtree_builds, self.adtree_coalesced, self.adtree_evictions
         ));
+        for l in &self.levels {
+            s.push_str(&format!(
+                "  level {:<2} {} chains  {} rows  {} bytes  {}\n",
+                l.level,
+                l.chains,
+                l.rows,
+                l.bytes,
+                fd(l.elapsed)
+            ));
+        }
         s
     }
 }
@@ -217,6 +250,7 @@ mod tests {
         b.adtree_builds = 2;
         b.adtree_coalesced = 6;
         b.adtree_evictions = 1;
+        b.levels.push(LevelStats { level: 1, chains: 3, rows: 40, bytes: 512, elapsed: Duration::ZERO });
         a.merge(&b);
         assert_eq!(a.op_count(CtOp::Union), 2);
         assert_eq!(a.total, Duration::from_secs(1));
@@ -225,6 +259,30 @@ mod tests {
             (a.adtree_builds, a.adtree_coalesced, a.adtree_evictions),
             (2, 6, 1)
         );
+        assert_eq!(a.levels.len(), 1);
+        assert_eq!(a.levels[0].rows, 40);
+    }
+
+    #[test]
+    fn breakdown_renders_one_line_per_level() {
+        let mut m = MjMetrics::default();
+        m.levels.push(LevelStats {
+            level: 1,
+            chains: 3,
+            rows: 120,
+            bytes: 4096,
+            elapsed: Duration::from_millis(2),
+        });
+        m.levels.push(LevelStats {
+            level: 2,
+            chains: 2,
+            rows: 90,
+            bytes: 2048,
+            elapsed: Duration::from_millis(1),
+        });
+        let s = m.breakdown();
+        assert!(s.contains("level 1  3 chains  120 rows  4096 bytes"), "{s}");
+        assert!(s.contains("level 2  2 chains  90 rows  2048 bytes"), "{s}");
     }
 
     #[test]

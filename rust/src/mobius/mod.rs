@@ -40,7 +40,7 @@ pub mod postcount;
 
 pub use engine::{CtEngine, CtSink, NativeEngine};
 pub use postcount::PostCounter;
-pub use metrics::{CtOp, MjMetrics};
+pub use metrics::{CtOp, LevelStats, MjMetrics};
 
 use crate::ct::CtTable;
 use crate::db::{Database, JoinCounter};
@@ -140,17 +140,25 @@ pub struct MobiusJoin<'a> {
     max_chain_len: Option<usize>,
     workers: usize,
     sink: Option<&'a dyn engine::CtSink>,
+    progress: bool,
 }
 
 impl<'a> MobiusJoin<'a> {
     /// Möbius Join with the native (pure-rust) engine.
     pub fn new(db: &'a Database) -> Self {
-        MobiusJoin { db, engine: &NativeEngine, max_chain_len: None, workers: 1, sink: None }
+        MobiusJoin {
+            db,
+            engine: &NativeEngine,
+            max_chain_len: None,
+            workers: 1,
+            sink: None,
+            progress: false,
+        }
     }
 
     /// Möbius Join with a custom execution engine.
     pub fn with_engine(db: &'a Database, engine: &'a dyn CtEngine) -> Self {
-        MobiusJoin { db, engine, max_chain_len: None, workers: 1, sink: None }
+        MobiusJoin { db, engine, max_chain_len: None, workers: 1, sink: None, progress: false }
     }
 
     /// Attach a write-on-complete sink: every finished table (entity,
@@ -173,6 +181,16 @@ impl<'a> MobiusJoin<'a> {
     /// (1 = serial, the default). Output is identical for any `n`.
     pub fn workers(mut self, n: usize) -> Self {
         self.workers = n.max(1);
+        self
+    }
+
+    /// Print live per-level build progress to stderr (`--progress`): one
+    /// line per finished chain with chains done/total, rows and bytes
+    /// emitted so far, elapsed time, and an ETA from completed-chain
+    /// throughput. Per-level totals land in [`MjMetrics::levels`] whether
+    /// or not this is on.
+    pub fn progress(mut self, on: bool) -> Self {
+        self.progress = on;
         self
     }
 
@@ -205,8 +223,35 @@ impl<'a> MobiusJoin<'a> {
         let mut tables: FxHashMap<Vec<RelId>, CtTable> = FxHashMap::default();
         for level in 1..=lattice.max_level() {
             let chains: Vec<Vec<RelId>> = lattice.level(level).cloned().collect();
+            let total_chains = chains.len();
+            let level_t0 = Instant::now();
+            // Done-counter + emitted totals, updated (and, with
+            // `--progress`, printed) under one lock so the progress lines
+            // are strictly monotone even when workers finish concurrently.
+            let done = Mutex::new((0usize, 0u64, 0u64)); // (chains, rows, bytes)
             let outs = parallel_map(self.workers, chains.len(), |i| {
-                self.run_chain(&chains[i], &tables, &entity_cts)
+                let out = self.run_chain(&chains[i], &tables, &entity_cts);
+                let mut d = done.lock().unwrap();
+                d.0 += 1;
+                d.1 += out.table.len() as u64;
+                d.2 += out.table.mem_bytes() as u64;
+                if self.progress {
+                    let elapsed = level_t0.elapsed();
+                    // ETA from completed-chain throughput; chains within a
+                    // level vary in size, so this is a guide, not a bound.
+                    let eta = elapsed.mul_f64((total_chains - d.0) as f64 / d.0 as f64);
+                    eprintln!(
+                        "[mobius] level {level}: {}/{total_chains} chains  rows {}  bytes {}  \
+                         elapsed {}  eta {}",
+                        d.0,
+                        d.1,
+                        d.2,
+                        crate::util::format_duration(elapsed),
+                        crate::util::format_duration(eta),
+                    );
+                }
+                drop(d);
+                out
             });
             for (chain, out) in chains.into_iter().zip(outs) {
                 metrics.merge(&out.metrics);
@@ -215,6 +260,18 @@ impl<'a> MobiusJoin<'a> {
                 }
                 tables.insert(chain, out.table);
             }
+            let (chains_done, rows, bytes) = done.into_inner().unwrap();
+            let stats = metrics::LevelStats {
+                level,
+                chains: chains_done as u64,
+                rows,
+                bytes,
+                elapsed: level_t0.elapsed(),
+            };
+            if let Some(s) = self.sink {
+                s.on_level(&stats);
+            }
+            metrics.levels.push(stats);
         }
 
         // --- Joint table for the entire database (line 24), factorizing

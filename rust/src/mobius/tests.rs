@@ -28,6 +28,29 @@ fn university_joint_matches_cross_product() {
 }
 
 #[test]
+fn level_stats_cover_the_lattice_and_match_the_tables() {
+    let db = university_db();
+    let res = MobiusJoin::new(&db).run();
+    let levels = &res.metrics.levels;
+    assert_eq!(levels.len(), res.lattice.max_level(), "one record per lattice level");
+    for (i, l) in levels.iter().enumerate() {
+        assert_eq!(l.level, i + 1, "levels recorded in lattice order");
+        let chains: Vec<_> = res.lattice.level(l.level).cloned().collect();
+        assert_eq!(l.chains as usize, chains.len());
+        let rows: u64 = chains.iter().map(|c| res.tables[c].len() as u64).sum();
+        let bytes: u64 = chains.iter().map(|c| res.tables[c].mem_bytes() as u64).sum();
+        assert_eq!(l.rows, rows, "level {} row total", l.level);
+        assert_eq!(l.bytes, bytes, "level {} byte total", l.level);
+    }
+    // Parallel runs record the same telemetry (ordering is deterministic).
+    let par = MobiusJoin::new(&db).workers(4).run();
+    assert_eq!(par.metrics.levels.len(), levels.len());
+    for (a, b) in par.metrics.levels.iter().zip(levels) {
+        assert_eq!((a.level, a.chains, a.rows, a.bytes), (b.level, b.chains, b.rows, b.bytes));
+    }
+}
+
+#[test]
 fn university_link_off_matches_positive_join() {
     let db = university_db();
     let res = MobiusJoin::new(&db).run();

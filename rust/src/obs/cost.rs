@@ -1,0 +1,297 @@
+//! Per-query resource accounting.
+//!
+//! A [`QueryCost`] is accumulated in a thread-local cell while a worker
+//! executes one count query: the planner, the store, and the ADtree
+//! kernels call the `add_*` taps as they do work, and the worker collects
+//! the struct with [`take`] when the query finishes. The same numbers are
+//! then (a) attached to the query's trace — so `EXPLAIN` and the flight
+//! recorder show *why* a query was slow, not just that it was — and
+//! (b) charged into process-global totals (relaxed atomics) that feed the
+//! `METRICS` cost counters, the `HISTORY` ring's cost series, and the
+//! heavy-hitter sketch's cost ranking.
+//!
+//! The taps mirror the discipline of [`crate::obs::trace`]: a site whose
+//! thread has no active accumulator pays one thread-local read and
+//! nothing else, so instrumentation never shows up in the entity/chain
+//! build paths (which run outside a query context).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Resource usage of one count query, broken down by where the work went.
+///
+/// All fields are plain counters; `Copy` so the thread-local cell stays a
+/// `Cell` (no `RefCell` borrow bookkeeping on the hot path).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueryCost {
+    /// ADtrees built (table decoded from the store, tree constructed).
+    pub tables_loaded: u64,
+    /// ADtree cache hits (including coalesced waits on another thread's
+    /// in-flight build — the work was done once, elsewhere).
+    pub tables_cached: u64,
+    /// Bytes decoded or walked to answer the query: freshly-built tree
+    /// heap bytes plus oversized-table ct scans.
+    pub bytes_scanned: u64,
+    /// ADtree nodes visited by `count()` probes (incl. MCV-elision
+    /// re-walks).
+    pub adtree_nodes_probed: u64,
+    /// Möbius subtraction peels: one per negative relationship indicator
+    /// derived as `count(Q) − count(Q ∧ R=T)`.
+    pub subtract_depth: u64,
+    /// Rows merged/scanned outside the ADtree (oversized-table `select`
+    /// path).
+    pub rows_merged: u64,
+    /// Independent FO-groups the planner factored the query into.
+    pub fo_groups: u64,
+}
+
+impl QueryCost {
+    /// Fold another cost into this one (used by tests and the totals
+    /// snapshot).
+    pub fn merge(&mut self, o: &QueryCost) {
+        self.tables_loaded += o.tables_loaded;
+        self.tables_cached += o.tables_cached;
+        self.bytes_scanned += o.bytes_scanned;
+        self.adtree_nodes_probed += o.adtree_nodes_probed;
+        self.subtract_depth += o.subtract_depth;
+        self.rows_merged += o.rows_merged;
+        self.fo_groups += o.fo_groups;
+    }
+
+    /// Scalar "abstract cost units" for ranking query shapes against each
+    /// other: node probes and merged rows cost 1 each, scanned bytes cost
+    /// 1 per 64 B, a cold table load costs 256 (decode + build), a cache
+    /// hit 1, a Möbius peel 32 (it doubles the subquery tree), and an FO
+    /// group 4 (per-group planning overhead). The weights are heuristic
+    /// but fixed, so rankings are comparable across runs.
+    pub fn units(&self) -> u64 {
+        self.adtree_nodes_probed
+            + self.rows_merged
+            + self.bytes_scanned / 64
+            + self.tables_loaded * 256
+            + self.tables_cached
+            + self.subtract_depth * 32
+            + self.fo_groups * 4
+    }
+
+    /// Render as a JSON object (one line, fixed key order).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"tables_loaded\":{},\"tables_cached\":{},\"bytes_scanned\":{},\
+             \"adtree_nodes_probed\":{},\"subtract_depth\":{},\"rows_merged\":{},\
+             \"fo_groups\":{},\"units\":{}}}",
+            self.tables_loaded,
+            self.tables_cached,
+            self.bytes_scanned,
+            self.adtree_nodes_probed,
+            self.subtract_depth,
+            self.rows_merged,
+            self.fo_groups,
+            self.units()
+        )
+    }
+
+    /// Charge this query's cost into the process-global totals.
+    pub fn charge_totals(&self) {
+        TOTAL_TABLES_LOADED.fetch_add(self.tables_loaded, Ordering::Relaxed);
+        TOTAL_TABLES_CACHED.fetch_add(self.tables_cached, Ordering::Relaxed);
+        TOTAL_BYTES_SCANNED.fetch_add(self.bytes_scanned, Ordering::Relaxed);
+        TOTAL_NODES_PROBED.fetch_add(self.adtree_nodes_probed, Ordering::Relaxed);
+        TOTAL_SUBTRACT_DEPTH.fetch_add(self.subtract_depth, Ordering::Relaxed);
+        TOTAL_ROWS_MERGED.fetch_add(self.rows_merged, Ordering::Relaxed);
+        TOTAL_FO_GROUPS.fetch_add(self.fo_groups, Ordering::Relaxed);
+    }
+}
+
+// Process-global running totals across all queries (served and CLI).
+static TOTAL_TABLES_LOADED: AtomicU64 = AtomicU64::new(0);
+static TOTAL_TABLES_CACHED: AtomicU64 = AtomicU64::new(0);
+static TOTAL_BYTES_SCANNED: AtomicU64 = AtomicU64::new(0);
+static TOTAL_NODES_PROBED: AtomicU64 = AtomicU64::new(0);
+static TOTAL_SUBTRACT_DEPTH: AtomicU64 = AtomicU64::new(0);
+static TOTAL_ROWS_MERGED: AtomicU64 = AtomicU64::new(0);
+static TOTAL_FO_GROUPS: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the process-global cost totals.
+pub fn totals() -> QueryCost {
+    QueryCost {
+        tables_loaded: TOTAL_TABLES_LOADED.load(Ordering::Relaxed),
+        tables_cached: TOTAL_TABLES_CACHED.load(Ordering::Relaxed),
+        bytes_scanned: TOTAL_BYTES_SCANNED.load(Ordering::Relaxed),
+        adtree_nodes_probed: TOTAL_NODES_PROBED.load(Ordering::Relaxed),
+        subtract_depth: TOTAL_SUBTRACT_DEPTH.load(Ordering::Relaxed),
+        rows_merged: TOTAL_ROWS_MERGED.load(Ordering::Relaxed),
+        fo_groups: TOTAL_FO_GROUPS.load(Ordering::Relaxed),
+    }
+}
+
+thread_local! {
+    /// The accumulator for the query currently executing on this thread
+    /// (`None` outside a query context — taps are no-ops then).
+    static ACTIVE: Cell<Option<QueryCost>> = const { Cell::new(None) };
+}
+
+/// Install a fresh accumulator on this thread. Call before executing a
+/// query; pair with [`take`].
+pub fn begin() {
+    ACTIVE.with(|c| c.set(Some(QueryCost::default())));
+}
+
+/// Collect and clear this thread's accumulator. Returns `None` when
+/// [`begin`] was never called (or the cost was already taken) — callers
+/// that must always have a cost use `take().unwrap_or_default()`.
+pub fn take() -> Option<QueryCost> {
+    ACTIVE.with(|c| c.take())
+}
+
+/// Is an accumulator active on this thread? Lets expensive taps (e.g.
+/// exact byte walks) skip their argument computation when nobody is
+/// counting.
+pub fn active() -> bool {
+    ACTIVE.with(|c| {
+        let v = c.get();
+        let on = v.is_some();
+        c.set(v);
+        on
+    })
+}
+
+#[inline]
+fn bump(f: impl FnOnce(&mut QueryCost)) {
+    ACTIVE.with(|c| {
+        if let Some(mut q) = c.get() {
+            f(&mut q);
+            c.set(Some(q));
+        }
+    });
+}
+
+/// An ADtree was built from a stored table to answer this query.
+pub fn add_tables_loaded(n: u64) {
+    bump(|q| q.tables_loaded += n);
+}
+
+/// The query's table was already cached (or another thread built it).
+pub fn add_tables_cached(n: u64) {
+    bump(|q| q.tables_cached += n);
+}
+
+/// Bytes decoded or walked on behalf of this query.
+pub fn add_bytes_scanned(n: u64) {
+    bump(|q| q.bytes_scanned += n);
+}
+
+/// ADtree nodes visited by a count probe.
+pub fn add_nodes_probed(n: u64) {
+    bump(|q| q.adtree_nodes_probed += n);
+}
+
+/// One Möbius subtraction peel.
+pub fn add_subtract_depth(n: u64) {
+    bump(|q| q.subtract_depth += n);
+}
+
+/// Rows merged/scanned outside the ADtree.
+pub fn add_rows_merged(n: u64) {
+    bump(|q| q.rows_merged += n);
+}
+
+/// FO-groups the planner factored the query into.
+pub fn add_fo_groups(n: u64) {
+    bump(|q| q.fo_groups += n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn taps_are_noops_without_begin() {
+        assert!(take().is_none());
+        add_nodes_probed(5);
+        add_subtract_depth(1);
+        assert!(take().is_none(), "taps outside begin/take must not create a cost");
+    }
+
+    #[test]
+    fn begin_accumulate_take_roundtrip() {
+        begin();
+        assert!(active());
+        add_tables_loaded(1);
+        add_tables_cached(2);
+        add_bytes_scanned(4096);
+        add_nodes_probed(10);
+        add_subtract_depth(3);
+        add_rows_merged(7);
+        add_fo_groups(2);
+        let c = take().unwrap();
+        assert!(!active());
+        assert_eq!(c.tables_loaded, 1);
+        assert_eq!(c.tables_cached, 2);
+        assert_eq!(c.bytes_scanned, 4096);
+        assert_eq!(c.adtree_nodes_probed, 10);
+        assert_eq!(c.subtract_depth, 3);
+        assert_eq!(c.rows_merged, 7);
+        assert_eq!(c.fo_groups, 2);
+        // units: 10 + 7 + 64 + 256 + 2 + 96 + 8
+        assert_eq!(c.units(), 10 + 7 + 64 + 256 + 2 + 96 + 8);
+        assert!(take().is_none(), "take must clear");
+    }
+
+    #[test]
+    fn json_has_every_field_and_units() {
+        begin();
+        add_nodes_probed(1);
+        let j = take().unwrap().to_json();
+        for key in [
+            "\"tables_loaded\":0",
+            "\"tables_cached\":0",
+            "\"bytes_scanned\":0",
+            "\"adtree_nodes_probed\":1",
+            "\"subtract_depth\":0",
+            "\"rows_merged\":0",
+            "\"fo_groups\":0",
+            "\"units\":1",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+    }
+
+    #[test]
+    fn accumulators_are_thread_local() {
+        begin();
+        add_nodes_probed(1);
+        let h = std::thread::spawn(|| {
+            // Fresh thread: no accumulator until its own begin().
+            assert!(!active());
+            add_nodes_probed(100);
+            begin();
+            add_nodes_probed(5);
+            take().unwrap().adtree_nodes_probed
+        });
+        assert_eq!(h.join().unwrap(), 5);
+        assert_eq!(take().unwrap().adtree_nodes_probed, 1);
+    }
+
+    #[test]
+    fn totals_accumulate_across_charges() {
+        let before = totals();
+        let mut c = QueryCost::default();
+        c.tables_loaded = 2;
+        c.subtract_depth = 3;
+        c.charge_totals();
+        let after = totals();
+        assert_eq!(after.tables_loaded - before.tables_loaded, 2);
+        assert_eq!(after.subtract_depth - before.subtract_depth, 3);
+    }
+
+    #[test]
+    fn merge_adds_fieldwise() {
+        let mut a = QueryCost { tables_loaded: 1, rows_merged: 5, ..Default::default() };
+        let b = QueryCost { tables_loaded: 2, fo_groups: 1, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.tables_loaded, 3);
+        assert_eq!(a.rows_merged, 5);
+        assert_eq!(a.fo_groups, 1);
+    }
+}

@@ -1,0 +1,236 @@
+//! Per-second metrics history ring behind the `HISTORY` verb.
+//!
+//! Prometheus counters are point-in-time: without an external scraper
+//! there is no way to ask the server "what was qps thirty seconds ago?".
+//! This module keeps a fixed ring of per-second aggregation slots — each
+//! flushed by the shard-0 reactor tick — so rates, windowed latency
+//! quantiles, queue depth, cache hit rate, and cost throughput are
+//! observable from the wire alone (`HISTORY [secs]` returns the series as
+//! one JSON line).
+//!
+//! The ring is bounded at [`SLOTS`] entries (10 minutes at one slot per
+//! second); older slots are overwritten. Storage is `SLOTS × Slot`
+//! regardless of uptime. The server computes each slot's *deltas* from
+//! its cumulative counters at flush time; this module only stores and
+//! renders them.
+
+/// Ring capacity: 10 minutes of one-second slots.
+pub const SLOTS: usize = 600;
+
+/// One second of aggregated serving activity.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Slot {
+    /// Seconds since server start at the *end* of this slot's window.
+    pub epoch_s: u64,
+    /// Count queries answered in this second (admin verbs excluded).
+    pub queries: u64,
+    /// Error responses in this second.
+    pub errors: u64,
+    /// Admin verbs (STATS/METRICS/DUMP/TOP/HISTORY/EXPLAIN) in this second.
+    pub admin: u64,
+    /// Windowed exec-latency upper bounds over this second's requests, µs
+    /// (0 when the window had no requests).
+    pub p50_us: u64,
+    pub p99_us: u64,
+    /// Run-queue depth sampled at flush time.
+    pub queue_depth: u64,
+    /// ADtree cache hit rate ×100 (hits / (hits+builds)), cumulative at
+    /// flush time; 0 before any probe.
+    pub cache_hit_pct: u64,
+    /// Abstract cost units charged in this second (see
+    /// [`QueryCost::units`](crate::obs::cost::QueryCost::units)).
+    pub cost_units: u64,
+    /// Bytes scanned in this second.
+    pub bytes_scanned: u64,
+}
+
+impl Slot {
+    fn to_json(self) -> String {
+        format!(
+            "{{\"t\":{},\"queries\":{},\"errors\":{},\"admin\":{},\"p50_us\":{},\
+             \"p99_us\":{},\"queue_depth\":{},\"cache_hit_pct\":{},\"cost_units\":{},\
+             \"bytes_scanned\":{}}}",
+            self.epoch_s,
+            self.queries,
+            self.errors,
+            self.admin,
+            self.p50_us,
+            self.p99_us,
+            self.queue_depth,
+            self.cache_hit_pct,
+            self.cost_units,
+            self.bytes_scanned
+        )
+    }
+}
+
+/// Fixed-capacity ring of per-second slots.
+#[derive(Debug)]
+pub struct HistoryRing {
+    slots: Vec<Slot>,
+    /// Next write position.
+    head: usize,
+    /// Slots ever written, saturating at `slots.len()`.
+    filled: usize,
+}
+
+impl Default for HistoryRing {
+    fn default() -> Self {
+        HistoryRing::new(SLOTS)
+    }
+}
+
+impl HistoryRing {
+    /// A ring of `capacity` (≥ 1) slots.
+    pub fn new(capacity: usize) -> HistoryRing {
+        HistoryRing { slots: vec![Slot::default(); capacity.max(1)], head: 0, filled: 0 }
+    }
+
+    /// Record one flushed second, overwriting the oldest slot when full.
+    pub fn push(&mut self, slot: Slot) {
+        self.slots[self.head] = slot;
+        self.head = (self.head + 1) % self.slots.len();
+        self.filled = (self.filled + 1).min(self.slots.len());
+    }
+
+    /// Slots currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.filled
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.filled == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The most recent `n` slots, oldest first.
+    pub fn last(&self, n: usize) -> Vec<Slot> {
+        let n = n.min(self.filled);
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            // head points at the next write; walk backwards n slots.
+            let idx = (self.head + self.slots.len() - n + i) % self.slots.len();
+            out.push(self.slots[idx]);
+        }
+        out
+    }
+
+    /// Render the `HISTORY secs` answer: the last `secs` slots (clamped
+    /// to what the ring holds) as one JSON object.
+    pub fn series_json(&self, secs: usize) -> String {
+        let series = self.last(secs);
+        let mut body = String::from("[");
+        for (i, s) in series.iter().enumerate() {
+            if i > 0 {
+                body.push(',');
+            }
+            body.push_str(&s.to_json());
+        }
+        body.push(']');
+        format!(
+            "{{\"slots\":{},\"capacity\":{},\"window_secs\":{},\"series\":{}}}",
+            series.len(),
+            self.slots.len(),
+            secs,
+            body
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slot(t: u64, q: u64) -> Slot {
+        Slot { epoch_s: t, queries: q, ..Default::default() }
+    }
+
+    #[test]
+    fn default_ring_holds_ten_minutes() {
+        let r = HistoryRing::default();
+        assert_eq!(r.capacity(), 600);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn last_returns_newest_slots_oldest_first() {
+        let mut r = HistoryRing::new(8);
+        for t in 0..5 {
+            r.push(slot(t, t * 10));
+        }
+        assert_eq!(r.len(), 5);
+        let tail = r.last(3);
+        assert_eq!(tail.iter().map(|s| s.epoch_s).collect::<Vec<_>>(), vec![2, 3, 4]);
+        // Asking past the fill level clamps.
+        assert_eq!(r.last(100).len(), 5);
+    }
+
+    #[test]
+    fn ring_wraps_and_overwrites_the_oldest() {
+        let mut r = HistoryRing::new(4);
+        for t in 0..10 {
+            r.push(slot(t, 1));
+        }
+        assert_eq!(r.len(), 4, "filled saturates at capacity");
+        let all = r.last(4);
+        assert_eq!(all.iter().map(|s| s.epoch_s).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn series_json_shape() {
+        let mut r = HistoryRing::new(16);
+        r.push(Slot {
+            epoch_s: 1,
+            queries: 7,
+            errors: 1,
+            admin: 2,
+            p50_us: 100,
+            p99_us: 900,
+            queue_depth: 3,
+            cache_hit_pct: 85,
+            cost_units: 4200,
+            bytes_scanned: 65536,
+        });
+        r.push(slot(2, 0));
+        let j = r.series_json(60);
+        for key in [
+            "\"slots\":2",
+            "\"capacity\":16",
+            "\"window_secs\":60",
+            "\"series\":[{\"t\":1,\"queries\":7,\"errors\":1,\"admin\":2,\"p50_us\":100,\
+             \"p99_us\":900,\"queue_depth\":3,\"cache_hit_pct\":85,\"cost_units\":4200,\
+             \"bytes_scanned\":65536}",
+            "{\"t\":2,\"queries\":0,",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert!(j.ends_with("}]}"), "{j}");
+    }
+
+    #[test]
+    fn empty_ring_answers_an_empty_series() {
+        let r = HistoryRing::new(4);
+        assert_eq!(
+            r.series_json(30),
+            "{\"slots\":0,\"capacity\":4,\"window_secs\":30,\"series\":[]}"
+        );
+    }
+
+    #[test]
+    fn queries_sum_is_preserved_within_the_window() {
+        // The integration contract: slot deltas over a window sum to the
+        // counter delta. Model it here with direct pushes.
+        let mut r = HistoryRing::new(600);
+        let mut total = 0;
+        for t in 0..20 {
+            let q = (t * 3) % 7;
+            total += q;
+            r.push(slot(t, q));
+        }
+        let sum: u64 = r.last(600).iter().map(|s| s.queries).sum();
+        assert_eq!(sum, total);
+    }
+}

@@ -20,17 +20,38 @@
 //!   worker panic or a blown request deadline.
 //! * [`prom`] — Prometheus text-format exposition (`# TYPE`/`# HELP`,
 //!   counters, gauges, cumulative-bucket histograms) for the `METRICS`
-//!   verb, plus the format validator CI runs against a live scrape.
+//!   verb, plus the format validator CI runs against a live scrape and
+//!   the two-scrape monotonicity checker that catches silent counter
+//!   resets.
+//! * [`cost`] — per-query resource accounting: a [`QueryCost`]
+//!   accumulated through the planner, store, and ADtree taps while a
+//!   worker executes one query, attached to its trace (so `EXPLAIN`
+//!   reports *what the query spent*, not just where time went) and
+//!   charged into process-global totals.
+//! * [`sketch`] — a Misra-Gries heavy-hitter summary over query *plan
+//!   signatures* (sorted relationship set + sign pattern): the `TOP`
+//!   verb's O(k)-memory answer to "which query shapes dominate by
+//!   count / cost / latency".
+//! * [`history`] — a per-second aggregation ring (10 minutes of slots:
+//!   qps, windowed p50/p99, queue depth, cache hit rate, cost totals)
+//!   flushed by the shard-0 reactor tick and served by `HISTORY` as a
+//!   JSON series, so rates are observable without an external scraper.
 //!
 //! The wire surface lives in [`crate::serve::protocol`] (`EXPLAIN`,
-//! `METRICS`, `DUMP`) and the sampling policy (`--trace-sample 1/N`,
-//! `--access-log PATH`) in [`crate::serve::server`]; this module owns
-//! only the mechanisms.
+//! `METRICS`, `DUMP`, `TOP`, `HISTORY`) and the sampling policy
+//! (`--trace-sample 1/N`, `--access-log PATH`) in
+//! [`crate::serve::server`]; this module owns only the mechanisms.
 
+pub mod cost;
+pub mod history;
 pub mod prom;
 pub mod recorder;
+pub mod sketch;
 pub mod trace;
 
+pub use cost::QueryCost;
+pub use history::HistoryRing;
 pub use prom::PromText;
 pub use recorder::dump_json;
+pub use sketch::TopSketch;
 pub use trace::{SpanGuard, SpanRec, Trace};

@@ -94,6 +94,11 @@ pub fn render(m: &ServeMetrics, snap: &ServeSnapshot, mj: &MjMetrics) -> String 
     let mut p = PromText::new();
     p.gauge("mrss_uptime_seconds", "Seconds since the server started.", snap.uptime_secs);
     p.counter("mrss_queries_total", "Queries answered (errors included).", snap.queries);
+    p.counter(
+        "mrss_admin_requests_total",
+        "Admin verbs served (STATS/METRICS/DUMP/TOP/HISTORY/EXPLAIN).",
+        snap.admin_requests,
+    );
     p.counter("mrss_errors_total", "Queries answered with an error line.", snap.errors);
     p.counter("mrss_busy_rejects_total", "Connections shed by admission control.", snap.busy_rejects);
     p.counter("mrss_connections_total", "Connections accepted since start.", snap.connections);
@@ -146,6 +151,21 @@ pub fn render(m: &ServeMetrics, snap: &ServeSnapshot, mj: &MjMetrics) -> String 
     );
     p.counter("mrss_adtree_evictions_total", "ADtrees evicted by the shared budget.", snap.trees.evictions);
     p.gauge("mrss_adtree_bytes", "Bytes charged by cached ADtrees.", snap.trees.bytes as f64);
+    p.counter("mrss_cost_tables_loaded_total", "Ct-tables loaded/built for queries.", snap.cost.tables_loaded);
+    p.counter("mrss_cost_tables_cached_total", "Query table probes served from cache.", snap.cost.tables_cached);
+    p.counter("mrss_cost_bytes_scanned_total", "Bytes charged to query execution.", snap.cost.bytes_scanned);
+    p.counter(
+        "mrss_cost_adtree_nodes_probed_total",
+        "ADtree nodes visited answering queries.",
+        snap.cost.adtree_nodes_probed,
+    );
+    p.counter(
+        "mrss_cost_subtract_depth_total",
+        "Mobius subtraction peels across all queries.",
+        snap.cost.subtract_depth,
+    );
+    p.counter("mrss_cost_rows_merged_total", "Ct rows merged on oversized-table paths.", snap.cost.rows_merged);
+    p.counter("mrss_cost_fo_groups_total", "FO-group factorization passes.", snap.cost.fo_groups);
     let ops: Vec<(&str, f64)> =
         ALL_OPS.iter().map(|op| (op.name(), mj.op_count(*op) as f64)).collect();
     p.labeled_counter("mrss_mj_ct_ops_total", "Ct-algebra operator invocations.", "op", &ops);
@@ -260,6 +280,82 @@ pub fn validate(text: &str) -> Result<(), String> {
     Ok(())
 }
 
+/// Collect every *monotone* series of one document — counter samples
+/// (labels included in the key) plus histogram `_bucket`/`_sum`/`_count`
+/// series, whose values never decrease on a live server. Gauges are
+/// excluded: they move both ways by design.
+fn monotone_series(text: &str) -> Result<HashMap<String, f64>, String> {
+    let mut types: HashMap<String, String> = HashMap::new();
+    let mut out: HashMap<String, f64> = HashMap::new();
+    for (ln, line) in text.lines().enumerate() {
+        let ln = ln + 1;
+        let line = line.trim_end();
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let (name, kind) = (it.next().unwrap_or(""), it.next().unwrap_or(""));
+            types.insert(name.to_string(), kind.to_string());
+            continue;
+        }
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        // Key = series name including its label set, so labeled counters
+        // (e.g. per-op) compare sample to sample.
+        let (key, value) = match line.find('{') {
+            Some(_) => {
+                let close = line.rfind('}').ok_or(format!("line {ln}: unclosed label set"))?;
+                (&line[..close + 1], line[close + 1..].trim())
+            }
+            None => {
+                let sp = line.find(' ').ok_or(format!("line {ln}: no value: {line}"))?;
+                (&line[..sp], line[sp + 1..].trim())
+            }
+        };
+        let series = key.split('{').next().unwrap_or(key);
+        let base = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| {
+                let b = series.strip_suffix(suf)?;
+                (types.get(b).map(String::as_str) == Some("histogram")).then_some(b)
+            })
+            .unwrap_or(series);
+        let monotone = matches!(types.get(base).map(String::as_str), Some("counter" | "histogram"));
+        if monotone {
+            let v: f64 = value
+                .parse()
+                .map_err(|_| format!("line {ln}: bad value `{value}` for {series}"))?;
+            out.insert(key.to_string(), v);
+        }
+    }
+    Ok(out)
+}
+
+/// The two-scrape monotonicity check: every counter and histogram series
+/// of the *earlier* scrape must still exist in the *later* one with a
+/// value at least as large. Catches silent counter resets (a restarted or
+/// wedged server between scrapes) that single-document validation cannot.
+pub fn validate_monotonic(prev: &str, cur: &str) -> Result<(), String> {
+    let p = monotone_series(prev)?;
+    let c = monotone_series(cur)?;
+    let mut keys: Vec<&String> = p.keys().collect();
+    keys.sort();
+    for k in keys {
+        let pv = p[k];
+        match c.get(k) {
+            None => {
+                return Err(format!(
+                    "counter series `{k}` present in first scrape but missing in second"
+                ))
+            }
+            Some(cv) if *cv < pv => {
+                return Err(format!("counter series `{k}` went backwards: {pv} -> {cv}"))
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -308,6 +404,50 @@ mod tests {
         assert!(validate(non_cum).unwrap_err().contains("not cumulative"));
         let missing = "# TYPE h histogram\nh_sum 3\n";
         assert!(validate(missing).unwrap_err().contains("missing"));
+    }
+
+    #[test]
+    fn monotonic_check_accepts_growth_and_rejects_resets() {
+        let a = "# TYPE q counter\nq 5\n\
+                 # TYPE g gauge\ng 100\n\
+                 # TYPE ops counter\nops{op=\"cross\"} 3\n\
+                 # TYPE h histogram\nh_bucket{le=\"1\"} 2\nh_bucket{le=\"+Inf\"} 2\n\
+                 h_sum 4\nh_count 2\n";
+        let b = "# TYPE q counter\nq 9\n\
+                 # TYPE g gauge\ng 1\n\
+                 # TYPE ops counter\nops{op=\"cross\"} 3\n\
+                 # TYPE h histogram\nh_bucket{le=\"1\"} 6\nh_bucket{le=\"+Inf\"} 6\n\
+                 h_sum 11\nh_count 6\n";
+        // Growth (and an equal labeled counter) passes; the shrinking
+        // gauge is ignored by design.
+        validate_monotonic(a, b).unwrap();
+        // A counter going backwards is a reset.
+        let err = validate_monotonic(b, a).unwrap_err();
+        assert!(err.contains("went backwards"), "{err}");
+        // Same for a histogram series.
+        let shrunk = b.replace("h_count 6", "h_count 1");
+        let err = validate_monotonic(b, &shrunk).unwrap_err();
+        assert!(err.contains("h_count") && err.contains("backwards"), "{err}");
+        // A series vanishing between scrapes is also an error.
+        let err = validate_monotonic(a, "# TYPE q counter\nq 9\n").unwrap_err();
+        assert!(err.contains("missing in second"), "{err}");
+        // Two identical live renders are trivially monotone.
+        let doc = sample_doc();
+        validate_monotonic(&doc, &doc).unwrap();
+    }
+
+    #[test]
+    fn rendered_exposition_carries_cost_and_admin_counters() {
+        let doc = sample_doc();
+        for key in [
+            "mrss_admin_requests_total",
+            "mrss_cost_tables_loaded_total",
+            "mrss_cost_bytes_scanned_total",
+            "mrss_cost_subtract_depth_total",
+            "mrss_cost_fo_groups_total",
+        ] {
+            assert!(doc.contains(key), "missing {key} in {doc}");
+        }
     }
 
     #[test]

@@ -1,0 +1,282 @@
+//! Space-bounded heavy-hitter sketch over query plan signatures.
+//!
+//! The server normalizes every count query to a *plan signature* (sorted
+//! relationship set + sign pattern — see
+//! [`CountServer::plan_signature`](crate::store::CountServer::plan_signature))
+//! and feeds it here. A [`TopSketch`] is a Misra-Gries summary: it holds
+//! at most `capacity` entries no matter how many distinct signatures the
+//! workload has, so the `TOP` verb answers from O(k) memory on any
+//! traffic. The classic guarantees carry over:
+//!
+//! * while the number of distinct keys ever seen stays ≤ `capacity`,
+//!   every count is **exact**;
+//! * past that, a surviving key's count undercounts its true frequency
+//!   by at most `decrements` (reported in the JSON), and any key with
+//!   true frequency > N/(capacity+1) is guaranteed to survive.
+//!
+//! Alongside the frequency count each entry accumulates total cost units
+//! ([`QueryCost::units`](crate::obs::cost::QueryCost::units)) and total
+//! latency, so `TOP` can rank shapes by *count*, *cost*, or *latency* —
+//! the three questions capacity planning actually asks.
+
+/// One tracked plan signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopEntry {
+    pub key: String,
+    /// Misra-Gries frequency (exact below capacity, else a lower bound
+    /// within `decrements` of the truth).
+    pub count: u64,
+    /// Sum of per-query abstract cost units.
+    pub cost_units: u64,
+    /// Sum of per-query execution latency, µs.
+    pub latency_us: u64,
+}
+
+/// What `top()` orders by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RankBy {
+    Count,
+    Cost,
+    Latency,
+}
+
+/// Misra-Gries heavy-hitter summary, bounded at `capacity` entries.
+#[derive(Debug)]
+pub struct TopSketch {
+    capacity: usize,
+    entries: Vec<TopEntry>,
+    /// Total observations fed in.
+    total: u64,
+    /// Decrement rounds performed — the maximum undercount of any
+    /// surviving entry.
+    decrements: u64,
+}
+
+impl TopSketch {
+    /// A sketch holding at most `capacity` (≥ 1) entries.
+    pub fn new(capacity: usize) -> TopSketch {
+        let capacity = capacity.max(1);
+        TopSketch { capacity, entries: Vec::with_capacity(capacity), total: 0, decrements: 0 }
+    }
+
+    /// Feed one observation: a query with signature `key` that cost
+    /// `cost_units` and took `latency_us`.
+    pub fn observe(&mut self, key: &str, cost_units: u64, latency_us: u64) {
+        self.total += 1;
+        if let Some(e) = self.entries.iter_mut().find(|e| e.key == key) {
+            e.count += 1;
+            e.cost_units += cost_units;
+            e.latency_us += latency_us;
+            return;
+        }
+        if self.entries.len() < self.capacity {
+            self.entries.push(TopEntry {
+                key: key.to_string(),
+                count: 1,
+                cost_units,
+                latency_us,
+            });
+            return;
+        }
+        // Full and the key is new: the Misra-Gries decrement round. The
+        // incoming observation is absorbed by the round (not stored), so
+        // the entry count never exceeds `capacity`.
+        self.decrements += 1;
+        self.entries.retain_mut(|e| {
+            e.count -= 1;
+            e.count > 0
+        });
+    }
+
+    /// Number of tracked entries (≤ capacity always).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Total observations fed in.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Decrement rounds so far (= max undercount of a surviving entry).
+    pub fn decrements(&self) -> u64 {
+        self.decrements
+    }
+
+    /// The top `k` entries ordered by `by` (descending), ties broken by
+    /// key so output is deterministic.
+    pub fn top(&self, k: usize, by: RankBy) -> Vec<TopEntry> {
+        let mut v = self.entries.clone();
+        v.sort_by(|a, b| {
+            let (ka, kb) = match by {
+                RankBy::Count => (a.count, b.count),
+                RankBy::Cost => (a.cost_units, b.cost_units),
+                RankBy::Latency => (a.latency_us, b.latency_us),
+            };
+            kb.cmp(&ka).then_with(|| a.key.cmp(&b.key))
+        });
+        v.truncate(k);
+        v
+    }
+
+    /// Render the `TOP k` answer: sketch health plus the three rankings.
+    pub fn to_json(&self, k: usize) -> String {
+        let list = |by: RankBy| {
+            let mut out = String::from("[");
+            for (i, e) in self.top(k, by).iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "{{\"sig\":\"{}\",\"count\":{},\"cost_units\":{},\"latency_us\":{}}}",
+                    crate::serve::protocol::json_escape(&e.key),
+                    e.count,
+                    e.cost_units,
+                    e.latency_us
+                ));
+            }
+            out.push(']');
+            out
+        };
+        format!(
+            "{{\"entries\":{},\"capacity\":{},\"total\":{},\"decrements\":{},\
+             \"by_count\":{},\"by_cost\":{},\"by_latency\":{}}}",
+            self.entries.len(),
+            self.capacity,
+            self.total,
+            self.decrements,
+            list(RankBy::Count),
+            list(RankBy::Cost),
+            list(RankBy::Latency)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_counts_below_capacity() {
+        let mut s = TopSketch::new(8);
+        for _ in 0..6 {
+            s.observe("hot", 10, 100);
+        }
+        s.observe("warm", 5, 50);
+        s.observe("warm", 5, 50);
+        s.observe("cold", 1, 10);
+        assert_eq!(s.decrements(), 0, "below capacity nothing is evicted");
+        let top = s.top(3, RankBy::Count);
+        assert_eq!(top[0].key, "hot");
+        assert_eq!(top[0].count, 6);
+        assert_eq!(top[0].cost_units, 60);
+        assert_eq!(top[0].latency_us, 600);
+        assert_eq!(top[1].key, "warm");
+        assert_eq!(top[1].count, 2);
+        assert_eq!(top[2].key, "cold");
+        assert_eq!(top[2].count, 1);
+        assert_eq!(s.total(), 9);
+    }
+
+    #[test]
+    fn rankings_differ_by_dimension() {
+        let mut s = TopSketch::new(8);
+        // "a": frequent but cheap; "b": rare but expensive; "c": slow.
+        for _ in 0..5 {
+            s.observe("a", 1, 1);
+        }
+        s.observe("b", 1000, 1);
+        s.observe("c", 1, 9000);
+        assert_eq!(s.top(1, RankBy::Count)[0].key, "a");
+        assert_eq!(s.top(1, RankBy::Cost)[0].key, "b");
+        assert_eq!(s.top(1, RankBy::Latency)[0].key, "c");
+    }
+
+    #[test]
+    fn capacity_bound_holds_under_adversarial_interleaving() {
+        // Adversary: a hot key interleaved with a never-repeating stream
+        // of singletons, the pattern that churns a naive LRU/LFU table.
+        // The sketch must (a) never exceed its capacity, (b) keep the hot
+        // key, and (c) undercount it by at most `decrements`.
+        const CAP: usize = 8;
+        let mut s = TopSketch::new(CAP);
+        let mut hot_true = 0u64;
+        for i in 0..10_000u64 {
+            if i % 3 == 0 {
+                s.observe("hot", 2, 20);
+                hot_true += 1;
+            }
+            s.observe(&format!("singleton-{i}"), 1, 1);
+            assert!(s.len() <= CAP, "capacity exceeded at step {i}: {}", s.len());
+        }
+        let hot = s
+            .entries
+            .iter()
+            .find(|e| e.key == "hot")
+            .expect("a key with frequency > N/(cap+1) must survive");
+        assert!(hot.count <= hot_true, "MG count is a lower bound");
+        assert!(
+            hot_true - hot.count <= s.decrements(),
+            "undercount {} exceeds decrement bound {}",
+            hot_true - hot.count,
+            s.decrements()
+        );
+        // And it still ranks first by count.
+        assert_eq!(s.top(1, RankBy::Count)[0].key, "hot");
+    }
+
+    #[test]
+    fn second_heavy_key_also_survives_churn() {
+        const CAP: usize = 8;
+        let mut s = TopSketch::new(CAP);
+        for i in 0..6_000u64 {
+            s.observe("alpha", 1, 1); // 1/3 of traffic
+            if i % 2 == 0 {
+                s.observe("beta", 1, 1); // 1/6 of traffic
+            }
+            s.observe(&format!("noise-{i}"), 1, 1);
+            assert!(s.len() <= CAP);
+        }
+        let top = s.top(2, RankBy::Count);
+        assert_eq!(top[0].key, "alpha");
+        assert_eq!(top[1].key, "beta");
+    }
+
+    #[test]
+    fn json_shape_and_truncation() {
+        let mut s = TopSketch::new(4);
+        s.observe("r(A,B)=T", 3, 30);
+        s.observe("r(A,B)=T", 3, 30);
+        s.observe("attrs:1", 1, 5);
+        let j = s.to_json(1);
+        for key in [
+            "\"entries\":2",
+            "\"capacity\":4",
+            "\"total\":3",
+            "\"decrements\":0",
+            "\"by_count\":[{\"sig\":\"r(A,B)=T\",\"count\":2",
+            "\"by_cost\":[",
+            "\"by_latency\":[",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        // k=1: exactly one element per ranking.
+        assert_eq!(j.matches("\"sig\":").count(), 3, "{j}");
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut s = TopSketch::new(0);
+        s.observe("x", 1, 1);
+        assert_eq!(s.capacity(), 1);
+        assert_eq!(s.len(), 1);
+    }
+}

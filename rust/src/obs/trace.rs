@@ -93,6 +93,10 @@ pub struct Trace {
     pub spans: Vec<SpanRec>,
     /// Spans lost to the [`MAX_SPANS`] cap.
     pub dropped: u32,
+    /// Resource accounting for the traced query, attached by the worker
+    /// via [`set_cost`] before [`end`] (`None` for minimal traces and
+    /// requests that executed before cost accounting armed).
+    pub cost: Option<crate::obs::cost::QueryCost>,
 }
 
 impl Trace {
@@ -107,6 +111,7 @@ impl Trace {
             total_us,
             spans: Vec::new(),
             dropped: 0,
+            cost: None,
         }
     }
 
@@ -115,13 +120,17 @@ impl Trace {
     pub fn to_json(&self) -> String {
         let mut out = String::with_capacity(96 + self.spans.len() * 72);
         out.push_str(&format!(
-            "{{\"id\":{},\"query\":\"{}\",\"outcome\":\"{}\",\"total_us\":{},\"dropped\":{},\"spans\":[",
+            "{{\"id\":{},\"query\":\"{}\",\"outcome\":\"{}\",\"total_us\":{},\"dropped\":{},",
             self.id,
             json_escape(&self.query),
             json_escape(self.outcome),
             self.total_us,
             self.dropped
         ));
+        if let Some(c) = &self.cost {
+            out.push_str(&format!("\"cost\":{},", c.to_json()));
+        }
+        out.push_str("\"spans\":[");
         for (i, sp) in self.spans.iter().enumerate() {
             if i > 0 {
                 out.push(',');
@@ -171,6 +180,7 @@ pub fn begin(query: &str) {
             total_us: 0,
             spans: Vec::new(),
             dropped: 0,
+            cost: None,
         },
         t0: Instant::now(),
         depth: 0,
@@ -195,6 +205,18 @@ pub fn end(outcome: &'static str) -> Option<Trace> {
     // since a parent and its children often share a microsecond.
     trace.spans.sort_by_key(|s| s.seq);
     Some(trace)
+}
+
+/// Attach the query's resource accounting to the calling thread's
+/// active trace (no-op when none). The worker calls this with the
+/// [`cost::take`](crate::obs::cost::take) result right after execution,
+/// before [`end`] publishes the trace.
+pub fn set_cost(cost: crate::obs::cost::QueryCost) {
+    ACTIVE.with(|a| {
+        if let Some(act) = a.borrow_mut().as_mut() {
+            act.trace.cost = Some(cost);
+        }
+    });
 }
 
 /// RAII span: created at site entry, records its interval into the
@@ -387,5 +409,24 @@ mod tests {
         assert_eq!(t.total_us, 1234);
         assert!(t.spans.is_empty());
         assert!(t.to_json().contains("\"spans\":[]"));
+        assert!(!t.to_json().contains("\"cost\""), "minimal traces carry no cost block");
+    }
+
+    #[test]
+    fn set_cost_attaches_the_block_to_the_active_trace() {
+        set_cost(crate::obs::cost::QueryCost::default()); // no trace: no-op
+        begin("costed");
+        let cost = crate::obs::cost::QueryCost {
+            subtract_depth: 2,
+            fo_groups: 1,
+            ..Default::default()
+        };
+        set_cost(cost);
+        let t = end("ok").unwrap();
+        assert_eq!(t.cost, Some(cost));
+        let j = t.to_json();
+        assert!(j.contains("\"cost\":{\"tables_loaded\":0,"), "{j}");
+        assert!(j.contains("\"subtract_depth\":2"), "{j}");
+        assert!(j.contains("\"spans\":[]"), "{j}");
     }
 }

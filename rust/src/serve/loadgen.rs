@@ -151,6 +151,12 @@ pub struct LoadgenReport {
     pub busy_retries: u64,
     /// The server's final `STATS` JSON object, when requested.
     pub server_stats: Option<String>,
+    /// The server's final `TOP 5` heavy-hitter JSON, when stats were
+    /// requested — which plan shapes dominated this run's load.
+    pub server_top: Option<String>,
+    /// The server's closing `HISTORY 60` window, when stats were requested
+    /// — the per-second series covering the run's tail.
+    pub server_history: Option<String>,
 }
 
 impl LoadgenReport {
@@ -163,12 +169,15 @@ impl LoadgenReport {
     /// Render `BENCH_serve.json`.
     pub fn bench_json(&self, dataset: &str) -> String {
         let server = self.server_stats.as_deref().unwrap_or("null");
+        let top = self.server_top.as_deref().unwrap_or("null");
+        let history = self.server_history.as_deref().unwrap_or("null");
         format!(
             "{{\n  \"bench\": \"serve\",\n  \"dataset\": \"{dataset}\",\n  \"clients\": {},\n  \
              \"mix\": \"{}\",\n  \"idle\": {},\n  \
              \"queries\": {},\n  \"errors\": {},\n  \"busy_retries\": {},\n  \
              \"wall_secs\": {:.4},\n  \"qps\": {:.1},\n  \
-             \"client_p50_us\": {},\n  \"client_p99_us\": {},\n  \"server\": {server}\n}}\n",
+             \"client_p50_us\": {},\n  \"client_p99_us\": {},\n  \"server\": {server},\n  \
+             \"server_top\": {top},\n  \"server_history\": {history}\n}}\n",
             self.clients,
             self.mix,
             self.idle_open,
@@ -338,8 +347,18 @@ pub fn run(schema: &Schema, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     }
 
     // STATS is fetched while the idle pool is still open, so the reported
-    // `active` / `conns` distribution reflects the loaded server.
-    let server_stats = if cfg.stats { Some(control(&cfg.addr, "STATS")?) } else { None };
+    // `active` / `conns` distribution reflects the loaded server. TOP and
+    // HISTORY ride on the same control path: the heavy-hitter table and the
+    // closing per-second window belong to the loaded server too.
+    let (server_stats, server_top, server_history) = if cfg.stats {
+        (
+            Some(control(&cfg.addr, "STATS")?),
+            Some(control(&cfg.addr, "TOP 5")?),
+            Some(control(&cfg.addr, "HISTORY 60")?),
+        )
+    } else {
+        (None, None, None)
+    };
     drop(idle_pool);
     if cfg.shutdown {
         let bye = control(&cfg.addr, "SHUTDOWN")?;
@@ -361,6 +380,8 @@ pub fn run(schema: &Schema, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         idle_open,
         busy_retries: busy_retries.load(Ordering::Relaxed),
         server_stats,
+        server_top,
+        server_history,
     })
 }
 
@@ -413,6 +434,8 @@ mod tests {
                  \"evictions\":0,\"bytes\":10}}"
                     .to_string(),
             ),
+            server_top: Some("{\"entries\":1,\"capacity\":64}".to_string()),
+            server_history: None,
         };
         let j = rep.bench_json("uwcse");
         for key in [
@@ -422,6 +445,8 @@ mod tests {
             "\"mix\": \"uniform\"",
             "\"idle\": 0",
             "\"busy_retries\": 3",
+            "\"server_top\": {\"entries\":1,\"capacity\":64}",
+            "\"server_history\": null",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }

@@ -9,6 +9,7 @@
 //! must never contend with the queries it measures.
 
 use crate::mobius::MjMetrics;
+use crate::obs::cost::{self, QueryCost};
 use crate::serve::protocol::json_escape;
 use crate::store::{StoreStats, TreeStats};
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
@@ -97,7 +98,12 @@ impl LatencyHistogram {
 pub struct ServeMetrics {
     start: Instant,
     /// Queries answered (errors included; each BATCH member counts).
+    /// Admin verbs are counted in `admin_requests` instead so qps and
+    /// the latency histograms describe real count traffic only.
     pub queries: AtomicU64,
+    /// Admin verbs served (STATS/METRICS/DUMP/TOP/HISTORY/EXPLAIN) —
+    /// excluded from `queries` and from the latency histograms.
+    pub admin_requests: AtomicU64,
     /// Queries that answered with an error line.
     pub errors: AtomicU64,
     /// Connections turned away or cut short by admission control.
@@ -143,6 +149,7 @@ impl Default for ServeMetrics {
         ServeMetrics {
             start: Instant::now(),
             queries: AtomicU64::new(0),
+            admin_requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             busy_rejects: AtomicU64::new(0),
             connections: AtomicU64::new(0),
@@ -174,6 +181,7 @@ impl ServeMetrics {
             dataset: dataset.to_string(),
             uptime_secs: uptime.as_secs_f64(),
             queries,
+            admin_requests: self.admin_requests.load(Relaxed),
             errors: self.errors.load(Relaxed),
             busy_rejects: self.busy_rejects.load(Relaxed),
             connections: self.connections.load(Relaxed),
@@ -193,6 +201,7 @@ impl ServeMetrics {
             worker_panics: self.worker_panics.load(Relaxed),
             conn_timeouts: self.conn_timeouts.load(Relaxed),
             request_timeouts: self.request_timeouts.load(Relaxed),
+            cost: cost::totals(),
             store,
             trees,
         }
@@ -207,6 +216,8 @@ pub struct ServeSnapshot {
     pub dataset: String,
     pub uptime_secs: f64,
     pub queries: u64,
+    /// Admin verbs served (excluded from `queries`/qps/latency).
+    pub admin_requests: u64,
     pub errors: u64,
     pub busy_rejects: u64,
     pub connections: u64,
@@ -237,6 +248,8 @@ pub struct ServeSnapshot {
     pub conn_timeouts: u64,
     /// Requests answered `ERR deadline exceeded` by `--request-timeout`.
     pub request_timeouts: u64,
+    /// Process-wide query-cost totals (see [`cost::totals`]).
+    pub cost: QueryCost,
     pub store: StoreStats,
     pub trees: TreeStats,
 }
@@ -248,7 +261,8 @@ impl ServeSnapshot {
     pub fn to_json(&self) -> String {
         format!(
             "{{\"dataset\":\"{}\",\
-             \"uptime_secs\":{:.3},\"queries\":{},\"errors\":{},\"busy_rejects\":{},\
+             \"uptime_secs\":{:.3},\"queries\":{},\"admin_requests\":{},\"errors\":{},\
+             \"busy_rejects\":{},\
              \"connections\":{},\"active\":{},\"qps\":{:.1},\"p50_us\":{},\"p99_us\":{},\
              \"queue\":{{\"p50_us\":{},\"p99_us\":{}}},\
              \"batch_peak\":{},\
@@ -256,6 +270,7 @@ impl ServeSnapshot {
              \"reactor\":{{\"registered_fds\":{},\"run_queue_peak\":{},\"wakeups\":{},\
              \"wakeups_per_sec\":{:.1}}},\
              \"conns\":{{\"p50\":{},\"p99\":{}}},\
+             \"cost\":{},\
              \"store\":{{\"hits\":{},\"misses\":{},\"evictions\":{},\"bytes_read\":{},\
              \"quarantined_tables\":{}}},\
              \"adtree\":{{\"hits\":{},\"builds\":{},\"building\":{},\"coalesced_waits\":{},\
@@ -263,6 +278,7 @@ impl ServeSnapshot {
             json_escape(&self.dataset),
             self.uptime_secs,
             self.queries,
+            self.admin_requests,
             self.errors,
             self.busy_rejects,
             self.connections,
@@ -282,6 +298,7 @@ impl ServeSnapshot {
             self.wakeups_per_sec,
             self.conns_p50,
             self.conns_p99,
+            self.cost.to_json(),
             self.store.hits,
             self.store.misses,
             self.store.evictions,
@@ -379,6 +396,7 @@ mod tests {
     fn snapshot_json_has_the_key_fields() {
         let m = ServeMetrics::default();
         m.queries.fetch_add(3, Relaxed);
+        m.admin_requests.fetch_add(2, Relaxed);
         m.latency.record(Duration::from_micros(5));
         m.wakeups.fetch_add(10, Relaxed);
         m.registered_fds.fetch_add(4, Relaxed);
@@ -398,6 +416,8 @@ mod tests {
             "\"dataset\":\"uw\\\"cse\\\\\"",
             "\"queue\":{\"p50_us\":4,\"p99_us\":4}",
             "\"queries\":3",
+            "\"admin_requests\":2",
+            "\"cost\":{\"tables_loaded\":",
             "\"qps\":",
             "\"p99_us\":",
             "\"adtree\"",

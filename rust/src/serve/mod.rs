@@ -7,7 +7,8 @@
 //!
 //! * [`protocol`] — a line-delimited wire protocol: the `query` CLI
 //!   grammar plus `BATCH` / `STATS` / `PING` / `SHUTDOWN` and the
-//!   observability verbs `EXPLAIN` / `METRICS` / `DUMP`, with JSON or
+//!   observability verbs `EXPLAIN` / `METRICS` / `DUMP` / `TOP` /
+//!   `HISTORY`, with JSON or
 //!   text responses, and the resumable [`LineBuffer`](protocol::LineBuffer)
 //!   the nonblocking server parses through;
 //! * [`reactor`] — dependency-free readiness polling: raw-syscall
@@ -44,8 +45,11 @@
 //!
 //! Observability lives in [`crate::obs`]: `--trace-sample N` span-traces
 //! every Nth request (flight recorder + optional `--access-log`),
-//! `EXPLAIN <query>` traces one query on demand, and `METRICS` exposes
-//! every counter here in Prometheus text format.
+//! `EXPLAIN <query>` traces one query on demand (with its full
+//! [`QueryCost`](crate::obs::QueryCost) block), `METRICS` exposes every
+//! counter here in Prometheus text format, `TOP [k]` ranks heavy-hitter
+//! plan signatures from an O(k) Misra-Gries sketch, and `HISTORY [secs]`
+//! returns the per-second aggregation ring as a JSON series.
 //!
 //! CLI: `mrss serve --store DIR --listen ADDR` starts the server;
 //! `mrss bench-serve` drives it (or self-hosts one on an ephemeral port).

@@ -17,7 +17,12 @@
 //! STATS                        live metrics snapshot (always JSON)
 //! METRICS                      Prometheus text exposition — the one
 //!                              multi-line response, read until `# EOF`
-//! DUMP                         flight-recorder contents (always JSON)
+//! DUMP                         flight-recorder contents + heavy-hitter
+//!                              summary (always JSON)
+//! TOP [k]                      top-k query plan signatures by count /
+//!                              cost / latency (default k=10, always JSON)
+//! HISTORY [secs]               per-second metrics series for the last
+//!                              `secs` seconds (default 60, always JSON)
 //! PING                         liveness probe
 //! SHUTDOWN                     stop the server after in-flight work drains
 //! ```
@@ -40,6 +45,8 @@
 //! | stats      | *(json object)*      | *(json object)*                        |
 //! | explain    | *(json object)*      | *(json object)*                        |
 //! | dump       | *(json object)*      | *(json object)*                        |
+//! | top        | *(json object)*      | *(json object)*                        |
+//! | history    | *(json object)*      | *(json object)*                        |
 //! | metrics    | *(text exposition)*  | *(text exposition)*                    |
 //! | bye        | `BYE`                | `{"bye":true}`                         |
 //!
@@ -63,8 +70,15 @@ pub enum Request {
     Stats,
     /// Prometheus text exposition of every counter and histogram.
     Metrics,
-    /// Flight-recorder dump: last-N + slowest-K request traces.
+    /// Flight-recorder dump: last-N + slowest-K request traces, plus the
+    /// heavy-hitter summary.
     Dump,
+    /// Top-k query plan signatures by count / cost / latency
+    /// (`None` = server default k).
+    Top(Option<usize>),
+    /// Per-second metrics series for the last `secs` seconds
+    /// (`None` = server default window).
+    History(Option<u64>),
     Ping,
     Shutdown,
 }
@@ -79,6 +93,18 @@ pub fn parse_request(line: &str) -> Request {
         "STATS" if line.len() == keyword.len() => Request::Stats,
         "METRICS" if line.len() == keyword.len() => Request::Metrics,
         "DUMP" if line.len() == keyword.len() => Request::Dump,
+        "TOP" if line.len() == keyword.len() => Request::Top(None),
+        // `TOP 5` takes an argument; non-numeric trailing text falls
+        // through to a query, same as every other keyword.
+        "TOP" => match line[keyword.len()..].trim().parse::<usize>() {
+            Ok(k) => Request::Top(Some(k)),
+            Err(_) => Request::Count(line.to_string()),
+        },
+        "HISTORY" if line.len() == keyword.len() => Request::History(None),
+        "HISTORY" => match line[keyword.len()..].trim().parse::<u64>() {
+            Ok(secs) => Request::History(Some(secs)),
+            Err(_) => Request::Count(line.to_string()),
+        },
         "SHUTDOWN" if line.len() == keyword.len() => Request::Shutdown,
         "COUNT" => Request::Count(line[keyword.len()..].trim().to_string()),
         "EXPLAIN" => Request::Explain(line[keyword.len()..].trim().to_string()),
@@ -107,6 +133,10 @@ pub enum Response {
     Explain { json: String },
     /// Pre-rendered JSON object: the flight-recorder dump.
     Dump { json: String },
+    /// Pre-rendered JSON object: the heavy-hitter rankings for `TOP`.
+    Top { json: String },
+    /// Pre-rendered JSON object: the per-second series for `HISTORY`.
+    History { json: String },
     /// Prometheus text exposition. The protocol's only multi-line
     /// response; the body already ends with its `# EOF` terminator
     /// line, so clients read until that marker.
@@ -154,6 +184,8 @@ impl Response {
             Response::Stats { json: obj } => obj.clone(),
             Response::Explain { json: obj } => obj.clone(),
             Response::Dump { json: obj } => obj.clone(),
+            Response::Top { json: obj } => obj.clone(),
+            Response::History { json: obj } => obj.clone(),
             // Multi-line body ending in the `# EOF` line; the trailing
             // newline is stripped here because the server appends one
             // newline per rendered response.
@@ -377,6 +409,34 @@ mod tests {
         assert_eq!(parse_request("DUMP x"), Request::Count("DUMP x".into()));
         // COUNT still escapes a query spelled like the new keywords.
         assert_eq!(parse_request("COUNT metrics"), Request::Count("metrics".into()));
+    }
+
+    #[test]
+    fn top_and_history_parse_with_optional_numeric_args() {
+        assert_eq!(parse_request("TOP"), Request::Top(None));
+        assert_eq!(parse_request(" top "), Request::Top(None));
+        assert_eq!(parse_request("TOP 5"), Request::Top(Some(5)));
+        assert_eq!(parse_request("top 12"), Request::Top(Some(12)));
+        assert_eq!(parse_request("HISTORY"), Request::History(None));
+        assert_eq!(parse_request("history 30"), Request::History(Some(30)));
+        // Non-numeric trailing text is a query, consistent with METRICS.
+        assert_eq!(parse_request("TOP shelf"), Request::Count("TOP shelf".into()));
+        assert_eq!(
+            parse_request("HISTORY of(X)=1"),
+            Request::Count("HISTORY of(X)=1".into())
+        );
+        // COUNT escapes a query spelled like the verbs.
+        assert_eq!(parse_request("COUNT top"), Request::Count("top".into()));
+    }
+
+    #[test]
+    fn top_and_history_responses_render_verbatim_in_both_modes() {
+        for json in [false, true] {
+            let t = Response::Top { json: "{\"entries\":0,\"by_count\":[]}".into() };
+            assert_eq!(t.render(json), "{\"entries\":0,\"by_count\":[]}");
+            let h = Response::History { json: "{\"slots\":0,\"series\":[]}".into() };
+            assert_eq!(h.render(json), "{\"slots\":0,\"series\":[]}");
+        }
     }
 
     #[test]

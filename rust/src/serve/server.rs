@@ -45,7 +45,9 @@
 //!   recorder behind `DUMP`, and answer `EXPLAIN` with the span tree.
 //!   `METRICS` renders every counter here in Prometheus text format.
 
-use crate::obs::{recorder, trace};
+use crate::obs::history::{HistoryRing, Slot};
+use crate::obs::sketch::TopSketch;
+use crate::obs::{cost, recorder, trace};
 use crate::store::CountServer;
 use crate::util::error::{Context, Result};
 use std::cmp::Reverse;
@@ -232,6 +234,11 @@ impl Executor {
         self.st.lock().unwrap().closed = true;
         self.cv.notify_all();
     }
+
+    /// Jobs currently queued (the `HISTORY` queue-depth gauge).
+    fn len(&self) -> usize {
+        self.st.lock().unwrap().q.len()
+    }
 }
 
 /// Per-shard mailbox: workers push completions here and wake the poller.
@@ -254,6 +261,13 @@ struct Shared {
     /// Open `--access-log` file; workers append whole lines under the
     /// lock so concurrent sampled requests never interleave bytes.
     access_log: Option<Mutex<std::fs::File>>,
+    /// Heavy-hitter summary over plan signatures: workers feed it one
+    /// observation per answered count query, `TOP` and `DUMP` read it.
+    /// O(capacity) memory regardless of distinct query shapes.
+    top: Mutex<TopSketch>,
+    /// Per-second metrics ring behind `HISTORY`, flushed by shard 0's
+    /// once-a-second tick.
+    history: Mutex<HistoryRing>,
 }
 
 impl Shared {
@@ -385,6 +399,8 @@ pub fn serve(count: Arc<CountServer>, cfg: ServeConfig) -> Result<ServeHandle> {
         shards: mailboxes,
         trace_tick: AtomicU64::new(0),
         access_log,
+        top: Mutex::new(TopSketch::new(64)),
+        history: Mutex::new(HistoryRing::default()),
     });
 
     let mut workers = Vec::with_capacity(threads);
@@ -441,7 +457,17 @@ fn worker_loop(shared: &Shared) {
             trace::begin(&query);
             trace::event_us("parse", parse_us);
         }
-        shared.metrics.queries.fetch_add(1, Relaxed);
+        // `EXPLAIN` is an admin verb: it runs its query for the trace but
+        // stays out of `queries`/qps and the latency histograms so the
+        // traffic metrics describe real count load only.
+        if explain {
+            shared.metrics.admin_requests.fetch_add(1, Relaxed);
+        } else {
+            shared.metrics.queries.fetch_add(1, Relaxed);
+        }
+        // Arm per-query cost accounting: the planner/store/ADtree taps
+        // accumulate into this thread's slot while the count executes.
+        cost::begin();
         let t0 = Instant::now();
         // Panic isolation: a panicking count (bug or the armed
         // `worker.exec.panic` failpoint) must neither kill this worker nor
@@ -454,7 +480,18 @@ fn worker_loop(shared: &Shared) {
             shared.count.count_query(&query)
         }));
         let exec = t0.elapsed();
-        shared.metrics.latency.record(exec);
+        // Harvest the cost even on panic (take() also clears the slot so a
+        // poisoned query cannot leak spend into the next one).
+        let qcost = cost::take().unwrap_or_default();
+        qcost.charge_totals();
+        if traced {
+            trace::set_cost(qcost);
+        }
+        if !explain {
+            shared.metrics.latency.record(exec);
+            let sig = shared.count.plan_signature(&query);
+            shared.top.lock().unwrap().observe(&sig, qcost.units(), exec.as_micros() as u64);
+        }
         if fanout {
             shared.metrics.batch_inflight.fetch_sub(1, Relaxed);
         }
@@ -653,6 +690,60 @@ fn queue(conn: &mut Conn, json: bool, resp: &Response) {
     conn.out.push(b'\n');
 }
 
+/// Shard 0's once-a-second history flush: snapshots of the cumulative
+/// counters at the previous flush, so each [`Slot`] stores true deltas
+/// and windowed (not lifetime) latency quantiles.
+struct TickState {
+    next: Instant,
+    epoch_s: u64,
+    prev_queries: u64,
+    prev_errors: u64,
+    prev_admin: u64,
+    /// Per-bucket latency counts at the previous flush (bounds are fixed).
+    prev_latency: Vec<u64>,
+    prev_cost_units: u64,
+    prev_bytes: u64,
+}
+
+impl TickState {
+    fn new() -> TickState {
+        // Cost totals are process-global (CLI queries and earlier servers
+        // charge them too): snapshot at construction so the first slot
+        // holds this server's first second, not the process's lifetime.
+        let totals = cost::totals();
+        TickState {
+            next: Instant::now() + Duration::from_secs(1),
+            epoch_s: 1,
+            prev_queries: 0,
+            prev_errors: 0,
+            prev_admin: 0,
+            prev_latency: Vec::new(),
+            prev_cost_units: totals.units(),
+            prev_bytes: totals.bytes_scanned,
+        }
+    }
+}
+
+/// Quantile upper bound over one window's per-bucket count deltas — the
+/// same log₂ bounds as [`super::metrics::LatencyHistogram`], but computed
+/// from a difference of two snapshots so each history slot reports *that
+/// second's* p50/p99 rather than a lifetime aggregate.
+fn quantile_from_deltas(deltas: &[(u64, u64)], q: f64) -> u64 {
+    let total: u64 = deltas.iter().map(|&(_, c)| c).sum();
+    if total == 0 {
+        return 0;
+    }
+    let rank = ((total as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+    let mut seen = 0u64;
+    for &(bound, c) in deltas {
+        seen += c;
+        if seen >= rank {
+            return bound;
+        }
+    }
+    deltas.last().map_or(0, |&(b, _)| b)
+}
+
 struct ShardCtx {
     shared: Arc<Shared>,
     me: Arc<ShardShared>,
@@ -663,6 +754,8 @@ struct ShardCtx {
     /// Slots still owned (stream open, or completions outstanding).
     live: usize,
     next_id: u64,
+    /// `Some` on shard 0 only: drives the per-second history flush.
+    tick: Option<TickState>,
     /// Min-heap of `(deadline, slot, conn_id)` feeding the poller timeout.
     /// Entries are lazily validated at expiry: a stale one (recycled slot,
     /// bumped id, state change, clock pushed forward by activity) is
@@ -682,6 +775,7 @@ impl ShardCtx {
             free: Vec::new(),
             live: 0,
             next_id: 0,
+            tick: if idx == 0 { Some(TickState::new()) } else { None },
             timers: BinaryHeap::new(),
         }
     }
@@ -700,6 +794,15 @@ impl ShardCtx {
                 let until = d.saturating_duration_since(Instant::now());
                 timeout = Some(match timeout {
                     Some(t) => t.min(until),
+                    None => until,
+                });
+            }
+            // Shard 0 additionally wakes for the per-second history flush,
+            // so the ring advances even on a completely idle server.
+            if let Some(t) = &self.tick {
+                let until = t.next.saturating_duration_since(Instant::now());
+                timeout = Some(match timeout {
+                    Some(x) => x.min(until),
                     None => until,
                 });
             }
@@ -739,6 +842,7 @@ impl ShardCtx {
                 self.on_completion(c);
             }
             self.expire_timers();
+            self.maybe_tick();
             if self.shared.shutdown.load(SeqCst) {
                 if listener_open {
                     let _ = self.poller.deregister(fd_of(&listener));
@@ -755,6 +859,59 @@ impl ShardCtx {
                     self.force_close_all();
                 }
             }
+        }
+    }
+
+    /// Shard 0 only: if a second has elapsed, flush one history slot with
+    /// this window's counter deltas. A stalled reactor flushes one wide
+    /// slot instead of a burst of empties, so window sums stay exact.
+    fn maybe_tick(&mut self) {
+        let Some(tick) = self.tick.as_mut() else { return };
+        let now = Instant::now();
+        if now < tick.next {
+            return;
+        }
+        let m = &self.shared.metrics;
+        let queries = m.queries.load(Relaxed);
+        let errors = m.errors.load(Relaxed);
+        let admin = m.admin_requests.load(Relaxed);
+        let latency = m.latency.buckets();
+        let totals = cost::totals();
+        // `units` is linear in the cost fields, so the delta of totals is
+        // the sum of this window's per-query units.
+        let units = totals.units();
+        let bytes = totals.bytes_scanned;
+        let deltas: Vec<(u64, u64)> = latency
+            .iter()
+            .enumerate()
+            .map(|(i, &(bound, c))| {
+                (bound, c.saturating_sub(tick.prev_latency.get(i).copied().unwrap_or(0)))
+            })
+            .collect();
+        let trees = self.shared.count.tree_stats();
+        let probes = trees.hits + trees.builds;
+        let slot = Slot {
+            epoch_s: tick.epoch_s,
+            queries: queries.saturating_sub(tick.prev_queries),
+            errors: errors.saturating_sub(tick.prev_errors),
+            admin: admin.saturating_sub(tick.prev_admin),
+            p50_us: quantile_from_deltas(&deltas, 0.50),
+            p99_us: quantile_from_deltas(&deltas, 0.99),
+            queue_depth: self.shared.exec.len() as u64,
+            cache_hit_pct: if probes == 0 { 0 } else { trees.hits * 100 / probes },
+            cost_units: units.saturating_sub(tick.prev_cost_units),
+            bytes_scanned: bytes.saturating_sub(tick.prev_bytes),
+        };
+        self.shared.history.lock().unwrap().push(slot);
+        tick.epoch_s += 1;
+        tick.prev_queries = queries;
+        tick.prev_errors = errors;
+        tick.prev_admin = admin;
+        tick.prev_latency = latency.iter().map(|&(_, c)| c).collect();
+        tick.prev_cost_units = units;
+        tick.prev_bytes = bytes;
+        while tick.next <= now {
+            tick.next += Duration::from_secs(1);
         }
     }
 
@@ -1044,15 +1201,41 @@ impl ShardCtx {
             match req {
                 Request::Ping => self.queue_to(slot, &Response::Pong),
                 Request::Stats => {
+                    self.shared.metrics.admin_requests.fetch_add(1, Relaxed);
                     let s = self.shared.snapshot().to_json();
                     self.queue_to(slot, &Response::Stats { json: s });
                 }
                 Request::Metrics => {
+                    self.shared.metrics.admin_requests.fetch_add(1, Relaxed);
                     let text = self.shared.metrics_text();
                     self.queue_to(slot, &Response::Metrics { text });
                 }
                 Request::Dump => {
-                    self.queue_to(slot, &Response::Dump { json: recorder::dump_json() });
+                    self.shared.metrics.admin_requests.fetch_add(1, Relaxed);
+                    // Fold the heavy-hitter summary into the flight-record
+                    // dump: splice `"top"` in before the closing brace.
+                    let mut json = recorder::dump_json();
+                    let top = self.shared.top.lock().unwrap().to_json(5);
+                    json.truncate(json.len() - 1);
+                    json.push_str(",\"top\":");
+                    json.push_str(&top);
+                    json.push('}');
+                    self.queue_to(slot, &Response::Dump { json });
+                }
+                Request::Top(k) => {
+                    self.shared.metrics.admin_requests.fetch_add(1, Relaxed);
+                    let json = self.shared.top.lock().unwrap().to_json(k.unwrap_or(10));
+                    self.queue_to(slot, &Response::Top { json });
+                }
+                Request::History(secs) => {
+                    self.shared.metrics.admin_requests.fetch_add(1, Relaxed);
+                    let json = self
+                        .shared
+                        .history
+                        .lock()
+                        .unwrap()
+                        .series_json(secs.unwrap_or(60) as usize);
+                    self.queue_to(slot, &Response::History { json });
                 }
                 Request::Shutdown => {
                     self.queue_to(slot, &Response::Bye);

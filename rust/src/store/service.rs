@@ -43,7 +43,7 @@
 
 use crate::bail;
 use crate::ct::{AdTree, AdTreeConfig};
-use crate::obs::trace;
+use crate::obs::{cost, trace};
 use crate::schema::{Attribute, FoVarId, RandomVar, RelId, Schema, VarId, NA};
 use crate::util::error::{Context, Result};
 use crate::util::fxhash::FxHashMap;
@@ -258,6 +258,44 @@ impl CountServer {
         self.count(&conds)
     }
 
+    /// Normalize a query to its *plan signature*: the sorted set of
+    /// relationship indicator conditions with their sign pattern, plus
+    /// the number of attribute conditions. Two queries share a signature
+    /// exactly when the planner walks the same shape for them (same
+    /// tables, same Möbius peels) — the attribute *values* only change
+    /// which tree branches are taken, not the plan. This is the key the
+    /// heavy-hitter sketch aggregates by
+    /// ([`TopSketch`](crate::obs::sketch::TopSketch)).
+    ///
+    /// Unparseable queries map to `"invalid"`, provably-zero ones to
+    /// `"zero"` — both legitimate (and rankable) workload shapes.
+    pub fn plan_signature(&self, query: &str) -> String {
+        let Ok(conds) = parse_query(&self.schema, query) else {
+            return "invalid".to_string();
+        };
+        let Some(conds) = normalize(&self.schema, &conds) else {
+            return "zero".to_string();
+        };
+        let mut rels: Vec<String> = Vec::new();
+        let mut attrs = 0usize;
+        for &(v, code) in &conds {
+            match self.schema.random_vars[v] {
+                RandomVar::RelInd { .. } => rels.push(format!(
+                    "{}={}",
+                    self.schema.var_name(v),
+                    if code == 1 { "T" } else { "F" }
+                )),
+                RandomVar::RelAttr { .. } | RandomVar::EntityAttr { .. } => attrs += 1,
+            }
+        }
+        rels.sort_unstable();
+        match (rels.is_empty(), attrs) {
+            (true, _) => format!("attrs:{attrs}"),
+            (false, 0) => rels.join("&"),
+            (false, _) => format!("{}|attrs:{attrs}", rels.join("&")),
+        }
+    }
+
     /// FO variables a set of conditions ranges over.
     fn fo_set(&self, conds: &[(VarId, u16)]) -> BTreeSet<FoVarId> {
         conds.iter().flat_map(|&(v, _)| fos_of_var(&self.schema, v)).collect()
@@ -271,6 +309,7 @@ impl CountServer {
         }
         let groups = split_groups(&self.schema, conds);
         trace::event("plan.fo_groups", || format!("groups={}", groups.len()));
+        cost::add_fo_groups(groups.len() as u64);
         if groups.len() > 1 {
             let mut out = 1u128;
             for g in &groups {
@@ -374,6 +413,7 @@ impl CountServer {
         let (peel_var, _) = conds[negs[0]];
         let _sp =
             trace::span_detailed("mobius.subtract", || self.schema.var_name(peel_var).to_string());
+        cost::add_subtract_depth(1);
         let rest: Vec<(VarId, u16)> =
             conds.iter().copied().filter(|&(v, _)| v != peel_var).collect();
         // count(rest) at the scope of the full group: unconstrained FO
@@ -438,6 +478,8 @@ impl CountServer {
         let _sp = trace::span_detailed("table.count", || meta.key.clone());
         if meta.total > u64::MAX as u128 {
             let ct = self.store.get(&meta.key)?;
+            cost::add_rows_merged(ct.len() as u64);
+            cost::add_bytes_scanned(ct.mem_bytes() as u64);
             return Ok(ct.select(conds).total());
         }
         Ok(self.tree(&meta.key)?.count(conds) as u128)
@@ -477,6 +519,7 @@ impl CountServer {
                 Probe::Ready(tree) => {
                     g.hits += 1;
                     trace::event("adtree.hit", || key.to_string());
+                    cost::add_tables_cached(1);
                     return Ok(tree);
                 }
                 Probe::Building => {
@@ -516,6 +559,8 @@ impl CountServer {
             Ok(t) => Arc::new(t),
         };
         let mem = tree.mem_bytes();
+        cost::add_tables_loaded(1);
+        cost::add_bytes_scanned(mem as u64);
         g.tick += 1;
         let tick = g.tick;
         g.map.insert(
@@ -897,6 +942,69 @@ mod tests {
         let (dir, _schema, joint) = build_store("empty", PersistConfig::default());
         let server = CountServer::open(&dir).unwrap();
         assert_eq!(server.count(&[]).unwrap(), joint.total());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn plan_signature_groups_shapes_not_values() {
+        let (dir, schema, _joint) = build_store("sig", PersistConfig::default());
+        let server = CountServer::open(&dir).unwrap();
+        // An entity attribute with ≥2 values: different values, same shape.
+        let att = (0..schema.random_vars.len())
+            .find(|&v| {
+                matches!(schema.random_vars[v], RandomVar::EntityAttr { .. })
+                    && schema.var_arity(v) >= 2
+            })
+            .unwrap();
+        let name = schema.var_name(att);
+        let s0 = server.plan_signature(&format!("{name}=0"));
+        let s1 = server.plan_signature(&format!("{name}=1"));
+        assert_eq!(s0, s1, "attribute values must not split the signature");
+        assert_eq!(s0, "attrs:1");
+
+        // Relationship sign flips the signature; sort order is canonical.
+        let ind = (0..schema.random_vars.len())
+            .find(|&v| matches!(schema.random_vars[v], RandomVar::RelInd { .. }))
+            .unwrap();
+        let rname = schema.var_name(ind);
+        let pos = server.plan_signature(&format!("{rname}=T"));
+        let neg = server.plan_signature(&format!("{rname}=F"));
+        assert_ne!(pos, neg);
+        assert_eq!(pos, format!("{rname}=T"));
+        assert_eq!(neg, format!("{rname}=F"));
+        let mixed = server.plan_signature(&format!("{rname}=F {name}=1"));
+        assert_eq!(mixed, format!("{rname}=F|attrs:1"));
+
+        // Degenerate shapes are named, not errors.
+        assert_eq!(server.plan_signature("nope(X)=1"), "invalid");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn count_accumulates_query_cost() {
+        use crate::obs::cost;
+        let (dir, schema, _joint) = build_store("cost", PersistConfig::positives_only());
+        let server = CountServer::open(&dir).unwrap();
+        let ind = (0..schema.random_vars.len())
+            .find(|&v| matches!(schema.random_vars[v], RandomVar::RelInd { .. }))
+            .unwrap();
+        // Cold negative query on a positives-only store: a Möbius peel
+        // plus at least one fresh ADtree build.
+        cost::begin();
+        server.count(&[(ind, 0)]).unwrap();
+        let c1 = cost::take().unwrap();
+        assert!(c1.subtract_depth >= 1, "{c1:?}");
+        assert!(c1.fo_groups >= 1, "{c1:?}");
+        assert!(c1.tables_loaded >= 1, "{c1:?}");
+        assert!(c1.bytes_scanned > 0, "{c1:?}");
+        assert!(c1.adtree_nodes_probed >= 1, "{c1:?}");
+        // Warm re-run: same plan shape, but now every table cache-hits.
+        cost::begin();
+        server.count(&[(ind, 0)]).unwrap();
+        let c2 = cost::take().unwrap();
+        assert_eq!(c2.tables_loaded, 0, "{c2:?}");
+        assert!(c2.tables_cached >= 1, "{c2:?}");
+        assert_eq!(c2.subtract_depth, c1.subtract_depth, "plan shape is stable");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -88,6 +88,32 @@ impl Client {
     }
 }
 
+/// Pull the first `"key":<uint>` value out of a JSON response (enough for
+/// the flat documents these tests assert on).
+fn json_u64(doc: &str, key: &str) -> u64 {
+    let pat = format!("\"{key}\":");
+    let i = doc.find(&pat).unwrap_or_else(|| panic!("no {key} in {doc}"));
+    doc[i + pat.len()..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect::<String>()
+        .parse()
+        .unwrap_or_else(|_| panic!("non-numeric {key} in {doc}"))
+}
+
+/// Sum every `"key":<uint>` occurrence in a JSON series.
+fn json_u64_sum(doc: &str, key: &str) -> u64 {
+    let pat = format!("\"{key}\":");
+    let mut sum = 0;
+    let mut rest = doc;
+    while let Some(i) = rest.find(&pat) {
+        rest = &rest[i + pat.len()..];
+        let n: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+        sum += n.parse::<u64>().unwrap_or(0);
+    }
+    sum
+}
+
 /// A query with a negative relationship condition — the shape that can
 /// only be answered by Möbius subtraction when no indicator-bearing
 /// table exists.
@@ -117,6 +143,15 @@ fn explain_on_a_negative_query_names_the_mobius_subtraction_span() {
     {
         assert!(line.contains(&format!("\"name\":\"{span}\"")), "missing span {span}: {line}");
     }
+
+    // The trace carries the full per-query cost block, and the Möbius peel
+    // the positives-only store forced is charged to subtract_depth.
+    assert!(line.contains("\"cost\":{\"tables_loaded\":"), "{line}");
+    for key in ["\"bytes_scanned\":", "\"adtree_nodes_probed\":", "\"rows_merged\":", "\"units\":"] {
+        assert!(line.contains(key), "missing cost key {key}: {line}");
+    }
+    let depth = json_u64(&line, "subtract_depth");
+    assert!(depth >= 1, "expected a Möbius subtraction charged, got depth {depth}: {line}");
 
     // EXPLAIN of a broken query still answers, with the error inline.
     let line = c.send("EXPLAIN nope(X)=1");
@@ -217,10 +252,95 @@ fn untraced_server_answers_dump_with_an_empty_recorder() {
     let (dir, _schema) = build_store("cold", PersistConfig::default());
     let handle = start(&dir, ServeConfig::default());
     let mut c = Client::connect(handle.addr());
-    // trace_sample = 0 and no EXPLAIN: healthy requests leave no trace.
+    // trace_sample = 0 and no EXPLAIN: healthy requests leave no trace —
+    // but the heavy-hitter sketch still sees the query, and DUMP folds the
+    // sketch in after the recorder fields.
     assert!(c.send("position(P1)=faculty").contains("\"count\":"));
     let dump = c.send("DUMP");
-    assert_eq!(dump, "{\"recorded\":0,\"last\":[],\"slowest\":[]}");
+    assert!(dump.starts_with("{\"recorded\":0,\"last\":[],\"slowest\":[],\"top\":{"), "{dump}");
+    assert_eq!(json_u64(&dump, "entries"), 1, "{dump}");
+    assert!(dump.contains("\"sig\":\"attrs:1\""), "{dump}");
+    handle.request_shutdown();
+    handle.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn top_ranks_the_hot_plan_signature_first_with_exact_counts() {
+    let _g = seq();
+    let (dir, schema) = build_store("top", PersistConfig::default());
+    let handle = start(&dir, ServeConfig::default());
+    let mut c = Client::connect(handle.addr());
+
+    // Skewed mix: one hot negative-condition shape, a cold attribute
+    // shape. Two distinct signatures, far below the sketch capacity, so
+    // Misra-Gries degrades to exact counting.
+    let hot = negative_query(&schema);
+    for _ in 0..6 {
+        assert!(c.send(&hot).contains("\"count\":"), "hot query failed");
+    }
+    for _ in 0..2 {
+        assert!(c.send("position(P1)=faculty").contains("\"count\":"));
+    }
+
+    let top = c.send("TOP 3");
+    assert!(top.starts_with("{\"entries\":"), "{top}");
+    assert_eq!(json_u64(&top, "entries"), 2, "{top}");
+    assert_eq!(json_u64(&top, "total"), 8, "{top}");
+    assert_eq!(json_u64(&top, "decrements"), 0, "exact below capacity: {top}");
+    // The hot signature ranks first in by_count, with its exact count.
+    let by_count = &top[top.find("\"by_count\":[").expect("by_count ranking")..];
+    let first = &by_count[..by_count.find('}').unwrap()];
+    assert!(first.contains("\"count\":6"), "hot shape not first: {top}");
+    assert!(top.contains("\"sig\":\"attrs:1\""), "{top}");
+    assert!(top.contains("\"count\":2"), "{top}");
+
+    // TOP is an admin verb: it must not count itself into the query load.
+    let stats = c.send("STATS");
+    assert_eq!(json_u64(&stats, "queries"), 8, "{stats}");
+    assert!(json_u64(&stats, "admin_requests") >= 2, "{stats}");
+
+    handle.request_shutdown();
+    handle.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn history_ring_advances_and_slots_sum_to_the_request_counter() {
+    let _g = seq();
+    let (dir, schema) = build_store("history", PersistConfig::default());
+    let handle = start(&dir, ServeConfig::default());
+    let mut c = Client::connect(handle.addr());
+
+    let queries = mrss::store::gen_queries(&schema, 5, 42);
+    for q in &queries {
+        c.send(q);
+    }
+    // Let the shard-0 tick flush the first window, issue one more query,
+    // then wait out another flush: the ring must keep advancing.
+    std::thread::sleep(Duration::from_millis(1600));
+    let early = c.send("HISTORY 30");
+    assert!(early.starts_with("{\"slots\":"), "{early}");
+    let early_slots = json_u64(&early, "slots");
+    assert!(early_slots >= 1, "no slot flushed after 1.6s: {early}");
+
+    c.send(&queries[0]);
+    std::thread::sleep(Duration::from_millis(2200));
+    let hist = c.send("HISTORY 30");
+    assert!(json_u64(&hist, "slots") > early_slots, "ring did not advance: {hist}");
+    assert_eq!(json_u64(&hist, "window_secs"), 30, "{hist}");
+    assert!(hist.contains("\"series\":[{\"t\":"), "{hist}");
+
+    // Every count query landed in exactly one slot; admin traffic
+    // (HISTORY itself, STATS below) stays out of the per-second qps.
+    assert_eq!(json_u64_sum(&hist, "queries"), 6, "slot sums != requests served: {hist}");
+    let stats = c.send("STATS");
+    assert_eq!(json_u64(&stats, "queries"), 6, "{stats}");
+
+    // Cost flows into the windows too: the slots that saw traffic carry
+    // non-zero cost units.
+    assert!(json_u64_sum(&hist, "cost_units") > 0, "{hist}");
+
     handle.request_shutdown();
     handle.wait();
     let _ = std::fs::remove_dir_all(&dir);
