@@ -154,6 +154,10 @@ fn main() {
     let mut rng = Pcg64::seeded(42);
     let iters = 9;
     let mut samples: Vec<Sample> = Vec::new();
+    // Arm the kernel hot-spot timers for the whole run: the bench is the
+    // one place the per-(operator, tier) tick totals are interesting on
+    // their own, so they ride the JSON artifact next to the medians.
+    mrss::ct::ticks::set_enabled(true);
     println!("=== ct-algebra: packed keys vs row-major reference (median of {iters}) ===\n");
     for &n in &[10_000usize, 100_000, 400_000] {
         bench_config(&mut rng, &mut samples, iters, "packed64", n, 8, 4);
@@ -219,6 +223,23 @@ fn render_json(samples: &[Sample], iters: usize) -> String {
             if i + 1 == samples.len() { "" } else { "," },
         ));
     }
-    s.push_str("  ]\n}\n");
+    s.push_str("  ],\n");
+    // The hot-spot timer totals accumulated across the whole run (packed
+    // kernels only — the row-major reference is untimed by design).
+    let ticks: Vec<_> =
+        mrss::ct::ticks::snapshot().into_iter().filter(|&(_, _, c, _)| c > 0).collect();
+    s.push_str("  \"kernel_ticks\": [\n");
+    for (i, (kernel, tier, count, ns)) in ticks.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kernel\": \"{kernel}\", \"tier\": \"{tier}\", \"calls\": {count}, \"ns\": {ns}}}{}\n",
+            if i + 1 == ticks.len() { "" } else { "," },
+        ));
+    }
+    s.push_str("  ],\n");
+    let hottest = match mrss::ct::ticks::hottest() {
+        Some((name, _, ns)) => format!("{{\"kernel\": \"{name}\", \"ns\": {ns}}}"),
+        None => "null".to_string(),
+    };
+    s.push_str(&format!("  \"hottest_kernel\": {hottest}\n}}\n"));
     s
 }

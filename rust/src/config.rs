@@ -96,6 +96,15 @@ pub struct Config {
     /// `serve --access-log FILE`: append one JSON line per sampled
     /// request.
     pub access_log: Option<String>,
+    /// `serve --profile-hz N`: span-stack sampling profiler frequency
+    /// behind the `PROFILE` verb (0 = sampler off, span publication
+    /// short-circuits).
+    pub profile_hz: u64,
+    /// `profile --secs N`: capture window for the one-shot profile client.
+    pub secs: u64,
+    /// `profile --folded FILE`: write the collapsed stacks here
+    /// (flamegraph.pl / inferno input) instead of stdout only.
+    pub folded: Option<String>,
     /// `validate-metrics --file FILE`: Prometheus exposition document to
     /// check (stdin when omitted).
     pub file: Option<String>,
@@ -155,6 +164,9 @@ impl Default for Config {
             failpoints: None,
             trace_sample: 0,
             access_log: None,
+            profile_hz: 99,
+            secs: 2,
+            folded: None,
             file: None,
             prev: None,
             progress: false,
@@ -254,6 +266,11 @@ impl Config {
                         cfg.trace_sample = n.parse().context("--trace-sample")?;
                     }
                     "access-log" => cfg.access_log = Some(take(&mut it)?),
+                    "profile-hz" => {
+                        cfg.profile_hz = take(&mut it)?.parse().context("--profile-hz")?
+                    }
+                    "secs" => cfg.secs = take(&mut it)?.parse().context("--secs")?,
+                    "folded" => cfg.folded = Some(take(&mut it)?),
                     "file" => cfg.file = Some(take(&mut it)?),
                     "prev" => cfg.prev = Some(take(&mut it)?),
                     "progress" => cfg.progress = true,
@@ -299,6 +316,12 @@ impl Config {
         }
         if cfg.access_log.is_some() && cfg.trace_sample == 0 {
             bail!("--access-log needs --trace-sample N (only sampled requests are logged)");
+        }
+        if cfg.profile_hz > 1000 {
+            bail!("--profile-hz must be <= 1000 (0 disables the sampler)");
+        }
+        if cfg.secs == 0 {
+            bail!("--secs must be >= 1");
         }
         Ok(cfg)
     }
@@ -500,5 +523,25 @@ mod tests {
         assert!(Config::from_args(&args("serve --max-conns 0")).is_err());
         assert!(Config::from_args(&args("serve --idle-timeout 0")).is_err());
         assert!(Config::from_args(&args("serve --request-timeout 0")).is_err());
+    }
+
+    #[test]
+    fn profile_flags_parse() {
+        let s = Config::from_args(&args("serve --store /tmp/s --profile-hz 0")).unwrap();
+        assert_eq!(s.profile_hz, 0);
+        let d = Config::from_args(&args("serve")).unwrap();
+        assert_eq!(d.profile_hz, 99, "sampler defaults on at 99 Hz");
+        assert_eq!(d.secs, 2);
+        assert_eq!(d.folded, None);
+        let p = Config::from_args(&args(
+            "profile --addr 127.0.0.1:7171 --secs 5 --folded /tmp/out.folded",
+        ))
+        .unwrap();
+        assert_eq!(p.command, "profile");
+        assert_eq!(p.addr.as_deref(), Some("127.0.0.1:7171"));
+        assert_eq!(p.secs, 5);
+        assert_eq!(p.folded.as_deref(), Some("/tmp/out.folded"));
+        assert!(Config::from_args(&args("serve --profile-hz 100000")).is_err());
+        assert!(Config::from_args(&args("profile --secs 0")).is_err());
     }
 }

@@ -26,6 +26,12 @@
 //! All operators preserve the [`CtTable`] invariants (sorted unique rows,
 //! positive counts, canonical column order).
 //!
+//! Every dispatch point carries a [`ticks`] hot-spot timer: when the
+//! relaxed gate is on (the serving stack and the ct-ops bench enable
+//! it), each operator call ticks a per-(kernel, tier) counter and
+//! charges its wall time, so `METRICS` / `MjMetrics::breakdown()` can
+//! name the most expensive kernel before anyone vectorizes it.
+//!
 //! [`RowKey`]: super::RowKey
 //! [`reference_op_fallbacks`]: super::reference::reference_op_fallbacks
 
@@ -34,6 +40,205 @@ use super::reference::{note_op_fallback, RefTable};
 use super::{CtLayout, CtTable, KeyStore, RowStore};
 use crate::schema::{VarId, NA};
 use std::borrow::Cow;
+
+pub mod ticks {
+    //! Hot-spot timers for the ct-algebra kernels: cumulative tick and
+    //! nanosecond counters per (operator, key-width tier), the
+    //! measurement the SIMD roadmap item starts from. Behind the same
+    //! relaxed-load gate idiom as span tracing: while [`enabled`] is
+    //! false (the default — the Möbius build hot loop runs untimed)
+    //! every operator pays one relaxed bool load; the serving stack and
+    //! the ct-ops bench turn the gate on so `METRICS`,
+    //! `MjMetrics::breakdown()`, and `BENCH_ctops_micro.json` can name
+    //! the most expensive kernel. Counters are per-*operator-call* (one
+    //! tick per dispatch, not per row), so the gate sits outside the
+    //! row loops.
+
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+    use std::time::Instant;
+
+    /// The instrumented ct-algebra operators.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Kernel {
+        Select,
+        Project,
+        Condition,
+        Cross,
+        Add,
+        Subtract,
+        Extend,
+        Union,
+    }
+
+    /// Every instrumented kernel, in display order.
+    pub const ALL_KERNELS: [Kernel; 8] = [
+        Kernel::Select,
+        Kernel::Project,
+        Kernel::Condition,
+        Kernel::Cross,
+        Kernel::Add,
+        Kernel::Subtract,
+        Kernel::Extend,
+        Kernel::Union,
+    ];
+
+    /// Key-width tier an operator call ran at: the one-word `u64`
+    /// kernel, the two-word `u128` kernel, or the row-major wide
+    /// fallback (`reference.rs`).
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Tier {
+        U64,
+        U128,
+        Wide,
+    }
+
+    /// Every tier, in display order.
+    pub const ALL_TIERS: [Tier; 3] = [Tier::U64, Tier::U128, Tier::Wide];
+
+    impl Kernel {
+        fn idx(self) -> usize {
+            match self {
+                Kernel::Select => 0,
+                Kernel::Project => 1,
+                Kernel::Condition => 2,
+                Kernel::Cross => 3,
+                Kernel::Add => 4,
+                Kernel::Subtract => 5,
+                Kernel::Extend => 6,
+                Kernel::Union => 7,
+            }
+        }
+
+        /// Lower-case operator name, as used in metric labels.
+        pub fn name(self) -> &'static str {
+            match self {
+                Kernel::Select => "select",
+                Kernel::Project => "project",
+                Kernel::Condition => "condition",
+                Kernel::Cross => "cross",
+                Kernel::Add => "add",
+                Kernel::Subtract => "subtract",
+                Kernel::Extend => "extend",
+                Kernel::Union => "union",
+            }
+        }
+    }
+
+    impl Tier {
+        fn idx(self) -> usize {
+            match self {
+                Tier::U64 => 0,
+                Tier::U128 => 1,
+                Tier::Wide => 2,
+            }
+        }
+
+        /// Tier suffix, as used in metric labels (`select_u64`).
+        pub fn name(self) -> &'static str {
+            match self {
+                Tier::U64 => "u64",
+                Tier::U128 => "u128",
+                Tier::Wide => "wide",
+            }
+        }
+    }
+
+    /// Number of (kernel, tier) counter slots.
+    pub const SLOTS: usize = 24;
+
+    #[allow(clippy::declare_interior_mutable_const)]
+    const ZERO: AtomicU64 = AtomicU64::new(0);
+    static ENABLED: AtomicBool = AtomicBool::new(false);
+    static TICKS: [AtomicU64; SLOTS] = [ZERO; SLOTS];
+    static NANOS: [AtomicU64; SLOTS] = [ZERO; SLOTS];
+
+    /// Is kernel timing on? One relaxed load — the whole cost of an
+    /// operator dispatch while profiling is off.
+    #[inline]
+    pub fn enabled() -> bool {
+        ENABLED.load(Relaxed)
+    }
+
+    /// Turn kernel timing on/off process-wide (serve() and the ct-ops
+    /// bench enable it; library users default to off).
+    pub fn set_enabled(on: bool) {
+        ENABLED.store(on, Relaxed);
+    }
+
+    fn slot(k: Kernel, t: Tier) -> usize {
+        k.idx() * ALL_TIERS.len() + t.idx()
+    }
+
+    /// RAII guard: created at an operator's dispatch point, charges
+    /// elapsed wall nanos to the (kernel, tier) slot on drop. A no-op
+    /// shell when the gate is off.
+    pub struct KernelTimer {
+        slot: usize,
+        start: Option<Instant>,
+    }
+
+    /// Start timing one operator call (ticks the call counter
+    /// immediately; nanos land on drop). Free when [`enabled`] is off.
+    #[inline]
+    pub fn timer(k: Kernel, t: Tier) -> KernelTimer {
+        if !enabled() {
+            return KernelTimer { slot: 0, start: None };
+        }
+        let s = slot(k, t);
+        TICKS[s].fetch_add(1, Relaxed);
+        KernelTimer { slot: s, start: Some(Instant::now()) }
+    }
+
+    impl Drop for KernelTimer {
+        fn drop(&mut self) {
+            if let Some(t0) = self.start {
+                NANOS[self.slot].fetch_add(t0.elapsed().as_nanos() as u64, Relaxed);
+            }
+        }
+    }
+
+    /// Cumulative (calls, nanos) for one (kernel, tier) slot.
+    pub fn counter(k: Kernel, t: Tier) -> (u64, u64) {
+        let s = slot(k, t);
+        (TICKS[s].load(Relaxed), NANOS[s].load(Relaxed))
+    }
+
+    /// Every slot as `(kernel, tier, calls, nanos)`, zero rows included
+    /// (Prometheus rendering wants stable families).
+    pub fn snapshot() -> Vec<(&'static str, &'static str, u64, u64)> {
+        let mut out = Vec::with_capacity(SLOTS);
+        for k in ALL_KERNELS {
+            for t in ALL_TIERS {
+                let (c, n) = counter(k, t);
+                out.push((k.name(), t.name(), c, n));
+            }
+        }
+        out
+    }
+
+    /// Serializes tests that toggle the process-global gate, so an
+    /// exact "gated-off calls do not count" assertion cannot race a
+    /// concurrent test enabling the gate.
+    #[cfg(test)]
+    pub fn gate_lock() -> std::sync::MutexGuard<'static, ()> {
+        use std::sync::{Mutex, OnceLock};
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// The slot with the most cumulative time, as
+    /// `(label, calls, nanos)` with label like `subtract_u64` — `None`
+    /// until any timed call has landed.
+    pub fn hottest() -> Option<(String, u64, u64)> {
+        snapshot()
+            .into_iter()
+            .filter(|&(_, _, c, n)| c > 0 && n > 0)
+            .max_by_key(|&(_, _, _, n)| n)
+            .map(|(k, t, c, n)| (format!("{k}_{t}"), c, n))
+    }
+}
 
 /// Error from [`CtTable::subtract`]: the paper defines `ct1 − ct2` only when
 /// ct2's rows are a subset of ct1's with pointwise smaller-or-equal counts.
@@ -136,9 +341,16 @@ impl CtTable {
             return self.clone();
         }
         match &self.store {
-            RowStore::Packed(keys) => self.select_packed::<u64>(keys, &cols),
-            RowStore::Packed2(keys) => self.select_packed::<u128>(keys, &cols),
+            RowStore::Packed(keys) => {
+                let _t = ticks::timer(ticks::Kernel::Select, ticks::Tier::U64);
+                self.select_packed::<u64>(keys, &cols)
+            }
+            RowStore::Packed2(keys) => {
+                let _t = ticks::timer(ticks::Kernel::Select, ticks::Tier::U128);
+                self.select_packed::<u128>(keys, &cols)
+            }
             RowStore::Wide(_) => {
+                let _t = ticks::timer(ticks::Kernel::Select, ticks::Tier::Wide);
                 note_op_fallback();
                 RefTable::from(self).select(cond).to_ct()
             }
@@ -194,9 +406,16 @@ impl CtTable {
             };
         }
         match &self.store {
-            RowStore::Packed(keys) => self.project_packed::<u64>(keys, &cols, keep_sorted),
-            RowStore::Packed2(keys) => self.project_packed::<u128>(keys, &cols, keep_sorted),
+            RowStore::Packed(keys) => {
+                let _t = ticks::timer(ticks::Kernel::Project, ticks::Tier::U64);
+                self.project_packed::<u64>(keys, &cols, keep_sorted)
+            }
+            RowStore::Packed2(keys) => {
+                let _t = ticks::timer(ticks::Kernel::Project, ticks::Tier::U128);
+                self.project_packed::<u128>(keys, &cols, keep_sorted)
+            }
             RowStore::Wide(_) => {
+                let _t = ticks::timer(ticks::Kernel::Project, ticks::Tier::Wide);
                 note_op_fallback();
                 RefTable::from(self).project(keep).to_ct()
             }
@@ -245,9 +464,16 @@ impl CtTable {
             return self.clone();
         }
         match &self.store {
-            RowStore::Packed(keys) => self.condition_packed::<u64>(keys, &cols),
-            RowStore::Packed2(keys) => self.condition_packed::<u128>(keys, &cols),
+            RowStore::Packed(keys) => {
+                let _t = ticks::timer(ticks::Kernel::Condition, ticks::Tier::U64);
+                self.condition_packed::<u64>(keys, &cols)
+            }
+            RowStore::Packed2(keys) => {
+                let _t = ticks::timer(ticks::Kernel::Condition, ticks::Tier::U128);
+                self.condition_packed::<u128>(keys, &cols)
+            }
             RowStore::Wide(_) => {
+                let _t = ticks::timer(ticks::Kernel::Condition, ticks::Tier::Wide);
                 note_op_fallback();
                 RefTable::from(self).condition(cond).to_ct()
             }
@@ -338,12 +564,15 @@ impl CtTable {
                 .collect();
             let ml = CtLayout::from_specs(&specs);
             if ml.fits() {
+                let _t = ticks::timer(ticks::Kernel::Cross, ticks::Tier::U64);
                 return cross_packed::<u64>(self, other, &merged, ml);
             }
             if ml.fits2() {
+                let _t = ticks::timer(ticks::Kernel::Cross, ticks::Tier::U128);
                 return cross_packed::<u128>(self, other, &merged, ml);
             }
         }
+        let _t = ticks::timer(ticks::Kernel::Cross, ticks::Tier::Wide);
         note_op_fallback();
         RefTable::from(self).cross(&RefTable::from(other)).to_ct()
     }
@@ -453,9 +682,16 @@ impl CtTable {
             };
         }
         match self.aligned_keys(other) {
-            Some(Aligned::K1(layout, ka, kb)) => merge_add::<u64>(self, other, layout, &ka, &kb),
-            Some(Aligned::K2(layout, ka, kb)) => merge_add::<u128>(self, other, layout, &ka, &kb),
+            Some(Aligned::K1(layout, ka, kb)) => {
+                let _t = ticks::timer(ticks::Kernel::Add, ticks::Tier::U64);
+                merge_add::<u64>(self, other, layout, &ka, &kb)
+            }
+            Some(Aligned::K2(layout, ka, kb)) => {
+                let _t = ticks::timer(ticks::Kernel::Add, ticks::Tier::U128);
+                merge_add::<u128>(self, other, layout, &ka, &kb)
+            }
             None => {
+                let _t = ticks::timer(ticks::Kernel::Add, ticks::Tier::Wide);
                 note_op_fallback();
                 RefTable::from(self).add(&RefTable::from(other)).to_ct()
             }
@@ -484,12 +720,15 @@ impl CtTable {
         }
         match self.aligned_keys(other) {
             Some(Aligned::K1(layout, ka, kb)) => {
+                let _t = ticks::timer(ticks::Kernel::Subtract, ticks::Tier::U64);
                 merge_subtract::<u64>(self, other, layout, &ka, &kb)
             }
             Some(Aligned::K2(layout, ka, kb)) => {
+                let _t = ticks::timer(ticks::Kernel::Subtract, ticks::Tier::U128);
                 merge_subtract::<u128>(self, other, layout, &ka, &kb)
             }
             None => {
+                let _t = ticks::timer(ticks::Kernel::Subtract, ticks::Tier::Wide);
                 note_op_fallback();
                 RefTable::from(self)
                     .subtract(&RefTable::from(other))
@@ -537,15 +776,19 @@ impl CtTable {
         let nl = CtLayout::from_specs(&specs);
         match (&self.store, nl.total_bits()) {
             (RowStore::Packed(keys), 0..=64) => {
+                let _t = ticks::timer(ticks::Kernel::Extend, ticks::Tier::U64);
                 extend_packed::<u64, u64>(self, keys, &merged, vars, nl)
             }
             (RowStore::Packed(keys), 65..=128) => {
+                let _t = ticks::timer(ticks::Kernel::Extend, ticks::Tier::U128);
                 extend_packed::<u64, u128>(self, keys, &merged, vars, nl)
             }
             (RowStore::Packed2(keys), 65..=128) => {
+                let _t = ticks::timer(ticks::Kernel::Extend, ticks::Tier::U128);
                 extend_packed::<u128, u128>(self, keys, &merged, vars, nl)
             }
             _ => {
+                let _t = ticks::timer(ticks::Kernel::Extend, ticks::Tier::Wide);
                 note_op_fallback();
                 RefTable::from(self).extend_const(consts).to_ct()
             }
@@ -571,11 +814,16 @@ impl CtTable {
             };
         }
         match self.aligned_keys(other) {
-            Some(Aligned::K1(layout, ka, kb)) => merge_union::<u64>(self, other, layout, &ka, &kb),
+            Some(Aligned::K1(layout, ka, kb)) => {
+                let _t = ticks::timer(ticks::Kernel::Union, ticks::Tier::U64);
+                merge_union::<u64>(self, other, layout, &ka, &kb)
+            }
             Some(Aligned::K2(layout, ka, kb)) => {
+                let _t = ticks::timer(ticks::Kernel::Union, ticks::Tier::U128);
                 merge_union::<u128>(self, other, layout, &ka, &kb)
             }
             None => {
+                let _t = ticks::timer(ticks::Kernel::Union, ticks::Tier::Wide);
                 note_op_fallback();
                 RefTable::from(self).union_disjoint(&RefTable::from(other)).to_ct()
             }
@@ -1337,5 +1585,75 @@ mod tests {
         // Each routed operator bumped the fallback counter at least once
         // (other tests run concurrently, so only a lower bound is safe).
         assert!(super::super::reference::reference_op_fallbacks() >= before + 5);
+    }
+
+    #[test]
+    fn kernel_ticks_fire_per_operator_and_respect_the_gate() {
+        use super::ticks::{self, Kernel, Tier};
+        // Wide-store operands keep every op in this test on the Wide
+        // tier — and no other test in this binary runs a wide-store
+        // union, so that slot is safe for an exact gated-off check even
+        // though tests share the process-global counters.
+        let a = CtTable::from_parts_wide_unchecked(vec![1, 2], vec![0, 0], vec![1]);
+        let b = CtTable::from_parts_wide_unchecked(vec![1, 2], vec![1, 1], vec![2]);
+        let c = CtTable::from_parts_wide_unchecked(vec![5], vec![0], vec![3]);
+
+        let _gate = ticks::gate_lock();
+        let prev = ticks::enabled();
+        ticks::set_enabled(false);
+        let off = ticks::counter(Kernel::Union, Tier::Wide);
+        a.union_disjoint(&b).check_invariants().unwrap();
+        assert_eq!(
+            ticks::counter(Kernel::Union, Tier::Wide),
+            off,
+            "disabled gate must not count"
+        );
+
+        ticks::set_enabled(true);
+        let before: Vec<(u64, u64)> = [
+            Kernel::Union,
+            Kernel::Select,
+            Kernel::Project,
+            Kernel::Condition,
+            Kernel::Cross,
+            Kernel::Add,
+            Kernel::Subtract,
+            Kernel::Extend,
+        ]
+        .iter()
+        .map(|&k| ticks::counter(k, Tier::Wide))
+        .collect();
+        a.union_disjoint(&b);
+        a.select(&[(1, 0)]);
+        a.project(&[1]);
+        a.condition(&[(2, 0)]);
+        a.cross(&c);
+        let sum = a.add(&b);
+        sum.subtract(&b).unwrap();
+        a.extend_const(&[(9, 1)]);
+        for (i, &k) in [
+            Kernel::Union,
+            Kernel::Select,
+            Kernel::Project,
+            Kernel::Condition,
+            Kernel::Cross,
+            Kernel::Add,
+            Kernel::Subtract,
+            Kernel::Extend,
+        ]
+        .iter()
+        .enumerate()
+        {
+            let (t0, n0) = before[i];
+            let (t1, n1) = ticks::counter(k, Tier::Wide);
+            assert!(t1 >= t0 + 1, "{} wide tick did not fire: {t0} -> {t1}", k.name());
+            assert!(n1 >= n0, "{} wide nanos went backwards", k.name());
+        }
+        assert!(
+            ticks::hottest().is_some(),
+            "hottest() must name a kernel once timed calls landed"
+        );
+        assert_eq!(ticks::snapshot().len(), ticks::SLOTS);
+        ticks::set_enabled(prev);
     }
 }

@@ -52,7 +52,7 @@ pub mod adtree;
 pub mod reference;
 
 pub use adtree::{AdTree, AdTreeConfig};
-pub use algebra::SubtractError;
+pub use algebra::{ticks, SubtractError};
 pub use display::render_ct;
 pub use layout::{radix_sort_pairs, radix_sort_pairs_k, ColLayout, CtLayout, RowKey};
 

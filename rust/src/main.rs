@@ -75,6 +75,9 @@ fn print_help() {
          \x20 validate-metrics --file F       check a Prometheus scrape of METRICS (stdin\n\
          \x20                                 without --file); exit 1 on format errors;\n\
          \x20                                 --prev EARLIER asserts counter monotonicity\n\
+         \x20 profile --addr A --secs S       capture S seconds of folded span stacks from a\n\
+         \x20                                 running server (`PROFILE` verb); --folded FILE\n\
+         \x20                                 writes flamegraph.pl/inferno collapsed input\n\
          \x20 mine   --dataset D --scale S    feature selection + association rules\n\
          \x20 bn     --dataset D --scale S    Bayesian-network learning, link on vs off\n\n\
          common flags: --seed N --engine native|xla --excerpt N --max-chain-len L\n\
@@ -85,7 +88,8 @@ fn print_help() {
          \x20             --poller poll|epoll --queue-depth N --max-requests N\n\
          \x20             --wire text|json --idle-timeout MS --request-timeout MS\n\
          \x20             --failpoints SPEC (needs --features failpoints)\n\
-         \x20             --trace-sample N|1/N --access-log FILE\n\
+         \x20             --trace-sample N|1/N --access-log FILE --profile-hz N\n\
+         profile flags: --addr HOST:PORT --secs N --folded FILE --json FILE\n\
          bench flags:  --addr HOST:PORT --clients N --queries M --mix uniform|zipf:S\n\
          \x20             --idle N --bench-json FILE --json FILE --shutdown",
         mrss::VERSION
@@ -111,6 +115,7 @@ fn run(cfg: Config) -> Result<()> {
         "serve" => cmd_serve(&cfg),
         "bench-serve" => cmd_bench_serve(&cfg),
         "validate-metrics" => cmd_validate_metrics(&cfg),
+        "profile" => cmd_profile(&cfg),
         "mine" => cmd_mine(&cfg),
         "bn" => cmd_bn(&cfg),
         other => bail!("unknown command `{other}` (try --help)"),
@@ -420,6 +425,7 @@ fn serve_config(cfg: &Config, addr: String) -> Result<ServeConfig> {
         request_timeout: cfg.request_timeout_ms.map(Duration::from_millis),
         trace_sample: cfg.trace_sample,
         access_log: cfg.access_log.clone(),
+        profile_hz: cfg.profile_hz,
         ..Default::default()
     })
 }
@@ -441,11 +447,15 @@ fn cmd_validate_metrics(cfg: &Config) -> Result<()> {
         }
     };
     mrss::obs::prom::validate(&text).map_err(|e| anyhow!("{source}: {e}"))?;
+    // A scrape that parses but lost a whole family (thread CPU split,
+    // kernel timers, process_*) is a silent observability regression:
+    // require every serving family the renderer emits.
+    mrss::obs::prom::validate_serving_families(&text).map_err(|e| anyhow!("{source}: {e}"))?;
     let samples = text
         .lines()
         .filter(|l| !l.trim().is_empty() && !l.starts_with('#'))
         .count();
-    eprintln!("{source}: valid exposition ({samples} samples)");
+    eprintln!("{source}: valid exposition ({samples} samples, all serving families present)");
     // --prev EARLIER_SCRAPE: additionally require every counter series in
     // the earlier scrape to be present and non-decreasing in this one —
     // the monotonicity contract a restarting or double-registering server
@@ -460,7 +470,83 @@ fn cmd_validate_metrics(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+/// One-shot profiling client: ask a running server for `PROFILE secs`,
+/// print the top self-time frames, and optionally write the folded
+/// stacks as `stack count` lines (what flamegraph.pl / inferno's
+/// `inferno-flamegraph` consume directly).
+fn cmd_profile(cfg: &Config) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = cfg.addr.as_deref().context("profile: --addr HOST:PORT is required")?;
+    let stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connecting to count server at {addr}"))?;
+    let mut w = stream.try_clone().context("cloning profile connection")?;
+    writeln!(w, "PROFILE {}", cfg.secs).context("sending PROFILE")?;
+    w.flush().context("flushing PROFILE")?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).context("reading PROFILE response")?;
+    // Both wire modes answer the same single-line JSON object; scan to
+    // the brace so a text-mode prefix cannot confuse the parse.
+    let json = match line.find('{') {
+        Some(i) => line[i..].trim(),
+        None => bail!("unexpected PROFILE response from {addr}: `{}`", line.trim()),
+    };
+    if json.contains("\"error\"") && !json.contains("\"folded\"") {
+        bail!("{addr} refused PROFILE: {json}");
+    }
+    if let Some(p) = &cfg.json {
+        std::fs::write(p, format!("{json}\n")).with_context(|| format!("writing {p}"))?;
+    }
+    let folded = mrss::obs::profile::parse_folded(json);
+    let ticks: u64 = folded.iter().map(|&(_, n)| n).sum();
+    eprintln!(
+        "captured {} folded stacks / {} samples over {}s from {addr}",
+        folded.len(),
+        ticks,
+        cfg.secs
+    );
+    if let Some(path) = &cfg.folded {
+        let mut out = String::with_capacity(folded.len() * 48);
+        for (stack, n) in &folded {
+            out.push_str(stack);
+            out.push(' ');
+            out.push_str(&n.to_string());
+            out.push('\n');
+        }
+        std::fs::write(path, out).with_context(|| format!("writing {path}"))?;
+        eprintln!("wrote {path} (collapsed format — pipe through flamegraph.pl or inferno)");
+    }
+    if ticks == 0 {
+        eprintln!("no samples in the window — is the server idle, or started with --profile-hz 0?");
+        return Ok(());
+    }
+    // Self time = leaf attribution, idle/torn buckets excluded; computed
+    // client-side from the folded stacks so the table and the file agree.
+    let mut self_time: std::collections::HashMap<&str, u64> = std::collections::HashMap::new();
+    for (stack, n) in &folded {
+        let frame = stack.rsplit(';').next().unwrap_or(stack);
+        if frame != "<torn>" && !frame.ends_with(".idle") {
+            *self_time.entry(frame).or_insert(0) += n;
+        }
+    }
+    let mut rows: Vec<(&str, u64)> = self_time.into_iter().collect();
+    rows.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+    let mut t = TextTable::new(vec!["frame", "self", "% of ticks"]);
+    for (frame, n) in rows.iter().take(10) {
+        t.row(vec![
+            frame.to_string(),
+            n.to_string(),
+            format!("{:.1}", 100.0 * *n as f64 / ticks as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
 fn cmd_serve(cfg: &Config) -> Result<()> {
+    // Serving wants the per-operator kernel timers on: METRICS exposes
+    // them and the final breakdown names the hottest kernel. The gate
+    // stays off for one-shot CLI joins (enable nothing you don't read).
+    mrss::ct::ticks::set_enabled(true);
     let root = cfg.store.as_deref().context("serve: --store DIR is required")?;
     let dir = resolve_store_dir(root, &cfg.dataset)?;
     let server = CountServer::open(&dir)?;
@@ -531,6 +617,9 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
 /// the schema for query generation); without it, `--store` self-hosts a
 /// server on an ephemeral port for the duration of the run.
 fn cmd_bench_serve(cfg: &Config) -> Result<()> {
+    // Same kernel-timer policy as `serve`: the self-hosted server's
+    // METRICS and breakdown carry per-operator tick counters.
+    mrss::ct::ticks::set_enabled(true);
     let n_queries: usize = match &cfg.queries {
         Some(s) => s
             .parse()

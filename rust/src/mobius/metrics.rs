@@ -190,6 +190,12 @@ impl MjMetrics {
                 fd(self.op_time(op))
             ));
         }
+        if let Some((label, calls, nanos)) = crate::ct::ticks::hottest() {
+            s.push_str(&format!(
+                "  hottest ct kernel: {label} x{calls} {} (process-global timers)\n",
+                fd(Duration::from_nanos(nanos))
+            ));
+        }
         s.push_str(&format!("  row-major reference fallbacks: {}\n", self.reference_fallbacks));
         s.push_str(&format!(
             "  ct-store cache: {} hits / {} misses / {} evictions\n",
@@ -304,5 +310,21 @@ mod tests {
         for op in ALL_OPS {
             assert!(s.contains(op.name()));
         }
+    }
+
+    #[test]
+    fn breakdown_names_the_hottest_kernel_once_timers_ran() {
+        use crate::ct::{ticks, CtTable};
+        let _gate = ticks::gate_lock();
+        let prev = ticks::enabled();
+        ticks::set_enabled(true);
+        // Enough timed calls that cumulative nanos cannot round to zero.
+        let t = CtTable::from_raw(vec![1], vec![0, 1], vec![5, 3]);
+        for _ in 0..50 {
+            let _ = t.add(&t).subtract(&t).unwrap();
+        }
+        ticks::set_enabled(prev);
+        let s = MjMetrics::default().breakdown();
+        assert!(s.contains("hottest ct kernel: "), "{s}");
     }
 }

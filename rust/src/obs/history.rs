@@ -4,9 +4,10 @@
 //! there is no way to ask the server "what was qps thirty seconds ago?".
 //! This module keeps a fixed ring of per-second aggregation slots — each
 //! flushed by the shard-0 reactor tick — so rates, windowed latency
-//! quantiles, queue depth, cache hit rate, and cost throughput are
-//! observable from the wire alone (`HISTORY [secs]` returns the series as
-//! one JSON line).
+//! quantiles, queue depth, cache hit rate, cost throughput, and process
+//! resources (RSS, user/sys CPU %, fds, context switches — sampled from
+//! [`crate::obs::proc`] at flush time) are observable from the wire
+//! alone (`HISTORY [secs]` returns the series as one JSON line).
 //!
 //! The ring is bounded at [`SLOTS`] entries (10 minutes at one slot per
 //! second); older slots are overwritten. Storage is `SLOTS × Slot`
@@ -42,6 +43,16 @@ pub struct Slot {
     pub cost_units: u64,
     /// Bytes scanned in this second.
     pub bytes_scanned: u64,
+    /// Resident set size at flush time, bytes (0 off Linux).
+    pub rss_bytes: u64,
+    /// User-mode CPU over this second, percent of one core ×1 (0–100·n).
+    pub cpu_user_pct: u64,
+    /// Kernel-mode CPU over this second, percent of one core.
+    pub cpu_sys_pct: u64,
+    /// Open file descriptors at flush time.
+    pub open_fds: u64,
+    /// Context switches (voluntary + involuntary) in this second.
+    pub ctx_switches: u64,
 }
 
 impl Slot {
@@ -49,7 +60,8 @@ impl Slot {
         format!(
             "{{\"t\":{},\"queries\":{},\"errors\":{},\"admin\":{},\"p50_us\":{},\
              \"p99_us\":{},\"queue_depth\":{},\"cache_hit_pct\":{},\"cost_units\":{},\
-             \"bytes_scanned\":{}}}",
+             \"bytes_scanned\":{},\"rss_bytes\":{},\"cpu_user_pct\":{},\"cpu_sys_pct\":{},\
+             \"open_fds\":{},\"ctx_switches\":{}}}",
             self.epoch_s,
             self.queries,
             self.errors,
@@ -59,7 +71,12 @@ impl Slot {
             self.queue_depth,
             self.cache_hit_pct,
             self.cost_units,
-            self.bytes_scanned
+            self.bytes_scanned,
+            self.rss_bytes,
+            self.cpu_user_pct,
+            self.cpu_sys_pct,
+            self.open_fds,
+            self.ctx_switches
         )
     }
 }
@@ -193,6 +210,11 @@ mod tests {
             cache_hit_pct: 85,
             cost_units: 4200,
             bytes_scanned: 65536,
+            rss_bytes: 8 << 20,
+            cpu_user_pct: 41,
+            cpu_sys_pct: 7,
+            open_fds: 19,
+            ctx_switches: 230,
         });
         r.push(slot(2, 0));
         let j = r.series_json(60);
@@ -202,7 +224,8 @@ mod tests {
             "\"window_secs\":60",
             "\"series\":[{\"t\":1,\"queries\":7,\"errors\":1,\"admin\":2,\"p50_us\":100,\
              \"p99_us\":900,\"queue_depth\":3,\"cache_hit_pct\":85,\"cost_units\":4200,\
-             \"bytes_scanned\":65536}",
+             \"bytes_scanned\":65536,\"rss_bytes\":8388608,\"cpu_user_pct\":41,\
+             \"cpu_sys_pct\":7,\"open_fds\":19,\"ctx_switches\":230}",
             "{\"t\":2,\"queries\":0,",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");

@@ -33,17 +33,30 @@
 //!   verb's O(k)-memory answer to "which query shapes dominate by
 //!   count / cost / latency".
 //! * [`history`] — a per-second aggregation ring (10 minutes of slots:
-//!   qps, windowed p50/p99, queue depth, cache hit rate, cost totals)
-//!   flushed by the shard-0 reactor tick and served by `HISTORY` as a
-//!   JSON series, so rates are observable without an external scraper.
+//!   qps, windowed p50/p99, queue depth, cache hit rate, cost totals,
+//!   process RSS/CPU/fds) flushed by the shard-0 reactor tick and
+//!   served by `HISTORY` as a JSON series, so rates are observable
+//!   without an external scraper.
+//! * [`profile`] — the third tier: a span-stack *sampling profiler*.
+//!   Registered threads publish their live span stack into seqlock
+//!   slots (two relaxed stores per push/pop); a sampler thread walks
+//!   the registry at `--profile-hz` and folds samples into collapsed
+//!   flamegraph stacks, served by `PROFILE [secs]` as a timed capture.
+//!   Also owns per-role thread-CPU accounting (busy/idle split via
+//!   `CLOCK_THREAD_CPUTIME_ID`).
+//! * [`proc`] — raw `clock_gettime` CPU clocks and the
+//!   `/proc/self/{stat,status,fd}` reader behind the `process_*`
+//!   Prometheus families and the history ring's resource columns.
 //!
 //! The wire surface lives in [`crate::serve::protocol`] (`EXPLAIN`,
-//! `METRICS`, `DUMP`, `TOP`, `HISTORY`) and the sampling policy
-//! (`--trace-sample 1/N`, `--access-log PATH`) in
-//! [`crate::serve::server`]; this module owns only the mechanisms.
+//! `METRICS`, `DUMP`, `TOP`, `HISTORY`, `PROFILE`) and the sampling
+//! policy (`--trace-sample 1/N`, `--access-log PATH`, `--profile-hz`)
+//! in [`crate::serve::server`]; this module owns only the mechanisms.
 
 pub mod cost;
 pub mod history;
+pub mod proc;
+pub mod profile;
 pub mod prom;
 pub mod recorder;
 pub mod sketch;
@@ -51,6 +64,7 @@ pub mod trace;
 
 pub use cost::QueryCost;
 pub use history::HistoryRing;
+pub use proc::ProcessStats;
 pub use prom::PromText;
 pub use recorder::dump_json;
 pub use sketch::TopSketch;

@@ -1,0 +1,243 @@
+//! Raw process/thread resource telemetry — no crates, no /usr/bin/ps.
+//!
+//! Two independent facilities:
+//!
+//! * **CPU clocks** via raw `clock_gettime(2)` declarations (the same
+//!   no-dependency syscall idiom as [`crate::serve::reactor`]):
+//!   [`thread_cpu_ns`] reads `CLOCK_THREAD_CPUTIME_ID` — the CPU time
+//!   burned by *the calling thread alone* — and [`process_cpu_ns`]
+//!   reads `CLOCK_PROCESS_CPUTIME_ID`. The profiler samples the thread
+//!   clock at job boundaries to split busy from idle per role.
+//! * **`/proc/self` readers**: [`read`] parses `stat` (user/sys CPU
+//!   ticks), `status` (VmRSS, context switches, thread count), and
+//!   counts `fd/` entries, returning one [`ProcessStats`]. The shard-0
+//!   history tick samples it once per second; `METRICS` renders the
+//!   standard `process_*` Prometheus families from it.
+//!
+//! Everything degrades to zeros off Linux: the serving stack and its
+//! JSON shapes stay identical, the numbers just read 0.
+
+/// Point-in-time process resource usage, as read from `/proc/self`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProcessStats {
+    /// Resident set size in bytes (`VmRSS`).
+    pub rss_bytes: u64,
+    /// Cumulative user-mode CPU, microseconds (`stat` utime × tick).
+    pub utime_us: u64,
+    /// Cumulative kernel-mode CPU, microseconds (`stat` stime × tick).
+    pub stime_us: u64,
+    /// Open file descriptors right now (`/proc/self/fd` entries).
+    pub open_fds: u64,
+    /// Voluntary context switches (blocked on I/O, condvars, …).
+    pub voluntary_ctxt_switches: u64,
+    /// Involuntary context switches (preempted by the scheduler).
+    pub nonvoluntary_ctxt_switches: u64,
+    /// OS threads in the process.
+    pub threads: u64,
+}
+
+impl ProcessStats {
+    /// One JSON object — every field numeric, no escaping needed.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"rss_bytes\":{},\"utime_us\":{},\"stime_us\":{},\"open_fds\":{},\
+             \"voluntary_ctxt_switches\":{},\"nonvoluntary_ctxt_switches\":{},\
+             \"threads\":{}}}",
+            self.rss_bytes,
+            self.utime_us,
+            self.stime_us,
+            self.open_fds,
+            self.voluntary_ctxt_switches,
+            self.nonvoluntary_ctxt_switches,
+            self.threads
+        )
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_long};
+
+    #[repr(C)]
+    pub struct Timespec {
+        pub tv_sec: i64,
+        pub tv_nsec: i64,
+    }
+
+    extern "C" {
+        pub fn clock_gettime(clockid: c_int, tp: *mut Timespec) -> c_int;
+        pub fn sysconf(name: c_int) -> c_long;
+    }
+
+    #[cfg(target_os = "linux")]
+    pub const CLOCK_PROCESS_CPUTIME_ID: c_int = 2;
+    #[cfg(target_os = "linux")]
+    pub const CLOCK_THREAD_CPUTIME_ID: c_int = 3;
+    #[cfg(target_os = "linux")]
+    pub const SC_CLK_TCK: c_int = 2;
+}
+
+#[cfg(all(unix, target_os = "linux"))]
+fn clock_ns(clock: std::os::raw::c_int) -> u64 {
+    let mut ts = sys::Timespec { tv_sec: 0, tv_nsec: 0 };
+    // Safety: ts is a valid, writable Timespec; the kernel fills it.
+    let rc = unsafe { sys::clock_gettime(clock, &mut ts) };
+    if rc != 0 {
+        return 0;
+    }
+    (ts.tv_sec as u64).saturating_mul(1_000_000_000).saturating_add(ts.tv_nsec as u64)
+}
+
+/// CPU nanoseconds consumed by the calling thread (0 off Linux).
+#[cfg(all(unix, target_os = "linux"))]
+pub fn thread_cpu_ns() -> u64 {
+    clock_ns(sys::CLOCK_THREAD_CPUTIME_ID)
+}
+
+/// CPU nanoseconds consumed by the whole process (0 off Linux).
+#[cfg(all(unix, target_os = "linux"))]
+pub fn process_cpu_ns() -> u64 {
+    clock_ns(sys::CLOCK_PROCESS_CPUTIME_ID)
+}
+
+#[cfg(not(all(unix, target_os = "linux")))]
+pub fn thread_cpu_ns() -> u64 {
+    0
+}
+
+#[cfg(not(all(unix, target_os = "linux")))]
+pub fn process_cpu_ns() -> u64 {
+    0
+}
+
+/// Clock ticks per second for `/proc/self/stat` CPU fields (100 on
+/// every stock Linux; read once via `sysconf(_SC_CLK_TCK)`).
+#[cfg(all(unix, target_os = "linux"))]
+fn clk_tck() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+    static TCK: AtomicU64 = AtomicU64::new(0);
+    let cached = TCK.load(Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    // Safety: plain sysconf query, no pointers involved.
+    let v = unsafe { sys::sysconf(sys::SC_CLK_TCK) };
+    let v = if v > 0 { v as u64 } else { 100 };
+    TCK.store(v, Relaxed);
+    v
+}
+
+/// `key:   1234 kB` → 1234 (any `/proc/self/status` numeric line).
+#[cfg(target_os = "linux")]
+fn status_field(status: &str, key: &str) -> u64 {
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix(key))
+        .and_then(|rest| rest.trim_start_matches(':').split_whitespace().next())
+        .and_then(|n| n.parse().ok())
+        .unwrap_or(0)
+}
+
+/// Read the current process stats from `/proc/self`. `None` when the
+/// proc filesystem is unavailable (non-Linux, or a locked-down mount).
+#[cfg(target_os = "linux")]
+pub fn read() -> Option<ProcessStats> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let stat = std::fs::read_to_string("/proc/self/stat").ok()?;
+    // stat field 2 (comm) may contain spaces; everything after the last
+    // ')' is fields 3.. whitespace-separated, so utime (field 14) and
+    // stime (field 15) are tokens 11 and 12 of that tail.
+    let tail = &stat[stat.rfind(')').map(|i| i + 1).unwrap_or(0)..];
+    let fields: Vec<&str> = tail.split_whitespace().collect();
+    let ticks_us = 1_000_000 / clk_tck().max(1);
+    let tick_field =
+        |i: usize| fields.get(i).and_then(|f| f.parse::<u64>().ok()).unwrap_or(0) * ticks_us;
+    let open_fds = std::fs::read_dir("/proc/self/fd").map(|d| d.count() as u64).unwrap_or(0);
+    Some(ProcessStats {
+        rss_bytes: status_field(&status, "VmRSS") * 1024,
+        utime_us: tick_field(11),
+        stime_us: tick_field(12),
+        open_fds,
+        voluntary_ctxt_switches: status_field(&status, "voluntary_ctxt_switches"),
+        nonvoluntary_ctxt_switches: status_field(&status, "nonvoluntary_ctxt_switches"),
+        threads: status_field(&status, "Threads"),
+    })
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn read() -> Option<ProcessStats> {
+    None
+}
+
+/// [`read`] with a zeroed fallback — callers that render JSON shapes
+/// (STATS, PROFILE, the history tick) use this so the fields exist on
+/// every platform.
+pub fn read_or_zero() -> ProcessStats {
+    read().unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_shape_has_every_field() {
+        let s = ProcessStats {
+            rss_bytes: 4096,
+            utime_us: 10,
+            stime_us: 20,
+            open_fds: 3,
+            voluntary_ctxt_switches: 7,
+            nonvoluntary_ctxt_switches: 1,
+            threads: 5,
+        };
+        let j = s.to_json();
+        for key in [
+            "\"rss_bytes\":4096",
+            "\"utime_us\":10",
+            "\"stime_us\":20",
+            "\"open_fds\":3",
+            "\"voluntary_ctxt_switches\":7",
+            "\"nonvoluntary_ctxt_switches\":1",
+            "\"threads\":5",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn proc_reader_sees_a_live_process() {
+        let s = read().expect("/proc/self should be readable on Linux");
+        assert!(s.rss_bytes > 0, "a running test has resident memory: {s:?}");
+        assert!(s.open_fds > 0, "at least the fd-dir handle is open: {s:?}");
+        assert!(s.threads >= 1, "{s:?}");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn thread_cpu_clock_advances_under_load() {
+        let a = thread_cpu_ns();
+        // Burn a little CPU; the thread clock must move, and the process
+        // clock must be at least the thread clock.
+        let mut x = 0u64;
+        for i in 0..2_000_000u64 {
+            x = x.wrapping_add(i ^ (x >> 3));
+        }
+        assert!(x != 42, "keep the loop alive");
+        let b = thread_cpu_ns();
+        assert!(b > a, "thread CPU clock did not advance: {a} -> {b}");
+        assert!(process_cpu_ns() >= b - a, "process clock below thread delta");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn status_field_parses_kb_lines() {
+        let status = "Name:\tmrss\nVmRSS:\t  1234 kB\nThreads:\t9\n\
+                      voluntary_ctxt_switches:\t42\n";
+        assert_eq!(status_field(status, "VmRSS"), 1234);
+        assert_eq!(status_field(status, "Threads"), 9);
+        assert_eq!(status_field(status, "voluntary_ctxt_switches"), 42);
+        assert_eq!(status_field(status, "missing"), 0);
+    }
+}

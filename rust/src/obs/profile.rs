@@ -1,0 +1,767 @@
+//! Continuous in-process span-stack sampling profiler.
+//!
+//! `EXPLAIN` (PR 8) shows where *one sampled request* spent its time;
+//! the cost layer (PR 9) shows what requests *consumed*. Neither
+//! answers "where is the CPU right now, across everything the process
+//! does?" — the question every perf PR (SIMD kernels, sharding) has to
+//! start from. This module answers it without any dependency and
+//! without stopping threads:
+//!
+//! * **Publication** — every registered thread owns one seqlock-style
+//!   [`Slot`] in a process-global registry and publishes its current
+//!   span stack into it: a span push/pop is two relaxed pointer-word
+//!   stores plus two sequence bumps, no locks. The span sites already
+//!   exist — [`crate::obs::trace`] guards call [`push_frame`] /
+//!   [`pop_frame`] whether or not a trace is armed. When the profiler
+//!   is off (`--profile-hz 0`) no thread claims a slot and the publish
+//!   path is a thread-local load and a branch.
+//! * **Sampling** — a dedicated sampler thread walks the registry at
+//!   `--profile-hz` (default 99, deliberately co-prime with common
+//!   periodic work), seqlock-reads each thread's stack, and folds it
+//!   into cumulative collapsed-stack counts — the exact
+//!   `frame;frame;frame N` format `flamegraph.pl` and inferno consume.
+//!   A torn read (writer mid-update after retries) is counted under
+//!   the `<torn>` pseudo-stack and an empty stack under
+//!   `<role>.idle`, so **every sample lands in exactly one folded
+//!   bucket**: folded counts always sum to the sampler's tick count.
+//! * **Capture** — [`capture`] (the `PROFILE [secs]` wire verb and
+//!   `mrss profile` client) diffs the cumulative aggregate across a
+//!   timed window and renders folded stacks + a top-N self-time table
+//!   (leaf-frame attribution, idle/torn excluded) + a process resource
+//!   snapshot as one JSON line.
+//! * **Per-thread CPU accounting** — [`register`]ed threads call
+//!   [`note_cpu`] at job boundaries; the delta of
+//!   `CLOCK_THREAD_CPUTIME_ID` ([`crate::obs::proc`]) splits wall time
+//!   into busy (CPU actually burned) vs idle (blocked) per role,
+//!   surfaced in `STATS` (`"threads"`) and
+//!   `mrss_thread_cpu_seconds_total{role=…}`.
+
+use crate::obs::proc;
+use crate::serve::protocol::json_escape;
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Deepest span stack a slot publishes; pushes past it are counted in
+/// `depth` but not stored, so pop stays symmetric and the sampler just
+/// sees a truncated stack.
+pub const MAX_DEPTH: usize = 32;
+/// Registry capacity. Threads past it profile nothing (CPU accounting
+/// still works); serving uses a few dozen threads at most.
+const MAX_THREADS: usize = 256;
+/// `Slot::role` value for an unclaimed slot.
+const FREE: usize = usize::MAX;
+
+/// What kind of thread a registration represents — the label on CPU
+/// accounting and the `<role>.idle` folded bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Worker,
+    Shard,
+    Sampler,
+}
+
+pub const ALL_ROLES: [Role; 3] = [Role::Worker, Role::Shard, Role::Sampler];
+
+impl Role {
+    fn idx(self) -> usize {
+        match self {
+            Role::Worker => 0,
+            Role::Shard => 1,
+            Role::Sampler => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Role::Worker => "worker",
+            Role::Shard => "shard",
+            Role::Sampler => "sampler",
+        }
+    }
+
+    fn idle_name(self) -> &'static str {
+        match self {
+            Role::Worker => "worker.idle",
+            Role::Shard => "shard.idle",
+            Role::Sampler => "sampler.idle",
+        }
+    }
+
+    fn from_idx(i: usize) -> Role {
+        ALL_ROLES[i]
+    }
+}
+
+/// One thread's published span stack. The owning thread is the only
+/// writer; the sampler validates `seq` around its reads (classic
+/// seqlock), so a frame is only materialized from a consistent
+/// `(ptr, len)` pair — and span names are `&'static str` literals, so
+/// any consistent pair is valid forever.
+struct FrameCell {
+    ptr: AtomicUsize,
+    len: AtomicUsize,
+}
+
+struct Slot {
+    /// Even = stable, odd = writer mid-update.
+    seq: AtomicU64,
+    /// Frames pushed (may exceed [`MAX_DEPTH`]; storage truncates).
+    depth: AtomicUsize,
+    /// Owning role index, or [`FREE`].
+    role: AtomicUsize,
+    frames: Vec<FrameCell>,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            depth: AtomicUsize::new(0),
+            role: AtomicUsize::new(FREE),
+            frames: (0..MAX_DEPTH)
+                .map(|_| FrameCell { ptr: AtomicUsize::new(0), len: AtomicUsize::new(0) })
+                .collect(),
+        }
+    }
+
+    #[inline]
+    fn push(&self, name: &'static str) {
+        let d = self.depth.load(Ordering::Relaxed);
+        self.seq.fetch_add(1, Ordering::Release);
+        if d < MAX_DEPTH {
+            self.frames[d].ptr.store(name.as_ptr() as usize, Ordering::Relaxed);
+            self.frames[d].len.store(name.len(), Ordering::Relaxed);
+        }
+        self.depth.store(d + 1, Ordering::Relaxed);
+        self.seq.fetch_add(1, Ordering::Release);
+    }
+
+    #[inline]
+    fn pop(&self) {
+        let d = self.depth.load(Ordering::Relaxed);
+        self.seq.fetch_add(1, Ordering::Release);
+        self.depth.store(d.saturating_sub(1), Ordering::Relaxed);
+        self.seq.fetch_add(1, Ordering::Release);
+    }
+
+    /// Seqlock read of the published stack. `Some(frames)` on a
+    /// consistent snapshot (empty = idle), `None` after repeated torn
+    /// reads — the writer was mid-update every attempt.
+    fn sample(&self) -> Option<Vec<&'static str>> {
+        for _ in 0..4 {
+            let s1 = self.seq.load(Ordering::Acquire);
+            if s1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let depth = self.depth.load(Ordering::Relaxed).min(MAX_DEPTH);
+            let mut raw = [(0usize, 0usize); MAX_DEPTH];
+            for (i, cell) in self.frames.iter().enumerate().take(depth) {
+                raw[i] = (cell.ptr.load(Ordering::Relaxed), cell.len.load(Ordering::Relaxed));
+            }
+            fence(Ordering::Acquire);
+            if self.seq.load(Ordering::Relaxed) != s1 {
+                continue;
+            }
+            let mut out = Vec::with_capacity(depth);
+            for &(p, l) in raw.iter().take(depth) {
+                if p == 0 {
+                    return None; // never-written cell in a claimed slot: treat as torn
+                }
+                // Safety: the seqlock validated that (p, l) is a pair the
+                // owning thread published together from a `&'static str`,
+                // which lives (and stays valid UTF-8) for the process
+                // lifetime.
+                out.push(unsafe {
+                    std::str::from_utf8_unchecked(std::slice::from_raw_parts(p as *const u8, l))
+                });
+            }
+            return Some(out);
+        }
+        None
+    }
+
+    fn release(&self) {
+        self.seq.fetch_add(1, Ordering::Release);
+        self.depth.store(0, Ordering::Relaxed);
+        self.seq.fetch_add(1, Ordering::Release);
+        self.role.store(FREE, Ordering::Release);
+    }
+}
+
+fn slots() -> &'static [Slot] {
+    static SLOTS: OnceLock<Box<[Slot]>> = OnceLock::new();
+    SLOTS.get_or_init(|| (0..MAX_THREADS).map(|_| Slot::new()).collect())
+}
+
+/// Samplers currently running (multiple servers in one test process
+/// each start their own). Non-zero ⇒ new registrations claim slots.
+static ACTIVE_SAMPLERS: AtomicU64 = AtomicU64::new(0);
+/// The sampling rate the most recent sampler was started with (for
+/// capture rendering).
+static CURRENT_HZ: AtomicU64 = AtomicU64::new(0);
+
+/// True while at least one sampler is running.
+#[inline]
+pub fn active() -> bool {
+    ACTIVE_SAMPLERS.load(Ordering::Relaxed) > 0
+}
+
+// Per-role CPU accounting (nanoseconds) + live thread-count gauges.
+static BUSY_NS: [AtomicU64; 3] = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+static IDLE_NS: [AtomicU64; 3] = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+static THREADS: [AtomicU64; 3] = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+
+#[derive(Clone, Copy)]
+struct CpuState {
+    role: usize,
+    last_wall: Instant,
+    last_cpu_ns: u64,
+}
+
+thread_local! {
+    /// Fast-path cell the span publish sites read: `None` ⇒ the thread
+    /// profiles nothing and push/pop cost a load and a branch.
+    static PSLOT: Cell<Option<&'static Slot>> = const { Cell::new(None) };
+    static CPU: Cell<Option<CpuState>> = const { Cell::new(None) };
+}
+
+/// Publish a span entry on the calling thread. Returns whether a frame
+/// was actually published — the caller must [`pop_frame`] exactly when
+/// it returned `true` (trace guards keep the flag).
+#[inline]
+pub fn push_frame(name: &'static str) -> bool {
+    PSLOT.with(|c| match c.get() {
+        Some(slot) => {
+            slot.push(name);
+            true
+        }
+        None => false,
+    })
+}
+
+/// Publish a span exit on the calling thread.
+#[inline]
+pub fn pop_frame() {
+    PSLOT.with(|c| {
+        if let Some(slot) = c.get() {
+            slot.pop();
+        }
+    });
+}
+
+/// RAII registration of the calling thread with the profiler. Claims a
+/// publish slot when a sampler is active, and arms per-role CPU
+/// accounting either way. Dropped when the thread exits its loop.
+pub struct ThreadReg {
+    slot: Option<&'static Slot>,
+    role: Role,
+}
+
+/// Register the calling thread under `role`.
+pub fn register(role: Role) -> ThreadReg {
+    CPU.with(|c| {
+        c.set(Some(CpuState {
+            role: role.idx(),
+            last_wall: Instant::now(),
+            last_cpu_ns: proc::thread_cpu_ns(),
+        }))
+    });
+    THREADS[role.idx()].fetch_add(1, Ordering::Relaxed);
+    let slot = if active() { claim_slot(role) } else { None };
+    if let Some(s) = slot {
+        PSLOT.with(|c| c.set(Some(s)));
+    }
+    ThreadReg { slot, role }
+}
+
+fn claim_slot(role: Role) -> Option<&'static Slot> {
+    slots().iter().find(|s| {
+        s.role
+            .compare_exchange(FREE, role.idx(), Ordering::AcqRel, Ordering::Relaxed)
+            .is_ok()
+    })
+}
+
+impl Drop for ThreadReg {
+    fn drop(&mut self) {
+        note_cpu();
+        CPU.with(|c| c.set(None));
+        THREADS[self.role.idx()].fetch_sub(1, Ordering::Relaxed);
+        if let Some(slot) = self.slot {
+            PSLOT.with(|c| c.set(None));
+            slot.release();
+        }
+    }
+}
+
+/// Sample the calling thread's CPU clock and attribute the interval
+/// since the last call: thread-CPU delta ⇒ busy, the rest of the wall
+/// delta ⇒ idle (blocked on the queue / poller / sleep). Workers and
+/// shards call this at job boundaries, the sampler each tick. No-op on
+/// unregistered threads.
+pub fn note_cpu() {
+    CPU.with(|c| {
+        if let Some(mut st) = c.get() {
+            let now = Instant::now();
+            let cpu = proc::thread_cpu_ns();
+            let dcpu = cpu.saturating_sub(st.last_cpu_ns);
+            let dwall = now.duration_since(st.last_wall).as_nanos() as u64;
+            BUSY_NS[st.role].fetch_add(dcpu, Ordering::Relaxed);
+            IDLE_NS[st.role].fetch_add(dwall.saturating_sub(dcpu), Ordering::Relaxed);
+            st.last_wall = now;
+            st.last_cpu_ns = cpu;
+            c.set(Some(st));
+        }
+    });
+}
+
+/// One role's accumulated CPU split plus its live thread count.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RoleCpu {
+    pub busy_us: u64,
+    pub idle_us: u64,
+    pub threads: u64,
+}
+
+/// Per-role CPU accounting snapshot, indexed like [`ALL_ROLES`].
+pub fn cpu_snapshot() -> [RoleCpu; 3] {
+    std::array::from_fn(|i| RoleCpu {
+        busy_us: BUSY_NS[i].load(Ordering::Relaxed) / 1_000,
+        idle_us: IDLE_NS[i].load(Ordering::Relaxed) / 1_000,
+        threads: THREADS[i].load(Ordering::Relaxed),
+    })
+}
+
+/// Render the `STATS` `"threads"` object from a snapshot.
+pub fn threads_json(roles: &[RoleCpu; 3]) -> String {
+    let mut out = String::from("{");
+    for (i, rc) in roles.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\"{}\":{{\"busy_us\":{},\"idle_us\":{},\"n\":{}}}",
+            Role::from_idx(i).name(),
+            rc.busy_us,
+            rc.idle_us,
+            rc.threads
+        ));
+    }
+    out.push('}');
+    out
+}
+
+// ---------------------------------------------------------------------------
+// sampler + folded aggregation
+// ---------------------------------------------------------------------------
+
+#[derive(Default, Clone)]
+struct Agg {
+    /// Collapsed stack (`a;b;c`) → cumulative sample count.
+    stacks: HashMap<String, u64>,
+    /// Thread-samples taken (every one lands in exactly one stack).
+    samples: u64,
+    /// Samples that stayed torn after retries (also in `stacks` under
+    /// `<torn>` — this is a convenience counter, not extra mass).
+    torn: u64,
+}
+
+static AGG: Mutex<Option<Agg>> = Mutex::new(None);
+
+fn with_agg<T>(f: impl FnOnce(&mut Agg) -> T) -> T {
+    let mut guard = AGG.lock().unwrap_or_else(|e| e.into_inner());
+    f(guard.get_or_insert_with(Agg::default))
+}
+
+/// Thread-samples taken since process start (`mrss_profile_samples_total`).
+pub fn samples_total() -> u64 {
+    with_agg(|a| a.samples)
+}
+
+/// Walk the registry once and fold every claimed slot's stack into the
+/// cumulative aggregate. Separated from the sampler loop so tests can
+/// drive ticks deterministically.
+fn sample_once() {
+    // Read all stacks before taking the aggregate lock: keeps the lock
+    // hold time independent of seqlock retries.
+    let mut sampled: Vec<Result<Vec<&'static str>, Role>> = Vec::new();
+    let mut torn = 0u64;
+    for slot in slots() {
+        let role = slot.role.load(Ordering::Acquire);
+        if role == FREE {
+            continue;
+        }
+        match slot.sample() {
+            Some(stack) if stack.is_empty() => sampled.push(Err(Role::from_idx(role))),
+            Some(stack) => sampled.push(Ok(stack)),
+            None => torn += 1,
+        }
+    }
+    with_agg(|agg| {
+        for s in &sampled {
+            let key = match s {
+                Ok(stack) => stack.join(";"),
+                Err(role) => role.idle_name().to_string(),
+            };
+            *agg.stacks.entry(key).or_insert(0) += 1;
+            agg.samples += 1;
+        }
+        for _ in 0..torn {
+            *agg.stacks.entry("<torn>".to_string()).or_insert(0) += 1;
+            agg.samples += 1;
+            agg.torn += 1;
+        }
+    });
+}
+
+/// Handle to a running sampler thread; stop it via [`Sampler::stop`]
+/// (or drop). The serving front-end owns one when `--profile-hz > 0`.
+pub struct Sampler {
+    stop: std::sync::Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Start a sampler at `hz` (None when `hz == 0`). While any sampler
+/// runs, newly registered threads claim publish slots.
+pub fn start(hz: u64) -> Option<Sampler> {
+    if hz == 0 {
+        return None;
+    }
+    slots(); // allocate the registry before anyone races to claim
+    CURRENT_HZ.store(hz, Ordering::Relaxed);
+    ACTIVE_SAMPLERS.fetch_add(1, Ordering::SeqCst);
+    let stop = std::sync::Arc::new(AtomicBool::new(false));
+    let flag = stop.clone();
+    let period = Duration::from_nanos(1_000_000_000 / hz.max(1));
+    let join = std::thread::Builder::new()
+        .name("mrss-profile-sampler".to_string())
+        .spawn(move || {
+            let _reg = register(Role::Sampler);
+            let mut cpu_tick = 0u32;
+            while !flag.load(Ordering::Relaxed) {
+                sample_once();
+                // Thread-CPU bookkeeping once a second, not per tick.
+                cpu_tick += 1;
+                if cpu_tick >= 100 {
+                    cpu_tick = 0;
+                    note_cpu();
+                }
+                std::thread::sleep(period);
+            }
+        })
+        .expect("spawn profiler sampler");
+    Some(Sampler { stop, join: Some(join) })
+}
+
+impl Sampler {
+    /// Stop and join the sampler thread.
+    pub fn stop(&mut self) {
+        if let Some(join) = self.join.take() {
+            self.stop.store(true, Ordering::Relaxed);
+            let _ = join.join();
+            ACTIVE_SAMPLERS.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+impl Drop for Sampler {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// timed capture (the PROFILE verb)
+// ---------------------------------------------------------------------------
+
+fn snapshot_agg() -> Agg {
+    with_agg(|a| a.clone())
+}
+
+/// Run a timed capture: snapshot the cumulative aggregate, sleep
+/// `secs`, snapshot again, render the delta as one JSON line (folded
+/// stacks sorted by samples, top-`N` self-time leaves with idle/torn
+/// excluded, and a fresh process-stats block). Returns an error object
+/// when no sampler is running.
+pub fn capture(secs: u64) -> String {
+    if !active() {
+        return "{\"error\":\"profiler disabled (--profile-hz 0)\"}".to_string();
+    }
+    let before = snapshot_agg();
+    std::thread::sleep(Duration::from_secs(secs));
+    let after = snapshot_agg();
+    render_capture(secs, CURRENT_HZ.load(Ordering::Relaxed), &before, &after)
+}
+
+/// Leaf frame of a collapsed stack.
+fn leaf(stack: &str) -> &str {
+    stack.rsplit(';').next().unwrap_or(stack)
+}
+
+/// Frames that represent absence of work, excluded from the self-time
+/// ranking (they still appear in the folded list — the sum invariant
+/// needs them).
+fn is_idle_frame(frame: &str) -> bool {
+    frame == "<torn>" || frame.ends_with(".idle")
+}
+
+fn render_capture(secs: u64, hz: u64, before: &Agg, after: &Agg) -> String {
+    let ticks = after.samples.saturating_sub(before.samples);
+    let torn = after.torn.saturating_sub(before.torn);
+    let mut folded: Vec<(&str, u64)> = after
+        .stacks
+        .iter()
+        .filter_map(|(k, v)| {
+            let d = v.saturating_sub(before.stacks.get(k).copied().unwrap_or(0));
+            (d > 0).then_some((k.as_str(), d))
+        })
+        .collect();
+    folded.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+    let mut self_time: HashMap<&str, u64> = HashMap::new();
+    for (stack, n) in &folded {
+        let f = leaf(stack);
+        if !is_idle_frame(f) {
+            *self_time.entry(f).or_insert(0) += n;
+        }
+    }
+    let mut self_top: Vec<(&str, u64)> = self_time.into_iter().collect();
+    self_top.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+    self_top.truncate(10);
+    let threads: u64 = THREADS.iter().map(|t| t.load(Ordering::Relaxed)).sum();
+    let mut out = format!(
+        "{{\"secs\":{},\"hz\":{},\"ticks\":{},\"torn\":{},\"threads\":{},\"folded\":[",
+        secs, hz, ticks, torn, threads
+    );
+    for (i, (stack, n)) in folded.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("{{\"stack\":\"{}\",\"samples\":{}}}", json_escape(stack), n));
+    }
+    out.push_str("],\"self\":[");
+    for (i, (frame, n)) in self_top.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("{{\"frame\":\"{}\",\"samples\":{}}}", json_escape(frame), n));
+    }
+    out.push_str(&format!("],\"process\":{}}}", proc::read_or_zero().to_json()));
+    out
+}
+
+/// Extract `(stack, samples)` pairs from a `PROFILE` response — the
+/// client side of the folded format (`mrss profile --folded` writes
+/// `stack count` lines flamegraph.pl consumes directly). Span names
+/// never contain quotes, so a flat scan is exact.
+pub fn parse_folded(json: &str) -> Vec<(String, u64)> {
+    let mut out = Vec::new();
+    let body = match json.find("\"folded\":[") {
+        Some(i) => &json[i + "\"folded\":[".len()..],
+        None => return out,
+    };
+    let body = &body[..body.find(']').unwrap_or(body.len())];
+    let mut rest = body;
+    while let Some(i) = rest.find("{\"stack\":\"") {
+        rest = &rest[i + "{\"stack\":\"".len()..];
+        let Some(q) = rest.find('"') else { break };
+        let stack = rest[..q].to_string();
+        rest = &rest[q..];
+        let Some(j) = rest.find("\"samples\":") else { break };
+        rest = &rest[j + "\"samples\":".len()..];
+        let end = rest.find(['}', ',']).unwrap_or(rest.len());
+        if let Ok(n) = rest[..end].trim().parse::<u64>() {
+            out.push((stack, n));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The registry, aggregate, and CPU totals are process-global;
+    /// profile unit tests serialize on this and assert on *deltas*.
+    static SEQ: Mutex<()> = Mutex::new(());
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        SEQ.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Claim a slot directly (bypassing the `active()` gate) so tests
+    /// can drive publication + sampling without a live sampler thread.
+    fn claim_for_test(role: Role) -> &'static Slot {
+        let slot = claim_slot(role).expect("free slot");
+        PSLOT.with(|c| c.set(Some(slot)));
+        slot
+    }
+
+    fn unclaim(slot: &'static Slot) {
+        PSLOT.with(|c| c.set(None));
+        slot.release();
+    }
+
+    // Other lib tests (server.rs starts real servers with samplers) run
+    // concurrently in this process, so assertions on the *global*
+    // aggregate are lower bounds on unique test-only frame names; exact
+    // checks go straight against our own slot.
+
+    #[test]
+    fn push_pop_publish_and_sampler_folds_the_stack() {
+        let _g = lock();
+        let slot = claim_for_test(Role::Worker);
+        assert!(push_frame("t.prof.outer"));
+        assert!(push_frame("t.prof.inner"));
+        assert_eq!(slot.sample().expect("stable"), vec!["t.prof.outer", "t.prof.inner"]);
+        let before = snapshot_agg();
+        sample_once();
+        pop_frame();
+        assert_eq!(slot.sample().expect("stable"), vec!["t.prof.outer"]);
+        sample_once();
+        pop_frame();
+        assert_eq!(slot.sample().expect("stable").len(), 0);
+        let after = snapshot_agg();
+        let delta = |k: &str| {
+            after.stacks.get(k).copied().unwrap_or(0)
+                - before.stacks.get(k).copied().unwrap_or(0)
+        };
+        assert!(delta("t.prof.outer;t.prof.inner") >= 1);
+        assert!(delta("t.prof.outer") >= 1);
+        assert!(after.samples - before.samples >= 2, "ticks went unrecorded");
+        unclaim(slot);
+    }
+
+    #[test]
+    fn unregistered_threads_publish_nothing() {
+        let _g = lock();
+        assert!(!push_frame("t.prof.ghost"));
+        pop_frame(); // must be a safe no-op
+        sample_once();
+        assert!(!snapshot_agg().stacks.contains_key("t.prof.ghost"));
+    }
+
+    #[test]
+    fn depth_overflow_truncates_but_stays_symmetric() {
+        let _g = lock();
+        let slot = claim_for_test(Role::Worker);
+        for _ in 0..(MAX_DEPTH + 8) {
+            push_frame("deep");
+        }
+        let stack = slot.sample().expect("consistent read");
+        assert_eq!(stack.len(), MAX_DEPTH);
+        for _ in 0..(MAX_DEPTH + 8) {
+            pop_frame();
+        }
+        assert_eq!(slot.sample().expect("consistent read").len(), 0);
+        unclaim(slot);
+    }
+
+    #[test]
+    fn capture_render_sums_folded_to_ticks_and_ranks_self_time() {
+        let before = Agg::default();
+        let mut after = Agg::default();
+        for (k, v) in [
+            ("serve.exec;worker.exec.delay", 40u64),
+            ("serve.exec;table.count", 9),
+            ("shard.idle", 30),
+            ("<torn>", 1),
+        ] {
+            after.stacks.insert(k.to_string(), v);
+        }
+        after.samples = 80;
+        after.torn = 1;
+        let j = render_capture(2, 99, &before, &after);
+        assert!(j.contains("\"secs\":2") && j.contains("\"hz\":99"), "{j}");
+        assert!(j.contains("\"ticks\":80") && j.contains("\"torn\":1"), "{j}");
+        // Folded entries sum to ticks and parse back losslessly.
+        let folded = parse_folded(&j);
+        assert_eq!(folded.iter().map(|(_, n)| n).sum::<u64>(), 80, "{j}");
+        assert_eq!(folded[0], ("serve.exec;worker.exec.delay".to_string(), 40));
+        // Self-time ranks the delay leaf first and excludes idle/torn.
+        let self_at = j.find("\"self\":[").expect("self table");
+        let self_body = &j[self_at..];
+        assert!(
+            self_body.starts_with("\"self\":[{\"frame\":\"worker.exec.delay\",\"samples\":40}"),
+            "{j}"
+        );
+        assert!(!self_body.contains("idle") && !self_body.contains("<torn>"), "{j}");
+        assert!(j.contains("\"process\":{\"rss_bytes\":"), "{j}");
+    }
+
+    #[test]
+    fn capture_without_a_sampler_reports_disabled() {
+        // No sampler started in unit tests unless a test starts one.
+        if !active() {
+            assert!(capture(1).contains("profiler disabled"));
+        }
+    }
+
+    #[test]
+    fn sampler_thread_runs_ticks_and_stops_cleanly() {
+        let _g = lock();
+        let t0 = samples_total();
+        let mut s = start(200).expect("hz > 0 starts");
+        assert!(active());
+        // The sampler registers itself, so ticks accumulate even with
+        // no other thread claimed.
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while samples_total() == t0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(samples_total() > t0, "sampler never ticked");
+        s.stop();
+        s.stop(); // idempotent
+        assert!(start(0).is_none());
+    }
+
+    #[test]
+    fn cpu_accounting_attributes_busy_time_to_the_role() {
+        let _g = lock();
+        let before = cpu_snapshot()[Role::Shard.idx()];
+        let reg = register(Role::Shard);
+        let mut x = 0u64;
+        for i in 0..3_000_000u64 {
+            x = x.wrapping_add(i ^ (x >> 3));
+        }
+        assert!(x != 42);
+        std::thread::sleep(Duration::from_millis(5));
+        note_cpu();
+        let mid = cpu_snapshot()[Role::Shard.idx()];
+        // Thread counts fluctuate with concurrent server tests; this
+        // registration alone guarantees at least one shard thread, and
+        // the split never goes backwards (off-Linux busy stays flat at 0).
+        assert!(mid.threads >= 1);
+        assert!(mid.busy_us >= before.busy_us);
+        assert!(mid.idle_us >= before.idle_us);
+        #[cfg(target_os = "linux")]
+        assert!(mid.busy_us > before.busy_us, "spin loop burned no CPU?");
+        drop(reg);
+    }
+
+    #[test]
+    fn threads_json_names_all_roles() {
+        let j = threads_json(&[
+            RoleCpu { busy_us: 1, idle_us: 2, threads: 3 },
+            RoleCpu { busy_us: 4, idle_us: 5, threads: 6 },
+            RoleCpu::default(),
+        ]);
+        assert_eq!(
+            j,
+            "{\"worker\":{\"busy_us\":1,\"idle_us\":2,\"n\":3},\
+             \"shard\":{\"busy_us\":4,\"idle_us\":5,\"n\":6},\
+             \"sampler\":{\"busy_us\":0,\"idle_us\":0,\"n\":0}}"
+        );
+    }
+
+    #[test]
+    fn parse_folded_handles_empty_and_missing() {
+        assert!(parse_folded("{}").is_empty());
+        assert!(parse_folded("{\"folded\":[]}").is_empty());
+        let one = "{\"folded\":[{\"stack\":\"a;b\",\"samples\":7}],\"self\":[]}";
+        assert_eq!(parse_folded(one), vec![("a;b".to_string(), 7)]);
+    }
+}

@@ -197,7 +197,99 @@ pub fn render(m: &ServeMetrics, snap: &ServeSnapshot, mj: &MjMetrics) -> String 
         "Auto-dumps suppressed by the 1/sec throttle.",
         crate::obs::recorder::DUMPS_SUPPRESSED.load(std::sync::atomic::Ordering::Relaxed),
     );
+    let busy: Vec<(&str, f64)> = crate::obs::profile::ALL_ROLES
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (r.name(), snap.threads[i].busy_us as f64 / 1e6))
+        .collect();
+    p.labeled_counter(
+        "mrss_thread_cpu_seconds_total",
+        "CPU seconds burned per thread role (CLOCK_THREAD_CPUTIME_ID).",
+        "role",
+        &busy,
+    );
+    p.counter(
+        "mrss_profile_samples_total",
+        "Thread-samples taken by the span-stack profiler.",
+        crate::obs::profile::samples_total(),
+    );
+    let kernels = crate::ct::ticks::snapshot();
+    let labels: Vec<String> =
+        kernels.iter().map(|(k, t, _, _)| format!("{k}_{t}")).collect();
+    let kticks: Vec<(&str, f64)> = labels
+        .iter()
+        .zip(&kernels)
+        .map(|(l, &(_, _, c, _))| (l.as_str(), c as f64))
+        .collect();
+    p.labeled_counter(
+        "mrss_ct_kernel_ticks_total",
+        "Ct-algebra kernel invocations per (operator, key-width tier).",
+        "kernel",
+        &kticks,
+    );
+    let ksecs: Vec<(&str, f64)> = labels
+        .iter()
+        .zip(&kernels)
+        .map(|(l, &(_, _, _, n))| (l.as_str(), n as f64 / 1e9))
+        .collect();
+    p.labeled_counter(
+        "mrss_ct_kernel_seconds_total",
+        "Seconds inside ct-algebra kernels per (operator, tier).",
+        "kernel",
+        &ksecs,
+    );
+    let ps = crate::obs::proc::read_or_zero();
+    p.gauge(
+        "process_resident_memory_bytes",
+        "Resident set size in bytes (VmRSS; 0 off Linux).",
+        ps.rss_bytes as f64,
+    );
+    p.counter(
+        "process_cpu_seconds_total",
+        "User + system CPU seconds (whole seconds; /proc/self/stat).",
+        (ps.utime_us + ps.stime_us) / 1_000_000,
+    );
+    p.gauge("process_open_fds", "Open file descriptors.", ps.open_fds as f64);
+    p.gauge("process_threads", "OS threads in the process.", ps.threads as f64);
+    p.counter(
+        "process_voluntary_ctxt_switches_total",
+        "Voluntary context switches (blocked on I/O or locks).",
+        ps.voluntary_ctxt_switches,
+    );
+    p.counter(
+        "process_nonvoluntary_ctxt_switches_total",
+        "Involuntary context switches (scheduler preemptions).",
+        ps.nonvoluntary_ctxt_switches,
+    );
     p.finish()
+}
+
+/// The family checklist `mrss validate-metrics` runs against a *live
+/// serving* scrape, on top of the format [`validate`]: the observability
+/// families this crate promises (thread-CPU split, profiler samples,
+/// ct-kernel timers, standard `process_*` telemetry) must all be
+/// declared. Kept separate from `validate` so small hand-written test
+/// documents remain valid.
+pub fn validate_serving_families(text: &str) -> Result<(), String> {
+    const REQUIRED: [&str; 11] = [
+        "mrss_queries_total",
+        "mrss_thread_cpu_seconds_total",
+        "mrss_profile_samples_total",
+        "mrss_ct_kernel_ticks_total",
+        "mrss_ct_kernel_seconds_total",
+        "process_resident_memory_bytes",
+        "process_cpu_seconds_total",
+        "process_open_fds",
+        "process_threads",
+        "process_voluntary_ctxt_switches_total",
+        "process_nonvoluntary_ctxt_switches_total",
+    ];
+    for fam in REQUIRED {
+        if !text.contains(&format!("# TYPE {fam} ")) {
+            return Err(format!("serving exposition is missing family `{fam}`"));
+        }
+    }
+    Ok(())
 }
 
 /// Validate one exposition document: every sample line must belong to
@@ -434,6 +526,39 @@ mod tests {
         // Two identical live renders are trivially monotone.
         let doc = sample_doc();
         validate_monotonic(&doc, &doc).unwrap();
+    }
+
+    #[test]
+    fn rendered_exposition_carries_the_serving_families() {
+        let doc = sample_doc();
+        validate_serving_families(&doc).unwrap_or_else(|e| panic!("{e}\n---\n{doc}"));
+        // Kernel families carry every (op, tier) label even when zero.
+        assert!(doc.contains("mrss_ct_kernel_ticks_total{kernel=\"select_u64\"}"), "{doc}");
+        assert!(doc.contains("mrss_ct_kernel_seconds_total{kernel=\"subtract_wide\"}"), "{doc}");
+        assert!(doc.contains("mrss_thread_cpu_seconds_total{role=\"worker\"}"), "{doc}");
+        // And the checker notices a family going missing.
+        let gutted = doc.replace("# TYPE process_open_fds gauge", "# TYPE nope gauge");
+        let err = validate_serving_families(&gutted).unwrap_err();
+        assert!(err.contains("process_open_fds"), "{err}");
+    }
+
+    #[test]
+    fn process_gauges_may_shrink_between_scrapes() {
+        // RSS and fd-count fall as memory is returned and sockets close;
+        // the --prev monotonicity pass must not flag them. Counters in
+        // the same families stay checked.
+        let a = "# TYPE process_resident_memory_bytes gauge\n\
+                 process_resident_memory_bytes 90000000\n\
+                 # TYPE process_open_fds gauge\nprocess_open_fds 40\n\
+                 # TYPE process_cpu_seconds_total counter\nprocess_cpu_seconds_total 5\n";
+        let b = "# TYPE process_resident_memory_bytes gauge\n\
+                 process_resident_memory_bytes 1000000\n\
+                 # TYPE process_open_fds gauge\nprocess_open_fds 6\n\
+                 # TYPE process_cpu_seconds_total counter\nprocess_cpu_seconds_total 7\n";
+        validate_monotonic(a, b).unwrap();
+        // The CPU counter itself still may not reset.
+        let err = validate_monotonic(b, a).unwrap_err();
+        assert!(err.contains("process_cpu_seconds_total"), "{err}");
     }
 
     #[test]

@@ -222,6 +222,13 @@ pub fn set_cost(cost: crate::obs::cost::QueryCost) {
 /// RAII span: created at site entry, records its interval into the
 /// thread's active trace when dropped. Disarmed (free) when the thread
 /// has no active trace.
+///
+/// Independently of trace arming, every guard publishes its name to
+/// the sampling profiler's per-thread span stack
+/// ([`crate::obs::profile::push_frame`]) — a couple of relaxed stores
+/// on profiler-registered threads, a thread-local load and branch
+/// everywhere else — so `PROFILE` sees the live stack even on the
+/// untraced fast path.
 pub struct SpanGuard {
     name: &'static str,
     detail: String,
@@ -229,16 +236,29 @@ pub struct SpanGuard {
     start_us: u64,
     seq: u64,
     armed: bool,
+    /// Whether this guard pushed a profiler frame (pop exactly once).
+    published: bool,
 }
 
 impl SpanGuard {
-    fn disarmed(name: &'static str) -> SpanGuard {
-        SpanGuard { name, detail: String::new(), depth: 0, start_us: 0, seq: 0, armed: false }
+    fn disarmed(name: &'static str, published: bool) -> SpanGuard {
+        SpanGuard {
+            name,
+            detail: String::new(),
+            depth: 0,
+            start_us: 0,
+            seq: 0,
+            armed: false,
+            published,
+        }
     }
 }
 
 impl Drop for SpanGuard {
     fn drop(&mut self) {
+        if self.published {
+            crate::obs::profile::pop_frame();
+        }
         if !self.armed {
             return;
         }
@@ -274,23 +294,29 @@ fn push_span(act: &mut Active, rec: SpanRec) {
 /// Open a span with no detail payload.
 #[inline]
 pub fn span(name: &'static str) -> SpanGuard {
+    let published = crate::obs::profile::push_frame(name);
     if !enabled() {
-        return SpanGuard::disarmed(name);
+        return SpanGuard::disarmed(name, published);
     }
-    span_armed(name, String::new)
+    span_armed(name, String::new, published)
 }
 
 /// Open a span whose detail is built only if the calling thread is
 /// actually tracing — the closure never runs on the untraced path.
 #[inline]
 pub fn span_detailed<F: FnOnce() -> String>(name: &'static str, detail: F) -> SpanGuard {
+    let published = crate::obs::profile::push_frame(name);
     if !enabled() {
-        return SpanGuard::disarmed(name);
+        return SpanGuard::disarmed(name, published);
     }
-    span_armed(name, detail)
+    span_armed(name, detail, published)
 }
 
-fn span_armed<F: FnOnce() -> String>(name: &'static str, detail: F) -> SpanGuard {
+fn span_armed<F: FnOnce() -> String>(
+    name: &'static str,
+    detail: F,
+    published: bool,
+) -> SpanGuard {
     ACTIVE.with(|a| {
         let mut b = a.borrow_mut();
         match b.as_mut() {
@@ -304,9 +330,10 @@ fn span_armed<F: FnOnce() -> String>(name: &'static str, detail: F) -> SpanGuard
                     start_us: act.t0.elapsed().as_micros() as u64,
                     seq: act.take_seq(),
                     armed: true,
+                    published,
                 }
             }
-            None => SpanGuard::disarmed(name),
+            None => SpanGuard::disarmed(name, published),
         }
     })
 }

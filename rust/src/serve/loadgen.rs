@@ -157,6 +157,14 @@ pub struct LoadgenReport {
     /// The server's closing `HISTORY 60` window, when stats were requested
     /// — the per-second series covering the run's tail.
     pub server_history: Option<String>,
+    /// A closing `PROFILE 2` capture (folded span stacks + self-time
+    /// table), when stats were requested — where the server spent the
+    /// run's final seconds, attached to the perf artifact.
+    pub server_profile: Option<String>,
+    /// The `"process"` block of that capture (RSS, CPU, fds, ctx
+    /// switches), split out so dashboards can read it without parsing
+    /// the folded stacks.
+    pub server_process: Option<String>,
 }
 
 impl LoadgenReport {
@@ -171,13 +179,16 @@ impl LoadgenReport {
         let server = self.server_stats.as_deref().unwrap_or("null");
         let top = self.server_top.as_deref().unwrap_or("null");
         let history = self.server_history.as_deref().unwrap_or("null");
+        let profile = self.server_profile.as_deref().unwrap_or("null");
+        let process = self.server_process.as_deref().unwrap_or("null");
         format!(
             "{{\n  \"bench\": \"serve\",\n  \"dataset\": \"{dataset}\",\n  \"clients\": {},\n  \
              \"mix\": \"{}\",\n  \"idle\": {},\n  \
              \"queries\": {},\n  \"errors\": {},\n  \"busy_retries\": {},\n  \
              \"wall_secs\": {:.4},\n  \"qps\": {:.1},\n  \
              \"client_p50_us\": {},\n  \"client_p99_us\": {},\n  \"server\": {server},\n  \
-             \"server_top\": {top},\n  \"server_history\": {history}\n}}\n",
+             \"server_top\": {top},\n  \"server_history\": {history},\n  \
+             \"server_profile\": {profile},\n  \"server_process\": {process}\n}}\n",
             self.clients,
             self.mix,
             self.idle_open,
@@ -347,18 +358,23 @@ pub fn run(schema: &Schema, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     }
 
     // STATS is fetched while the idle pool is still open, so the reported
-    // `active` / `conns` distribution reflects the loaded server. TOP and
-    // HISTORY ride on the same control path: the heavy-hitter table and the
-    // closing per-second window belong to the loaded server too.
-    let (server_stats, server_top, server_history) = if cfg.stats {
+    // `active` / `conns` distribution reflects the loaded server. TOP,
+    // HISTORY, and the closing PROFILE ride on the same control path: the
+    // heavy-hitter table, per-second window, and folded span stacks all
+    // belong to the loaded server. PROFILE blocks for its 2 s capture
+    // window (tolerated: the hot run is over, only the report waits).
+    let (server_stats, server_top, server_history, server_profile) = if cfg.stats {
         (
             Some(control(&cfg.addr, "STATS")?),
             Some(control(&cfg.addr, "TOP 5")?),
             Some(control(&cfg.addr, "HISTORY 60")?),
+            Some(control(&cfg.addr, "PROFILE 2")?),
         )
     } else {
-        (None, None, None)
+        (None, None, None, None)
     };
+    let server_process =
+        server_profile.as_deref().and_then(|p| extract_flat_object(p, "process"));
     drop(idle_pool);
     if cfg.shutdown {
         let bye = control(&cfg.addr, "SHUTDOWN")?;
@@ -382,7 +398,19 @@ pub fn run(schema: &Schema, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         server_stats,
         server_top,
         server_history,
+        server_profile,
+        server_process,
     })
+}
+
+/// Pull one `"key":{…}` sub-object out of a JSON line. Only valid for
+/// *flat* objects (no nested braces) — exactly the shape of the
+/// `"process"` block in a `PROFILE` response.
+fn extract_flat_object(json: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":{{");
+    let start = json.find(&pat)? + pat.len() - 1;
+    let end = start + json[start..].find('}')?;
+    Some(json[start..=end].to_string())
 }
 
 /// One request/response exchange on a fresh control connection.
@@ -436,6 +464,8 @@ mod tests {
             ),
             server_top: Some("{\"entries\":1,\"capacity\":64}".to_string()),
             server_history: None,
+            server_profile: Some("{\"secs\":2,\"ticks\":12,\"folded\":[]}".to_string()),
+            server_process: Some("{\"rss_bytes\":1048576,\"open_fds\":20}".to_string()),
         };
         let j = rep.bench_json("uwcse");
         for key in [
@@ -447,6 +477,8 @@ mod tests {
             "\"busy_retries\": 3",
             "\"server_top\": {\"entries\":1,\"capacity\":64}",
             "\"server_history\": null",
+            "\"server_profile\": {\"secs\":2,\"ticks\":12,\"folded\":[]}",
+            "\"server_process\": {\"rss_bytes\":1048576,\"open_fds\":20}",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
@@ -456,6 +488,18 @@ mod tests {
             LoadgenReport { server_stats: None, ..rep }.zero_duplicate_builds(12),
             None
         );
+    }
+
+    #[test]
+    fn extract_flat_object_pulls_the_process_block() {
+        let resp = "{\"secs\":2,\"folded\":[{\"stack\":\"a;b\",\"samples\":3}],\
+                    \"process\":{\"rss_bytes\":42,\"open_fds\":7}}";
+        assert_eq!(
+            extract_flat_object(resp, "process").as_deref(),
+            Some("{\"rss_bytes\":42,\"open_fds\":7}")
+        );
+        assert_eq!(extract_flat_object(resp, "missing"), None);
+        assert_eq!(extract_flat_object("{\"error\":\"disabled\"}", "process"), None);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 
 use crate::mobius::MjMetrics;
 use crate::obs::cost::{self, QueryCost};
+use crate::obs::profile;
 use crate::serve::protocol::json_escape;
 use crate::store::{StoreStats, TreeStats};
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
@@ -202,6 +203,7 @@ impl ServeMetrics {
             conn_timeouts: self.conn_timeouts.load(Relaxed),
             request_timeouts: self.request_timeouts.load(Relaxed),
             cost: cost::totals(),
+            threads: profile::cpu_snapshot(),
             store,
             trees,
         }
@@ -250,6 +252,9 @@ pub struct ServeSnapshot {
     pub request_timeouts: u64,
     /// Process-wide query-cost totals (see [`cost::totals`]).
     pub cost: QueryCost,
+    /// Per-role thread-CPU split (worker/shard/sampler busy vs idle),
+    /// indexed like [`profile::ALL_ROLES`].
+    pub threads: [profile::RoleCpu; 3],
     pub store: StoreStats,
     pub trees: TreeStats,
 }
@@ -271,6 +276,7 @@ impl ServeSnapshot {
              \"wakeups_per_sec\":{:.1}}},\
              \"conns\":{{\"p50\":{},\"p99\":{}}},\
              \"cost\":{},\
+             \"threads\":{},\
              \"store\":{{\"hits\":{},\"misses\":{},\"evictions\":{},\"bytes_read\":{},\
              \"quarantined_tables\":{}}},\
              \"adtree\":{{\"hits\":{},\"builds\":{},\"building\":{},\"coalesced_waits\":{},\
@@ -299,6 +305,7 @@ impl ServeSnapshot {
             self.conns_p50,
             self.conns_p99,
             self.cost.to_json(),
+            profile::threads_json(&self.threads),
             self.store.hits,
             self.store.misses,
             self.store.evictions,
@@ -418,6 +425,7 @@ mod tests {
             "\"queries\":3",
             "\"admin_requests\":2",
             "\"cost\":{\"tables_loaded\":",
+            "\"threads\":{\"worker\":{\"busy_us\":",
             "\"qps\":",
             "\"p99_us\":",
             "\"adtree\"",

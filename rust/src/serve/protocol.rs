@@ -23,6 +23,9 @@
 //!                              cost / latency (default k=10, always JSON)
 //! HISTORY [secs]               per-second metrics series for the last
 //!                              `secs` seconds (default 60, always JSON)
+//! PROFILE [secs]               timed sampling-profiler capture: folded
+//!                              flamegraph stacks + self-time table
+//!                              (default 2s, always JSON)
 //! PING                         liveness probe
 //! SHUTDOWN                     stop the server after in-flight work drains
 //! ```
@@ -47,6 +50,7 @@
 //! | dump       | *(json object)*      | *(json object)*                        |
 //! | top        | *(json object)*      | *(json object)*                        |
 //! | history    | *(json object)*      | *(json object)*                        |
+//! | profile    | *(json object)*      | *(json object)*                        |
 //! | metrics    | *(text exposition)*  | *(text exposition)*                    |
 //! | bye        | `BYE`                | `{"bye":true}`                         |
 //!
@@ -79,6 +83,9 @@ pub enum Request {
     /// Per-second metrics series for the last `secs` seconds
     /// (`None` = server default window).
     History(Option<u64>),
+    /// Timed sampling-profiler capture over `secs` seconds
+    /// (`None` = server default, 2s): folded stacks + self-time table.
+    Profile(Option<u64>),
     Ping,
     Shutdown,
 }
@@ -103,6 +110,11 @@ pub fn parse_request(line: &str) -> Request {
         "HISTORY" if line.len() == keyword.len() => Request::History(None),
         "HISTORY" => match line[keyword.len()..].trim().parse::<u64>() {
             Ok(secs) => Request::History(Some(secs)),
+            Err(_) => Request::Count(line.to_string()),
+        },
+        "PROFILE" if line.len() == keyword.len() => Request::Profile(None),
+        "PROFILE" => match line[keyword.len()..].trim().parse::<u64>() {
+            Ok(secs) => Request::Profile(Some(secs)),
             Err(_) => Request::Count(line.to_string()),
         },
         "SHUTDOWN" if line.len() == keyword.len() => Request::Shutdown,
@@ -137,6 +149,10 @@ pub enum Response {
     Top { json: String },
     /// Pre-rendered JSON object: the per-second series for `HISTORY`.
     History { json: String },
+    /// Pre-rendered JSON object: the sampling-profiler capture for
+    /// `PROFILE` (folded stacks, self-time table, thread CPU split,
+    /// process stats).
+    Profile { json: String },
     /// Prometheus text exposition. The protocol's only multi-line
     /// response; the body already ends with its `# EOF` terminator
     /// line, so clients read until that marker.
@@ -186,6 +202,7 @@ impl Response {
             Response::Dump { json: obj } => obj.clone(),
             Response::Top { json: obj } => obj.clone(),
             Response::History { json: obj } => obj.clone(),
+            Response::Profile { json: obj } => obj.clone(),
             // Multi-line body ending in the `# EOF` line; the trailing
             // newline is stripped here because the server appends one
             // newline per rendered response.
@@ -427,6 +444,24 @@ mod tests {
         );
         // COUNT escapes a query spelled like the verbs.
         assert_eq!(parse_request("COUNT top"), Request::Count("top".into()));
+    }
+
+    #[test]
+    fn profile_parses_with_optional_secs_and_renders_verbatim() {
+        assert_eq!(parse_request("PROFILE"), Request::Profile(None));
+        assert_eq!(parse_request(" profile "), Request::Profile(None));
+        assert_eq!(parse_request("PROFILE 5"), Request::Profile(Some(5)));
+        assert_eq!(parse_request("profile 2"), Request::Profile(Some(2)));
+        // Non-numeric trailing text is a query, consistent with HISTORY.
+        assert_eq!(
+            parse_request("PROFILE it(X)=1"),
+            Request::Count("PROFILE it(X)=1".into())
+        );
+        assert_eq!(parse_request("COUNT profile"), Request::Count("profile".into()));
+        for json in [false, true] {
+            let p = Response::Profile { json: "{\"secs\":2,\"folded\":[]}".into() };
+            assert_eq!(p.render(json), "{\"secs\":2,\"folded\":[]}");
+        }
     }
 
     #[test]

@@ -47,7 +47,7 @@
 
 use crate::obs::history::{HistoryRing, Slot};
 use crate::obs::sketch::TopSketch;
-use crate::obs::{cost, recorder, trace};
+use crate::obs::{cost, proc, profile, recorder, trace};
 use crate::store::CountServer;
 use crate::util::error::{Context, Result};
 use std::cmp::Reverse;
@@ -119,6 +119,12 @@ pub struct ServeConfig {
     /// events: conn id, query, queue-wait vs exec split, bytes,
     /// outcome). `None` = off; needs `trace_sample > 0` to emit.
     pub access_log: Option<String>,
+    /// Sampling-profiler frequency in Hz behind the `PROFILE` verb.
+    /// `0` disables the sampler thread entirely: worker/shard threads
+    /// then register no publish slots and every span site's frame push
+    /// short-circuits on one thread-local check (the overhead A/B gate
+    /// in CI compares exactly this against the default).
+    pub profile_hz: u64,
 }
 
 impl Default for ServeConfig {
@@ -137,6 +143,7 @@ impl Default for ServeConfig {
             exec_delay: Duration::ZERO,
             trace_sample: 0,
             access_log: None,
+            profile_hz: 99,
         }
     }
 }
@@ -305,6 +312,8 @@ pub struct ServeHandle {
     shared: Arc<Shared>,
     shards: Vec<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    /// The span-stack sampler thread (`None` with `--profile-hz 0`).
+    sampler: Option<profile::Sampler>,
 }
 
 impl ServeHandle {
@@ -337,6 +346,11 @@ impl ServeHandle {
         self.shared.exec.close();
         for w in self.workers {
             let _ = w.join();
+        }
+        // Stop the sampler after every publisher is gone, so the final
+        // snapshot below carries the complete CPU split.
+        if let Some(mut s) = self.sampler {
+            s.stop();
         }
         let snap = self.shared.snapshot();
         assert_eq!(snap.active, 0, "shutdown drain must close every connection");
@@ -403,6 +417,11 @@ pub fn serve(count: Arc<CountServer>, cfg: ServeConfig) -> Result<ServeHandle> {
         history: Mutex::new(HistoryRing::default()),
     });
 
+    // Start the sampler *before* any worker or shard spawns: thread
+    // registration claims a publish slot only while a sampler is active,
+    // so ordering decides whether span stacks are observable at all.
+    let sampler = profile::start(shared.cfg.profile_hz);
+
     let mut workers = Vec::with_capacity(threads);
     for i in 0..threads {
         let shared = Arc::clone(&shared);
@@ -423,7 +442,7 @@ pub fn serve(count: Arc<CountServer>, cfg: ServeConfig) -> Result<ServeHandle> {
                 .context("spawning shard thread")?,
         );
     }
-    Ok(ServeHandle { shared, shards, workers })
+    Ok(ServeHandle { shared, shards, workers, sampler })
 }
 
 /// One worker: pop jobs, count, push the completion back to the owning
@@ -431,8 +450,16 @@ pub fn serve(count: Arc<CountServer>, cfg: ServeConfig) -> Result<ServeHandle> {
 /// multi-member batch really does execute concurrently across the pool —
 /// `batch_peak` in STATS records the high-water mark.
 fn worker_loop(shared: &Shared) {
+    // Arms this thread's CPU clock and — when `serve()` started a
+    // sampler — claims a span-stack publish slot for the profiler.
+    let _reg = profile::register(profile::Role::Worker);
     while let Some(job) = shared.exec.pop() {
+        // Time blocked on the queue since the last boundary ⇒ idle.
+        profile::note_cpu();
         let Job { shard, slot, conn_id, member, batch, query, explain, enqueued, parse_us } = job;
+        // Root profiler frame: every stack this worker publishes while
+        // executing hangs under `serve.exec` in the folded output.
+        let _exec_span = trace::span("serve.exec");
         let queue_wait = enqueued.elapsed();
         shared.metrics.queue_wait.record(queue_wait);
         let fanout = batch > 1;
@@ -440,10 +467,15 @@ fn worker_loop(shared: &Shared) {
             let cur = shared.metrics.batch_inflight.fetch_add(1, Relaxed) + 1;
             shared.metrics.batch_peak.fetch_max(cur, Relaxed);
         }
+        // Both injected stalls publish a profiler frame, so tests (and a
+        // profile taken against a degraded server) see the stall as the
+        // hot leaf rather than an anonymous gap under `serve.exec`.
         if !shared.cfg.exec_delay.is_zero() {
+            let _sp = trace::span("worker.exec.delay");
             std::thread::sleep(shared.cfg.exec_delay);
         }
         if let Some(ms) = crate::util::failpoint::fire_arg("worker.exec.delay") {
+            let _sp = trace::span("worker.exec.delay");
             std::thread::sleep(Duration::from_millis(ms));
         }
         // Sampling decision: `EXPLAIN` always traces its own query; with
@@ -538,6 +570,9 @@ fn worker_loop(shared: &Shared) {
         let ss = &shared.shards[shard];
         ss.completions.lock().unwrap().push(Completion { slot, conn_id, member, resp });
         ss.wake.wake();
+        // Job boundary: the execution interval splits into on-CPU time
+        // (busy) and injected sleeps / page waits (idle).
+        profile::note_cpu();
     }
 }
 
@@ -703,6 +738,10 @@ struct TickState {
     prev_latency: Vec<u64>,
     prev_cost_units: u64,
     prev_bytes: u64,
+    /// `/proc/self` snapshot at the previous flush, so each slot's CPU %
+    /// and ctx-switch figures are that second's delta, not process
+    /// lifetime. `None` off Linux (the fields then stay zero).
+    prev_proc: Option<proc::ProcessStats>,
 }
 
 impl TickState {
@@ -720,6 +759,7 @@ impl TickState {
             prev_latency: Vec::new(),
             prev_cost_units: totals.units(),
             prev_bytes: totals.bytes_scanned,
+            prev_proc: proc::read(),
         }
     }
 }
@@ -781,6 +821,10 @@ impl ShardCtx {
     }
 
     fn run(mut self, listener: TcpListener) {
+        // CPU accounting for the reactor: poller waits show up as idle,
+        // event handling as busy. Shards publish no span stacks of their
+        // own — their samples fold into the `shard.idle` bucket.
+        let _reg = profile::register(profile::Role::Shard);
         let mut events: Vec<Event> = Vec::new();
         let mut listener_open = true;
         let mut grace: Option<Instant> = None;
@@ -815,6 +859,10 @@ impl ShardCtx {
                     break;
                 }
             };
+            // One boundary per wake-up keeps the accounting off the
+            // per-event path; the poller block just ended, so the split
+            // lands correctly without any extra bookkeeping.
+            profile::note_cpu();
             if n > 0 {
                 self.shared.metrics.wakeups.fetch_add(1, Relaxed);
             }
@@ -890,6 +938,26 @@ impl ShardCtx {
             .collect();
         let trees = self.shared.count.tree_stats();
         let probes = trees.hits + trees.builds;
+        // Process resources, sampled at flush time. Point-in-time gauges
+        // (RSS, fds) come straight from the current reading; CPU % and
+        // ctx switches are deltas against the previous flush — 10 000 µs
+        // of CPU over a one-second window is one percent of one core.
+        let ps = proc::read();
+        let (rss_bytes, cpu_user_pct, cpu_sys_pct, open_fds, ctx_switches) =
+            match (&ps, &tick.prev_proc) {
+                (Some(cur), Some(prev)) => (
+                    cur.rss_bytes,
+                    cur.utime_us.saturating_sub(prev.utime_us) / 10_000,
+                    cur.stime_us.saturating_sub(prev.stime_us) / 10_000,
+                    cur.open_fds,
+                    (cur.voluntary_ctxt_switches + cur.nonvoluntary_ctxt_switches)
+                        .saturating_sub(
+                            prev.voluntary_ctxt_switches + prev.nonvoluntary_ctxt_switches,
+                        ),
+                ),
+                (Some(cur), None) => (cur.rss_bytes, 0, 0, cur.open_fds, 0),
+                _ => (0, 0, 0, 0, 0),
+            };
         let slot = Slot {
             epoch_s: tick.epoch_s,
             queries: queries.saturating_sub(tick.prev_queries),
@@ -901,8 +969,14 @@ impl ShardCtx {
             cache_hit_pct: if probes == 0 { 0 } else { trees.hits * 100 / probes },
             cost_units: units.saturating_sub(tick.prev_cost_units),
             bytes_scanned: bytes.saturating_sub(tick.prev_bytes),
+            rss_bytes,
+            cpu_user_pct,
+            cpu_sys_pct,
+            open_fds,
+            ctx_switches,
         };
         self.shared.history.lock().unwrap().push(slot);
+        tick.prev_proc = ps;
         tick.epoch_s += 1;
         tick.prev_queries = queries;
         tick.prev_errors = errors;
@@ -1237,6 +1311,10 @@ impl ShardCtx {
                         .series_json(secs.unwrap_or(60) as usize);
                     self.queue_to(slot, &Response::History { json });
                 }
+                Request::Profile(secs) => {
+                    self.shared.metrics.admin_requests.fetch_add(1, Relaxed);
+                    self.start_profile(slot, secs.unwrap_or(2).clamp(1, 60));
+                }
                 Request::Shutdown => {
                     self.queue_to(slot, &Response::Bye);
                     if let Some(Some(conn)) = self.conns.get_mut(slot) {
@@ -1264,6 +1342,48 @@ impl ShardCtx {
                 Request::Batch(qs) => self.dispatch(slot, qs, false, parse_us),
             }
         }
+    }
+
+    /// `PROFILE [secs]`: the capture blocks for the whole window, so it
+    /// runs on a one-shot helper thread and delivers its result through
+    /// the ordinary completion path (mailbox + wake). The connection
+    /// sits in `Executing` meanwhile — read interest drops, exactly the
+    /// backpressure a count query gets — and the reactor never blocks.
+    fn start_profile(&mut self, slot: usize, secs: u64) {
+        let json = self.shared.cfg.json;
+        let conn_id = match self.conns.get(slot) {
+            Some(Some(c)) => c.id,
+            _ => return,
+        };
+        let me = Arc::clone(&self.me);
+        let spawned = std::thread::Builder::new()
+            .name("mrss-profile-capture".to_string())
+            .spawn(move || {
+                let resp = Response::Profile { json: profile::capture(secs) };
+                me.completions.lock().unwrap().push(Completion {
+                    slot,
+                    conn_id,
+                    member: 0,
+                    resp,
+                });
+                me.wake.wake();
+            });
+        let Some(Some(conn)) = self.conns.get_mut(slot) else { return };
+        match spawned {
+            Ok(_) => {
+                conn.state = ConnState::Executing { pending: vec![None], remaining: 1 };
+                conn.exec_start = Some(Instant::now());
+            }
+            Err(_) => queue(
+                conn,
+                json,
+                &Response::Error {
+                    query: String::new(),
+                    msg: "spawning profile capture thread failed".to_string(),
+                },
+            ),
+        }
+        self.arm_timer(slot);
     }
 
     fn queue_to(&mut self, slot: usize, resp: &Response) {

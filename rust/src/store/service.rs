@@ -541,11 +541,12 @@ impl CountServer {
 
         // This thread owns the build. The table load goes through the
         // store's own LRU (and may itself evict); tree construction is the
-        // expensive part and runs with no lock held.
-        let built = self
-            .store
-            .get(key)
-            .map(|ct| AdTree::build(&ct, AdTreeConfig::default()));
+        // expensive part and runs with no lock held — span-wrapped so cold
+        // cache misses show up in EXPLAIN trees and profiler stacks alike.
+        let built = {
+            let _sp = trace::span_detailed("adtree.build", || key.to_string());
+            self.store.get(key).map(|ct| AdTree::build(&ct, AdTreeConfig::default()))
+        };
 
         let mut g = self.trees.slots.lock().unwrap();
         let tree = match built {

@@ -1,7 +1,9 @@
 //! Observability over the wire: `EXPLAIN` span trees (Möbius subtraction
 //! visible on a positives-only store), `METRICS` through the Prometheus
-//! validator, `DUMP` flight-recorder contents, and the sampled access
-//! log — all exercised against a live TCP server.
+//! validator, `DUMP` flight-recorder contents, the sampled access log,
+//! and the continuous profiler (`PROFILE` captures, per-thread CPU in
+//! `STATS`, process telemetry in `HISTORY`) — all exercised against a
+//! live TCP server.
 //!
 //! These tests live in their own binary and serialize on a lock: the
 //! flight recorder is process-global, and the dump assertions need to
@@ -340,6 +342,109 @@ fn history_ring_advances_and_slots_sum_to_the_request_counter() {
     // Cost flows into the windows too: the slots that saw traffic carry
     // non-zero cost units.
     assert!(json_u64_sum(&hist, "cost_units") > 0, "{hist}");
+
+    // Process telemetry rides the same tick: every flushed slot carries
+    // the point-in-time resident set (Linux /proc only — zero elsewhere).
+    if cfg!(target_os = "linux") {
+        assert!(json_u64_sum(&hist, "rss_bytes") > 0, "no rss in slots: {hist}");
+        assert!(json_u64_sum(&hist, "open_fds") > 0, "no fds in slots: {hist}");
+    }
+
+    handle.request_shutdown();
+    handle.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn profile_capture_pins_the_injected_delay_as_the_hot_frame() {
+    let _g = seq();
+    let (dir, schema) = build_store("profile", PersistConfig::default());
+    // Every query sleeps inside the `worker.exec.delay` span, so a 1 s
+    // capture under load must attribute most non-idle leaf samples to it.
+    let cfg = ServeConfig {
+        exec_delay: Duration::from_millis(10),
+        profile_hz: 241,
+        ..Default::default()
+    };
+    let handle = start(&dir, cfg);
+    let addr = handle.addr();
+
+    // Keep one connection busy for the whole capture window.
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let load = {
+        let stop = Arc::clone(&stop);
+        let q = negative_query(&schema);
+        std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                assert!(c.send(&q).contains("\"count\":"), "load query failed");
+            }
+        })
+    };
+
+    let mut admin = Client::connect(addr);
+    let line = admin.send("PROFILE 1");
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    load.join().unwrap();
+
+    assert!(line.starts_with("{\"secs\":1,"), "{line}");
+    let ticks = json_u64(&line, "ticks");
+    assert!(ticks > 0, "sampler took no ticks: {line}");
+
+    // Conservation: every sampler tick folds into exactly one stack.
+    let folded = obs::profile::parse_folded(&line);
+    assert!(!folded.is_empty(), "no folded stacks: {line}");
+    let sum: u64 = folded.iter().map(|&(_, n)| n).sum();
+    assert_eq!(sum, ticks, "folded mass != sampler ticks: {line}");
+
+    // Leaf attribution: the injected delay dominates non-idle self time.
+    let mut self_time = std::collections::HashMap::<&str, u64>::new();
+    for (stack, n) in &folded {
+        let leaf = stack.rsplit(';').next().unwrap();
+        if leaf == "<torn>" || leaf.ends_with(".idle") {
+            continue;
+        }
+        *self_time.entry(leaf).or_default() += n;
+    }
+    let (hot, hot_n) = self_time
+        .iter()
+        .max_by_key(|&(_, n)| *n)
+        .map(|(f, n)| (f.to_string(), *n))
+        .unwrap_or_else(|| panic!("no non-idle frames sampled: {line}"));
+    assert_eq!(hot, "worker.exec.delay", "wrong hot frame ({hot}: {hot_n}): {line}");
+    assert!(line.contains("serve.exec;worker.exec.delay"), "delay lost its parent: {line}");
+
+    handle.request_shutdown();
+    handle.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn thread_cpu_counters_rise_between_stats_snapshots() {
+    let _g = seq();
+    let (dir, schema) = build_store("cpu", PersistConfig::default());
+    let handle = start(&dir, ServeConfig::default());
+    let mut c = Client::connect(handle.addr());
+
+    let queries = mrss::store::gen_queries(&schema, 5, 42);
+    for q in &queries {
+        c.send(q);
+    }
+    let s1 = c.send("STATS");
+    // The worker role leads the `threads` object, so the first
+    // busy_us/idle_us in the document are the worker pool's.
+    assert!(s1.contains("\"threads\":{\"worker\":{\"busy_us\":"), "{s1}");
+    let (busy1, idle1) = (json_u64(&s1, "busy_us"), json_u64(&s1, "idle_us"));
+
+    for _ in 0..40 {
+        for q in &queries {
+            c.send(q);
+        }
+    }
+    let s2 = c.send("STATS");
+    let (busy2, idle2) = (json_u64(&s2, "busy_us"), json_u64(&s2, "idle_us"));
+    assert!(busy2 > busy1, "worker busy_us did not advance: {busy1} -> {busy2}\n{s2}");
+    assert!(busy2 + idle2 > busy1 + idle1, "worker CPU clock stalled: {s2}");
 
     handle.request_shutdown();
     handle.wait();
